@@ -1,0 +1,44 @@
+//! Semantic segmentation (HorseSeg-like): the paper's costly-oracle
+//! scenario, where MP-BCFW's advantage shows up in *wall-clock* time.
+//!
+//!     cargo run --release --example image_segmentation
+//!
+//! Each exact max-oracle call solves an s-t min-cut (our own
+//! Boykov–Kolmogorov implementation) over a superpixel adjacency graph —
+//! the same loss-augmented inference as the paper's Eq. (10). The demo
+//! reports the oracle-time fraction (paper §4.1: ≈99% for BCFW vs ≈25%
+//! for MP-BCFW) and the predictor's segmentation quality.
+
+use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
+use mpbcfw::data::types::Scale;
+
+fn main() -> anyhow::Result<()> {
+    let base = TrainSpec {
+        dataset: DatasetKind::HorsesegLike,
+        scale: Scale::Small, // 120 images, ~100 superpixels each, 64-d features
+        max_iters: 10,
+        with_train_loss: true,
+        ..Default::default()
+    };
+
+    println!("graph-cut oracle training on horseseg_like (BK max-flow per call)\n");
+    for algo in [Algo::Bcfw, Algo::MpBcfw] {
+        let series = train(&TrainSpec { algo, ..base.clone() })?;
+        let last = series.points.last().unwrap();
+        let frac = last.oracle_secs / last.time.max(1e-12);
+        println!("{}:", series.algo);
+        println!("   exact oracle calls        {}", last.oracle_calls);
+        println!("   training time             {:.2}s", last.time);
+        println!("   time inside the oracle    {:.2}s ({:.0}%)", last.oracle_secs, 100.0 * frac);
+        println!("   final duality gap         {:.4e}", last.primal - last.dual);
+        println!("   mean per-pixel train loss {:.4}", last.train_loss);
+        println!("   mean working-set size     {:.2}", last.ws_mean);
+        println!();
+    }
+    println!(
+        "the multi-plane working set shifts time away from the min-cut oracle \
+         (paper §4.1); on slower oracles the effect grows — see \
+         `cargo run --release --example oracle_cost_study`"
+    );
+    Ok(())
+}

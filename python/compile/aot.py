@@ -1,0 +1,133 @@
+"""AOT driver: lower the L2 graphs (with their L1 Pallas kernels) to HLO
+text artifacts + a manifest the Rust runtime loads.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Python never runs after this; the Rust binary executes the artifacts
+through PJRT. Interchange is HLO *text* (not serialized HloModuleProto):
+jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+while the text parser reassigns ids cleanly (see /opt/xla-example).
+
+Bucketed shapes: the runtime pads dynamic sizes (working-set rows,
+sequence lengths, superpixel counts) up to the next bucket, so one
+executable serves many request shapes. The bucket list below is curated
+to cover every (dataset, scale) this repo ships; the Rust engine falls
+back to the native path (and records a miss) for anything else.
+"""
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+
+from . import model
+
+# (rows, cols) buckets for the scoring mat-vec (working-set scoring at
+# cols = d+1; multiclass class scoring at rows = #classes).
+MATVEC_BUCKETS = [
+    (r, c)
+    for r in (16, 64, 256, 1024)
+    for c in (64, 256, 1024, 2048, 4096)
+]
+
+# Fused working-set argmax (same geometry as the mat-vec).
+SELECT_BUCKETS = [
+    (r, c) for r in (16, 64, 256) for c in (256, 1024, 2048, 4096)
+]
+
+# (m, k, n) buckets for the unary-score matmul a[M,K] @ b[N,K]^T, curated
+# per dataset/scale: OCR tiny/small/paper, HorseSeg tiny/small/paper.
+MATMUL_BT_BUCKETS = [
+    (16, 16, 8),     # ocr tiny:   L<=6,  F=8,   A=6
+    (16, 32, 32),    # ocr small:  L<=11, F=32,  A=26
+    (16, 128, 32),   # ocr paper:  L<=11, F=128, A=26
+    (64, 16, 2),     # horseseg tiny:  L<=36,  F=12
+    (256, 64, 2),    # horseseg small: L<=144, F=64
+    (512, 1024, 2),  # horseseg paper: L<=289, F=649
+]
+
+DTYPE = jnp.float32
+
+
+def _spec(shape):
+    return jnp.zeros(shape, DTYPE)
+
+
+def build_entries():
+    """Yield (name, file, meta, lower_fn) for every artifact."""
+    entries = []
+    for rows, cols in MATVEC_BUCKETS:
+        name = f"plane_scores_r{rows}_c{cols}"
+        entries.append(
+            (
+                name,
+                {"op": "plane_scores", "rows": rows, "cols": cols},
+                lambda rows=rows, cols=cols: model.lower_to_hlo_text(
+                    model.plane_scores, _spec((rows, cols)), _spec((cols,))
+                ),
+            )
+        )
+    for rows, cols in SELECT_BUCKETS:
+        name = f"approx_select_r{rows}_c{cols}"
+        entries.append(
+            (
+                name,
+                {"op": "approx_select", "rows": rows, "cols": cols},
+                lambda rows=rows, cols=cols: model.lower_to_hlo_text(
+                    model.approx_select,
+                    _spec((rows, cols)),
+                    _spec((rows,)),
+                    _spec((rows,)),
+                    _spec((cols,)),
+                    _spec(()),
+                ),
+            )
+        )
+    for m, k, n in MATMUL_BT_BUCKETS:
+        name = f"matmul_bt_m{m}_k{k}_n{n}"
+        entries.append(
+            (
+                name,
+                {"op": "matmul_bt", "m": m, "k": k, "n": n},
+                lambda m=m, k=k, n=n: model.lower_to_hlo_text(
+                    model.matmul_bt, _spec((m, k)), _spec((n, k))
+                ),
+            )
+        )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="substring filter for artifact names (debug)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "dtype": "f32", "ops": []}
+    entries = build_entries()
+    for name, meta, lower in entries:
+        if args.only and args.only not in name:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        text = lower()
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = fname
+        manifest["ops"].append(meta)
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['ops'])} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: working-set scoring mat-vec.
+
+scores[N] = planes[N, D] @ v[D]
+
+This is the hot spot of MP-BCFW's approximate oracle (and, with
+planes := per-class weight blocks, of the multiclass exact oracle). The
+kernel tiles the plane matrix into (BN x BD) VMEM blocks on a 2-D grid and
+accumulates partial dot products into the output block, which is the
+HBM->VMEM schedule a TPU would want; `interpret=True` makes it run (and be
+lowered to plain HLO) on the CPU PJRT backend — see DESIGN.md
+§Hardware-Adaptation.
+
+VMEM footprint per grid step (f32):
+    BN*BD (planes tile) + BD (v tile) + BN (acc) floats
+    = 128*512*4 B ≈ 256 KiB at the default blocks — comfortably within a
+    TPU core's ~16 MiB VMEM, leaving room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes (tuned for structure, not CPU wall-clock; see
+# module docstring).
+BLOCK_N = 128
+BLOCK_D = 512
+
+
+def _kernel(planes_ref, v_ref, out_ref):
+    """One (BN, BD) tile: accumulate partial mat-vec into out tile."""
+    d_idx = pl.program_id(1)
+    block = planes_ref[...]  # [BN, BD]
+    vseg = v_ref[...]  # [BD]
+    partial = block @ vseg  # [BN]
+
+    @pl.when(d_idx == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(d_idx != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d"))
+def plane_scores(planes, v, *, block_n=BLOCK_N, block_d=BLOCK_D):
+    """scores = planes @ v via the Pallas kernel (interpret mode).
+
+    Shapes must be multiples of the block sizes; the AOT wrapper pads to
+    the bucket sizes, so this always holds on the artifact path.
+    """
+    n, d = planes.shape
+    bn = min(block_n, n)
+    bd = min(block_d, d)
+    assert n % bn == 0 and d % bd == 0, (n, d, bn, bd)
+    grid = (n // bn, d // bd)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), planes.dtype),
+        interpret=True,
+    )(planes, v)
+
+
+def vmem_bytes(block_n=BLOCK_N, block_d=BLOCK_D, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (for DESIGN.md §Perf)."""
+    return dtype_bytes * (block_n * block_d + block_d + block_n)

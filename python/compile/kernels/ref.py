@@ -1,0 +1,28 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests (pytest + hypothesis) compare
+against; they are also what the L2 graphs would use if the Pallas path
+were disabled. Keep them boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+
+
+def plane_scores_ref(planes: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """scores[i] = <planes[i, :], v> — the working-set / class-scoring
+    mat-vec. planes: [N, D], v: [D] -> [N]."""
+    return planes @ v
+
+
+def matmul_bt_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """out = a @ b.T with b stored row-major [N, K] (per-label weight
+    blocks). a: [M, K], b: [N, K] -> [M, N]."""
+    return a @ b.T
+
+
+def loss_augment_ref(theta: jnp.ndarray, labels: jnp.ndarray, inv_len: float) -> jnp.ndarray:
+    """Add (1/L)[a != y_l] to each unary score. theta: [L, A],
+    labels: [L] int32 -> [L, A]."""
+    L, A = theta.shape
+    onehot = jnp.arange(A)[None, :] == labels[:, None]
+    return theta + inv_len * (1.0 - onehot.astype(theta.dtype))

@@ -1,0 +1,67 @@
+"""L2: JAX compute graphs for the MP-BCFW scoring hot spots.
+
+These are the functions `python/compile/aot.py` lowers to HLO text for the
+Rust runtime. Each one calls the L1 Pallas kernels so everything lowers
+into a single HLO module per (op, bucket-shape) pair. Python never runs at
+training time — the Rust coordinator executes these artifacts via PJRT.
+
+Ops:
+  * plane_scores(planes[N,D], v[D]) -> [N]
+        working-set scoring (approximate oracle) and multiclass class
+        scoring (rows = class weight blocks).
+  * matmul_bt(a[M,K], b[N,K]) -> [M,N]
+        unary score matrices for the Viterbi / graph-cut oracles.
+  * approx_select(planes[N,D1], offs[N], mask[N], phi[D1], lam) ->
+        (best_idx, best_score)
+        fused working-set argmax at w = -phi/lam: one PJRT call returns
+        the chosen plane index directly (saves shipping the score vector
+        back on the hot path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul_bt import matmul_bt as _matmul_bt_kernel
+from .kernels.plane_scores import plane_scores as _plane_scores_kernel
+
+
+def plane_scores(planes, v):
+    return _plane_scores_kernel(planes, v)
+
+
+def matmul_bt(a, b):
+    return _matmul_bt_kernel(a, b)
+
+
+def approx_select(planes, offs, mask, phi, lam):
+    """Fused approximate-oracle selection (§3.3).
+
+    planes: [N, D] linear parts of the cached planes (padded rows zero),
+    offs:   [N]   their offsets,
+    mask:   [N]   1.0 for live rows, 0.0 for padding,
+    phi:    [D]   current global phi_* (w = -phi/lam),
+    lam:    []    regularization constant.
+
+    Returns (best_idx int32, best_score f32) of
+    argmax_j <p_j, [w 1]> = argmax_j -<p_j, phi>/lam + off_j over live rows.
+    """
+    dots = _plane_scores_kernel(planes, phi)  # [N]
+    scores = -dots / lam + offs
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask > 0.5, scores, neg)
+    best = jnp.argmax(scores)
+    return best.astype(jnp.int32), scores[best]
+
+
+def lower_to_hlo_text(fn, *example_args) -> str:
+    """Lower a jitted function to HLO *text* (the interchange format the
+    xla 0.1.6 crate accepts — serialized protos from jax >= 0.5 carry
+    64-bit instruction ids that xla_extension 0.5.1 rejects)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,94 @@
+"""AOT artifact pipeline: manifest completeness, file integrity, and the
+bucket-coverage contract with the Rust runtime."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_build_entries_unique_names():
+    entries = aot.build_entries()
+    names = [e[0] for e in entries]
+    assert len(names) == len(set(names))
+    assert len(names) >= 30
+
+
+def test_buckets_cover_all_shipped_dataset_shapes():
+    # (dataset, scale) -> required shapes; keep in sync with
+    # rust/src/data/synth/*. A missing bucket silently falls back to the
+    # native engine, which would defeat the parity tests.
+    matvec_cols_needed = [
+        160 + 1, 640 + 1, 2560 + 1,          # usps tiny/small/paper (dim+1)
+        6 * 8 + 36 + 1, 26 * 32 + 676 + 1, 26 * 128 + 676 + 1,  # ocr
+        24 + 1, 128 + 1, 1298 + 1,           # horseseg
+    ]
+    cols_avail = sorted({c for _, c in aot.MATVEC_BUCKETS})
+    for need in matvec_cols_needed:
+        assert any(c >= need for c in cols_avail), f"no matvec bucket for cols={need}"
+    mm_needed = [
+        (11, 8, 6), (11, 32, 26), (11, 128, 26),      # ocr tiny/small/paper
+        (36, 12, 2), (144, 64, 2), (289, 649, 2),     # horseseg
+    ]
+    for m, k, n in mm_needed:
+        ok = any(bm >= m and bk >= k and bn >= n for bm, bk, bn in aot.MATMUL_BT_BUCKETS)
+        assert ok, f"no matmul_bt bucket for ({m},{k},{n})"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_files_on_disk():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    assert manifest["dtype"] == "f32"
+    for op in manifest["ops"]:
+        path = os.path.join(ARTIFACTS, op["file"])
+        assert os.path.exists(path), f"missing {op['file']}"
+        with open(path) as g:
+            head = g.read(64)
+        assert head.startswith("HloModule"), f"{op['file']} is not HLO text"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_artifacts_contain_no_custom_calls():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    for op in manifest["ops"]:
+        with open(os.path.join(ARTIFACTS, op["file"])) as g:
+            assert "custom-call" not in g.read(), op["file"]
+
+
+def test_aot_only_filter(tmp_path):
+    # --only lowers a single artifact quickly; sanity for the debug path.
+    out = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(tmp_path),
+            "--only",
+            "plane_scores_r16_c64",
+        ],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert out.returncode == 0, out.stderr
+    with open(tmp_path / "manifest.json") as f:
+        manifest = json.load(f)
+    assert len(manifest["ops"]) == 1
+    assert (tmp_path / "plane_scores_r16_c64.hlo.txt").exists()

@@ -1,0 +1,101 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs pure-jnp reference,
+swept over shapes and dtypes with hypothesis."""
+
+import jax
+
+# The dtype sweep below includes real float64; without x64 jax silently
+# downcasts and the f64 tolerances are unreachable.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul_bt import matmul_bt, vmem_bytes as mm_vmem
+from compile.kernels.plane_scores import plane_scores, vmem_bytes as ps_vmem
+from compile.kernels.ref import loss_augment_ref, matmul_bt_ref, plane_scores_ref
+
+RTOL = {np.float32: 2e-4, np.float64: 1e-10}
+ATOL = {np.float32: 1e-4, np.float64: 1e-12}
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# Shapes are powers of two times small factors so the block-divisibility
+# contract holds (the AOT path always pads to bucket shapes).
+pow2 = lambda lo, hi: st.sampled_from([2**i for i in range(lo, hi + 1)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=pow2(0, 9), d=pow2(0, 11), seed=st.integers(0, 2**31), f64=st.booleans())
+def test_plane_scores_matches_ref(n, d, seed, f64):
+    dtype = np.float64 if f64 else np.float32
+    planes = _rand((n, d), dtype, seed)
+    v = _rand((d,), dtype, seed + 1)
+    got = np.asarray(plane_scores(jnp.array(planes), jnp.array(v)))
+    want = np.asarray(plane_scores_ref(jnp.array(planes), jnp.array(v)))
+    np.testing.assert_allclose(got, want, rtol=RTOL[dtype], atol=ATOL[dtype] * d)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=pow2(0, 8),
+    k=pow2(0, 10),
+    n=pow2(0, 6),
+    seed=st.integers(0, 2**31),
+    f64=st.booleans(),
+)
+def test_matmul_bt_matches_ref(m, k, n, seed, f64):
+    dtype = np.float64 if f64 else np.float32
+    a = _rand((m, k), dtype, seed)
+    b = _rand((n, k), dtype, seed + 1)
+    got = np.asarray(matmul_bt(jnp.array(a), jnp.array(b)))
+    want = np.asarray(matmul_bt_ref(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, want, rtol=RTOL[dtype], atol=ATOL[dtype] * k)
+
+
+def test_plane_scores_zero_vector():
+    planes = _rand((16, 64), np.float32, 0)
+    out = np.asarray(plane_scores(jnp.array(planes), jnp.zeros(64, "float32")))
+    np.testing.assert_array_equal(out, np.zeros(16, "float32"))
+
+
+def test_plane_scores_identity_rows():
+    # Row i = e_i picks out v[i].
+    eye = np.eye(16, dtype=np.float32)
+    v = _rand((16,), np.float32, 3)
+    out = np.asarray(plane_scores(jnp.array(eye), jnp.array(v)))
+    np.testing.assert_allclose(out, v, rtol=1e-6)
+
+
+def test_matmul_bt_against_plane_scores_row():
+    # matmul_bt with m=1 must agree with plane_scores on b as the matrix.
+    a = _rand((1, 128), np.float32, 5)
+    b = _rand((8, 128), np.float32, 6)
+    mm = np.asarray(matmul_bt(jnp.array(a), jnp.array(b)))[0]
+    ps = np.asarray(plane_scores(jnp.array(b), jnp.array(a[0])))
+    np.testing.assert_allclose(mm, ps, rtol=2e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(l=st.integers(1, 12), a=st.integers(2, 26), seed=st.integers(0, 2**31))
+def test_loss_augment_ref_properties(l, a, seed):
+    theta = _rand((l, a), np.float32, seed)
+    rng = np.random.default_rng(seed + 7)
+    labels = rng.integers(0, a, size=l).astype(np.int32)
+    out = np.asarray(loss_augment_ref(jnp.array(theta), jnp.array(labels), 1.0 / l))
+    for i in range(l):
+        for c in range(a):
+            expect = theta[i, c] + (0.0 if c == labels[i] else 1.0 / l)
+            assert abs(out[i, c] - expect) < 1e-6
+
+
+def test_vmem_estimates_within_tpu_budget():
+    # Default block shapes must fit a TPU core's VMEM with headroom for
+    # double buffering (DESIGN.md hardware-adaptation contract).
+    assert ps_vmem() * 2 < 16 * 2**20
+    assert mm_vmem() * 2 < 16 * 2**20

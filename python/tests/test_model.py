@@ -1,0 +1,70 @@
+"""L2 graph correctness: the fused ops must agree with their unfused
+reference math."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 4, 8, 16]),
+    d=st.sampled_from([4, 64, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_approx_select_matches_manual_argmax(n, d, seed):
+    planes = _rand((n, d), seed)
+    offs = _rand((n,), seed + 1)
+    phi = _rand((d,), seed + 2)
+    lam = 0.37
+    mask = np.ones(n, np.float32)
+    idx, score = model.approx_select(
+        jnp.array(planes), jnp.array(offs), jnp.array(mask), jnp.array(phi), jnp.float32(lam)
+    )
+    scores = -(planes @ phi) / lam + offs
+    assert int(idx) == int(np.argmax(scores))
+    np.testing.assert_allclose(float(score), scores.max(), rtol=2e-4, atol=1e-4)
+
+
+def test_approx_select_respects_mask():
+    # The best row is masked out -> second best must win.
+    planes = np.zeros((4, 8), np.float32)
+    offs = np.array([1.0, 5.0, 3.0, 4.0], np.float32)
+    phi = np.zeros(8, np.float32)
+    mask = np.array([1.0, 0.0, 1.0, 1.0], np.float32)
+    idx, score = model.approx_select(
+        jnp.array(planes), jnp.array(offs), jnp.array(mask), jnp.array(phi), jnp.float32(1.0)
+    )
+    assert int(idx) == 3
+    np.testing.assert_allclose(float(score), 4.0, rtol=1e-6)
+
+
+def test_approx_select_padding_rows_never_selected():
+    # Zero-padded rows (mask 0) with zero offset would otherwise tie; the
+    # mask must exclude them even when all live scores are negative.
+    planes = np.zeros((4, 8), np.float32)
+    offs = np.array([-2.0, -3.0, 0.0, 0.0], np.float32)
+    mask = np.array([1.0, 1.0, 0.0, 0.0], np.float32)
+    phi = np.zeros(8, np.float32)
+    idx, _ = model.approx_select(
+        jnp.array(planes), jnp.array(offs), jnp.array(mask), jnp.array(phi), jnp.float32(1.0)
+    )
+    assert int(idx) == 0
+
+
+def test_lower_produces_pjrt_safe_hlo():
+    text = model.lower_to_hlo_text(
+        model.plane_scores, jnp.zeros((16, 64), "float32"), jnp.zeros((64,), "float32")
+    )
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text, "Mosaic custom-call would not run on CPU PJRT"
+    text2 = model.lower_to_hlo_text(
+        model.matmul_bt, jnp.zeros((16, 16), "float32"), jnp.zeros((8, 16), "float32")
+    )
+    assert "custom-call" not in text2

@@ -1,0 +1,39 @@
+//! End-to-end benchmark: regenerates every figure and table of the
+//! paper's evaluation at bench scale and writes CSVs into `results/`.
+//! Run with `cargo bench --bench figures` (or `make figures` for the
+//! larger CLI-driven variant with paper parameters).
+//!
+//! Environment knobs:
+//!   MPBCFW_BENCH_SCALE   tiny|small|paper   (default small)
+//!   MPBCFW_BENCH_REPEATS integer            (default 5)
+//!   MPBCFW_BENCH_ITERS   integer            (default 20)
+
+use mpbcfw::bench::figures::{run_figures, FigureOpts};
+use mpbcfw::bench::tables::run_table;
+use mpbcfw::coordinator::trainer::DatasetKind;
+use mpbcfw::data::types::Scale;
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = FigureOpts {
+        scale: Scale::parse(&env_or("MPBCFW_BENCH_SCALE", "small")).expect("bad scale"),
+        repeats: env_or("MPBCFW_BENCH_REPEATS", "5").parse()?,
+        max_iters: env_or("MPBCFW_BENCH_ITERS", "20").parse()?,
+        ..Default::default()
+    };
+    let out = std::path::Path::new("results");
+    let log = |m: String| println!("{m}");
+    println!(
+        "regenerating paper evaluation (scale={}, repeats={}, iters={})",
+        opts.scale.name(),
+        opts.repeats,
+        opts.max_iters
+    );
+    run_figures("all", &DatasetKind::all(), &opts, out, log)?;
+    run_table("all", &DatasetKind::all(), &opts, out, |m| println!("{m}"))?;
+    println!("done; CSVs in results/");
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Micro-benchmarks of the coordinator hot paths (hand-rolled harness;
+//! criterion is unavailable offline). Run with `cargo bench --bench
+//! hotpath`. Each benchmark reports median ns/op over repeated batches —
+//! these are the numbers the §Perf log in EXPERIMENTS.md tracks.
+
+use std::time::Instant;
+
+use mpbcfw::coordinator::dual::DualState;
+use mpbcfw::coordinator::products::{cached_block_updates, GramCache};
+use mpbcfw::coordinator::working_set::WorkingSet;
+use mpbcfw::data::synth::{horseseg_like, ocr_like, usps_like};
+use mpbcfw::data::types::Scale;
+use mpbcfw::maxflow::BkGraph;
+use mpbcfw::model::plane::Plane;
+use mpbcfw::model::problem::StructuredProblem;
+use mpbcfw::model::vec::VecF;
+use mpbcfw::oracle::graphcut::GraphCutProblem;
+use mpbcfw::oracle::multiclass::MulticlassProblem;
+use mpbcfw::oracle::sequence::SequenceProblem;
+use mpbcfw::runtime::engine::{NativeEngine, ScoringEngine};
+use mpbcfw::utils::rng::Pcg;
+
+/// Time `f` over enough iterations for stable numbers; returns ns/op.
+fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let mut best = f64::INFINITY;
+    for _round in 0..5 {
+        let mut iters = 1u64;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t.elapsed().as_secs_f64();
+            if dt > 0.02 {
+                best = best.min(dt * 1e9 / iters as f64);
+                break;
+            }
+            iters *= 4;
+        }
+    }
+    println!("{name:44} {best:14.0} ns/op");
+    best
+}
+
+fn main() {
+    println!("== hotpath micro-benchmarks (ns/op, best of 5 rounds) ==");
+    let mut eng = NativeEngine;
+    let rng = &mut Pcg::seeded(7);
+
+    // -- dense math kernels ------------------------------------------
+    let a: Vec<f64> = (0..2561).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..2561).map(|_| rng.normal()).collect();
+    bench("dot 2561-d", || {
+        std::hint::black_box(mpbcfw::utils::math::dot(&a, &b));
+    });
+
+    // -- oracles -------------------------------------------------------
+    let usps = MulticlassProblem::new(usps_like::generate(
+        usps_like::UspsLikeConfig::at_scale(Scale::Small),
+        0,
+    ));
+    let w: Vec<f64> = (0..usps.dim()).map(|_| 0.01 * rng.normal()).collect();
+    let mut i = 0;
+    bench("oracle usps_like (explicit argmax)", || {
+        i = (i + 1) % usps.n();
+        std::hint::black_box(usps.oracle(i, &w, &mut eng));
+    });
+
+    let ocr = SequenceProblem::new(ocr_like::generate(
+        ocr_like::OcrLikeConfig::at_scale(Scale::Small),
+        0,
+    ));
+    let w2: Vec<f64> = (0..ocr.dim()).map(|_| 0.01 * rng.normal()).collect();
+    bench("oracle ocr_like (Viterbi)", || {
+        i = (i + 1) % ocr.n();
+        std::hint::black_box(ocr.oracle(i, &w2, &mut eng));
+    });
+
+    let seg = GraphCutProblem::new(horseseg_like::generate(
+        horseseg_like::HorseSegLikeConfig::at_scale(Scale::Small),
+        0,
+    ));
+    let w3: Vec<f64> = (0..seg.dim()).map(|_| 0.01 * rng.normal()).collect();
+    bench("oracle horseseg_like (BK min-cut)", || {
+        i = (i + 1) % seg.n();
+        std::hint::black_box(seg.oracle(i, &w3, &mut eng));
+    });
+
+    // -- BK max-flow on a 16x16 grid -----------------------------------
+    bench("bk maxflow 256-node grid", || {
+        let mut g = BkGraph::new(256, 480);
+        let mut r2 = Pcg::seeded(3);
+        for v in 0..256u32 {
+            g.add_tweights(v, r2.f64() * 2.0, r2.f64() * 2.0);
+        }
+        for r in 0..16u32 {
+            for c in 0..16u32 {
+                let id = r * 16 + c;
+                if c + 1 < 16 {
+                    g.add_edge(id, id + 1, 1.0, 1.0);
+                }
+                if r + 1 < 16 {
+                    g.add_edge(id, id + 16, 1.0, 1.0);
+                }
+            }
+        }
+        std::hint::black_box(g.maxflow());
+    });
+
+    // -- approximate pass: plain vs product-cached ----------------------
+    let dim = 1509; // ocr_like small dim+1 territory
+    let mk_ws = |rng: &mut Pcg, m: usize| {
+        let mut ws = WorkingSet::new(1000);
+        for t in 0..m {
+            let pairs: Vec<(u32, f64)> =
+                (0..200).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
+            ws.insert(Plane::new(VecF::sparse(dim, pairs), rng.normal(), t as u64), 0);
+        }
+        ws
+    };
+    let mut st = DualState::new(4, dim, 0.01);
+    let ws = mk_ws(rng, 12);
+    bench("approx step plain (12 planes, nnz 200)", || {
+        st.refresh_w();
+        if let Some((j, _)) = ws.best_at(&st.w) {
+            let g = {
+                let p = ws.plane(j);
+                st.block_step(0, p)
+            };
+            std::hint::black_box(g);
+        }
+    });
+
+    let mut gram = GramCache::new();
+    let mut st2 = DualState::new(4, dim, 0.01);
+    let mut ws2 = mk_ws(rng, 12);
+    let mut now = 0u64;
+    bench("approx block cached r=10 (12 planes)", || {
+        now += 1;
+        std::hint::black_box(cached_block_updates(&mut st2, &mut ws2, &mut gram, 0, 10, now));
+    });
+
+    // -- engine scoring paths -------------------------------------------
+    let mat: Vec<f64> = (0..64 * 2561).map(|_| rng.normal()).collect();
+    let v: Vec<f64> = (0..2561).map(|_| rng.normal()).collect();
+    let mut out = Vec::new();
+    bench("native matvec 64x2561", || {
+        eng.matvec(&mat, 64, 2561, &v, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    #[cfg(feature = "xla-rt")]
+    {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let mut xla = mpbcfw::runtime::xla::XlaEngine::load(dir).unwrap();
+            bench("xla matvec 64x2561 (PJRT, padded bucket)", || {
+                xla.matvec(&mat, 64, 2561, &v, &mut out);
+                std::hint::black_box(&out);
+            });
+        } else {
+            println!("(xla matvec skipped: artifacts/ not built)");
+        }
+    }
+}

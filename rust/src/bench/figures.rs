@@ -1,0 +1,237 @@
+//! Figure regeneration (paper §4, Figs. 3–6).
+//!
+//! One "paper suite" run per dataset — {BCFW, BCFW-avg, MP-BCFW,
+//! MP-BCFW-avg} × seeds with λ = 1/n, T = 10, N = M = 1000 — yields every
+//! figure: Fig. 3 plots the suboptimality columns against `oracle_calls`,
+//! Fig. 4 against `time_s`, Fig. 5 plots `ws_mean` and Fig. 6
+//! `approx_passes` per outer iteration. The CSVs under `results/` carry
+//! all columns; `summary_lines` prints the min/med/max bands.
+
+use std::path::Path;
+
+use super::harness::RunGroup;
+use super::plot::{color_for, render, AxisScale, Curve, PlotSpec};
+use crate::coordinator::trainer::{Algo, DatasetKind, EngineKind, TrainSpec};
+use crate::data::types::Scale;
+
+/// Bench-suite options (CLI-settable).
+#[derive(Clone, Debug)]
+pub struct FigureOpts {
+    pub scale: Scale,
+    pub repeats: u64,
+    pub max_iters: u64,
+    pub engine: EngineKind,
+    /// Extra virtual latency per exact-oracle call (0 for the paper runs;
+    /// the HorseSeg-like oracle is genuinely slow already).
+    pub oracle_delay: f64,
+    pub data_seed: u64,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts {
+            scale: Scale::Small,
+            repeats: 10,
+            max_iters: 30,
+            engine: EngineKind::Native,
+            oracle_delay: 0.0,
+            data_seed: 0,
+        }
+    }
+}
+
+fn base_spec(dataset: DatasetKind, opts: &FigureOpts) -> TrainSpec {
+    TrainSpec {
+        dataset,
+        scale: opts.scale,
+        data_seed: opts.data_seed,
+        max_iters: opts.max_iters,
+        oracle_delay: opts.oracle_delay,
+        engine: opts.engine.clone(),
+        ..Default::default()
+    }
+}
+
+/// Run the paper's four algorithms on one dataset; write
+/// `<out>/fig34_<dataset>.csv` (Figs. 3 and 4 share the file; Figs. 5 and
+/// 6 read the ws_mean / approx_passes columns of the MP-BCFW rows).
+pub fn run_dataset(
+    dataset: DatasetKind,
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<RunGroup> {
+    let base = base_spec(dataset, opts);
+    let seeds: Vec<u64> = (0..opts.repeats).collect();
+    log(format!(
+        "== {} (scale={}, {} repeats, {} outer iters, engine={:?})",
+        dataset.name(),
+        opts.scale.name(),
+        opts.repeats,
+        opts.max_iters,
+        match &opts.engine {
+            EngineKind::Native => "native",
+            EngineKind::Xla { .. } => "xla",
+        },
+    ));
+    let group = RunGroup::run(&base, &Algo::paper_four(), &seeds, |s| {
+        let last = s.points.last().unwrap();
+        log(format!(
+            "   {:14} seed={} calls={:6} time={:8.2}s gap={:.3e}",
+            s.algo,
+            s.seed,
+            last.oracle_calls,
+            last.time,
+            last.primal - last.dual
+        ));
+    })?;
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join(format!("fig34_{}.csv", dataset.name()));
+    group.write_convergence_csv(&path)?;
+    log(format!("   wrote {}", path.display()));
+    write_svgs(&group, dataset, out_dir, &mut log)?;
+    for line in group.summary_lines() {
+        log(line);
+    }
+    Ok(group)
+}
+
+/// Aggregate per-algorithm median curves (with min/max bands over seeds)
+/// and render the four figures as SVG, paper-style.
+fn write_svgs(
+    group: &RunGroup,
+    dataset: DatasetKind,
+    out_dir: &Path,
+    log: &mut impl FnMut(String),
+) -> anyhow::Result<()> {
+    // value extractor: (x, y) per point for a given figure id.
+    type Extract = fn(&crate::coordinator::metrics::EvalPoint, f64) -> (f64, f64);
+    let specs: [(&str, &str, &str, Extract, bool); 4] = [
+        (
+            "fig3",
+            "exact oracle calls",
+            "primal suboptimality",
+            |p, best| (p.oracle_calls as f64, (p.primal_avg.unwrap_or(p.primal) - best).max(1e-12)),
+            false,
+        ),
+        (
+            "fig4",
+            "runtime [s]",
+            "primal suboptimality",
+            |p, best| (p.time, (p.primal_avg.unwrap_or(p.primal) - best).max(1e-12)),
+            false,
+        ),
+        ("fig5", "outer iteration", "mean working-set size", |p, _| (p.outer as f64, p.ws_mean), true),
+        (
+            "fig6",
+            "outer iteration",
+            "approx passes / iteration",
+            |p, _| (p.outer as f64, p.approx_passes as f64),
+            true,
+        ),
+    ];
+    for (fig, xl, yl, extract, mp_only) in specs {
+        let mut algos: Vec<String> = group.series.iter().map(|s| s.algo.clone()).collect();
+        algos.sort();
+        algos.dedup();
+        let mut curves = Vec::new();
+        for algo in &algos {
+            if mp_only && !algo.starts_with("mp-") {
+                continue;
+            }
+            let runs: Vec<_> = group.series.iter().filter(|s| &s.algo == algo).collect();
+            if runs.is_empty() {
+                continue;
+            }
+            // Aggregate by evaluation index across seeds.
+            let len = runs.iter().map(|s| s.points.len()).min().unwrap_or(0);
+            let mut pts = Vec::with_capacity(len);
+            let mut band = Vec::with_capacity(len);
+            for k in 0..len {
+                let mut xs = Vec::new();
+                let mut ys = Vec::new();
+                for r in &runs {
+                    let (x, y) = extract(&r.points[k], group.best_dual);
+                    xs.push(x);
+                    ys.push(y);
+                }
+                ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let xmed = xs[xs.len() / 2];
+                pts.push((xmed, ys[ys.len() / 2]));
+                band.push((xmed, ys[0], ys[ys.len() - 1]));
+            }
+            curves.push(Curve {
+                label: algo.clone(),
+                color: color_for(algo).to_string(),
+                points: pts,
+                band: Some(band),
+            });
+        }
+        let spec = PlotSpec {
+            title: format!("{fig}: {} ({})", yl, dataset.name()),
+            x_label: xl.into(),
+            y_label: yl.into(),
+            x_scale: AxisScale::Linear,
+            y_scale: if mp_only { AxisScale::Linear } else { AxisScale::Log10 },
+            ..Default::default()
+        };
+        let svg = render(&spec, &curves);
+        let path = out_dir.join(format!("{fig}_{}.svg", dataset.name()));
+        std::fs::write(&path, svg)?;
+        log(format!("   wrote {}", path.display()));
+    }
+    Ok(())
+}
+
+/// Which figure ids the suite knows how to regenerate.
+pub const FIGURES: &[&str] = &["fig3", "fig4", "fig5", "fig6", "all"];
+
+/// Regenerate figures for the requested datasets. All four figures come
+/// from the same runs, so `which` only affects the console hint.
+pub fn run_figures(
+    which: &str,
+    datasets: &[DatasetKind],
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    anyhow::ensure!(FIGURES.contains(&which), "unknown figure {which} (expected one of {FIGURES:?})");
+    for &ds in datasets {
+        run_dataset(ds, opts, out_dir, &mut log)?;
+    }
+    log(format!(
+        "figures: plot columns of results/fig34_<dataset>.csv — \
+         fig3: x=oracle_calls, fig4: x=time_s (y: primal_subopt/dual_subopt/gap, log-scale); \
+         fig5: y=ws_mean, fig6: y=approx_passes (mp-bcfw rows, x=outer)"
+    ));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_suite_runs_on_tiny_scale() {
+        let opts = FigureOpts {
+            scale: Scale::Tiny,
+            repeats: 2,
+            max_iters: 3,
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir().join(format!("mpbcfw_figs_{}", std::process::id()));
+        let mut msgs = Vec::new();
+        run_figures("fig3", &[DatasetKind::UspsLike], &opts, &dir, |m| msgs.push(m)).unwrap();
+        assert!(dir.join("fig34_usps_like.csv").exists());
+        assert!(msgs.iter().any(|m| m.contains("mp-bcfw")));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_figure() {
+        let opts = FigureOpts::default();
+        let err = run_figures("fig9", &[], &opts, Path::new("/tmp"), |_| {});
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Shared machinery for regenerating the paper's figures and tables:
+//! multi-seed run groups over a shared dataset, suboptimality computation
+//! against the group-wide best dual bound (the paper's convention), and
+//! CSV emission into `results/`.
+
+use std::path::Path;
+
+use crate::coordinator::metrics::Series;
+use crate::coordinator::trainer::{self, Algo, TrainSpec};
+use crate::utils::csv::CsvWriter;
+
+/// Results of running a set of algorithms × seeds on one dataset.
+pub struct RunGroup {
+    pub dataset: String,
+    pub series: Vec<Series>,
+    /// Best dual bound observed anywhere in the group — the reference
+    /// point for primal/dual suboptimality, as in the paper.
+    pub best_dual: f64,
+}
+
+impl RunGroup {
+    /// Execute `algos` × `seeds` on the dataset described by `base`
+    /// (dataset/scale/data_seed/engine/... are taken from `base`).
+    pub fn run(
+        base: &TrainSpec,
+        algos: &[Algo],
+        seeds: &[u64],
+        mut progress: impl FnMut(&Series),
+    ) -> anyhow::Result<RunGroup> {
+        // Share the generated dataset across all runs (byte-identical
+        // inputs for every algorithm and seed, as the paper's fairness
+        // setup requires).
+        let problem = trainer::build_problem(base);
+        let mut engine = base.engine.build()?;
+        let mut series = Vec::new();
+        for &algo in algos {
+            for &seed in seeds {
+                let spec = TrainSpec { algo, seed, ..base.clone() };
+                let s = trainer::train_on(&spec, &problem, engine.as_mut());
+                progress(&s);
+                series.push(s);
+            }
+        }
+        let best_dual = series
+            .iter()
+            .map(|s| s.best_dual())
+            .fold(f64::NEG_INFINITY, f64::max);
+        Ok(RunGroup { dataset: base.dataset.name().to_string(), series, best_dual })
+    }
+
+    /// Write the convergence CSV (one row per evaluation point). This one
+    /// file carries both Fig. 3 (x = oracle_calls) and Fig. 4 (x = time)
+    /// as well as Fig. 5 (ws_mean) and Fig. 6 (approx_passes) columns.
+    pub fn write_convergence_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "dataset",
+                "algo",
+                "seed",
+                "outer",
+                "oracle_calls",
+                "time_s",
+                "primal",
+                "dual",
+                "primal_subopt",
+                "dual_subopt",
+                "gap",
+                "primal_avg_subopt",
+                "dual_avg_subopt",
+                "ws_mean",
+                "approx_passes",
+                "approx_steps",
+                "oracle_secs",
+            ],
+        )?;
+        for s in &self.series {
+            for p in &s.points {
+                let primal_subopt = p.primal - self.best_dual;
+                let dual_subopt = self.best_dual - p.dual;
+                let pa = p
+                    .primal_avg
+                    .map(|x| format!("{}", x - self.best_dual))
+                    .unwrap_or_default();
+                let da = p
+                    .dual_avg
+                    .map(|x| format!("{}", self.best_dual - x))
+                    .unwrap_or_default();
+                w.row(&[
+                    self.dataset.clone(),
+                    s.algo.clone(),
+                    s.seed.to_string(),
+                    p.outer.to_string(),
+                    p.oracle_calls.to_string(),
+                    format!("{}", p.time),
+                    format!("{}", p.primal),
+                    format!("{}", p.dual),
+                    format!("{}", primal_subopt),
+                    format!("{}", dual_subopt),
+                    format!("{}", p.primal - p.dual),
+                    pa,
+                    da,
+                    format!("{}", p.ws_mean),
+                    p.approx_passes.to_string(),
+                    p.approx_steps.to_string(),
+                    format!("{}", p.oracle_secs),
+                ])?;
+            }
+        }
+        w.flush()
+    }
+
+    /// Min/median/max of final-point gaps per algorithm (console summary,
+    /// mirrors the shaded bands in the paper's figures).
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut algos: Vec<String> = self.series.iter().map(|s| s.algo.clone()).collect();
+        algos.sort();
+        algos.dedup();
+        let mut lines = Vec::new();
+        for algo in algos {
+            // For averaging variants the reported predictor is the
+            // averaged iterate (that is what the paper plots).
+            let mut gaps: Vec<f64> = self
+                .series
+                .iter()
+                .filter(|s| s.algo == algo)
+                .filter_map(|s| {
+                    s.points.last().map(|p| p.primal_avg.unwrap_or(p.primal) - self.best_dual)
+                })
+                .collect();
+            gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if gaps.is_empty() {
+                continue;
+            }
+            let med = gaps[gaps.len() / 2];
+            lines.push(format!(
+                "  {:14} final primal-subopt min/med/max = {:.3e} / {:.3e} / {:.3e}",
+                algo,
+                gaps[0],
+                med,
+                gaps[gaps.len() - 1]
+            ));
+        }
+        lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::types::Scale;
+
+    #[test]
+    fn run_group_produces_csv_and_summary() {
+        let base = TrainSpec { scale: Scale::Tiny, max_iters: 3, ..Default::default() };
+        let group = RunGroup::run(&base, &[Algo::Bcfw, Algo::MpBcfw], &[0, 1], |_| {}).unwrap();
+        assert_eq!(group.series.len(), 4);
+        assert!(group.best_dual.is_finite());
+        // Suboptimalities vs the group best dual must be ≥ ~0.
+        for s in &group.series {
+            for p in &s.points {
+                assert!(p.primal - group.best_dual >= -1e-9);
+                assert!(group.best_dual - p.dual >= -1e-9);
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("mpbcfw_harness_{}", std::process::id()));
+        let path = dir.join("conv.csv");
+        group.write_convergence_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() > 4 * 3);
+        assert!(text.starts_with("dataset,algo,seed,outer"));
+        let lines = group.summary_lines();
+        assert_eq!(lines.len(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

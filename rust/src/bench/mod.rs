@@ -1,0 +1,6 @@
+//! Figure/table regeneration harness (paper §4): convergence series
+//! recording, multi-seed sweeps, CSV emission.
+pub mod harness;
+pub mod figures;
+pub mod tables;
+pub mod plot;

@@ -1,0 +1,361 @@
+//! Minimal SVG line-plot renderer for the figure suite (no plotting
+//! crates offline). Produces paper-style panels: log-scale y,
+//! min/median/max bands over repeats, legend, axis ticks. The bench
+//! harness feeds it the same series that go to the CSVs, so
+//! `results/fig3_<dataset>.svg` etc. are directly comparable to the
+//! paper's Figs. 3–6.
+
+use std::fmt::Write as _;
+
+/// A single curve: sorted (x, y) points plus an optional (lo, hi) band.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub label: String,
+    pub color: String,
+    pub points: Vec<(f64, f64)>,
+    pub band: Option<Vec<(f64, f64, f64)>>, // (x, lo, hi)
+}
+
+/// Axis scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AxisScale {
+    Linear,
+    Log10,
+}
+
+#[derive(Clone, Debug)]
+pub struct PlotSpec {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub x_scale: AxisScale,
+    pub y_scale: AxisScale,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl Default for PlotSpec {
+    fn default() -> Self {
+        PlotSpec {
+            title: String::new(),
+            x_label: String::new(),
+            y_label: String::new(),
+            x_scale: AxisScale::Linear,
+            y_scale: AxisScale::Log10,
+            width: 560,
+            height: 380,
+        }
+    }
+}
+
+/// The palette used across figures (stable algo → color mapping).
+pub fn color_for(algo: &str) -> &'static str {
+    match algo {
+        "bcfw" => "#1f77b4",
+        "bcfw-avg" => "#17becf",
+        "mp-bcfw" => "#d62728",
+        "mp-bcfw-avg" => "#ff7f0e",
+        "fw" => "#7f7f7f",
+        "cutting-plane" => "#2ca02c",
+        "ssg" | "ssg-avg" => "#9467bd",
+        _ => "#8c564b",
+    }
+}
+
+const MARGIN_L: f64 = 64.0;
+const MARGIN_R: f64 = 12.0;
+const MARGIN_T: f64 = 28.0;
+const MARGIN_B: f64 = 46.0;
+const EPS_LOG: f64 = 1e-12;
+
+struct Mapper {
+    x0: f64,
+    x1: f64,
+    y0: f64,
+    y1: f64,
+    w: f64,
+    h: f64,
+    xs: AxisScale,
+    ys: AxisScale,
+}
+
+impl Mapper {
+    fn tx(&self, x: f64) -> f64 {
+        let x = match self.xs {
+            AxisScale::Linear => x,
+            AxisScale::Log10 => x.max(EPS_LOG).log10(),
+        };
+        MARGIN_L + (x - self.x0) / (self.x1 - self.x0).max(1e-300) * self.w
+    }
+    fn ty(&self, y: f64) -> f64 {
+        let y = match self.ys {
+            AxisScale::Linear => y,
+            AxisScale::Log10 => y.max(EPS_LOG).log10(),
+        };
+        MARGIN_T + self.h - (y - self.y0) / (self.y1 - self.y0).max(1e-300) * self.h
+    }
+}
+
+fn apply(scale: AxisScale, v: f64) -> f64 {
+    match scale {
+        AxisScale::Linear => v,
+        AxisScale::Log10 => v.max(EPS_LOG).log10(),
+    }
+}
+
+/// Render curves to an SVG string.
+pub fn render(spec: &PlotSpec, curves: &[Curve]) -> String {
+    let w = spec.width as f64 - MARGIN_L - MARGIN_R;
+    let h = spec.height as f64 - MARGIN_T - MARGIN_B;
+    // Data ranges in transformed space.
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for c in curves {
+        for &(x, y) in &c.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            x0 = x0.min(apply(spec.x_scale, x));
+            x1 = x1.max(apply(spec.x_scale, x));
+            y0 = y0.min(apply(spec.y_scale, y));
+            y1 = y1.max(apply(spec.y_scale, y));
+        }
+        if let Some(band) = &c.band {
+            for &(_, lo, hi) in band {
+                if lo.is_finite() {
+                    y0 = y0.min(apply(spec.y_scale, lo));
+                }
+                if hi.is_finite() {
+                    y1 = y1.max(apply(spec.y_scale, hi));
+                }
+            }
+        }
+    }
+    if !x0.is_finite() {
+        x0 = 0.0;
+        x1 = 1.0;
+    }
+    if !y0.is_finite() {
+        y0 = 0.0;
+        y1 = 1.0;
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let m = Mapper { x0, x1, y0, y1, w, h, xs: spec.x_scale, ys: spec.y_scale };
+
+    let mut svg = String::new();
+    let _ = write!(
+        svg,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{}" height="{}" font-family="Helvetica,Arial,sans-serif" font-size="11">"#,
+        spec.width, spec.height
+    );
+    let _ = write!(svg, r#"<rect width="100%" height="100%" fill="white"/>"#);
+    // Frame.
+    let _ = write!(
+        svg,
+        r##"<rect x="{MARGIN_L}" y="{MARGIN_T}" width="{w}" height="{h}" fill="none" stroke="#333"/>"##
+    );
+    // Title + axis labels.
+    let _ = write!(
+        svg,
+        r#"<text x="{}" y="16" text-anchor="middle" font-size="13">{}</text>"#,
+        MARGIN_L + w / 2.0,
+        esc(&spec.title)
+    );
+    let _ = write!(
+        svg,
+        r#"<text x="{}" y="{}" text-anchor="middle">{}</text>"#,
+        MARGIN_L + w / 2.0,
+        spec.height as f64 - 10.0,
+        esc(&spec.x_label)
+    );
+    let _ = write!(
+        svg,
+        r#"<text x="14" y="{}" text-anchor="middle" transform="rotate(-90 14 {})">{}</text>"#,
+        MARGIN_T + h / 2.0,
+        MARGIN_T + h / 2.0,
+        esc(&spec.y_label)
+    );
+
+    // Ticks (5 per axis, in transformed space; log axes label 10^k).
+    for k in 0..=4 {
+        let f = k as f64 / 4.0;
+        let xv = x0 + f * (x1 - x0);
+        let px = MARGIN_L + f * w;
+        let label = tick_label(spec.x_scale, xv);
+        let _ = write!(
+            svg,
+            r##"<line x1="{px}" y1="{}" x2="{px}" y2="{}" stroke="#999" stroke-dasharray="2,3"/>"##,
+            MARGIN_T,
+            MARGIN_T + h
+        );
+        let _ = write!(
+            svg,
+            r#"<text x="{px}" y="{}" text-anchor="middle">{label}</text>"#,
+            MARGIN_T + h + 16.0
+        );
+        let yv = y0 + f * (y1 - y0);
+        let py = MARGIN_T + h - f * h;
+        let label = tick_label(spec.y_scale, yv);
+        let _ = write!(
+            svg,
+            r##"<line x1="{}" y1="{py}" x2="{}" y2="{py}" stroke="#999" stroke-dasharray="2,3"/>"##,
+            MARGIN_L,
+            MARGIN_L + w
+        );
+        let _ = write!(
+            svg,
+            r#"<text x="{}" y="{}" text-anchor="end">{label}</text>"#,
+            MARGIN_L - 6.0,
+            py + 4.0
+        );
+    }
+
+    // Bands first (under the lines).
+    for c in curves {
+        if let Some(band) = &c.band {
+            if band.len() >= 2 {
+                let mut d = String::from("M");
+                for &(x, lo, _) in band {
+                    let _ = write!(d, " {:.1},{:.1}", m.tx(x), m.ty(lo));
+                }
+                for &(x, _, hi) in band.iter().rev() {
+                    let _ = write!(d, " {:.1},{:.1}", m.tx(x), m.ty(hi));
+                }
+                d.push('Z');
+                let _ = write!(
+                    svg,
+                    r#"<path d="{d}" fill="{}" opacity="0.15" stroke="none"/>"#,
+                    c.color
+                );
+            }
+        }
+    }
+    // Lines.
+    for c in curves {
+        if c.points.is_empty() {
+            continue;
+        }
+        let mut d = String::from("M");
+        for &(x, y) in &c.points {
+            let _ = write!(d, " {:.1},{:.1}", m.tx(x), m.ty(y));
+        }
+        let _ = write!(
+            svg,
+            r#"<path d="{d}" fill="none" stroke="{}" stroke-width="1.8"/>"#,
+            c.color
+        );
+    }
+    // Legend (top-right inside the frame).
+    for (i, c) in curves.iter().enumerate() {
+        let ly = MARGIN_T + 14.0 + 15.0 * i as f64;
+        let lx = MARGIN_L + w - 150.0;
+        let _ = write!(
+            svg,
+            r#"<line x1="{lx}" y1="{ly}" x2="{}" y2="{ly}" stroke="{}" stroke-width="2"/>"#,
+            lx + 22.0,
+            c.color
+        );
+        let _ = write!(
+            svg,
+            r#"<text x="{}" y="{}">{}</text>"#,
+            lx + 28.0,
+            ly + 4.0,
+            esc(&c.label)
+        );
+    }
+    svg.push_str("</svg>");
+    svg
+}
+
+fn tick_label(scale: AxisScale, v: f64) -> String {
+    match scale {
+        AxisScale::Linear => {
+            if v.abs() >= 1000.0 {
+                format!("{:.0}", v)
+            } else {
+                format!("{:.3}", v)
+                    .trim_end_matches('0')
+                    .trim_end_matches('.')
+                    .to_string()
+            }
+        }
+        AxisScale::Log10 => format!("1e{:.1}", v).replace(".0", ""),
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(label: &str, pts: Vec<(f64, f64)>) -> Curve {
+        Curve { label: label.into(), color: color_for(label).into(), points: pts, band: None }
+    }
+
+    #[test]
+    fn renders_valid_svg_with_curves_and_legend() {
+        let spec = PlotSpec {
+            title: "test".into(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            ..Default::default()
+        };
+        let svg = render(
+            &spec,
+            &[
+                curve("bcfw", vec![(0.0, 1.0), (1.0, 0.1), (2.0, 0.01)]),
+                curve("mp-bcfw", vec![(0.0, 1.0), (1.0, 0.01), (2.0, 1e-4)]),
+            ],
+        );
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert!(svg.contains("bcfw"));
+        assert!(svg.matches("<path").count() >= 2);
+        assert!(svg.contains("#d62728"), "mp-bcfw color present");
+    }
+
+    #[test]
+    fn band_rendered_as_closed_path() {
+        let mut c = curve("bcfw", vec![(0.0, 1.0), (1.0, 0.5)]);
+        c.band = Some(vec![(0.0, 0.8, 1.2), (1.0, 0.4, 0.6)]);
+        let svg = render(&PlotSpec::default(), &[c]);
+        assert!(svg.contains("opacity=\"0.15\""));
+        assert!(svg.contains('Z'));
+    }
+
+    #[test]
+    fn survives_degenerate_inputs() {
+        // Empty, single point, zeros on a log axis, NaN values.
+        let svg = render(&PlotSpec::default(), &[]);
+        assert!(svg.contains("</svg>"));
+        let svg = render(&PlotSpec::default(), &[curve("fw", vec![(1.0, 0.0)])]);
+        assert!(svg.contains("</svg>"));
+        let svg = render(
+            &PlotSpec::default(),
+            &[curve("fw", vec![(f64::NAN, 1.0), (1.0, f64::NAN)])],
+        );
+        assert!(svg.contains("</svg>"));
+    }
+
+    #[test]
+    fn escapes_markup_in_labels() {
+        let spec = PlotSpec { title: "a<b&c".into(), ..Default::default() };
+        let svg = render(&spec, &[]);
+        assert!(svg.contains("a&lt;b&amp;c"));
+        assert!(!svg.contains("a<b"));
+    }
+
+    #[test]
+    fn colors_are_stable_per_algorithm() {
+        assert_eq!(color_for("bcfw"), color_for("bcfw"));
+        assert_ne!(color_for("bcfw"), color_for("mp-bcfw"));
+    }
+}

@@ -1,0 +1,300 @@
+//! Table-style experiments: the §4.1 text statistics (per-call oracle
+//! cost, oracle-time fraction), the oracle-cost crossover sweep, and the
+//! ablations called out in DESIGN.md (product cache on/off, T
+//! sensitivity).
+
+use std::path::Path;
+
+use crate::coordinator::trainer::{self, Algo, DatasetKind, TrainSpec};
+use crate::utils::csv::CsvWriter;
+
+use super::figures::FigureOpts;
+
+/// TAB1 — §4.1 statistics: per-oracle-call cost and the fraction of
+/// training time spent in the oracle, for BCFW vs MP-BCFW on each dataset
+/// (paper: USPS ≈15%, OCR ≈60%, HorseSeg ≈99% → ≈25%).
+pub fn oracle_stats(
+    datasets: &[DatasetKind],
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_oracle_stats.csv"),
+        &["dataset", "algo", "oracle_calls", "ms_per_call", "oracle_frac", "total_s", "final_gap"],
+    )?;
+    log("== TAB1: oracle cost statistics (paper §4.1)".into());
+    log(format!(
+        "   {:14} {:12} {:>9} {:>12} {:>12} {:>9}",
+        "dataset", "algo", "calls", "ms/call", "oracle-frac", "total-s"
+    ));
+    for &ds in datasets {
+        for algo in [Algo::Bcfw, Algo::MpBcfw] {
+            let spec = TrainSpec {
+                dataset: ds,
+                scale: opts.scale,
+                data_seed: opts.data_seed,
+                algo,
+                max_iters: opts.max_iters,
+                oracle_delay: opts.oracle_delay,
+                engine: opts.engine.clone(),
+                ..Default::default()
+            };
+            let s = trainer::train(&spec)?;
+            let last = s.points.last().unwrap();
+            let ms_per_call = if last.oracle_calls > 0 {
+                1e3 * last.oracle_secs / last.oracle_calls as f64
+            } else {
+                0.0
+            };
+            let frac = if last.time > 0.0 { last.oracle_secs / last.time } else { 0.0 };
+            log(format!(
+                "   {:14} {:12} {:>9} {:>12.3} {:>11.1}% {:>9.2}",
+                ds.name(),
+                algo.name(),
+                last.oracle_calls,
+                ms_per_call,
+                100.0 * frac,
+                last.time
+            ));
+            csv.row(&[
+                ds.name().into(),
+                algo.name().into(),
+                last.oracle_calls.to_string(),
+                format!("{ms_per_call}"),
+                format!("{frac}"),
+                format!("{}", last.time),
+                format!("{}", last.primal - last.dual),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    log(format!("   wrote {}", out_dir.join("table_oracle_stats.csv").display()));
+    Ok(())
+}
+
+/// XOVER — sweep injected oracle latency and measure the runtime speedup
+/// of MP-BCFW over BCFW to reach a fixed duality-gap target. The paper's
+/// qualitative claim: ≈1× for cheap oracles, ≫1× for expensive ones.
+pub fn crossover(
+    opts: &FigureOpts,
+    delays: &[f64],
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_crossover.csv"),
+        &["delay_s", "algo", "time_to_target_s", "target_gap", "speedup_vs_bcfw"],
+    )?;
+    log("== XOVER: oracle-latency crossover (usps_like + virtual delay)".into());
+    for &delay in delays {
+        // Establish a common gap target from a BCFW reference run.
+        let mut times = [0.0f64; 2];
+        let mut target = 0.0;
+        for (idx, algo) in [Algo::Bcfw, Algo::MpBcfw].iter().enumerate() {
+            let spec = TrainSpec {
+                dataset: DatasetKind::UspsLike,
+                scale: opts.scale,
+                data_seed: opts.data_seed,
+                algo: *algo,
+                max_iters: opts.max_iters,
+                oracle_delay: delay,
+                engine: opts.engine.clone(),
+                ..Default::default()
+            };
+            let s = trainer::train(&spec)?;
+            if idx == 0 {
+                // Target: the gap BCFW reaches at the end of its budget.
+                let last = s.points.last().unwrap();
+                target = last.primal - last.dual;
+                times[0] = last.time;
+            } else {
+                // First time MP-BCFW's gap is ≤ target.
+                times[1] = s
+                    .points
+                    .iter()
+                    .find(|p| p.primal - p.dual <= target)
+                    .map(|p| p.time)
+                    .unwrap_or(s.points.last().unwrap().time);
+            }
+        }
+        let speedup = if times[1] > 0.0 { times[0] / times[1] } else { f64::INFINITY };
+        log(format!(
+            "   delay={:>8.4}s  bcfw {:.2}s  mp-bcfw {:.2}s  speedup {:.2}x",
+            delay, times[0], times[1], speedup
+        ));
+        csv.row(&[
+            format!("{delay}"),
+            "bcfw".into(),
+            format!("{}", times[0]),
+            format!("{target}"),
+            "1.0".into(),
+        ])?;
+        csv.row(&[
+            format!("{delay}"),
+            "mp-bcfw".into(),
+            format!("{}", times[1]),
+            format!("{target}"),
+            format!("{speedup}"),
+        ])?;
+    }
+    csv.flush()?;
+    log(format!("   wrote {}", out_dir.join("table_crossover.csv").display()));
+    Ok(())
+}
+
+/// ABL-CACHE — §3.5 product cache on/off (paper: "similar performance").
+pub fn product_cache_ablation(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_product_cache.csv"),
+        &["inner_repeats", "final_gap", "time_s", "approx_steps"],
+    )?;
+    log("== ABL-CACHE: §3.5 inner-product cache (ocr_like)".into());
+    for repeats in [1usize, 10] {
+        let spec = TrainSpec {
+            dataset: DatasetKind::OcrLike,
+            scale: opts.scale,
+            data_seed: opts.data_seed,
+            algo: Algo::MpBcfw,
+            inner_repeats: repeats,
+            max_iters: opts.max_iters,
+            engine: opts.engine.clone(),
+            ..Default::default()
+        };
+        let s = trainer::train(&spec)?;
+        let last = s.points.last().unwrap();
+        log(format!(
+            "   r={:2}  gap={:.3e}  time={:.2}s  approx-steps={}",
+            repeats,
+            last.primal - last.dual,
+            last.time,
+            last.approx_steps
+        ));
+        csv.row(&[
+            repeats.to_string(),
+            format!("{}", last.primal - last.dual),
+            format!("{}", last.time),
+            last.approx_steps.to_string(),
+        ])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// ABL-T — sensitivity to the working-set TTL T (paper default 10).
+pub fn t_sweep(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_t_sweep.csv"),
+        &["ttl", "final_gap", "ws_mean", "time_s"],
+    )?;
+    log("== ABL-T: working-set TTL sweep (ocr_like)".into());
+    for ttl in [1u64, 3, 10, 30, 100] {
+        let spec = TrainSpec {
+            dataset: DatasetKind::OcrLike,
+            scale: opts.scale,
+            data_seed: opts.data_seed,
+            algo: Algo::MpBcfw,
+            ttl,
+            max_iters: opts.max_iters,
+            engine: opts.engine.clone(),
+            ..Default::default()
+        };
+        let s = trainer::train(&spec)?;
+        let last = s.points.last().unwrap();
+        log(format!(
+            "   T={:3}  gap={:.3e}  |W|={:.2}  time={:.2}s",
+            ttl,
+            last.primal - last.dual,
+            last.ws_mean,
+            last.time
+        ));
+        csv.row(&[
+            ttl.to_string(),
+            format!("{}", last.primal - last.dual),
+            format!("{}", last.ws_mean),
+            format!("{}", last.time),
+        ])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+pub const TABLES: &[&str] = &["oracle-stats", "crossover", "product-cache", "t-sweep", "all"];
+
+pub fn run_table(
+    which: &str,
+    datasets: &[DatasetKind],
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    match which {
+        "oracle-stats" => oracle_stats(datasets, opts, out_dir, log),
+        "crossover" => crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, log),
+        "product-cache" => product_cache_ablation(opts, out_dir, log),
+        "t-sweep" => t_sweep(opts, out_dir, log),
+        "all" => {
+            oracle_stats(datasets, opts, out_dir, &mut log)?;
+            crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, &mut log)?;
+            product_cache_ablation(opts, out_dir, &mut log)?;
+            t_sweep(opts, out_dir, &mut log)
+        }
+        other => anyhow::bail!("unknown table {other} (expected one of {TABLES:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::EngineKind;
+    use crate::data::types::Scale;
+
+    fn tiny_opts() -> FigureOpts {
+        FigureOpts {
+            scale: Scale::Tiny,
+            repeats: 1,
+            max_iters: 2,
+            engine: EngineKind::Native,
+            oracle_delay: 0.0,
+            data_seed: 0,
+        }
+    }
+
+    #[test]
+    fn oracle_stats_runs_and_writes() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_tab1_{}", std::process::id()));
+        oracle_stats(&[DatasetKind::UspsLike], &tiny_opts(), &dir, |_| {}).unwrap();
+        let text = std::fs::read_to_string(dir.join("table_oracle_stats.csv")).unwrap();
+        assert!(text.contains("usps_like,bcfw"));
+        assert!(text.contains("usps_like,mp-bcfw"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn crossover_reports_speedups() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_xover_{}", std::process::id()));
+        let mut lines = Vec::new();
+        crossover(&tiny_opts(), &[0.0, 0.01], &dir, |m| lines.push(m)).unwrap();
+        assert!(lines.iter().any(|l| l.contains("speedup")));
+        let text = std::fs::read_to_string(dir.join("table_crossover.csv")).unwrap();
+        assert_eq!(text.lines().count(), 1 + 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_table_rejected() {
+        assert!(run_table("nope", &[], &tiny_opts(), Path::new("/tmp"), |_| {}).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal argument parser: `--key value`, `--key=value`, and boolean
+//! `--flag` switches (from a declared set), plus positional arguments.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Args {
+    /// Parse a token stream. `bool_flags` declares which `--x` switches
+    /// take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
+        let boolset: HashSet<&str> = bool_flags.iter().copied().collect();
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.values.insert(k.to_string(), v.to_string());
+                } else if boolset.contains(stripped) {
+                    out.switches.insert(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{stripped} expects a value"))?;
+                    out.values.insert(stripped.to_string(), v);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.contains(key)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_values_switches_positionals() {
+        let a = Args::parse(toks("train --dataset ocr --iters=5 --verbose extra"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("dataset"), Some("ocr"));
+        assert_eq!(a.u64_or("iters", 0).unwrap(), 5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(toks("--dataset"), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = Args::parse(toks("--x nope"), &[]).unwrap();
+        assert!(a.u64_or("x", 1).is_err());
+        assert_eq!(a.f64_or("y", 2.5).unwrap(), 2.5);
+        assert_eq!(a.usize_or("z", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,325 @@
+//! Subcommand implementations for the `mpbcfw` launcher.
+
+use std::path::Path;
+
+use super::args::Args;
+use crate::bench::{figures, tables};
+use crate::coordinator::trainer::{self, Algo, DatasetKind, EngineKind, TrainSpec};
+use crate::model::problem::StructuredProblem as _;
+use crate::data::synth::{horseseg_like, ocr_like, usps_like};
+use crate::data::types::Scale;
+use crate::data::io as data_io;
+
+pub const USAGE: &str = "mpbcfw — Multi-Plane Block-Coordinate Frank-Wolfe SSVM training
+(reproduction of Shah, Kolmogorov & Lampert, 2014)
+
+USAGE:
+  mpbcfw train    [--dataset usps|ocr|horseseg] [--algo fw|bcfw|bcfw-avg|mp-bcfw|mp-bcfw-avg|cutting-plane|ssg|ssg-avg]
+                  [--scale tiny|small|paper] [--iters N] [--seed S] [--data-seed S]
+                  [--lambda F] [--ttl T] [--cap-n N] [--inner-repeats R] [--no-auto-approx]
+                  [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
+                  [--train-loss] [--max-oracle-calls N] [--target-gap F]
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|all
+                  [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
+                  [--scale ...] [--engine ...] [--out DIR]
+  mpbcfw gen-data --dataset usps|ocr|horseseg --out FILE [--scale ...] [--seed S]
+  mpbcfw evaluate --model FILE [--dataset ...] [--scale ...] [--data-seed S] [--engine ...]
+  mpbcfw inspect  [--artifacts DIR]
+
+Add --save-model FILE to `train` to persist the learned model; `evaluate`
+reloads it and reports the structured train loss on a (re-generated)
+dataset.
+
+The paper's defaults are built in: λ = 1/n, T = 10, N = M = 1000 with the
+§3.4 automatic selection rules active.";
+
+fn parse_engine(args: &Args) -> anyhow::Result<EngineKind> {
+    match args.get_or("engine", "native") {
+        "native" => Ok(EngineKind::Native),
+        "xla" => Ok(EngineKind::Xla {
+            artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+        }),
+        other => anyhow::bail!("unknown engine {other} (native|xla)"),
+    }
+}
+
+fn parse_scale(args: &Args) -> anyhow::Result<Scale> {
+    Scale::parse(args.get_or("scale", "small"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scale (tiny|small|paper)"))
+}
+
+fn parse_datasets(args: &Args) -> anyhow::Result<Vec<DatasetKind>> {
+    match args.get_or("dataset", "all") {
+        "all" => Ok(DatasetKind::all().to_vec()),
+        s => Ok(vec![DatasetKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --dataset (usps|ocr|horseseg|all)"))?]),
+    }
+}
+
+fn err(msg: String) -> anyhow::Error {
+    anyhow::anyhow!(msg)
+}
+
+pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let spec = TrainSpec {
+        dataset: DatasetKind::parse(args.get_or("dataset", "usps"))
+            .ok_or_else(|| anyhow::anyhow!("bad --dataset"))?,
+        scale: parse_scale(args)?,
+        data_seed: args.u64_or("data-seed", 0).map_err(err)?,
+        algo: Algo::parse(args.get_or("algo", "mp-bcfw"))
+            .ok_or_else(|| anyhow::anyhow!("bad --algo"))?,
+        seed: args.u64_or("seed", 0).map_err(err)?,
+        lambda: args.get("lambda").map(|v| v.parse()).transpose().map_err(|e| anyhow::anyhow!("--lambda: {e}"))?,
+        max_iters: args.u64_or("iters", 30).map_err(err)?,
+        max_oracle_calls: args.u64_or("max-oracle-calls", 0).map_err(err)?,
+        max_time: args.f64_or("max-time", 0.0).map_err(err)?,
+        target_gap: args.f64_or("target-gap", 0.0).map_err(err)?,
+        oracle_delay: args.f64_or("oracle-delay", 0.0).map_err(err)?,
+        inner_repeats: args.usize_or("inner-repeats", 10).map_err(err)?,
+        ttl: args.u64_or("ttl", 10).map_err(err)?,
+        cap_n: args.usize_or("cap-n", 1000).map_err(err)?,
+        max_approx_passes: args.u64_or("max-approx", 1000).map_err(err)?,
+        auto_approx: !args.has("no-auto-approx"),
+        engine: parse_engine(args)?,
+        with_train_loss: args.has("train-loss"),
+        eval_every: args.u64_or("eval-every", 1).map_err(err)?,
+    };
+    println!(
+        "training {} on {} (scale={}, λ={}, engine={})",
+        spec.algo.name(),
+        spec.dataset.name(),
+        spec.scale.name(),
+        spec.lambda.map(|l| l.to_string()).unwrap_or_else(|| "1/n".into()),
+        match &spec.engine {
+            EngineKind::Native => "native",
+            EngineKind::Xla { .. } => "xla",
+        },
+    );
+    let (series, model) = trainer::train_with_model(&spec)?;
+    println!(
+        "{:>6} {:>9} {:>9} {:>12} {:>12} {:>11} {:>8} {:>7}",
+        "outer", "calls", "time[s]", "primal", "dual", "gap", "|W|", "apasses"
+    );
+    for p in &series.points {
+        println!(
+            "{:>6} {:>9} {:>9.2} {:>12.6} {:>12.6} {:>11.3e} {:>8.2} {:>7}",
+            p.outer,
+            p.oracle_calls,
+            p.time,
+            p.primal,
+            p.dual,
+            p.primal - p.dual,
+            p.ws_mean,
+            p.approx_passes
+        );
+    }
+    let last = series.points.last().unwrap();
+    println!(
+        "done: {} exact oracle calls, gap {:.3e}, oracle time fraction {:.1}%",
+        last.oracle_calls,
+        last.primal - last.dual,
+        100.0 * last.oracle_secs / last.time.max(1e-12)
+    );
+    if spec.with_train_loss {
+        println!("train task loss: {:.4}", last.train_loss);
+    }
+    if let Some(path) = args.get("save-model") {
+        model.save(path)?;
+        println!("saved model to {path} ({}-d weights, dual {:.6})", model.dim, model.dual);
+    }
+    Ok(())
+}
+
+pub fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    let path = args.get("model").ok_or_else(|| anyhow::anyhow!("evaluate requires --model"))?;
+    let model = crate::coordinator::checkpoint::ModelCheckpoint::load(path)?;
+    let spec = TrainSpec {
+        dataset: DatasetKind::parse(args.get_or("dataset", &model.problem))
+            .ok_or_else(|| anyhow::anyhow!("bad --dataset"))?,
+        scale: parse_scale(args)?,
+        data_seed: args.u64_or("data-seed", 0).map_err(err)?,
+        engine: parse_engine(args)?,
+        ..Default::default()
+    };
+    anyhow::ensure!(
+        spec.dataset.name() == model.problem,
+        "model was trained on {} but --dataset is {}",
+        model.problem,
+        spec.dataset.name()
+    );
+    let problem = trainer::build_problem(&spec);
+    anyhow::ensure!(
+        problem.dim() == model.dim,
+        "dimension mismatch: model {} vs dataset {} (check --scale)",
+        model.dim,
+        problem.dim()
+    );
+    let mut eng = spec.engine.build()?;
+    let w = model.weights();
+    let loss = crate::model::problem::mean_train_loss(&problem, &w, eng.as_mut());
+    let primal = crate::model::problem::primal_value(&problem, &w, model.lambda, eng.as_mut());
+    println!("model: {} ({}-d, λ={}, saved primal {:.6} / dual {:.6})",
+        model.problem, model.dim, model.lambda, model.primal, model.dual);
+    println!("dataset: {} scale={} data-seed={}", spec.dataset.name(), spec.scale.name(), spec.data_seed);
+    println!("mean structured train loss: {loss:.5}");
+    println!("primal objective on this dataset: {primal:.6}");
+    Ok(())
+}
+
+pub fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let opts = figures::FigureOpts {
+        scale: parse_scale(args)?,
+        repeats: args.u64_or("repeats", 10).map_err(err)?,
+        max_iters: args.u64_or("iters", 30).map_err(err)?,
+        engine: parse_engine(args)?,
+        oracle_delay: args.f64_or("oracle-delay", 0.0).map_err(err)?,
+        data_seed: args.u64_or("data-seed", 0).map_err(err)?,
+    };
+    let out_dir = Path::new(args.get_or("out", "results")).to_path_buf();
+    let datasets = parse_datasets(args)?;
+    let log = |m: String| println!("{m}");
+    match (args.get("figure"), args.get("table")) {
+        (Some(fig), None) => figures::run_figures(fig, &datasets, &opts, &out_dir, log),
+        (None, Some(tab)) => tables::run_table(tab, &datasets, &opts, &out_dir, log),
+        (Some(_), Some(_)) => anyhow::bail!("pass either --figure or --table, not both"),
+        (None, None) => anyhow::bail!("bench requires --figure or --table"),
+    }
+}
+
+pub fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let scale = parse_scale(args)?;
+    let seed = args.u64_or("seed", 0).map_err(err)?;
+    let out = args.get("out").ok_or_else(|| anyhow::anyhow!("gen-data requires --out"))?;
+    let ds = DatasetKind::parse(
+        args.get("dataset").ok_or_else(|| anyhow::anyhow!("gen-data requires --dataset"))?,
+    )
+    .ok_or_else(|| anyhow::anyhow!("bad --dataset"))?;
+    match ds {
+        DatasetKind::UspsLike => {
+            let data = usps_like::generate(usps_like::UspsLikeConfig::at_scale(scale), seed);
+            data_io::save_multiclass(out, &data)?;
+            println!("wrote {} ({} instances, {} classes, {}-d features)", out, data.n(), data.layout.classes, data.layout.feat);
+        }
+        DatasetKind::OcrLike => {
+            let data = ocr_like::generate(ocr_like::OcrLikeConfig::at_scale(scale), seed);
+            data_io::save_sequence(out, &data)?;
+            println!("wrote {} ({} sequences, mean length {:.1})", out, data.n(), data.mean_len());
+        }
+        DatasetKind::HorsesegLike => {
+            let data =
+                horseseg_like::generate(horseseg_like::HorseSegLikeConfig::at_scale(scale), seed);
+            data_io::save_seg(out, &data)?;
+            println!(
+                "wrote {} ({} images, mean {:.1} superpixels)",
+                out,
+                data.n(),
+                data.mean_superpixels()
+            );
+        }
+    }
+    Ok(())
+}
+
+pub fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = crate::runtime::manifest::Manifest::load(dir)?;
+    println!("artifacts at {dir} (dtype {}):", manifest.dtype);
+    println!("  {} plane_scores buckets", manifest.matvec.len());
+    for e in &manifest.matvec {
+        println!("    [{} x {}] {}", e.rows, e.cols, e.file);
+    }
+    println!("  {} approx_select buckets", manifest.select.len());
+    for e in &manifest.select {
+        println!("    [{} x {}] {}", e.rows, e.cols, e.file);
+    }
+    println!("  {} matmul_bt buckets", manifest.matmul_bt.len());
+    for e in &manifest.matmul_bt {
+        println!("    [{} x {} x {}] {}", e.m, e.k, e.n, e.file);
+    }
+    Ok(())
+}
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn dispatch(argv: Vec<String>) -> i32 {
+    let bool_flags = ["no-auto-approx", "train-loss", "help"];
+    let args = match Args::parse(argv, &bool_flags) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    if args.has("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return if args.has("help") { 0 } else { 2 };
+    }
+    let result = match args.positional[0].as_str() {
+        "train" => cmd_train(&args),
+        "bench" => cmd_bench(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "inspect" => cmd_inspect(&args),
+        other => {
+            eprintln!("unknown command {other}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn dispatch_help_and_unknown() {
+        assert_eq!(dispatch(toks("--help")), 0);
+        assert_eq!(dispatch(vec![]), 2);
+        assert_eq!(dispatch(toks("frobnicate")), 2);
+    }
+
+    #[test]
+    fn train_tiny_runs() {
+        assert_eq!(dispatch(toks("train --scale tiny --iters 2 --dataset usps")), 0);
+    }
+
+    #[test]
+    fn gen_data_roundtrip() {
+        let path = std::env::temp_dir().join(format!("mpbcfw_cli_{}.bin", std::process::id()));
+        let cmd = format!("gen-data --dataset ocr --scale tiny --out {}", path.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(crate::data::io::load_sequence(&path).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn train_save_then_evaluate_roundtrip() {
+        let path = std::env::temp_dir().join(format!("mpbcfw_model_{}.bin", std::process::id()));
+        let cmd = format!(
+            "train --scale tiny --iters 4 --dataset usps --save-model {}",
+            path.display()
+        );
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        let cmd = format!("evaluate --model {} --scale tiny", path.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        // Mismatched dataset must be refused.
+        let cmd = format!("evaluate --model {} --scale tiny --dataset ocr", path.display());
+        assert_eq!(dispatch(toks(&cmd)), 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bench_requires_figure_or_table() {
+        assert_eq!(dispatch(toks("bench --scale tiny")), 1);
+    }
+}

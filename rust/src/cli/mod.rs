@@ -1,0 +1,5 @@
+//! Hand-rolled CLI (no `clap` in the offline build): a small flag parser
+//! plus the subcommand implementations used by `main.rs`.
+
+pub mod args;
+pub mod commands;

@@ -1,0 +1,112 @@
+//! Automatic selection of the number of approximate passes (§3.4).
+//!
+//! The paper replaces the fixed parameter M by a geometric rule: after
+//! each approximate pass, compare
+//!
+//!  * the ΔF-per-second of the *last approximate pass* against
+//!  * the ΔF-per-second of *everything since the current outer iteration
+//!    started* (which includes the exact pass).
+//!
+//! If the last pass's rate is lower, stop approximating and start a new
+//! outer iteration (the extrapolated payoff of another approximate pass
+//! no longer beats re-running the pipeline from an exact pass).
+
+/// Slope-rule state for one outer iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct SlopeRule {
+    iter_f0: f64,
+    iter_t0: f64,
+    last_f: f64,
+    last_t: f64,
+}
+
+impl SlopeRule {
+    /// Call at the start of an outer iteration (before the exact pass),
+    /// with the current dual value and measured time.
+    pub fn start_iteration(f: f64, t: f64) -> SlopeRule {
+        SlopeRule { iter_f0: f, iter_t0: t, last_f: f, last_t: t }
+    }
+
+    /// Record the state right before an approximate pass begins.
+    pub fn begin_pass(&mut self, f: f64, t: f64) {
+        self.last_f = f;
+        self.last_t = t;
+    }
+
+    /// After an approximate pass ended at (f, t): should we run another?
+    pub fn continue_approx(&self, f: f64, t: f64) -> bool {
+        let dt_last = t - self.last_t;
+        let dt_iter = t - self.iter_t0;
+        if dt_last <= 0.0 || dt_iter <= 0.0 {
+            // Degenerate timing (clock resolution): fall back to the
+            // conservative choice — a fresh exact pass.
+            return false;
+        }
+        let rate_last = (f - self.last_f) / dt_last;
+        let rate_iter = (f - self.iter_f0) / dt_iter;
+        rate_last >= rate_iter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accelerating_passes_continue() {
+        // Exact pass: ΔF = 1 in 10 s (rate 0.1). Approx pass: ΔF = 0.5 in
+        // 1 s (rate 0.5) — much better, keep going.
+        let mut r = SlopeRule::start_iteration(0.0, 0.0);
+        r.begin_pass(1.0, 10.0);
+        assert!(r.continue_approx(1.5, 11.0));
+    }
+
+    #[test]
+    fn decelerating_passes_stop() {
+        // Approx pass gains ΔF = 0.01 in 1 s (rate 0.01) while the whole
+        // iteration so far ran at (1.01)/11 ≈ 0.092 — stop.
+        let mut r = SlopeRule::start_iteration(0.0, 0.0);
+        r.begin_pass(1.0, 10.0);
+        assert!(!r.continue_approx(1.01, 11.0));
+    }
+
+    #[test]
+    fn exact_boundary_continues() {
+        // rate_last == rate_iter → continue (≥ comparison): the paper
+        // stops only when the last slope is *smaller*.
+        let mut r = SlopeRule::start_iteration(0.0, 0.0);
+        r.begin_pass(1.0, 1.0);
+        assert!(r.continue_approx(2.0, 2.0));
+    }
+
+    #[test]
+    fn zero_time_stops() {
+        let mut r = SlopeRule::start_iteration(0.0, 0.0);
+        r.begin_pass(1.0, 1.0);
+        assert!(!r.continue_approx(2.0, 1.0));
+    }
+
+    #[test]
+    fn multi_pass_sequence() {
+        // Simulate: exact pass gains 1.0 in 1 s; then approx passes with
+        // geometrically decaying gains 0.5, 0.25, ... at 0.1 s each. The
+        // rule should allow several passes, then stop.
+        let mut r = SlopeRule::start_iteration(0.0, 0.0);
+        let mut f = 1.0;
+        let mut t = 1.0;
+        let mut gain = 0.5;
+        let mut passes = 0;
+        loop {
+            r.begin_pass(f, t);
+            f += gain;
+            t += 0.1;
+            gain *= 0.5;
+            if !r.continue_approx(f, t) {
+                break;
+            }
+            passes += 1;
+            assert!(passes < 100, "rule never stopped");
+        }
+        assert!(passes >= 2, "expected a few approximate passes, got {passes}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Weighted averaging of iterates (§3.6).
+//!
+//! BCFW-avg maintains φ̄^(k) = 2/(k(k+1)) Σ_t t·φ^(t), updated
+//! incrementally as φ̄^(k+1) = k/(k+2)·φ̄^(k) + 2/(k+2)·φ^(k+1).
+//!
+//! MP-BCFW-avg keeps two such averages — one over the iterates after
+//! *exact* oracle calls, one after *approximate* calls — and reports the
+//! convex interpolation of the two that maximizes the dual bound F.
+
+use crate::model::plane::DensePlane;
+use crate::utils::math;
+
+/// One weighted running average of dual iterates.
+pub struct Averager {
+    k: u64,
+    avg: DensePlane,
+}
+
+impl Averager {
+    pub fn new(dim: usize) -> Averager {
+        Averager { k: 0, avg: DensePlane::zeros(dim) }
+    }
+
+    /// Number of iterates folded in so far.
+    pub fn count(&self) -> u64 {
+        self.k
+    }
+
+    /// Fold in the iterate φ^(k+1) with weight 2(k+1)/((k+1)(k+2)).
+    pub fn update(&mut self, phi: &DensePlane) {
+        if self.k == 0 {
+            self.avg = phi.clone();
+        } else {
+            let g = 2.0 / (self.k + 2) as f64;
+            self.avg.interp_dense(g, phi);
+        }
+        self.k += 1;
+    }
+
+    pub fn value(&self) -> &DensePlane {
+        &self.avg
+    }
+}
+
+/// Best-F convex interpolation between two feasible planes (used to
+/// combine the exact-call and approximate-call averages):
+/// β* = argmax_{β∈[0,1]} F((1−β)a + βb).
+pub fn best_interpolation(a: &DensePlane, b: &DensePlane, lambda: f64) -> (DensePlane, f64) {
+    // F((1−β)a+βb) = −‖a+β(b−a)‖²/(2λ) + a_off + β(b_off−a_off)
+    // dF/dβ = −(⟨a, b−a⟩ + β‖b−a‖²)/λ + (b_off − a_off)
+    let dot_ab = math::dot(&a.star, &b.star);
+    let nrm_a = math::nrm2sq(&a.star);
+    let nrm_b = math::nrm2sq(&b.star);
+    let denom = nrm_a - 2.0 * dot_ab + nrm_b;
+    let beta = if denom <= 0.0 || !denom.is_finite() {
+        // a ≈ b: any β; pick the endpoint with the larger offset.
+        if b.off > a.off {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        let num = lambda * (b.off - a.off) - (dot_ab - nrm_a);
+        math::clip(num / denom, 0.0, 1.0)
+    };
+    let mut out = a.clone();
+    out.interp_dense(beta, b);
+    (out, beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop::prop_check;
+
+    fn plane(star: Vec<f64>, off: f64) -> DensePlane {
+        DensePlane { star, off }
+    }
+
+    #[test]
+    fn average_matches_closed_form() {
+        // φ̄^(k) = 2/(k(k+1)) Σ t φ^(t) — check against direct evaluation.
+        let iterates: Vec<DensePlane> = (1..=5)
+            .map(|t| plane(vec![t as f64, -(t as f64)], t as f64 * 0.5))
+            .collect();
+        let mut avg = Averager::new(2);
+        for it in &iterates {
+            avg.update(it);
+        }
+        let k = iterates.len() as f64;
+        let norm = 2.0 / (k * (k + 1.0));
+        let mut expect = plane(vec![0.0, 0.0], 0.0);
+        for (t, it) in iterates.iter().enumerate() {
+            let wgt = norm * (t + 1) as f64;
+            math::axpy(wgt, &it.star, &mut expect.star);
+            expect.off += wgt * it.off;
+        }
+        for (a, b) in avg.value().star.iter().zip(&expect.star) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        assert!((avg.value().off - expect.off).abs() < 1e-12);
+    }
+
+    #[test]
+    fn first_update_copies() {
+        let mut avg = Averager::new(2);
+        avg.update(&plane(vec![3.0, 4.0], 1.0));
+        assert_eq!(avg.value().star, vec![3.0, 4.0]);
+        assert_eq!(avg.count(), 1);
+    }
+
+    #[test]
+    fn best_interpolation_maximizes_f() {
+        prop_check("interpolation optimal", 100, |g| {
+            let dim = g.usize(1, 8);
+            let lambda = 0.2 + g.f64(0.0, 1.5);
+            let a = plane(g.vec_normal(dim), g.normal());
+            let b = plane(g.vec_normal(dim), g.normal());
+            let (best, beta) = best_interpolation(&a, &b, lambda);
+            if !(0.0..=1.0).contains(&beta) {
+                return Err(format!("beta {beta}"));
+            }
+            let f_best = best.dual_bound(lambda);
+            for k in 0..=10 {
+                let mut probe = a.clone();
+                probe.interp_dense(k as f64 / 10.0, &b);
+                let f = probe.dual_bound(lambda);
+                if f > f_best + 1e-9 * (1.0 + f.abs()) {
+                    return Err(format!("probe β={} F={f} beats β*={beta} F={f_best}", k));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interpolation_identical_planes() {
+        let a = plane(vec![1.0, 2.0], 0.5);
+        let (best, _) = best_interpolation(&a, &a.clone(), 1.0);
+        assert_eq!(best.star, a.star);
+    }
+}

@@ -1,0 +1,208 @@
+//! One-slack cutting-plane training (Joachims, Finley & Yu 2009) — the
+//! strongest pre-BCFW baseline in the paper's related work (§2.1).
+//!
+//! Each iteration: solve the master QP over the aggregated cut planes
+//! collected so far (a simplex QP — see `simplex_qp`), take w from its
+//! solution, run one full oracle sweep to build the next aggregated plane
+//! (1/n)Σ_i φ^{iŷ_i}, and add it to the cut set. Terminates when the new
+//! cut improves the master by less than ε.
+
+use super::super::metrics::{EvalCtx, EvalPoint, Series};
+use super::simplex_qp;
+use crate::model::plane::DensePlane;
+use crate::model::problem::StructuredProblem;
+use crate::oracle::wrappers::CountingOracle;
+use crate::runtime::engine::ScoringEngine;
+use crate::utils::math;
+use crate::utils::timer::Clock;
+
+#[derive(Clone, Debug)]
+pub struct CuttingPlaneConfig {
+    pub lambda: f64,
+    /// Max cutting-plane iterations (= oracle sweeps).
+    pub max_iters: u64,
+    /// Stop when the master objective improves less than this.
+    pub epsilon: f64,
+    pub with_train_loss: bool,
+}
+
+impl Default for CuttingPlaneConfig {
+    fn default() -> Self {
+        CuttingPlaneConfig { lambda: 0.01, max_iters: 50, epsilon: 1e-9, with_train_loss: false }
+    }
+}
+
+pub fn run(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &CuttingPlaneConfig,
+) -> (Series, Vec<f64>) {
+    let n = problem.n();
+    let dim = problem.dim();
+    let mut clock = Clock::new();
+    problem.reset_stats();
+
+    // Aggregated cut planes c_k (dense) and their Gram matrix. The zero
+    // plane (Σ_i φ^{i y_i} = 0, the ground-truth labeling) seeds the set —
+    // it encodes the ξ ≥ 0 constraint of the one-slack QP and keeps the
+    // master dual ≥ 0 and monotone from the start.
+    let mut cuts: Vec<DensePlane> = vec![DensePlane::zeros(dim)];
+    let mut gram: Vec<f64> = vec![0.0]; // row-major, resized as cuts grow
+    let mut w = vec![0.0f64; dim];
+    let mut series = Series {
+        algo: "cutting-plane".into(),
+        dataset: problem.name().to_string(),
+        seed: 0,
+        ..Default::default()
+    };
+    let mut last_dual = 0.0;
+    record(problem, eng, &mut clock, cfg, &w, 0.0, 0, &mut series);
+
+    for outer in 1..=cfg.max_iters {
+        // Oracle sweep at the current w → new aggregated cut.
+        let mut cut = DensePlane::zeros(dim);
+        for i in 0..n {
+            let p = problem.oracle(i, &w, eng);
+            if problem.delay > 0.0 {
+                clock.charge(problem.delay);
+            }
+            p.star.add_to(1.0, &mut cut.star);
+            cut.off += p.off;
+        }
+        // Grow the Gram matrix.
+        let m_old = cuts.len();
+        let m = m_old + 1;
+        let mut new_gram = vec![0.0; m * m];
+        for a in 0..m_old {
+            for bj in 0..m_old {
+                new_gram[a * m + bj] = gram[a * m_old + bj];
+            }
+        }
+        for a in 0..m_old {
+            let v = math::dot(&cuts[a].star, &cut.star);
+            new_gram[a * m + m_old] = v;
+            new_gram[m_old * m + a] = v;
+        }
+        new_gram[m_old * m + m_old] = math::nrm2sq(&cut.star);
+        gram = new_gram;
+        cuts.push(cut);
+
+        // Master problem.
+        let b: Vec<f64> = cuts.iter().map(|c| c.off).collect();
+        let (alpha, dual, _) = simplex_qp::solve(&gram, &b, cfg.lambda, 1e-12, 20_000);
+        // w = −(Σ α_k c_k)_* / λ.
+        let mut phi = DensePlane::zeros(dim);
+        for (a, c) in alpha.iter().zip(&cuts) {
+            if *a > 0.0 {
+                math::axpy(*a, &c.star, &mut phi.star);
+                phi.off += a * c.off;
+            }
+        }
+        phi.weights_into(cfg.lambda, &mut w);
+
+        record(problem, eng, &mut clock, cfg, &w, dual, outer, &mut series);
+        if outer > 1 && dual - last_dual < cfg.epsilon {
+            break;
+        }
+        last_dual = dual;
+    }
+    series.wall_secs = clock.wall();
+    (series, w)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    clock: &mut Clock,
+    cfg: &CuttingPlaneConfig,
+    w: &[f64],
+    dual: f64,
+    outer: u64,
+    series: &mut Series,
+) {
+    let stats = problem.stats();
+    let time = clock.elapsed();
+    let mut ctx = EvalCtx {
+        problem,
+        eng,
+        clock,
+        lambda: cfg.lambda,
+        with_train_loss: cfg.with_train_loss,
+    };
+    let (primal, train_loss) = ctx.primal_uncounted(w);
+    series.points.push(EvalPoint {
+        outer,
+        oracle_calls: stats.calls,
+        time,
+        primal,
+        dual,
+        primal_avg: None,
+        dual_avg: None,
+        ws_mean: 0.0,
+        approx_passes: 0,
+        approx_steps: 0,
+        oracle_secs: stats.real_secs + stats.virtual_secs,
+        train_loss,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::oracle::multiclass::MulticlassProblem;
+    use crate::runtime::engine::NativeEngine;
+
+    fn tiny_problem() -> CountingOracle {
+        CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+            UspsLikeConfig::at_scale(Scale::Tiny),
+            1,
+        ))))
+    }
+
+    #[test]
+    fn cutting_plane_dual_monotone_and_bounded_by_primal() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg =
+            CuttingPlaneConfig { lambda: 1.0 / 60.0, max_iters: 15, ..Default::default() };
+        let (series, _) = run(&problem, &mut eng, &cfg);
+        for win in series.points.windows(2) {
+            assert!(win[1].dual >= win[0].dual - 1e-9, "master dual decreased");
+        }
+        for p in &series.points {
+            assert!(p.dual <= p.primal + 1e-6, "weak duality violated: {p:?}");
+        }
+        let last = series.points.last().unwrap();
+        assert!(last.primal - last.dual < series.points[1].primal - series.points[1].dual);
+    }
+
+    #[test]
+    fn agrees_with_bcfw_optimum() {
+        // Both solve the same convex problem; their duals must approach
+        // the same value.
+        let mut eng = NativeEngine;
+        let lambda = 1.0 / 60.0;
+        let p1 = tiny_problem();
+        let (cp, _) = run(
+            &p1,
+            &mut eng,
+            &CuttingPlaneConfig { lambda, max_iters: 40, ..Default::default() },
+        );
+        let p2 = tiny_problem();
+        let cfg = crate::coordinator::mp_bcfw::MpBcfwConfig {
+            max_iters: 40,
+            ..crate::coordinator::mp_bcfw::MpBcfwConfig::mp_paper(lambda)
+        };
+        let (mp, _) = crate::coordinator::mp_bcfw::run(&p2, &mut eng, &cfg);
+        let d_cp = cp.points.last().unwrap().dual;
+        let d_mp = mp.points.last().unwrap().dual;
+        let scale = d_cp.abs().max(d_mp.abs()).max(1e-9);
+        assert!(
+            (d_cp - d_mp).abs() / scale < 0.05,
+            "cutting-plane dual {d_cp} vs MP-BCFW dual {d_mp}"
+        );
+    }
+}

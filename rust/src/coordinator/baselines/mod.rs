@@ -1,0 +1,6 @@
+//! Related-work baselines: one-slack cutting-plane training (Joachims et
+//! al.) over a simplex-QP master problem, and stochastic subgradient
+//! descent (Shor; Ratliff et al.).
+pub mod simplex_qp;
+pub mod cutting_plane;
+pub mod ssg;

@@ -1,0 +1,145 @@
+//! QP-over-the-simplex solver — the master problem of one-slack
+//! cutting-plane training:
+//!
+//!   max_{α ∈ Δ_m}  G(α) = −(1/2λ) αᵀKα + bᵀα,
+//!
+//! where K_jk = ⟨c_j_*, c_k_*⟩ is the Gram matrix of the cut planes and
+//! b_j = c_j_∘. Solved by Frank-Wolfe with exact line search on the
+//! simplex (vertex directions), which is simple, allocation-free per
+//! iteration, and accurate enough for the master problem (the FW duality
+//! gap gives a certified stopping criterion).
+
+/// Solve the simplex QP. Returns (α, objective value, iterations used).
+pub fn solve(k: &[f64], b: &[f64], lambda: f64, tol: f64, max_iters: usize) -> (Vec<f64>, f64, usize) {
+    let m = b.len();
+    debug_assert_eq!(k.len(), m * m);
+    assert!(m > 0);
+    // Start from the best vertex.
+    let mut alpha = vec![0.0f64; m];
+    let mut best0 = 0usize;
+    let mut bestv = f64::NEG_INFINITY;
+    for j in 0..m {
+        let v = -k[j * m + j] / (2.0 * lambda) + b[j];
+        if v > bestv {
+            bestv = v;
+            best0 = j;
+        }
+    }
+    alpha[best0] = 1.0;
+    // Maintain s = Kα for O(m) gradients.
+    let mut s: Vec<f64> = (0..m).map(|j| k[j * m + best0]).collect();
+
+    let mut iters = 0usize;
+    for it in 0..max_iters {
+        iters = it + 1;
+        // Gradient g_j = −s_j/λ + b_j; FW vertex = argmax g.
+        let mut jv = 0usize;
+        let mut gv = f64::NEG_INFINITY;
+        let mut g_alpha = 0.0; // ⟨g, α⟩ for the FW gap
+        for j in 0..m {
+            let g = -s[j] / lambda + b[j];
+            if g > gv {
+                gv = g;
+                jv = j;
+            }
+            g_alpha += alpha[j] * g;
+        }
+        let gap = gv - g_alpha; // ⟨g, e_j − α⟩ ≥ G(α*) − G(α)
+        if gap <= tol {
+            break;
+        }
+        // Line search along d = e_jv − α:
+        //   G(α + γd) quadratic; γ* = λ·⟨g, d⟩ / dᵀKd.
+        // dᵀKd = K_jj − 2 (Kα)_j + αᵀKα.
+        let alpha_k_alpha: f64 = (0..m).map(|j| alpha[j] * s[j]).sum();
+        let dkd = k[jv * m + jv] - 2.0 * s[jv] + alpha_k_alpha;
+        let gamma = if dkd <= 0.0 { 1.0 } else { (lambda * gap / dkd).clamp(0.0, 1.0) };
+        // α ← (1−γ)α + γ e_jv ; s ← (1−γ)s + γ K_:,jv.
+        for j in 0..m {
+            alpha[j] *= 1.0 - gamma;
+            s[j] = (1.0 - gamma) * s[j] + gamma * k[j * m + jv];
+        }
+        alpha[jv] += gamma;
+    }
+    let obj = {
+        let aka: f64 = (0..m).map(|j| alpha[j] * s[j]).sum();
+        let ba: f64 = (0..m).map(|j| alpha[j] * b[j]).sum();
+        -aka / (2.0 * lambda) + ba
+    };
+    (alpha, obj, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop::prop_check;
+
+    #[test]
+    fn single_plane_trivial() {
+        let (alpha, obj, _) = solve(&[4.0], &[1.0], 2.0, 1e-12, 100);
+        assert_eq!(alpha, vec![1.0]);
+        assert!((obj - (-1.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn picks_dominant_plane() {
+        // Plane 1 dominates: same norm, higher offset.
+        let k = vec![1.0, 0.9, 0.9, 1.0];
+        let b = vec![0.1, 1.0];
+        let (alpha, _, _) = solve(&k, &b, 1.0, 1e-10, 500);
+        assert!(alpha[1] > 0.9, "alpha={alpha:?}");
+    }
+
+    #[test]
+    fn mixes_orthogonal_planes() {
+        // Two orthogonal planes with equal offsets: the optimum mixes them
+        // (norm of the average is smaller).
+        let k = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![1.0, 1.0];
+        let (alpha, obj, _) = solve(&k, &b, 1.0, 1e-12, 2000);
+        assert!((alpha[0] - 0.5).abs() < 1e-4, "alpha={alpha:?}");
+        // G(0.5, 0.5) = −(0.25+0.25)/2 + 1 = 0.75
+        assert!((obj - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solution_on_simplex_and_near_optimal() {
+        prop_check("simplex qp optimal", 60, |g| {
+            let m = g.usize(1, 6);
+            let dim = g.usize(1, 8);
+            let lambda = 0.3 + g.f64(0.0, 1.5);
+            // Random planes → PSD Gram.
+            let planes: Vec<Vec<f64>> = (0..m).map(|_| g.vec_normal(dim)).collect();
+            let b: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+            let mut k = vec![0.0; m * m];
+            for i in 0..m {
+                for j in 0..m {
+                    k[i * m + j] = crate::utils::math::dot(&planes[i], &planes[j]);
+                }
+            }
+            let (alpha, obj, _) = solve(&k, &b, lambda, 1e-10, 5000);
+            let sum: f64 = alpha.iter().sum();
+            if (sum - 1.0).abs() > 1e-9 || alpha.iter().any(|&a| a < -1e-12) {
+                return Err(format!("not on simplex: {alpha:?}"));
+            }
+            // Probe random feasible points; none may beat obj by > tol.
+            for _ in 0..20 {
+                let mut probe: Vec<f64> = (0..m).map(|_| g.rng.f64()).collect();
+                let s: f64 = probe.iter().sum();
+                probe.iter_mut().for_each(|x| *x /= s);
+                let mut aka = 0.0;
+                for i in 0..m {
+                    for j in 0..m {
+                        aka += probe[i] * probe[j] * k[i * m + j];
+                    }
+                }
+                let ba: f64 = (0..m).map(|j| probe[j] * b[j]).sum();
+                let pobj = -aka / (2.0 * lambda) + ba;
+                if pobj > obj + 1e-6 {
+                    return Err(format!("probe beats solver: {pobj} > {obj}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

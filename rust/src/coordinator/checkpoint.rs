@@ -1,0 +1,169 @@
+//! Model persistence: save a trained SSVM (weights + dual state summary)
+//! and load it back for evaluation or warm-started training.
+//!
+//! Format: little-endian binary with a versioned magic header, mirroring
+//! `data::io`. The checkpoint stores the dual plane φ (from which
+//! w = −φ_*/λ is re-derived), λ, and metadata identifying the problem it
+//! was trained on, so `mpbcfw evaluate` can refuse a mismatched dataset.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Result, Write};
+use std::path::Path;
+
+use crate::model::plane::DensePlane;
+
+const MAGIC: &[u8; 8] = b"MPBCMD01";
+
+/// A trained model: everything needed to score new instances (and to
+/// bound how suboptimal the snapshot was).
+#[derive(Clone, Debug)]
+pub struct ModelCheckpoint {
+    /// Problem identifier ("usps_like", ...).
+    pub problem: String,
+    /// Weight dimensionality (consistency check at load/eval time).
+    pub dim: usize,
+    pub lambda: f64,
+    /// Global dual plane φ at save time.
+    pub phi: DensePlane,
+    /// Primal/dual values at save time (provenance).
+    pub primal: f64,
+    pub dual: f64,
+}
+
+impl ModelCheckpoint {
+    /// Weights w = −φ_*/λ.
+    pub fn weights(&self) -> Vec<f64> {
+        self.phi.weights(self.lambda)
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut f = BufWriter::new(File::create(path)?);
+        f.write_all(MAGIC)?;
+        let name = self.problem.as_bytes();
+        f.write_all(&(name.len() as u64).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(self.dim as u64).to_le_bytes())?;
+        for x in [self.lambda, self.phi.off, self.primal, self.dual] {
+            f.write_all(&x.to_le_bytes())?;
+        }
+        f.write_all(&(self.phi.star.len() as u64).to_le_bytes())?;
+        for &x in &self.phi.star {
+            f.write_all(&x.to_le_bytes())?;
+        }
+        f.flush()
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<ModelCheckpoint> {
+        let mut f = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "not an mpbcfw model checkpoint",
+            ));
+        }
+        let mut b8 = [0u8; 8];
+        let mut u64r = |f: &mut BufReader<File>| -> Result<u64> {
+            f.read_exact(&mut b8)?;
+            Ok(u64::from_le_bytes(b8))
+        };
+        let name_len = u64r(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let dim = u64r(&mut f)? as usize;
+        let mut f64r = |f: &mut BufReader<File>| -> Result<f64> {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            Ok(f64::from_le_bytes(b))
+        };
+        let lambda = f64r(&mut f)?;
+        let off = f64r(&mut f)?;
+        let primal = f64r(&mut f)?;
+        let dual = f64r(&mut f)?;
+        let star_len = {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            u64::from_le_bytes(b) as usize
+        };
+        if star_len != dim {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("checkpoint dim mismatch: header {dim}, payload {star_len}"),
+            ));
+        }
+        let mut star = Vec::with_capacity(star_len);
+        for _ in 0..star_len {
+            star.push(f64r(&mut f)?);
+        }
+        Ok(ModelCheckpoint {
+            problem: String::from_utf8_lossy(&name).into_owned(),
+            dim,
+            lambda,
+            phi: DensePlane { star, off },
+            primal,
+            dual,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mpbcfw_ckpt_{name}_{}", std::process::id()))
+    }
+
+    fn sample() -> ModelCheckpoint {
+        ModelCheckpoint {
+            problem: "usps_like".into(),
+            dim: 4,
+            lambda: 0.25,
+            phi: DensePlane { star: vec![1.0, -2.0, 0.5, 0.0], off: 0.75 },
+            primal: 0.9,
+            dual: 0.8,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let m = sample();
+        let p = tmp("rt");
+        m.save(&p).unwrap();
+        let back = ModelCheckpoint::load(&p).unwrap();
+        assert_eq!(back.problem, m.problem);
+        assert_eq!(back.dim, m.dim);
+        assert_eq!(back.lambda, m.lambda);
+        assert_eq!(back.phi.star, m.phi.star);
+        assert_eq!(back.phi.off, m.phi.off);
+        assert_eq!(back.primal, m.primal);
+        assert_eq!(back.dual, m.dual);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn weights_derived_from_phi() {
+        let m = sample();
+        assert_eq!(m.weights(), vec![-4.0, 8.0, -2.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_garbage_files() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(ModelCheckpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_files() {
+        let m = sample();
+        let p = tmp("trunc");
+        m.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(ModelCheckpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

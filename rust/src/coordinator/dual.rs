@@ -1,0 +1,270 @@
+//! Dual state shared by all Frank-Wolfe-family optimizers.
+//!
+//! Maintains the per-block planes φ^1..φ^n, their sum φ, and the weight
+//! buffer w = −φ_*/λ, with the exact line-searched convex update of
+//! Algorithm 2 line 6. All optimizers (FW, BCFW, MP-BCFW, exact or
+//! approximate steps) go through `block_step`, which guarantees the
+//! invariants the paper's convergence argument needs:
+//!
+//!  * every φ^i stays a convex combination of planes {φ^{iy}},
+//!  * φ = Σ_i φ^i at all times,
+//!  * F(φ) never decreases.
+
+use crate::model::plane::{DensePlane, Plane};
+use crate::utils::math;
+
+pub struct DualState {
+    pub lambda: f64,
+    /// Global plane φ = Σ_i φ^i.
+    pub phi: DensePlane,
+    /// Per-block planes φ^i.
+    pub blocks: Vec<DensePlane>,
+    /// Weight buffer w = −φ_*/λ, kept in sync by `refresh_w`.
+    pub w: Vec<f64>,
+    /// Cached ‖φ^i_*‖² per block, maintained incrementally (§Perf L3-3:
+    /// saves one O(d) reduction per Frank-Wolfe step).
+    block_nrm2: Vec<f64>,
+}
+
+impl DualState {
+    /// Initialize with φ^i = φ^{i y_i} = 0 (the standard ground-truth
+    /// start: w = 0, F = 0).
+    pub fn new(n: usize, dim: usize, lambda: f64) -> DualState {
+        DualState {
+            lambda,
+            phi: DensePlane::zeros(dim),
+            blocks: vec![DensePlane::zeros(dim); n],
+            w: vec![0.0; dim],
+            block_nrm2: vec![0.0; n],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.phi.dim()
+    }
+
+    pub fn n(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Recompute w = −φ_*/λ into the internal buffer.
+    pub fn refresh_w(&mut self) {
+        self.phi.weights_into(self.lambda, &mut self.w);
+    }
+
+    /// Dual objective F(φ).
+    pub fn dual_value(&self) -> f64 {
+        self.phi.dual_bound(self.lambda)
+    }
+
+    /// One block-coordinate Frank-Wolfe update with plane `hat` for block
+    /// `i` (exact Alg. 2 lines 4–6, also used for approximate steps with a
+    /// cached plane). Returns the step size γ. Leaves `w` stale; callers
+    /// decide when to `refresh_w` (usually right before the next oracle).
+    pub fn block_step(&mut self, i: usize, hat: &Plane) -> f64 {
+        // All inner products computed once, shared between the line
+        // search and the incremental norm update (§Perf L3-3).
+        let dot_phii_phi = math::dot(&self.blocks[i].star, &self.phi.star);
+        let dot_hat_phi = hat.star.dot_dense(&self.phi.star);
+        let nrm_phii = self.block_nrm2[i];
+        let nrm_hat = hat.star.nrm2sq();
+        let dot_phii_hat = hat.star.dot_dense(&self.blocks[i].star);
+        let gamma = crate::model::plane::line_search_from_products(
+            dot_phii_phi,
+            dot_hat_phi,
+            nrm_phii,
+            nrm_hat,
+            dot_phii_hat,
+            self.blocks[i].off,
+            hat.off,
+            self.lambda,
+        );
+        if gamma > 0.0 {
+            self.apply_step_with_products(i, hat, gamma, dot_phii_hat, nrm_hat);
+        }
+        gamma
+    }
+
+    /// Apply φ^i ← (1−γ)φ^i + γφ̂ and φ ← φ + (φ^i_new − φ^i_old).
+    pub fn apply_step(&mut self, i: usize, hat: &Plane, gamma: f64) {
+        let dot_phii_hat = hat.star.dot_dense(&self.blocks[i].star);
+        let nrm_hat = hat.star.nrm2sq();
+        self.apply_step_with_products(i, hat, gamma, dot_phii_hat, nrm_hat);
+    }
+
+    fn apply_step_with_products(
+        &mut self,
+        i: usize,
+        hat: &Plane,
+        gamma: f64,
+        dot_phii_hat: f64,
+        nrm_hat: f64,
+    ) {
+        let block = &mut self.blocks[i];
+        // φ update first, using the old φ^i: φ += γ(φ̂ − φ^i_old).
+        math::axpy(-gamma, &block.star, &mut self.phi.star);
+        hat.star.add_to(gamma, &mut self.phi.star);
+        self.phi.off += gamma * (hat.off - block.off);
+        // Block update + incremental norm.
+        block.interp_plane(gamma, hat);
+        let om = 1.0 - gamma;
+        self.block_nrm2[i] = om * om * self.block_nrm2[i]
+            + 2.0 * gamma * om * dot_phii_hat
+            + gamma * gamma * nrm_hat;
+    }
+
+    /// Replace block i with an explicit new dense plane (used by the
+    /// product-cache path which materializes the block after its inner
+    /// loop). Keeps φ consistent.
+    pub fn replace_block(&mut self, i: usize, new_block: DensePlane) {
+        debug_assert_eq!(new_block.dim(), self.dim());
+        {
+            let old = &self.blocks[i];
+            for ((p, &nb), &ob) in
+                self.phi.star.iter_mut().zip(new_block.star.iter()).zip(old.star.iter())
+            {
+                *p += nb - ob;
+            }
+            self.phi.off += new_block.off - old.off;
+        }
+        self.block_nrm2[i] = math::nrm2sq(&new_block.star);
+        self.blocks[i] = new_block;
+    }
+
+    /// Drift audit: recompute φ from Σφ^i and return the max abs error
+    /// (tests + periodic renormalization against float drift).
+    pub fn consistency_error(&self) -> f64 {
+        let mut sum = DensePlane::zeros(self.dim());
+        for b in &self.blocks {
+            math::axpy(1.0, &b.star, &mut sum.star);
+            sum.off += b.off;
+        }
+        let mut err = (sum.off - self.phi.off).abs();
+        for (a, b) in sum.star.iter().zip(self.phi.star.iter()) {
+            err = err.max((a - b).abs());
+        }
+        err
+    }
+
+    /// Recompute φ = Σφ^i exactly (kills accumulated float drift; called
+    /// every few hundred passes). Also refreshes the cached block norms.
+    pub fn renormalize(&mut self) {
+        let dim = self.dim();
+        let mut sum = DensePlane::zeros(dim);
+        for (i, b) in self.blocks.iter().enumerate() {
+            math::axpy(1.0, &b.star, &mut sum.star);
+            sum.off += b.off;
+            self.block_nrm2[i] = math::nrm2sq(&b.star);
+        }
+        self.phi = sum;
+    }
+
+    /// Deep copy (used by tests comparing two update paths).
+    pub fn clone_state(&self) -> DualState {
+        DualState {
+            lambda: self.lambda,
+            phi: self.phi.clone(),
+            blocks: self.blocks.clone(),
+            w: self.w.clone(),
+            block_nrm2: self.block_nrm2.clone(),
+        }
+    }
+
+    /// Max drift of the cached block norms vs recomputation (tests).
+    pub fn norm_cache_error(&self) -> f64 {
+        self.blocks
+            .iter()
+            .zip(&self.block_nrm2)
+            .map(|(b, &n)| (math::nrm2sq(&b.star) - n).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vec::VecF;
+    use crate::utils::prop::prop_check;
+
+    fn sparse_plane(g: &mut crate::utils::prop::Gen, dim: usize, tag: u64) -> Plane {
+        let k = g.usize(0, dim);
+        let pairs: Vec<(u32, f64)> =
+            (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+        Plane::new(VecF::sparse(dim, pairs), g.normal(), tag)
+    }
+
+    #[test]
+    fn f_monotone_under_block_steps() {
+        prop_check("F never decreases", 100, |g| {
+            let n = g.usize(1, 5);
+            let dim = g.usize(1, 10);
+            let lambda = 0.1 + g.f64(0.0, 1.0);
+            let mut st = DualState::new(n, dim, lambda);
+            let mut f = st.dual_value();
+            for t in 0..20 {
+                let i = g.rng.below(n);
+                let hat = sparse_plane(g, dim, t);
+                st.block_step(i, &hat);
+                let f2 = st.dual_value();
+                if f2 < f - 1e-9 * (1.0 + f.abs()) {
+                    return Err(format!("F decreased: {f} -> {f2}"));
+                }
+                f = f2;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn phi_stays_sum_of_blocks() {
+        prop_check("phi consistency", 60, |g| {
+            let n = g.usize(1, 4);
+            let dim = g.usize(1, 8);
+            let mut st = DualState::new(n, dim, 1.0);
+            for t in 0..30 {
+                let i = g.rng.below(n);
+                let hat = sparse_plane(g, dim, t);
+                st.block_step(i, &hat);
+            }
+            if st.consistency_error() > 1e-9 {
+                return Err(format!("drift {}", st.consistency_error()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replace_block_keeps_consistency() {
+        let mut st = DualState::new(3, 4, 1.0);
+        let hat = Plane::new(VecF::Dense(vec![1.0, -1.0, 0.5, 0.0]), 0.3, 1);
+        st.block_step(1, &hat);
+        let mut nb = DensePlane::zeros(4);
+        nb.star = vec![0.2, 0.2, 0.2, 0.2];
+        nb.off = 0.1;
+        st.replace_block(1, nb);
+        assert!(st.consistency_error() < 1e-12);
+        assert_eq!(st.blocks[1].off, 0.1);
+    }
+
+    #[test]
+    fn refresh_w_is_neg_phi_over_lambda() {
+        let mut st = DualState::new(1, 3, 2.0);
+        let hat = Plane::new(VecF::Dense(vec![2.0, -4.0, 6.0]), 1.0, 1);
+        // Force γ=1 via apply_step to make the expectation exact.
+        st.apply_step(0, &hat, 1.0);
+        st.refresh_w();
+        assert_eq!(st.w, vec![-1.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn renormalize_removes_drift() {
+        let mut st = DualState::new(2, 3, 1.0);
+        let hat = Plane::new(VecF::Dense(vec![1.0, 2.0, 3.0]), 0.5, 1);
+        st.block_step(0, &hat);
+        // Inject artificial drift.
+        st.phi.star[0] += 1e-7;
+        assert!(st.consistency_error() > 1e-8);
+        st.renormalize();
+        assert!(st.consistency_error() < 1e-15);
+    }
+}

@@ -1,0 +1,187 @@
+//! Plain (batch) Frank-Wolfe (Algorithm 1), kept as a related-work
+//! baseline: one iteration calls the oracle for *all* n terms, sums the
+//! returned planes into a single direction, and takes one line-searched
+//! step. Same dual, n× coarser steps than BCFW.
+
+use super::metrics::{EvalCtx, EvalPoint, Series};
+use crate::model::plane::{line_search, DensePlane, Plane};
+use crate::model::problem::StructuredProblem;
+use crate::model::vec::VecF;
+use crate::oracle::wrappers::CountingOracle;
+use crate::runtime::engine::ScoringEngine;
+use crate::utils::timer::Clock;
+
+#[derive(Clone, Debug)]
+pub struct FwConfig {
+    pub lambda: f64,
+    pub max_iters: u64,
+    pub max_oracle_calls: u64,
+    pub target_gap: f64,
+    pub with_train_loss: bool,
+}
+
+impl Default for FwConfig {
+    fn default() -> Self {
+        FwConfig {
+            lambda: 0.01,
+            max_iters: 50,
+            max_oracle_calls: 0,
+            target_gap: 0.0,
+            with_train_loss: false,
+        }
+    }
+}
+
+pub fn run(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &FwConfig,
+) -> (Series, Vec<f64>) {
+    let n = problem.n();
+    let dim = problem.dim();
+    let mut clock = Clock::new();
+    problem.reset_stats();
+
+    // φ as one global plane (the n=1 view of the dual).
+    let mut phi = DensePlane::zeros(dim);
+    let mut w = vec![0.0; dim];
+    let mut series = Series {
+        algo: "fw".into(),
+        dataset: problem.name().to_string(),
+        seed: 0,
+        ..Default::default()
+    };
+
+    record(problem, eng, &mut clock, cfg, &phi, &w, 0, &mut series);
+
+    for outer in 1..=cfg.max_iters {
+        phi.weights_into(cfg.lambda, &mut w);
+        // One oracle sweep: φ̂ = Σ_i φ̂^i.
+        let mut hat = DensePlane::zeros(dim);
+        for i in 0..n {
+            let p = problem.oracle(i, &w, eng);
+            if problem.delay > 0.0 {
+                clock.charge(problem.delay);
+            }
+            p.star.add_to(1.0, &mut hat.star);
+            hat.off += p.off;
+        }
+        let hat_plane = Plane::new(VecF::Dense(hat.star.clone()), hat.off, outer);
+        let gamma = line_search(&phi, &phi.clone(), &hat_plane, cfg.lambda);
+        // For the single-plane FW the "block" IS φ, so the line search is
+        // over φ ← (1−γ)φ + γφ̂.
+        phi.interp_dense(gamma, &hat);
+
+        phi.weights_into(cfg.lambda, &mut w);
+        let pt = record(problem, eng, &mut clock, cfg, &phi, &w, outer, &mut series);
+        if cfg.target_gap > 0.0 && pt.primal - pt.dual <= cfg.target_gap {
+            break;
+        }
+        if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
+            break;
+        }
+    }
+    series.wall_secs = clock.wall();
+    (series, w)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    clock: &mut Clock,
+    cfg: &FwConfig,
+    phi: &DensePlane,
+    w: &[f64],
+    outer: u64,
+    series: &mut Series,
+) -> EvalPoint {
+    let stats = problem.stats();
+    let time = clock.elapsed();
+    let mut ctx = EvalCtx {
+        problem,
+        eng,
+        clock,
+        lambda: cfg.lambda,
+        with_train_loss: cfg.with_train_loss,
+    };
+    let (primal, train_loss) = ctx.primal_uncounted(w);
+    let pt = EvalPoint {
+        outer,
+        oracle_calls: stats.calls,
+        time,
+        primal,
+        dual: phi.dual_bound(cfg.lambda),
+        primal_avg: None,
+        dual_avg: None,
+        ws_mean: 0.0,
+        approx_passes: 0,
+        approx_steps: 0,
+        oracle_secs: stats.real_secs + stats.virtual_secs,
+        train_loss,
+    };
+    series.points.push(pt.clone());
+    pt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::oracle::multiclass::MulticlassProblem;
+    use crate::runtime::engine::NativeEngine;
+
+    fn tiny_problem() -> CountingOracle {
+        CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+            UspsLikeConfig::at_scale(Scale::Tiny),
+            1,
+        ))))
+    }
+
+    #[test]
+    fn fw_dual_monotone_and_gap_shrinks() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = FwConfig { lambda: 1.0 / 60.0, max_iters: 20, ..Default::default() };
+        let (series, _) = run(&problem, &mut eng, &cfg);
+        for w in series.points.windows(2) {
+            assert!(w[1].dual >= w[0].dual - 1e-10);
+        }
+        let first = &series.points[0];
+        let last = series.points.last().unwrap();
+        assert!(last.primal - last.dual < first.primal - first.dual);
+    }
+
+    #[test]
+    fn fw_uses_n_calls_per_iteration() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = FwConfig { lambda: 0.02, max_iters: 4, ..Default::default() };
+        let (series, _) = run(&problem, &mut eng, &cfg);
+        assert_eq!(series.points.last().unwrap().oracle_calls, 4 * problem.n() as u64);
+    }
+
+    #[test]
+    fn fw_slower_than_bcfw_per_oracle_call() {
+        // The motivation for BCFW in the paper: at an equal oracle-call
+        // budget BCFW reaches a smaller gap than batch FW.
+        let mut eng = NativeEngine;
+        let lambda = 1.0 / 60.0;
+        let p1 = tiny_problem();
+        let (fw_series, _) =
+            run(&p1, &mut eng, &FwConfig { lambda, max_iters: 10, ..Default::default() });
+        let p2 = tiny_problem();
+        let bcfw_cfg = crate::coordinator::mp_bcfw::MpBcfwConfig {
+            max_iters: 10,
+            ..crate::coordinator::mp_bcfw::MpBcfwConfig::bcfw(lambda)
+        };
+        let (bcfw_series, _) = crate::coordinator::mp_bcfw::run(&p2, &mut eng, &bcfw_cfg);
+        let fw_gap = fw_series.final_gap();
+        let bcfw_gap = bcfw_series.final_gap();
+        assert!(
+            bcfw_gap < fw_gap,
+            "BCFW gap {bcfw_gap} should beat FW gap {fw_gap} at equal calls"
+        );
+    }
+}

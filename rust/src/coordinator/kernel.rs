@@ -1,0 +1,170 @@
+//! Kernels for the kernelized SSVM extension (§3.5 / §5 of the paper:
+//! "caching of kernel values ... open the door for kernelization. We plan
+//! to explore this in future work"). This module provides the kernel
+//! functions; `kernel_bcfw` runs BCFW entirely in coefficient space on
+//! top of them.
+
+use crate::utils::math;
+
+/// A Mercer kernel over dense feature vectors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Kernel {
+    Linear,
+    /// exp(−γ‖a−b‖²)
+    Rbf { gamma: f64 },
+    /// (⟨a,b⟩ + c)^d
+    Polynomial { degree: u32, coef: f64 },
+}
+
+impl Kernel {
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Kernel::Linear => math::dot(a, b),
+            Kernel::Rbf { gamma } => {
+                debug_assert_eq!(a.len(), b.len());
+                let mut d2 = 0.0;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    let d = x - y;
+                    d2 += d * d;
+                }
+                (-gamma * d2).exp()
+            }
+            Kernel::Polynomial { degree, coef } => (math::dot(a, b) + coef).powi(*degree as i32),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kernel> {
+        // "linear" | "rbf:<gamma>" | "poly:<degree>:<coef>"
+        if s == "linear" {
+            return Some(Kernel::Linear);
+        }
+        if let Some(g) = s.strip_prefix("rbf:") {
+            return g.parse().ok().map(|gamma| Kernel::Rbf { gamma });
+        }
+        if let Some(rest) = s.strip_prefix("poly:") {
+            let mut it = rest.split(':');
+            let degree = it.next()?.parse().ok()?;
+            let coef = it.next().unwrap_or("1").parse().ok()?;
+            return Some(Kernel::Polynomial { degree, coef });
+        }
+        None
+    }
+}
+
+/// Symmetric kernel matrix over a dataset's feature vectors, computed
+/// row-by-row on demand and cached — the "kernel cache" of §3.5 applied
+/// at the data level (classic SVM trick, Joachims '99).
+pub struct KernelCache<'a> {
+    kernel: Kernel,
+    feats: &'a [Vec<f64>],
+    rows: Vec<Option<Vec<f64>>>,
+    pub computed_rows: usize,
+}
+
+impl<'a> KernelCache<'a> {
+    pub fn new(kernel: Kernel, feats: &'a [Vec<f64>]) -> Self {
+        let n = feats.len();
+        KernelCache { kernel, feats, rows: vec![None; n], computed_rows: 0 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.feats.len()
+    }
+
+    /// Full row K(i, ·), computed once.
+    pub fn row(&mut self, i: usize) -> &[f64] {
+        if self.rows[i].is_none() {
+            let fi = &self.feats[i];
+            let row: Vec<f64> = self.feats.iter().map(|fj| self.kernel.eval(fi, fj)).collect();
+            self.rows[i] = Some(row);
+            self.computed_rows += 1;
+        }
+        self.rows[i].as_ref().unwrap()
+    }
+
+    pub fn get(&mut self, i: usize, j: usize) -> f64 {
+        // Prefer whichever row is already cached.
+        if let Some(r) = &self.rows[i] {
+            return r[j];
+        }
+        if let Some(r) = &self.rows[j] {
+            return r[i];
+        }
+        self.row(i)[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop::prop_check;
+
+    #[test]
+    fn linear_matches_dot() {
+        let k = Kernel::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, -1.0]), 1.0);
+    }
+
+    #[test]
+    fn rbf_properties() {
+        let k = Kernel::Rbf { gamma: 0.5 };
+        assert!((k.eval(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12, "K(x,x)=1");
+        let near = k.eval(&[0.0, 0.0], &[0.1, 0.0]);
+        let far = k.eval(&[0.0, 0.0], &[3.0, 0.0]);
+        assert!(near > far && far > 0.0);
+    }
+
+    #[test]
+    fn polynomial_degree_two() {
+        let k = Kernel::Polynomial { degree: 2, coef: 1.0 };
+        assert_eq!(k.eval(&[1.0], &[2.0]), 9.0);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Kernel::parse("linear"), Some(Kernel::Linear));
+        assert_eq!(Kernel::parse("rbf:0.25"), Some(Kernel::Rbf { gamma: 0.25 }));
+        assert_eq!(
+            Kernel::parse("poly:3:0.5"),
+            Some(Kernel::Polynomial { degree: 3, coef: 0.5 })
+        );
+        assert_eq!(Kernel::parse("poly:2"), Some(Kernel::Polynomial { degree: 2, coef: 1.0 }));
+        assert_eq!(Kernel::parse("wat"), None);
+    }
+
+    #[test]
+    fn kernel_matrix_is_psd_on_random_data() {
+        // Gershgorin-style check: z'Kz >= 0 for random z on random data.
+        prop_check("rbf kernel psd", 40, |g| {
+            let n = g.usize(2, 8);
+            let d = g.usize(1, 4);
+            let feats: Vec<Vec<f64>> = (0..n).map(|_| g.vec_normal(d)).collect();
+            let mut cache = KernelCache::new(Kernel::Rbf { gamma: 0.7 }, &feats);
+            let z: Vec<f64> = g.vec_normal(n);
+            let mut q = 0.0;
+            for i in 0..n {
+                for j in 0..n {
+                    q += z[i] * z[j] * cache.get(i, j);
+                }
+            }
+            if q < -1e-9 {
+                return Err(format!("z'Kz = {q} < 0"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cache_computes_each_row_once() {
+        let feats: Vec<Vec<f64>> = (0..5).map(|i| vec![i as f64]).collect();
+        let mut c = KernelCache::new(Kernel::Linear, &feats);
+        c.row(2);
+        c.row(2);
+        c.get(2, 4);
+        assert_eq!(c.computed_rows, 1);
+        c.get(3, 2); // served from row 2
+        assert_eq!(c.computed_rows, 1);
+        c.get(3, 4);
+        assert_eq!(c.computed_rows, 2);
+    }
+}

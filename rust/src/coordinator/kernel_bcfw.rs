@@ -1,0 +1,295 @@
+//! Kernelized BCFW for multiclass SSVMs — the extension the paper's §3.5
+//! and §5 point to ("caching of kernel values ... opens the door for
+//! kernelization").
+//!
+//! In kernel space the weight vector w = −φ_*/λ is never materialized;
+//! BCFW runs entirely in *coefficient space*. With Σ_y β_{jy} = 1 per
+//! block (maintained by the convex updates), write
+//!
+//!   g_{jc} = β_{jc} − [c = y_j]      (signed dual coefficients)
+//!
+//! so block c of φ_* is (1/n) Σ_j g_{jc} ψ(x_j), and every quantity the
+//! algorithm needs is a kernel sum:
+//!
+//!   score_c(x_i)   = ⟨w_c, ψ_i⟩ = −A_c / (λn),  A_c = Σ_j g_{jc} K(j,i)
+//!   ⟨φ^i_*, φ_*⟩   = (1/n²) Σ_c g_{ic} A_c
+//!   ‖φ^i−φ̂^i‖²_*  = (1/n²) K(i,i) Σ_c (g_{ic} − ĝ_c)²
+//!
+//! One exact BCFW step per block costs O(n·C) kernel lookups, served by
+//! the row-cached `KernelCache` — the §3.5 product cache operating on
+//! data-level kernel values.
+
+use super::kernel::{Kernel, KernelCache};
+use crate::data::types::MulticlassData;
+use crate::utils::math;
+use crate::utils::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct KernelBcfwConfig {
+    pub kernel: Kernel,
+    pub lambda: f64,
+    pub passes: u64,
+    pub seed: u64,
+}
+
+impl Default for KernelBcfwConfig {
+    fn default() -> Self {
+        KernelBcfwConfig { kernel: Kernel::Linear, lambda: 0.01, passes: 20, seed: 0 }
+    }
+}
+
+/// One evaluation point of the kernelized run.
+#[derive(Clone, Debug)]
+pub struct KernelEvalPoint {
+    pub pass: u64,
+    pub primal: f64,
+    pub dual: f64,
+    pub train_loss: f64,
+}
+
+pub struct KernelBcfwResult {
+    pub points: Vec<KernelEvalPoint>,
+    /// Final signed dual coefficients g[j*classes + c] (the model: scoring
+    /// a new point x needs K(x_j, x) sums over these).
+    pub coeffs: Vec<f64>,
+    pub kernel_rows_computed: usize,
+}
+
+/// Train a kernelized multiclass SSVM with BCFW.
+pub fn run(data: &MulticlassData, cfg: &KernelBcfwConfig) -> KernelBcfwResult {
+    let n = data.n();
+    let classes = data.layout.classes;
+    let lambda = cfg.lambda;
+    let feats: Vec<Vec<f64>> = data.instances.iter().map(|inst| inst.psi.clone()).collect();
+    let labels: Vec<usize> = data.instances.iter().map(|inst| inst.label).collect();
+    let mut cache = KernelCache::new(cfg.kernel.clone(), &feats);
+    let mut rng = Pcg::new(cfg.seed, 7777);
+
+    // Signed coefficients g[j][c]; β_j = e_{y_j} initially ⇒ g = 0.
+    let mut g = vec![0.0f64; n * classes];
+    // E = n²·‖φ_*‖², maintained incrementally. off = φ_∘.
+    let mut e = 0.0f64;
+    let mut off = 0.0f64;
+    // Per-block offsets φ^i_∘ (for the line search).
+    let mut block_off = vec![0.0f64; n];
+
+    let mut points = Vec::new();
+    let dual_of = |e: f64, off: f64| -> f64 { -e / (n as f64 * n as f64 * 2.0 * lambda) + off };
+
+    // Evaluation: primal needs one oracle sweep (all scores), O(n²C).
+    let evaluate = |cache: &mut KernelCache,
+                    g: &[f64],
+                    e: f64,
+                    off: f64,
+                    pass: u64|
+     -> KernelEvalPoint {
+        let mut hinge_sum = 0.0;
+        let mut errors = 0usize;
+        for i in 0..n {
+            let row = cache.row(i);
+            let mut scores = vec![0.0f64; classes];
+            for j in 0..n {
+                let kij = row[j];
+                if kij == 0.0 {
+                    continue;
+                }
+                for c in 0..classes {
+                    scores[c] -= g[j * classes + c] * kij;
+                }
+            }
+            for s in scores.iter_mut() {
+                *s /= lambda * n as f64;
+            }
+            let yi = labels[i];
+            let mut best = 0.0f64; // y = y_i gives 0
+            for c in 0..classes {
+                if c != yi {
+                    best = best.max(1.0 + scores[c] - scores[yi]);
+                }
+            }
+            hinge_sum += best / n as f64;
+            if math::argmax(&scores) != yi {
+                errors += 1;
+            }
+        }
+        let nrm_w_sq = e / (n as f64 * n as f64 * lambda * lambda);
+        KernelEvalPoint {
+            pass,
+            primal: 0.5 * lambda * nrm_w_sq + hinge_sum,
+            dual: dual_of(e, off),
+            train_loss: errors as f64 / n as f64,
+        }
+    };
+
+    points.push(evaluate(&mut cache, &g, e, off, 0));
+
+    for pass in 1..=cfg.passes {
+        for &i in rng.permutation(n).iter() {
+            let yi = labels[i];
+            // Scores and A_c from kernel row i.
+            let mut a = vec![0.0f64; classes];
+            {
+                let row = cache.row(i);
+                for j in 0..n {
+                    let kij = row[j];
+                    if kij == 0.0 {
+                        continue;
+                    }
+                    for c in 0..classes {
+                        a[c] += g[j * classes + c] * kij;
+                    }
+                }
+            }
+            // Loss-augmented argmax: Δ + score_c − score_{y_i}; constant
+            // −score_{y_i} dropped, score_c = −A_c/(λn).
+            let mut yhat = yi;
+            let mut best = -a[yi]; // c = y_i: Δ=0
+            for c in 0..classes {
+                if c == yi {
+                    continue;
+                }
+                let v = lambda * n as f64 + (-a[c]); // Δ=1 scaled by λn
+                if v > best {
+                    best = v;
+                    yhat = c;
+                }
+            }
+            // Line search in coefficient space.
+            let kii = cache.get(i, i);
+            let gi = &g[i * classes..(i + 1) * classes];
+            // ⟨φ^i, φ⟩·n² and ⟨φ̂^i, φ⟩·n².
+            let dot_i_phi: f64 = (0..classes).map(|c| gi[c] * a[c]).sum();
+            let ghat = |c: usize| -> f64 {
+                (if c == yhat { 1.0 } else { 0.0 }) - (if c == yi { 1.0 } else { 0.0 })
+            };
+            let dot_hat_phi: f64 = a[yhat] - a[yi];
+            let diff_sq: f64 = (0..classes).map(|c| (gi[c] - ghat(c)).powi(2)).sum::<f64>() * kii;
+            let hat_off = if yhat == yi { 0.0 } else { 1.0 / n as f64 };
+            // γ = [⟨φ^i−φ̂, φ⟩ − λ(φ^i_∘ − φ̂_∘)] / ‖φ^i−φ̂‖²  (n² factors cancel)
+            let num = (dot_i_phi - dot_hat_phi) / (n as f64 * n as f64)
+                - lambda * (block_off[i] - hat_off);
+            let denom = diff_sq / (n as f64 * n as f64);
+            if denom <= 0.0 {
+                continue;
+            }
+            let gamma = math::clip(num / denom, 0.0, 1.0);
+            if gamma <= 0.0 {
+                continue;
+            }
+            // E update with pre-update values: δ_c = γ(ĝ_c − g_{ic}).
+            let mut cross = 0.0;
+            let mut self_sq = 0.0;
+            for c in 0..classes {
+                let d = gamma * (ghat(c) - g[i * classes + c]);
+                cross += d * a[c];
+                self_sq += d * d;
+            }
+            e += 2.0 * cross + kii * self_sq;
+            off += gamma * (hat_off - block_off[i]);
+            block_off[i] = (1.0 - gamma) * block_off[i] + gamma * hat_off;
+            for c in 0..classes {
+                let gc = &mut g[i * classes + c];
+                *gc = (1.0 - gamma) * *gc + gamma * ghat(c);
+            }
+        }
+        points.push(evaluate(&mut cache, &g, e, off, pass));
+    }
+
+    KernelBcfwResult { points, coeffs: g, kernel_rows_computed: cache.computed_rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mp_bcfw::{self, MpBcfwConfig};
+    use crate::data::synth::rings::{generate as gen_rings, RingsConfig};
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::oracle::multiclass::MulticlassProblem;
+    use crate::oracle::wrappers::CountingOracle;
+    use crate::runtime::engine::NativeEngine;
+
+    #[test]
+    fn linear_kernel_matches_explicit_linear_bcfw_optimum() {
+        // Same convex problem, two parameterizations: the kernelized run
+        // with a linear kernel must reach the same dual optimum as the
+        // explicit (feature-space) BCFW.
+        let data = generate(UspsLikeConfig::at_scale(Scale::Tiny), 1);
+        let lambda = 1.0 / data.n() as f64;
+        let kr = run(
+            &data,
+            &KernelBcfwConfig { kernel: Kernel::Linear, lambda, passes: 30, seed: 0 },
+        );
+        let problem = CountingOracle::new(Box::new(MulticlassProblem::new(data)));
+        let mut eng = NativeEngine;
+        let (series, _) = mp_bcfw::run(
+            &problem,
+            &mut eng,
+            &MpBcfwConfig { max_iters: 30, ..MpBcfwConfig::bcfw(lambda) },
+        );
+        let d_kernel = kr.points.last().unwrap().dual;
+        let d_linear = series.points.last().unwrap().dual;
+        assert!(
+            (d_kernel - d_linear).abs() / d_linear.abs().max(1e-12) < 0.02,
+            "kernel dual {d_kernel} vs linear dual {d_linear}"
+        );
+        // And both duals below both primals (weak duality, cross-checked).
+        assert!(d_kernel <= kr.points.last().unwrap().primal + 1e-9);
+    }
+
+    #[test]
+    fn dual_monotone_and_weak_duality_hold() {
+        let data = gen_rings(RingsConfig::default(), 3);
+        let r = run(
+            &data,
+            &KernelBcfwConfig {
+                kernel: Kernel::Rbf { gamma: 2.0 },
+                lambda: 1.0 / data.n() as f64,
+                passes: 15,
+                seed: 0,
+            },
+        );
+        for w in r.points.windows(2) {
+            assert!(w[1].dual >= w[0].dual - 1e-9, "dual decreased");
+        }
+        for p in &r.points {
+            assert!(p.primal >= p.dual - 1e-9, "weak duality violated at pass {}", p.pass);
+        }
+    }
+
+    #[test]
+    fn rbf_solves_rings_where_linear_cannot() {
+        // The point of kernelization: concentric rings are not linearly
+        // separable; the RBF machine must fit them, the linear one can't.
+        let data = gen_rings(RingsConfig::default(), 1);
+        let lambda = 1.0 / data.n() as f64;
+        let rbf = run(
+            &data,
+            &KernelBcfwConfig { kernel: Kernel::Rbf { gamma: 4.0 }, lambda, passes: 30, seed: 0 },
+        );
+        let lin = run(
+            &data,
+            &KernelBcfwConfig { kernel: Kernel::Linear, lambda, passes: 30, seed: 0 },
+        );
+        let rbf_loss = rbf.points.last().unwrap().train_loss;
+        let lin_loss = lin.points.last().unwrap().train_loss;
+        assert!(rbf_loss < 0.1, "rbf train loss {rbf_loss}");
+        assert!(lin_loss > 0.25, "linear should fail on rings, got {lin_loss}");
+    }
+
+    #[test]
+    fn kernel_rows_computed_at_most_n() {
+        let data = gen_rings(RingsConfig { n: 40, ..Default::default() }, 2);
+        let r = run(
+            &data,
+            &KernelBcfwConfig {
+                kernel: Kernel::Rbf { gamma: 2.0 },
+                lambda: 0.02,
+                passes: 5,
+                seed: 0,
+            },
+        );
+        assert!(r.kernel_rows_computed <= 40);
+        assert_eq!(r.coeffs.len(), 40 * data.layout.classes);
+    }
+}

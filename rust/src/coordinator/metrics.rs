@@ -1,0 +1,214 @@
+//! Convergence measurement (§4 protocol).
+//!
+//! The paper plots primal suboptimality, dual suboptimality and duality
+//! gap against (a) the number of exact oracle calls and (b) training
+//! runtime. Because evaluating the exact primal needs n extra oracle
+//! calls, the evaluator pauses the measurement clock and disables call
+//! counting for the sweep — evaluation is free, exactly as in the paper's
+//! measurement methodology. Suboptimalities are computed later by the
+//! bench harness against the best dual bound observed in a run group.
+
+use crate::model::problem::{mean_train_loss, primal_value};
+use crate::oracle::wrappers::CountingOracle;
+use crate::runtime::engine::ScoringEngine;
+use crate::utils::json::Json;
+use crate::utils::timer::Clock;
+
+/// One evaluation snapshot.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    /// Outer iteration (0 = before training).
+    pub outer: u64,
+    /// Counted exact-oracle calls so far.
+    pub oracle_calls: u64,
+    /// Measured training time (pausable clock, includes virtual latency).
+    pub time: f64,
+    /// Primal objective P(w) at the current iterate.
+    pub primal: f64,
+    /// Dual objective F(φ).
+    pub dual: f64,
+    /// Primal at the averaged iterate (averaging variants only).
+    pub primal_avg: Option<f64>,
+    /// Dual at the averaged iterate (averaging variants only).
+    pub dual_avg: Option<f64>,
+    /// Mean working-set size over examples (Fig. 5).
+    pub ws_mean: f64,
+    /// Approximate passes run in the last outer iteration (Fig. 6).
+    pub approx_passes: u64,
+    /// Cumulative approximate steps with γ > 0.
+    pub approx_steps: u64,
+    /// Seconds spent in counted oracle calls (real + virtual) so far.
+    pub oracle_secs: f64,
+    /// Mean task loss of the predictor on the training set (optional
+    /// diagnostic; NaN when not computed).
+    pub train_loss: f64,
+}
+
+impl EvalPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("outer", Json::Num(self.outer as f64)),
+            ("oracle_calls", Json::Num(self.oracle_calls as f64)),
+            ("time", Json::Num(self.time)),
+            ("primal", Json::Num(self.primal)),
+            ("dual", Json::Num(self.dual)),
+            (
+                "primal_avg",
+                self.primal_avg.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("dual_avg", self.dual_avg.map(Json::Num).unwrap_or(Json::Null)),
+            ("ws_mean", Json::Num(self.ws_mean)),
+            ("approx_passes", Json::Num(self.approx_passes as f64)),
+            ("approx_steps", Json::Num(self.approx_steps as f64)),
+            ("oracle_secs", Json::Num(self.oracle_secs)),
+            ("train_loss", Json::Num(self.train_loss)),
+        ])
+    }
+}
+
+/// Full convergence trace of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub algo: String,
+    pub dataset: String,
+    pub seed: u64,
+    pub points: Vec<EvalPoint>,
+    /// Total wall time of the run (including evaluation sweeps).
+    pub wall_secs: f64,
+}
+
+impl Series {
+    /// Highest dual bound seen in this series (including averaged duals —
+    /// they are valid bounds too).
+    pub fn best_dual(&self) -> f64 {
+        self.points
+            .iter()
+            .flat_map(|p| [p.dual, p.dual_avg.unwrap_or(f64::NEG_INFINITY)])
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn final_gap(&self) -> f64 {
+        self.points.last().map(|p| p.primal - p.dual).unwrap_or(f64::INFINITY)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", Json::s(&self.algo)),
+            ("dataset", Json::s(&self.dataset)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("points", Json::Arr(self.points.iter().map(|p| p.to_json()).collect())),
+        ])
+    }
+}
+
+/// Context handed to the evaluator by an optimizer loop.
+pub struct EvalCtx<'a> {
+    pub problem: &'a CountingOracle,
+    pub eng: &'a mut dyn ScoringEngine,
+    pub clock: &'a mut Clock,
+    pub lambda: f64,
+    /// Compute the (expensive) mean train task loss as well.
+    pub with_train_loss: bool,
+}
+
+impl<'a> EvalCtx<'a> {
+    /// Evaluate the primal at `w` with the clock paused and oracle calls
+    /// uncounted. Returns (primal, train_loss-or-NaN).
+    pub fn primal_uncounted(&mut self, w: &[f64]) -> (f64, f64) {
+        self.clock.pause();
+        self.problem.set_counting(false);
+        let primal = primal_value(self.problem, w, self.lambda, self.eng);
+        let tl = if self.with_train_loss {
+            mean_train_loss(self.problem, w, self.eng)
+        } else {
+            f64::NAN
+        };
+        self.problem.set_counting(true);
+        self.clock.resume();
+        (primal, tl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::model::problem::StructuredProblem;
+    use crate::oracle::multiclass::MulticlassProblem;
+    use crate::runtime::engine::NativeEngine;
+
+    #[test]
+    fn evaluation_does_not_count_calls_or_time() {
+        let problem = CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+            UspsLikeConfig::at_scale(Scale::Tiny),
+            1,
+        ))));
+        let mut eng = NativeEngine;
+        let mut clock = Clock::new();
+        let w = vec![0.0; problem.dim()];
+        let mut ctx = EvalCtx {
+            problem: &problem,
+            eng: &mut eng,
+            clock: &mut clock,
+            lambda: 0.01,
+            with_train_loss: true,
+        };
+        let (primal, tl) = ctx.primal_uncounted(&w);
+        assert!(primal > 0.0, "P(0) = mean loss of worst labels > 0");
+        assert!((0.0..=1.0).contains(&tl));
+        assert_eq!(problem.stats().calls, 0, "evaluation sweep must not count");
+        assert!(problem.stats().calls_all > 0);
+        assert!(clock.is_running());
+    }
+
+    #[test]
+    fn series_best_dual_and_gap() {
+        let mk = |primal: f64, dual: f64, dual_avg: Option<f64>| EvalPoint {
+            outer: 0,
+            oracle_calls: 0,
+            time: 0.0,
+            primal,
+            dual,
+            primal_avg: None,
+            dual_avg,
+            ws_mean: 0.0,
+            approx_passes: 0,
+            approx_steps: 0,
+            oracle_secs: 0.0,
+            train_loss: f64::NAN,
+        };
+        let s = Series {
+            algo: "x".into(),
+            dataset: "y".into(),
+            seed: 0,
+            points: vec![mk(1.0, 0.2, None), mk(0.8, 0.5, Some(0.55)), mk(0.7, 0.52, None)],
+            wall_secs: 0.0,
+        };
+        assert_eq!(s.best_dual(), 0.55);
+        assert!((s.final_gap() - (0.7 - 0.52)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_point_json_roundtrip_fields() {
+        let p = EvalPoint {
+            outer: 3,
+            oracle_calls: 120,
+            time: 1.5,
+            primal: 0.9,
+            dual: 0.4,
+            primal_avg: Some(0.85),
+            dual_avg: None,
+            ws_mean: 2.5,
+            approx_passes: 7,
+            approx_steps: 100,
+            oracle_secs: 0.9,
+            train_loss: 0.1,
+        };
+        let j = p.to_json();
+        assert_eq!(j.get("outer").as_f64(), Some(3.0));
+        assert_eq!(j.get("primal_avg").as_f64(), Some(0.85));
+        assert_eq!(*j.get("dual_avg"), Json::Null);
+    }
+}

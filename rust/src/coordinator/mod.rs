@@ -1,0 +1,17 @@
+//! The paper's contribution: Frank-Wolfe-family optimizers over the SSVM
+//! dual, with multi-plane working sets, automatic parameter selection,
+//! inner-product caching and iterate averaging, plus classic baselines.
+pub mod dual;
+pub mod working_set;
+pub mod auto;
+pub mod products;
+pub mod averaging;
+pub mod fw;
+pub mod bcfw;
+pub mod mp_bcfw;
+pub mod metrics;
+pub mod trainer;
+pub mod baselines;
+pub mod checkpoint;
+pub mod kernel;
+pub mod kernel_bcfw;

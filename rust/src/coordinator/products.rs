@@ -1,0 +1,305 @@
+//! Inner-product caching for approximate updates (§3.5).
+//!
+//! When visiting block i, MP-BCFW can run the approximate update several
+//! times in a row (the paper uses 10). Done naively each update costs
+//! Θ(|W_i|·d). This module implements the paper's caching scheme: on the
+//! first step compute the products ⟨p_j,φ⟩, ⟨p_j,φ^i⟩, ⟨φ^i,φ⟩, ‖φ^i‖²,
+//! ‖φ‖², then run every subsequent step purely on scalars, using pairwise
+//! plane products ⟨p_j,p_k⟩ fetched on demand from a persistent Gram
+//! cache. Once the Gram entries are warm each inner step is Θ(|W_i|).
+//! The block (and φ) are materialized once at the end via coefficient
+//! tracking — not once per step.
+//!
+//! Since all quantities are inner products, the same scheme kernelizes
+//! (the paper's "caching of kernel values"); our Gram cache is exactly
+//! the kernel cache in that reading.
+
+use std::collections::HashMap;
+
+use super::dual::DualState;
+use super::working_set::WorkingSet;
+use crate::model::plane::{line_search_from_products, DensePlane};
+use crate::utils::math;
+
+/// Persistent cache of pairwise plane products ⟨p_a_*, p_b_*⟩, keyed by
+/// stable working-set entry ids.
+#[derive(Default)]
+pub struct GramCache {
+    map: HashMap<(u64, u64), f64>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl GramCache {
+    pub fn new() -> GramCache {
+        GramCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// ⟨p_a, p_b⟩ with lazy computation.
+    pub fn get(&mut self, ws: &WorkingSet, a: usize, b: usize) -> f64 {
+        let (ia, ib) = (ws.id(a), ws.id(b));
+        let key = (ia.min(ib), ia.max(ib));
+        if let Some(&v) = self.map.get(&key) {
+            self.hits += 1;
+            return v;
+        }
+        self.misses += 1;
+        let v = ws.plane(a).star.dot(&ws.plane(b).star);
+        self.map.insert(key, v);
+        v
+    }
+
+    /// Drop entries touching evicted ids (call occasionally; stale keys
+    /// are harmless but waste memory).
+    pub fn retain_ids(&mut self, alive: &dyn Fn(u64) -> bool) {
+        self.map.retain(|&(a, b), _| alive(a) && alive(b));
+    }
+}
+
+/// Outcome of one cached inner loop over a block.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockOutcome {
+    /// Approximate steps that actually moved (γ > 0).
+    pub steps: usize,
+    /// Dual improvement achieved by the loop.
+    pub f_delta: f64,
+}
+
+/// Run up to `repeats` approximate updates on block `i` using only scalar
+/// bookkeeping, then materialize the block once. Marks selected planes
+/// active at `now`. Requires `state.w` to be anything (w is derived from
+/// the product state, not the buffer).
+pub fn cached_block_updates(
+    state: &mut DualState,
+    ws: &mut WorkingSet,
+    gram: &mut GramCache,
+    i: usize,
+    repeats: usize,
+    now: u64,
+) -> BlockOutcome {
+    let m = ws.len();
+    if m == 0 || repeats == 0 {
+        return BlockOutcome::default();
+    }
+    let lambda = state.lambda;
+    let phi = &state.phi;
+    let block = &state.blocks[i];
+
+    // First step of §3.5: the O(|W_i|·d) product computation.
+    let mut a_j: Vec<f64> = (0..m).map(|j| ws.plane(j).star.dot_dense(&phi.star)).collect();
+    let mut c_j: Vec<f64> = (0..m).map(|j| ws.plane(j).star.dot_dense(&block.star)).collect();
+    let mut b = math::dot(&block.star, &phi.star);
+    let mut d = math::nrm2sq(&block.star);
+    let mut e = math::nrm2sq(&phi.star);
+    let mut off_i = block.off;
+    let mut off_phi = phi.off;
+    let off_j: Vec<f64> = (0..m).map(|j| ws.plane(j).off).collect();
+
+    let f_start = -e / (2.0 * lambda) + off_phi;
+
+    // Coefficient tracking: block' = c0·block_orig + Σ coef_j · p_j.
+    let mut c0 = 1.0;
+    let mut coef = vec![0.0f64; m];
+    let mut steps = 0usize;
+
+    for _ in 0..repeats {
+        // Select ĵ = argmax ⟨p_j,[w 1]⟩ with w = −φ_*/λ ⇒ −A_j/λ + off_j.
+        let mut jh = 0usize;
+        let mut best = f64::NEG_INFINITY;
+        for j in 0..m {
+            let s = -a_j[j] / lambda + off_j[j];
+            if s > best {
+                best = s;
+                jh = j;
+            }
+        }
+        let gg = ws.norm_sq(jh);
+        let (a, c) = (a_j[jh], c_j[jh]);
+        let gamma = line_search_from_products(b, a, d, gg, c, off_i, off_j[jh], lambda);
+        // Converged for this block: γ at (or numerically indistinguishable
+        // from) zero means no cached plane improves the bound further.
+        if gamma <= 1e-12 {
+            break;
+        }
+        steps += 1;
+        ws.touch(jh, now);
+
+        // Gram row for ĵ (on demand, cached persistently).
+        // Scalar state updates (all with pre-update values).
+        for j in 0..m {
+            let g_jjh = if j == jh { gg } else { gram.get(ws, j, jh) };
+            a_j[j] += gamma * (g_jjh - c_j[j]);
+            c_j[j] = (1.0 - gamma) * c_j[j] + gamma * g_jjh;
+        }
+        e += 2.0 * gamma * (a - b) + gamma * gamma * (gg - 2.0 * c + d);
+        b = (1.0 - gamma) * (b + gamma * (c - d)) + gamma * (a + gamma * (gg - c));
+        d = (1.0 - gamma) * (1.0 - gamma) * d
+            + 2.0 * gamma * (1.0 - gamma) * c
+            + gamma * gamma * gg;
+        off_phi += gamma * (off_j[jh] - off_i);
+        off_i = (1.0 - gamma) * off_i + gamma * off_j[jh];
+
+        // Coefficients.
+        c0 *= 1.0 - gamma;
+        for x in coef.iter_mut() {
+            *x *= 1.0 - gamma;
+        }
+        coef[jh] += gamma;
+    }
+
+    if steps == 0 {
+        return BlockOutcome::default();
+    }
+
+    // Materialize block' once and restore the φ = Σφ^i invariant.
+    let dim = state.dim();
+    let mut new_block = DensePlane::zeros(dim);
+    math::axpy(c0, &state.blocks[i].star, &mut new_block.star);
+    for (j, &x) in coef.iter().enumerate() {
+        if x != 0.0 {
+            ws.plane(j).star.add_to(x, &mut new_block.star);
+        }
+    }
+    new_block.off = off_i;
+    state.replace_block(i, new_block);
+
+    let f_end = -e / (2.0 * lambda) + off_phi;
+    BlockOutcome { steps, f_delta: f_end - f_start }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::plane::Plane;
+    use crate::model::vec::VecF;
+    use crate::utils::prop::prop_check;
+
+    fn rand_ws(g: &mut crate::utils::prop::Gen, dim: usize, m: usize) -> WorkingSet {
+        let mut ws = WorkingSet::new(1000);
+        for t in 0..m {
+            let k = g.usize(1, dim);
+            let pairs: Vec<(u32, f64)> =
+                (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+            ws.insert(Plane::new(VecF::sparse(dim, pairs), g.normal(), t as u64 + 1), 0);
+        }
+        ws
+    }
+
+    /// The cached loop must match a reference implementation that does
+    /// every step the slow dense way.
+    #[test]
+    fn cached_loop_matches_dense_reference() {
+        prop_check("products == dense ref", 80, |g| {
+            let dim = g.usize(2, 10);
+            let n = g.usize(1, 3);
+            let m = g.usize(1, 6);
+            let lambda = 0.3 + g.f64(0.0, 1.0);
+            let repeats = g.usize(1, 8);
+            // Build two identical states.
+            let mut st1 = DualState::new(n, dim, lambda);
+            let mut ws = rand_ws(g, dim, m);
+            // Warm the states with a couple of exact-style steps so φ ≠ 0.
+            for t in 0..n {
+                let k = g.usize(1, dim);
+                let pairs: Vec<(u32, f64)> =
+                    (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+                let hat = Plane::new(VecF::sparse(dim, pairs), g.normal(), 100 + t as u64);
+                st1.block_step(t % n, &hat);
+            }
+            let mut st2 = st1.clone_state();
+
+            // Cached path.
+            let mut gram = GramCache::new();
+            let out = cached_block_updates(&mut st1, &mut ws, &mut gram, 0, repeats, 1);
+
+            // Dense reference path.
+            for _ in 0..repeats {
+                st2.refresh_w();
+                let Some((jh, _)) = ws.best_at(&st2.w) else { break };
+                let gamma = st2.block_step(0, ws.plane(jh));
+                if gamma <= 1e-12 {
+                    break;
+                }
+            }
+            // Step counts may legitimately differ by degenerate (≈0-γ)
+            // trailing steps near the block optimum; the *states* must
+            // agree.
+            let _ = out;
+            // States must agree.
+            let tol = 1e-7;
+            if (st1.dual_value() - st2.dual_value()).abs() > tol {
+                return Err(format!(
+                    "dual {} vs {}",
+                    st1.dual_value(),
+                    st2.dual_value()
+                ));
+            }
+            for (x, y) in st1.phi.star.iter().zip(&st2.phi.star) {
+                if (x - y).abs() > tol {
+                    return Err(format!("phi mismatch {x} vs {y}"));
+                }
+            }
+            for (x, y) in st1.blocks[0].star.iter().zip(&st2.blocks[0].star) {
+                if (x - y).abs() > tol {
+                    return Err(format!("block mismatch {x} vs {y}"));
+                }
+            }
+            if st1.consistency_error() > 1e-8 {
+                return Err(format!("consistency {}", st1.consistency_error()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f_delta_matches_state_change() {
+        prop_check("f_delta consistent", 50, |g| {
+            let dim = g.usize(2, 8);
+            let lambda = 1.0;
+            let mut st = DualState::new(2, dim, lambda);
+            let mut ws = rand_ws(g, dim, 4);
+            let f0 = st.dual_value();
+            let mut gram = GramCache::new();
+            let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 5, 1);
+            let f1 = st.dual_value();
+            if (out.f_delta - (f1 - f0)).abs() > 1e-8 {
+                return Err(format!("f_delta {} vs {}", out.f_delta, f1 - f0));
+            }
+            if out.f_delta < -1e-12 {
+                return Err("negative improvement".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_cache_hits_on_second_visit() {
+        let mut g = crate::utils::prop::Gen { rng: crate::utils::rng::Pcg::seeded(4), size: 1.0 };
+        let dim = 6;
+        let mut st = DualState::new(1, dim, 1.0);
+        let mut ws = rand_ws(&mut g, dim, 5);
+        let mut gram = GramCache::new();
+        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 1);
+        let misses_first = gram.misses;
+        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 2);
+        assert!(gram.misses == misses_first || gram.hits > 0);
+    }
+
+    #[test]
+    fn empty_working_set_is_noop() {
+        let mut st = DualState::new(1, 4, 1.0);
+        let mut ws = WorkingSet::new(10);
+        let mut gram = GramCache::new();
+        let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 1);
+        assert_eq!(out.steps, 0);
+        assert_eq!(out.f_delta, 0.0);
+    }
+}

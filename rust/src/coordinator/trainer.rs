@@ -1,0 +1,387 @@
+//! Top-level training façade: dataset construction, algorithm dispatch,
+//! engine selection. This is what the CLI, the examples and the bench
+//! harness all call into.
+
+use super::baselines::{cutting_plane, ssg};
+use super::checkpoint::ModelCheckpoint;
+use super::fw;
+use super::metrics::Series;
+use super::mp_bcfw::{self, MpBcfwConfig};
+use crate::data::synth::{horseseg_like, ocr_like, usps_like};
+use crate::data::types::Scale;
+use crate::model::problem::StructuredProblem;
+use crate::oracle::graphcut::GraphCutProblem;
+use crate::oracle::multiclass::MulticlassProblem;
+use crate::oracle::sequence::SequenceProblem;
+use crate::oracle::wrappers::CountingOracle;
+use crate::runtime::engine::{NativeEngine, ScoringEngine};
+
+/// Training algorithm selector (paper algorithms + related-work baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Fw,
+    Bcfw,
+    BcfwAvg,
+    MpBcfw,
+    MpBcfwAvg,
+    CuttingPlane,
+    Ssg,
+    SsgAvg,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "fw" => Some(Algo::Fw),
+            "bcfw" => Some(Algo::Bcfw),
+            "bcfw-avg" => Some(Algo::BcfwAvg),
+            "mp-bcfw" => Some(Algo::MpBcfw),
+            "mp-bcfw-avg" => Some(Algo::MpBcfwAvg),
+            "cutting-plane" | "cp" => Some(Algo::CuttingPlane),
+            "ssg" => Some(Algo::Ssg),
+            "ssg-avg" => Some(Algo::SsgAvg),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Fw => "fw",
+            Algo::Bcfw => "bcfw",
+            Algo::BcfwAvg => "bcfw-avg",
+            Algo::MpBcfw => "mp-bcfw",
+            Algo::MpBcfwAvg => "mp-bcfw-avg",
+            Algo::CuttingPlane => "cutting-plane",
+            Algo::Ssg => "ssg",
+            Algo::SsgAvg => "ssg-avg",
+        }
+    }
+
+    /// The four algorithms of the paper's figures.
+    pub fn paper_four() -> [Algo; 4] {
+        [Algo::Bcfw, Algo::BcfwAvg, Algo::MpBcfw, Algo::MpBcfwAvg]
+    }
+}
+
+/// Dataset selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    UspsLike,
+    OcrLike,
+    HorsesegLike,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s {
+            "usps" | "usps_like" | "usps-like" => Some(DatasetKind::UspsLike),
+            "ocr" | "ocr_like" | "ocr-like" => Some(DatasetKind::OcrLike),
+            "horseseg" | "horseseg_like" | "horseseg-like" => Some(DatasetKind::HorsesegLike),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::UspsLike => "usps_like",
+            DatasetKind::OcrLike => "ocr_like",
+            DatasetKind::HorsesegLike => "horseseg_like",
+        }
+    }
+
+    pub fn all() -> [DatasetKind; 3] {
+        [DatasetKind::UspsLike, DatasetKind::OcrLike, DatasetKind::HorsesegLike]
+    }
+}
+
+/// Scoring-engine selector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    /// PJRT-backed engine over the AOT artifacts in the given directory.
+    Xla { artifacts_dir: String },
+}
+
+impl EngineKind {
+    pub fn build(&self) -> anyhow::Result<Box<dyn ScoringEngine>> {
+        match self {
+            EngineKind::Native => Ok(Box::new(NativeEngine)),
+            #[cfg(feature = "xla-rt")]
+            EngineKind::Xla { artifacts_dir } => Ok(Box::new(
+                crate::runtime::xla::XlaEngine::load(artifacts_dir)?,
+            )),
+            #[cfg(not(feature = "xla-rt"))]
+            EngineKind::Xla { .. } => {
+                anyhow::bail!("built without the xla-rt feature; use --engine native")
+            }
+        }
+    }
+}
+
+/// Everything needed to run one training job.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub dataset: DatasetKind,
+    pub scale: Scale,
+    pub data_seed: u64,
+    pub algo: Algo,
+    pub seed: u64,
+    /// None → the paper's λ = 1/n.
+    pub lambda: Option<f64>,
+    pub max_iters: u64,
+    pub max_oracle_calls: u64,
+    pub max_time: f64,
+    pub target_gap: f64,
+    /// Virtual per-oracle-call latency (crossover studies).
+    pub oracle_delay: f64,
+    /// §3.5 product cache inner repeats (0/1 disables).
+    pub inner_repeats: usize,
+    /// Working-set TTL [T].
+    pub ttl: u64,
+    /// Working-set cap [N].
+    pub cap_n: usize,
+    /// Max approximate passes [M].
+    pub max_approx_passes: u64,
+    /// Use the §3.4 slope rule.
+    pub auto_approx: bool,
+    pub engine: EngineKind,
+    pub with_train_loss: bool,
+    pub eval_every: u64,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        TrainSpec {
+            dataset: DatasetKind::UspsLike,
+            scale: Scale::Small,
+            data_seed: 0,
+            algo: Algo::MpBcfw,
+            seed: 0,
+            lambda: None,
+            max_iters: 30,
+            max_oracle_calls: 0,
+            max_time: 0.0,
+            target_gap: 0.0,
+            oracle_delay: 0.0,
+            inner_repeats: 10,
+            ttl: 10,
+            cap_n: 1000,
+            max_approx_passes: 1000,
+            auto_approx: true,
+            engine: EngineKind::Native,
+            with_train_loss: false,
+            eval_every: 1,
+        }
+    }
+}
+
+/// Build the (instrumented) problem for a spec.
+pub fn build_problem(spec: &TrainSpec) -> CountingOracle {
+    let inner: Box<dyn StructuredProblem> = match spec.dataset {
+        DatasetKind::UspsLike => Box::new(MulticlassProblem::new(usps_like::generate(
+            usps_like::UspsLikeConfig::at_scale(spec.scale),
+            spec.data_seed,
+        ))),
+        DatasetKind::OcrLike => Box::new(SequenceProblem::new(ocr_like::generate(
+            ocr_like::OcrLikeConfig::at_scale(spec.scale),
+            spec.data_seed,
+        ))),
+        DatasetKind::HorsesegLike => Box::new(GraphCutProblem::new(horseseg_like::generate(
+            horseseg_like::HorseSegLikeConfig::at_scale(spec.scale),
+            spec.data_seed,
+        ))),
+    };
+    CountingOracle::with_delay(inner, spec.oracle_delay)
+}
+
+/// Run one training job end to end; returns the convergence series.
+pub fn train(spec: &TrainSpec) -> anyhow::Result<Series> {
+    Ok(train_with_model(spec)?.0)
+}
+
+/// Train and also return a persistable model checkpoint.
+pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckpoint)> {
+    let problem = build_problem(spec);
+    let mut eng = spec.engine.build()?;
+    let (series, phi) = train_on_full(spec, &problem, eng.as_mut());
+    let last = series.points.last();
+    let model = ModelCheckpoint {
+        problem: problem.name().to_string(),
+        dim: problem.dim(),
+        lambda: spec.lambda.unwrap_or(1.0 / problem.n() as f64),
+        phi,
+        primal: last.map(|p| p.primal).unwrap_or(f64::NAN),
+        dual: last.map(|p| p.dual).unwrap_or(f64::NAN),
+    };
+    Ok((series, model))
+}
+
+/// Run a spec against an already-built problem/engine (used by the bench
+/// harness to share datasets across algorithms).
+pub fn train_on(
+    spec: &TrainSpec,
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+) -> Series {
+    train_on_full(spec, problem, eng).0
+}
+
+/// As `train_on`, additionally returning the final dual plane φ (for
+/// algorithms without a dual certificate, φ is reconstructed from the
+/// final weights via φ_* = −λw so that `ModelCheckpoint::weights`
+/// round-trips).
+pub fn train_on_full(
+    spec: &TrainSpec,
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+) -> (Series, crate::model::plane::DensePlane) {
+    let lambda = spec.lambda.unwrap_or(1.0 / problem.n() as f64);
+    let phi_of_w = |w: &[f64]| {
+        let mut phi = crate::model::plane::DensePlane::zeros(w.len());
+        for (p, &x) in phi.star.iter_mut().zip(w) {
+            *p = -lambda * x;
+        }
+        phi
+    };
+    match spec.algo {
+        Algo::Fw => {
+            let cfg = fw::FwConfig {
+                lambda,
+                max_iters: spec.max_iters,
+                max_oracle_calls: spec.max_oracle_calls,
+                target_gap: spec.target_gap,
+                with_train_loss: spec.with_train_loss,
+            };
+            let (series, w) = fw::run(problem, eng, &cfg);
+            let phi = phi_of_w(&w);
+            (series, phi)
+        }
+        Algo::CuttingPlane => {
+            let cfg = cutting_plane::CuttingPlaneConfig {
+                lambda,
+                max_iters: spec.max_iters,
+                epsilon: 1e-12,
+                with_train_loss: spec.with_train_loss,
+            };
+            let (series, w) = cutting_plane::run(problem, eng, &cfg);
+            let phi = phi_of_w(&w);
+            (series, phi)
+        }
+        Algo::Ssg | Algo::SsgAvg => {
+            let cfg = ssg::SsgConfig {
+                lambda,
+                max_iters: spec.max_iters,
+                averaging: spec.algo == Algo::SsgAvg,
+                seed: spec.seed,
+                with_train_loss: spec.with_train_loss,
+            };
+            let (series, w) = ssg::run(problem, eng, &cfg);
+            let phi = phi_of_w(&w);
+            (series, phi)
+        }
+        Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg => {
+            let multi = matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg);
+            let cfg = MpBcfwConfig {
+                lambda,
+                cap_n: if multi { spec.cap_n } else { 0 },
+                max_approx_passes: if multi { spec.max_approx_passes } else { 0 },
+                auto_approx: multi && spec.auto_approx,
+                ttl: spec.ttl,
+                inner_repeats: if multi { spec.inner_repeats } else { 0 },
+                averaging: matches!(spec.algo, Algo::BcfwAvg | Algo::MpBcfwAvg),
+                max_iters: spec.max_iters,
+                max_oracle_calls: spec.max_oracle_calls,
+                max_time: spec.max_time,
+                target_gap: spec.target_gap,
+                seed: spec.seed,
+                eval_every: spec.eval_every,
+                renorm_every: 64,
+                with_train_loss: spec.with_train_loss,
+            };
+            let (series, run) = mp_bcfw::run(problem, eng, &cfg);
+            (series, run.state.phi)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for a in [
+            Algo::Fw,
+            Algo::Bcfw,
+            Algo::BcfwAvg,
+            Algo::MpBcfw,
+            Algo::MpBcfwAvg,
+            Algo::CuttingPlane,
+            Algo::Ssg,
+            Algo::SsgAvg,
+        ] {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("nope"), None);
+    }
+
+    #[test]
+    fn dataset_parse_aliases() {
+        assert_eq!(DatasetKind::parse("usps"), Some(DatasetKind::UspsLike));
+        assert_eq!(DatasetKind::parse("ocr_like"), Some(DatasetKind::OcrLike));
+        assert_eq!(DatasetKind::parse("horseseg-like"), Some(DatasetKind::HorsesegLike));
+    }
+
+    #[test]
+    fn train_all_algorithms_on_tiny_usps() {
+        for algo in [
+            Algo::Fw,
+            Algo::Bcfw,
+            Algo::BcfwAvg,
+            Algo::MpBcfw,
+            Algo::MpBcfwAvg,
+            Algo::CuttingPlane,
+            Algo::Ssg,
+            Algo::SsgAvg,
+        ] {
+            let spec = TrainSpec {
+                scale: Scale::Tiny,
+                algo,
+                max_iters: 3,
+                ..Default::default()
+            };
+            let series = train(&spec).unwrap();
+            assert!(!series.points.is_empty(), "{algo:?} produced no points");
+            let first = series.points.first().unwrap().primal;
+            let last = series.points.last().unwrap().primal;
+            assert!(
+                last <= first * 1.5,
+                "{algo:?}: primal exploded {first} -> {last}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_all_datasets_with_mp_bcfw() {
+        for ds in DatasetKind::all() {
+            let spec = TrainSpec {
+                dataset: ds,
+                scale: Scale::Tiny,
+                algo: Algo::MpBcfw,
+                max_iters: 4,
+                ..Default::default()
+            };
+            let series = train(&spec).unwrap();
+            let last = series.points.last().unwrap();
+            assert!(last.dual > 0.0, "{ds:?}: dual not positive");
+            assert!(last.primal >= last.dual - 1e-9, "{ds:?}: weak duality");
+        }
+    }
+
+    #[test]
+    fn lambda_defaults_to_one_over_n() {
+        let spec = TrainSpec { scale: Scale::Tiny, max_iters: 1, ..Default::default() };
+        let problem = build_problem(&spec);
+        assert_eq!(problem.n(), 60);
+    }
+}

@@ -1,0 +1,232 @@
+//! Per-example working sets W_i of cached cutting planes (§3.3/§3.4).
+//!
+//! A plane enters W_i whenever the exact oracle returns it; it is marked
+//! *active* whenever an exact or approximate oracle call returns it as the
+//! maximizer. Eviction follows the paper's two rules:
+//!
+//!  * hard cap N: when |W_i| > N, drop the plane inactive the longest,
+//!  * time-to-live T: planes not active during the last T outer
+//!    iterations are dropped (this is the rule that actually governs;
+//!    N is set large so it never binds).
+//!
+//! Entries carry stable ids so the §3.5 Gram cache can key inner products
+//! across evictions.
+
+use crate::model::plane::Plane;
+
+#[derive(Debug)]
+pub struct WsEntry {
+    pub plane: Plane,
+    /// Outer iteration at which the plane was last returned as maximizer.
+    pub last_active: u64,
+    /// Stable id for Gram-cache keys.
+    pub id: u64,
+}
+
+pub struct WorkingSet {
+    entries: Vec<WsEntry>,
+    next_id: u64,
+    /// Hard cap on |W_i| (paper's N).
+    pub cap: usize,
+    /// Cached squared norms ‖p_*‖² (diagonal of the Gram matrix).
+    norms: Vec<f64>,
+}
+
+impl WorkingSet {
+    pub fn new(cap: usize) -> WorkingSet {
+        WorkingSet { entries: Vec::new(), next_id: 0, cap, norms: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[WsEntry] {
+        &self.entries
+    }
+
+    pub fn plane(&self, idx: usize) -> &Plane {
+        &self.entries[idx].plane
+    }
+
+    pub fn norm_sq(&self, idx: usize) -> f64 {
+        self.norms[idx]
+    }
+
+    pub fn id(&self, idx: usize) -> u64 {
+        self.entries[idx].id
+    }
+
+    /// Insert a plane returned by the exact oracle (or refresh its
+    /// activity if a plane with the same tag is already cached). Applies
+    /// the cap-N eviction. Returns the index of the entry.
+    pub fn insert(&mut self, plane: Plane, now: u64) -> usize {
+        if self.cap == 0 {
+            return usize::MAX; // working sets disabled (plain BCFW)
+        }
+        if let Some(idx) = self.entries.iter().position(|e| e.plane.tag == plane.tag) {
+            self.entries[idx].last_active = now;
+            return idx;
+        }
+        let nrm = plane.star.nrm2sq();
+        self.entries.push(WsEntry { plane, last_active: now, id: self.next_id });
+        self.norms.push(nrm);
+        self.next_id += 1;
+        if self.entries.len() > self.cap {
+            // Drop the longest-inactive entry (ties: oldest id).
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| (e.last_active, e.id))
+                .map(|(i, _)| i)
+                .unwrap();
+            self.entries.remove(victim);
+            self.norms.remove(victim);
+        }
+        self.entries.iter().position(|e| e.id == self.next_id - 1).unwrap_or(usize::MAX)
+    }
+
+    /// Mark entry `idx` active at outer iteration `now`.
+    pub fn touch(&mut self, idx: usize, now: u64) {
+        self.entries[idx].last_active = now;
+    }
+
+    /// TTL eviction: drop entries inactive for the last `ttl` outer
+    /// iterations (i.e. last_active < now − ttl). Returns #evicted.
+    pub fn evict_stale(&mut self, now: u64, ttl: u64) -> usize {
+        let cutoff = now.saturating_sub(ttl);
+        let before = self.entries.len();
+        let mut keep = Vec::with_capacity(before);
+        let mut keep_norms = Vec::with_capacity(before);
+        for (e, n) in self.entries.drain(..).zip(self.norms.drain(..)) {
+            if e.last_active >= cutoff {
+                keep.push(e);
+                keep_norms.push(n);
+            }
+        }
+        self.entries = keep;
+        self.norms = keep_norms;
+        before - self.entries.len()
+    }
+
+    /// Best plane at weights w: argmax ⟨p, [w 1]⟩. Returns (idx, value).
+    pub fn best_at(&self, w: &[f64]) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (idx, e) in self.entries.iter().enumerate() {
+            let v = e.plane.value_at(w);
+            if best.map_or(true, |(_, bv)| v > bv) {
+                best = Some((idx, v));
+            }
+        }
+        best
+    }
+
+    /// Total heap use of the cached planes (diagnostics).
+    pub fn mem_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.plane.mem_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vec::VecF;
+    use crate::utils::prop::prop_check;
+
+    fn plane(tag: u64, val: f64) -> Plane {
+        Plane::new(VecF::sparse(3, vec![(0, val)]), 0.0, tag)
+    }
+
+    #[test]
+    fn insert_dedups_by_tag() {
+        let mut ws = WorkingSet::new(10);
+        ws.insert(plane(7, 1.0), 0);
+        ws.insert(plane(7, 1.0), 3);
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws.entries()[0].last_active, 3);
+    }
+
+    #[test]
+    fn cap_evicts_longest_inactive() {
+        let mut ws = WorkingSet::new(2);
+        ws.insert(plane(1, 1.0), 0);
+        ws.insert(plane(2, 2.0), 1);
+        ws.touch(0, 5); // tag 1 recently active
+        ws.insert(plane(3, 3.0), 6); // evicts tag 2 (last_active 1)
+        assert_eq!(ws.len(), 2);
+        let tags: Vec<u64> = ws.entries().iter().map(|e| e.plane.tag).collect();
+        assert!(tags.contains(&1) && tags.contains(&3), "tags={tags:?}");
+    }
+
+    #[test]
+    fn ttl_eviction() {
+        let mut ws = WorkingSet::new(100);
+        ws.insert(plane(1, 1.0), 0);
+        ws.insert(plane(2, 2.0), 5);
+        ws.insert(plane(3, 3.0), 9);
+        let evicted = ws.evict_stale(10, 3);
+        assert_eq!(evicted, 2);
+        assert_eq!(ws.entries()[0].plane.tag, 3);
+    }
+
+    #[test]
+    fn best_at_picks_max_value() {
+        let mut ws = WorkingSet::new(10);
+        ws.insert(plane(1, -1.0), 0);
+        ws.insert(plane(2, 5.0), 0);
+        ws.insert(plane(3, 2.0), 0);
+        let w = vec![1.0, 0.0, 0.0];
+        let (idx, v) = ws.best_at(&w).unwrap();
+        assert_eq!(ws.plane(idx).tag, 2);
+        assert_eq!(v, 5.0);
+    }
+
+    #[test]
+    fn cap_zero_disables() {
+        let mut ws = WorkingSet::new(0);
+        let idx = ws.insert(plane(1, 1.0), 0);
+        assert_eq!(idx, usize::MAX);
+        assert!(ws.is_empty());
+    }
+
+    #[test]
+    fn size_never_exceeds_cap_property() {
+        prop_check("|W| <= N", 100, |g| {
+            let cap = g.usize(1, 8);
+            let mut ws = WorkingSet::new(cap);
+            for t in 0..40u64 {
+                ws.insert(plane(g.rng.below(20) as u64, g.normal()), t);
+                if g.bool() {
+                    ws.evict_stale(t, g.usize(1, 5) as u64);
+                }
+                if ws.len() > cap {
+                    return Err(format!("len {} > cap {cap}", ws.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn norms_track_entries() {
+        prop_check("norm cache consistent", 50, |g| {
+            let mut ws = WorkingSet::new(4);
+            for t in 0..20u64 {
+                ws.insert(plane(g.rng.below(10) as u64, g.normal()), t);
+                ws.evict_stale(t, 3);
+                for idx in 0..ws.len() {
+                    let expect = ws.plane(idx).star.nrm2sq();
+                    if (ws.norm_sq(idx) - expect).abs() > 1e-12 {
+                        return Err("norm cache out of sync".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,246 @@
+//! Binary dataset serialization (little-endian, versioned magic header).
+//!
+//! `mpbcfw gen-data` writes datasets once; training/bench runs re-load
+//! them so all algorithms and repeats see byte-identical data.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Result, Write};
+use std::path::Path;
+
+use super::types::{
+    MulticlassData, MulticlassInstance, SegData, SegInstance, SequenceData, SequenceInstance,
+};
+use crate::model::features::{MulticlassLayout, SegmentationLayout, SequenceLayout};
+
+const MAGIC_MC: &[u8; 8] = b"MPBCMC01";
+const MAGIC_SEQ: &[u8; 8] = b"MPBCSQ01";
+const MAGIC_SEG: &[u8; 8] = b"MPBCSG01";
+
+struct W<'a>(&'a mut dyn Write);
+
+impl<'a> W<'a> {
+    fn u64(&mut self, x: u64) -> Result<()> {
+        self.0.write_all(&x.to_le_bytes())
+    }
+    fn f64s(&mut self, xs: &[f64]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.0.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn u8s(&mut self, xs: &[u8]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        self.0.write_all(xs)
+    }
+    fn u32pairs(&mut self, xs: &[(u32, u32)]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &(a, b) in xs {
+            self.0.write_all(&a.to_le_bytes())?;
+            self.0.write_all(&b.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+struct R<'a>(&'a mut dyn Read);
+
+impl<'a> R<'a> {
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.0.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        let mut b = [0u8; 8];
+        for _ in 0..n {
+            self.0.read_exact(&mut b)?;
+            out.push(f64::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+    fn u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        let mut out = vec![0u8; n];
+        self.0.read_exact(&mut out)?;
+        Ok(out)
+    }
+    fn u32pairs(&mut self) -> Result<Vec<(u32, u32)>> {
+        let n = self.u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        let mut b = [0u8; 4];
+        for _ in 0..n {
+            self.0.read_exact(&mut b)?;
+            let a = u32::from_le_bytes(b);
+            self.0.read_exact(&mut b)?;
+            out.push((a, u32::from_le_bytes(b)));
+        }
+        Ok(out)
+    }
+}
+
+fn check_magic(r: &mut dyn Read, want: &[u8; 8]) -> Result<()> {
+    let mut m = [0u8; 8];
+    r.read_exact(&mut m)?;
+    if &m != want {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad magic: expected {:?}", std::str::from_utf8(want).unwrap()),
+        ));
+    }
+    Ok(())
+}
+
+pub fn save_multiclass<P: AsRef<Path>>(path: P, data: &MulticlassData) -> Result<()> {
+    let mut f = BufWriter::new(File::create(path)?);
+    f.write_all(MAGIC_MC)?;
+    let mut w = W(&mut f);
+    w.u64(data.layout.classes as u64)?;
+    w.u64(data.layout.feat as u64)?;
+    w.u64(data.n() as u64)?;
+    for inst in &data.instances {
+        w.u64(inst.label as u64)?;
+        w.f64s(&inst.psi)?;
+    }
+    f.flush()
+}
+
+pub fn load_multiclass<P: AsRef<Path>>(path: P) -> Result<MulticlassData> {
+    let mut f = BufReader::new(File::open(path)?);
+    check_magic(&mut f, MAGIC_MC)?;
+    let mut r = R(&mut f);
+    let classes = r.u64()? as usize;
+    let feat = r.u64()? as usize;
+    let n = r.u64()? as usize;
+    let mut instances = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = r.u64()? as usize;
+        let psi = r.f64s()?;
+        instances.push(MulticlassInstance { psi, label });
+    }
+    Ok(MulticlassData { layout: MulticlassLayout { classes, feat }, instances })
+}
+
+pub fn save_sequence<P: AsRef<Path>>(path: P, data: &SequenceData) -> Result<()> {
+    let mut f = BufWriter::new(File::create(path)?);
+    f.write_all(MAGIC_SEQ)?;
+    let mut w = W(&mut f);
+    w.u64(data.layout.alphabet as u64)?;
+    w.u64(data.layout.feat as u64)?;
+    w.u64(data.n() as u64)?;
+    for inst in &data.instances {
+        w.u8s(&inst.labels)?;
+        w.f64s(&inst.feats)?;
+    }
+    f.flush()
+}
+
+pub fn load_sequence<P: AsRef<Path>>(path: P) -> Result<SequenceData> {
+    let mut f = BufReader::new(File::open(path)?);
+    check_magic(&mut f, MAGIC_SEQ)?;
+    let mut r = R(&mut f);
+    let alphabet = r.u64()? as usize;
+    let feat = r.u64()? as usize;
+    let n = r.u64()? as usize;
+    let mut instances = Vec::with_capacity(n);
+    for _ in 0..n {
+        let labels = r.u8s()?;
+        let feats = r.f64s()?;
+        instances.push(SequenceInstance { feats, labels });
+    }
+    Ok(SequenceData { layout: SequenceLayout { alphabet, feat }, instances })
+}
+
+pub fn save_seg<P: AsRef<Path>>(path: P, data: &SegData) -> Result<()> {
+    let mut f = BufWriter::new(File::create(path)?);
+    f.write_all(MAGIC_SEG)?;
+    let mut w = W(&mut f);
+    w.u64(data.layout.feat as u64)?;
+    w.u64(data.n() as u64)?;
+    for inst in &data.instances {
+        w.u8s(&inst.labels)?;
+        w.f64s(&inst.feats)?;
+        w.u32pairs(&inst.edges)?;
+    }
+    f.flush()
+}
+
+pub fn load_seg<P: AsRef<Path>>(path: P) -> Result<SegData> {
+    let mut f = BufReader::new(File::open(path)?);
+    check_magic(&mut f, MAGIC_SEG)?;
+    let mut r = R(&mut f);
+    let feat = r.u64()? as usize;
+    let n = r.u64()? as usize;
+    let mut instances = Vec::with_capacity(n);
+    for _ in 0..n {
+        let labels = r.u8s()?;
+        let feats = r.f64s()?;
+        let edges = r.u32pairs()?;
+        instances.push(SegInstance { feats, labels, edges });
+    }
+    Ok(SegData { layout: SegmentationLayout { feat }, instances })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{horseseg_like, ocr_like, usps_like};
+    use crate::data::types::Scale;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mpbcfw_io_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn multiclass_roundtrip() {
+        let data =
+            usps_like::generate(usps_like::UspsLikeConfig::at_scale(Scale::Tiny), 1);
+        let p = tmp("mc");
+        save_multiclass(&p, &data).unwrap();
+        let back = load_multiclass(&p).unwrap();
+        assert_eq!(back.n(), data.n());
+        assert_eq!(back.layout.classes, data.layout.classes);
+        assert_eq!(back.instances[3].label, data.instances[3].label);
+        assert_eq!(back.instances[3].psi, data.instances[3].psi);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn sequence_roundtrip() {
+        let data = ocr_like::generate(ocr_like::OcrLikeConfig::at_scale(Scale::Tiny), 2);
+        let p = tmp("seq");
+        save_sequence(&p, &data).unwrap();
+        let back = load_sequence(&p).unwrap();
+        assert_eq!(back.n(), data.n());
+        assert_eq!(back.instances[5].labels, data.instances[5].labels);
+        assert_eq!(back.instances[5].feats, data.instances[5].feats);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn seg_roundtrip() {
+        let data = horseseg_like::generate(
+            horseseg_like::HorseSegLikeConfig::at_scale(Scale::Tiny),
+            3,
+        );
+        let p = tmp("seg");
+        save_seg(&p, &data).unwrap();
+        let back = load_seg(&p).unwrap();
+        assert_eq!(back.n(), data.n());
+        assert_eq!(back.instances[2].labels, data.instances[2].labels);
+        assert_eq!(back.instances[2].edges, data.instances[2].edges);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let data =
+            usps_like::generate(usps_like::UspsLikeConfig::at_scale(Scale::Tiny), 1);
+        let p = tmp("magic");
+        save_multiclass(&p, &data).unwrap();
+        assert!(load_sequence(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

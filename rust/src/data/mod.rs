@@ -1,0 +1,5 @@
+//! Synthetic datasets standing in for USPS / OCR / HorseSeg (see
+//! DESIGN.md §2 for the substitution rationale) plus binary dataset I/O.
+pub mod types;
+pub mod synth;
+pub mod io;

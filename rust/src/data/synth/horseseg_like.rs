@@ -1,0 +1,198 @@
+//! HorseSeg-like binary segmentation dataset (paper appendix A.3).
+//!
+//! Stands in for the HorseSeg superpixel subset: n = 2376 images, an
+//! average of 265 superpixels per image, 649-dim superpixel features,
+//! binary labels (at `Scale::Paper`). Each synthetic "image" is a
+//! jittered grid of superpixels with 4-neighbour adjacency; the ground
+//! truth is a random ellipse blob (a smooth foreground object like a
+//! horse), and features carry a noisy label signal plus a per-image bias
+//! so that unary evidence alone is imperfect and the Potts smoothing
+//! matters — the regime that makes the graph-cut oracle non-trivial.
+
+use crate::data::types::{Scale, SegData, SegInstance};
+use crate::model::features::SegmentationLayout;
+use crate::utils::rng::Pcg;
+
+#[derive(Clone, Copy, Debug)]
+pub struct HorseSegLikeConfig {
+    pub n: usize,
+    pub feat: usize,
+    /// Grid rows/cols bounds; superpixel count ≈ rows × cols.
+    pub min_side: usize,
+    pub max_side: usize,
+    /// Feature signal strength (noise-σ units).
+    pub sep: f64,
+}
+
+impl HorseSegLikeConfig {
+    pub fn at_scale(scale: Scale) -> HorseSegLikeConfig {
+        match scale {
+            Scale::Tiny => {
+                HorseSegLikeConfig { n: 12, feat: 12, min_side: 4, max_side: 6, sep: 1.2 }
+            }
+            Scale::Small => {
+                HorseSegLikeConfig { n: 120, feat: 64, min_side: 8, max_side: 12, sep: 1.0 }
+            }
+            // 15..=17 per side → mean ≈ 16.3² ≈ 265 superpixels, as in the paper.
+            Scale::Paper => {
+                HorseSegLikeConfig { n: 2376, feat: 649, min_side: 15, max_side: 17, sep: 0.9 }
+            }
+        }
+    }
+}
+
+pub fn generate(cfg: HorseSegLikeConfig, seed: u64) -> SegData {
+    let mut rng = Pcg::new(seed, 303);
+    // Global foreground/background prototypes shared across the dataset
+    // (the learner must find them), plus per-image appearance shifts.
+    let proto_fg: Vec<f64> = (0..cfg.feat).map(|_| rng.normal()).collect();
+    let proto_bg: Vec<f64> = (0..cfg.feat).map(|_| rng.normal()).collect();
+    let norm = |p: &[f64]| -> f64 { p.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12) };
+    let (nf, nb) = (norm(&proto_fg), norm(&proto_bg));
+    let noise = 1.0 / (cfg.feat as f64).sqrt();
+
+    let instances: Vec<SegInstance> = (0..cfg.n)
+        .map(|_| {
+            let rows = cfg.min_side + rng.below(cfg.max_side - cfg.min_side + 1);
+            let cols = cfg.min_side + rng.below(cfg.max_side - cfg.min_side + 1);
+            let count = rows * cols;
+            // Random ellipse blob in the unit square.
+            let (cx, cy) = (rng.range_f64(0.25, 0.75), rng.range_f64(0.25, 0.75));
+            let (rx, ry) = (rng.range_f64(0.15, 0.35), rng.range_f64(0.15, 0.35));
+            let angle = rng.range_f64(0.0, std::f64::consts::PI);
+            let (ca, sa) = (angle.cos(), angle.sin());
+            // Per-image appearance shift (illumination, horse colour...).
+            let shift: Vec<f64> = (0..cfg.feat).map(|_| 0.3 * noise * rng.normal()).collect();
+
+            let mut labels = Vec::with_capacity(count);
+            let mut feats = Vec::with_capacity(count * cfg.feat);
+            for r in 0..rows {
+                for c in 0..cols {
+                    // Jittered superpixel center.
+                    let x = (c as f64 + 0.5 + 0.2 * rng.normal()) / cols as f64;
+                    let y = (r as f64 + 0.5 + 0.2 * rng.normal()) / rows as f64;
+                    let (dx, dy) = (x - cx, y - cy);
+                    let (u, v) = (ca * dx + sa * dy, -sa * dx + ca * dy);
+                    let inside = (u / rx).powi(2) + (v / ry).powi(2) <= 1.0;
+                    let label = inside as u8;
+                    labels.push(label);
+                    let proto: Vec<f64> = if inside {
+                        proto_fg.iter().map(|&p| p * cfg.sep / nf).collect()
+                    } else {
+                        proto_bg.iter().map(|&p| p * cfg.sep / nb).collect()
+                    };
+                    feats.extend(
+                        proto
+                            .iter()
+                            .zip(shift.iter())
+                            .map(|(&p, &s)| p + s + noise * rng.normal()),
+                    );
+                }
+            }
+            // 4-neighbour grid adjacency.
+            let mut edges = Vec::with_capacity(2 * count);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let id = (r * cols + c) as u32;
+                    if c + 1 < cols {
+                        edges.push((id, id + 1));
+                    }
+                    if r + 1 < rows {
+                        edges.push((id, id + cols as u32));
+                    }
+                }
+            }
+            SegInstance { feats, labels, edges }
+        })
+        .collect();
+    SegData { layout: SegmentationLayout { feat: cfg.feat }, instances }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let cfg = HorseSegLikeConfig::at_scale(Scale::Tiny);
+        let a = generate(cfg, 2);
+        let b = generate(cfg, 2);
+        assert_eq!(a.n(), 12);
+        assert_eq!(a.instances[5].labels, b.instances[5].labels);
+        assert_eq!(a.instances[5].feats, b.instances[5].feats);
+        for inst in &a.instances {
+            let l = inst.num_superpixels();
+            assert!((16..=36).contains(&l));
+            assert_eq!(inst.feats.len(), l * cfg.feat);
+        }
+    }
+
+    #[test]
+    fn edges_are_valid_and_connected_grid() {
+        let data = generate(HorseSegLikeConfig::at_scale(Scale::Tiny), 7);
+        for inst in &data.instances {
+            let n = inst.num_superpixels();
+            // Union-find connectivity check.
+            let mut parent: Vec<usize> = (0..n).collect();
+            fn find(p: &mut Vec<usize>, mut x: usize) -> usize {
+                while p[x] != x {
+                    p[x] = p[p[x]];
+                    x = p[x];
+                }
+                x
+            }
+            for &(a, b) in &inst.edges {
+                assert!((a as usize) < n && (b as usize) < n && a != b);
+                let (ra, rb) = (find(&mut parent, a as usize), find(&mut parent, b as usize));
+                parent[ra] = rb;
+            }
+            let root = find(&mut parent, 0);
+            for i in 1..n {
+                assert_eq!(find(&mut parent, i), root, "grid must be connected");
+            }
+        }
+    }
+
+    #[test]
+    fn both_labels_occur_overall() {
+        let data = generate(HorseSegLikeConfig::at_scale(Scale::Tiny), 11);
+        let (mut fg, mut bg) = (0usize, 0usize);
+        for inst in &data.instances {
+            for &l in &inst.labels {
+                if l == 1 {
+                    fg += 1
+                } else {
+                    bg += 1
+                }
+            }
+        }
+        assert!(fg > 0 && bg > 0);
+        // Blobs cover a minority of the image on average.
+        assert!(bg > fg, "bg={bg} fg={fg}");
+    }
+
+    #[test]
+    fn ground_truth_is_smooth() {
+        // The blob boundary should cut far fewer edges than a random
+        // labeling would (that's what makes Potts smoothing informative).
+        let data = generate(HorseSegLikeConfig::at_scale(Scale::Small), 3);
+        let mut rng = crate::utils::rng::Pcg::seeded(0);
+        for inst in data.instances.iter().take(10) {
+            let gt_cut = inst.potts(&inst.labels);
+            let rand_labels: Vec<u8> =
+                (0..inst.num_superpixels()).map(|_| rng.below(2) as u8).collect();
+            let rand_cut = inst.potts(&rand_labels);
+            assert!(gt_cut < rand_cut, "gt {gt_cut} vs random {rand_cut}");
+        }
+    }
+
+    #[test]
+    fn paper_scale_superpixel_stats() {
+        let mut cfg = HorseSegLikeConfig::at_scale(Scale::Paper);
+        cfg.n = 50;
+        cfg.feat = 4;
+        let data = generate(cfg, 1);
+        let mean = data.mean_superpixels();
+        assert!((225.0..300.0).contains(&mean), "mean superpixels {mean}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Dataset generators. Each mirrors the corresponding paper dataset's
+//! shape statistics (n, feature dim, label-space size, sequence length /
+//! superpixel count distributions).
+pub mod usps_like;
+pub mod ocr_like;
+pub mod horseseg_like;
+pub mod rings;

@@ -1,0 +1,80 @@
+//! Concentric-rings dataset: a 2-class, 2-D task that is *not* linearly
+//! separable. Used by the kernelized-SSVM extension (`kernel_bcfw`) to
+//! demonstrate what the §3.5 kernel caching buys.
+
+use crate::data::types::{MulticlassData, MulticlassInstance};
+use crate::model::features::MulticlassLayout;
+use crate::utils::rng::Pcg;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RingsConfig {
+    pub n: usize,
+    /// Inner-class radius bound; outer class lives in [gap·r, (gap+1)·r].
+    pub radius: f64,
+    pub gap: f64,
+    pub noise: f64,
+}
+
+impl Default for RingsConfig {
+    fn default() -> Self {
+        RingsConfig { n: 120, radius: 1.0, gap: 1.6, noise: 0.05 }
+    }
+}
+
+pub fn generate(cfg: RingsConfig, seed: u64) -> MulticlassData {
+    let mut rng = Pcg::new(seed, 404);
+    let instances: Vec<MulticlassInstance> = (0..cfg.n)
+        .map(|_| {
+            let label = rng.below(2);
+            let r = if label == 0 {
+                cfg.radius * rng.f64().sqrt() // uniform over the disk
+            } else {
+                cfg.radius * (cfg.gap + rng.f64() * 0.5)
+            };
+            let theta = rng.range_f64(0.0, std::f64::consts::TAU);
+            let psi = vec![
+                r * theta.cos() + cfg.noise * rng.normal(),
+                r * theta.sin() + cfg.noise * rng.normal(),
+            ];
+            MulticlassInstance { psi, label }
+        })
+        .collect();
+    MulticlassData { layout: MulticlassLayout { classes: 2, feat: 2 }, instances }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_separated_by_radius_not_by_halfplane() {
+        let data = generate(RingsConfig::default(), 0);
+        let mut inner_max: f64 = 0.0;
+        let mut outer_min = f64::INFINITY;
+        for inst in &data.instances {
+            let r = (inst.psi[0].powi(2) + inst.psi[1].powi(2)).sqrt();
+            if inst.label == 0 {
+                inner_max = inner_max.max(r);
+            } else {
+                outer_min = outer_min.min(r);
+            }
+        }
+        assert!(inner_max < outer_min, "rings overlap: {inner_max} vs {outer_min}");
+        // Not linearly separable: both classes appear in every halfplane
+        // through the origin (check x > 0 side).
+        let mut counts = [0usize; 2];
+        for inst in &data.instances {
+            if inst.psi[0] > 0.0 {
+                counts[inst.label] += 1;
+            }
+        }
+        assert!(counts[0] > 0 && counts[1] > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(RingsConfig::default(), 5);
+        let b = generate(RingsConfig::default(), 5);
+        assert_eq!(a.instances[3].psi, b.instances[3].psi);
+    }
+}

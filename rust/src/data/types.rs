@@ -1,0 +1,153 @@
+//! In-memory dataset types for the three scenarios.
+
+use crate::model::features::{MulticlassLayout, SegmentationLayout, SequenceLayout};
+
+/// One multiclass example: a feature vector and its class.
+#[derive(Clone, Debug)]
+pub struct MulticlassInstance {
+    pub psi: Vec<f64>,
+    pub label: usize,
+}
+
+/// Multiclass dataset (USPS-like).
+#[derive(Clone, Debug)]
+pub struct MulticlassData {
+    pub layout: MulticlassLayout,
+    pub instances: Vec<MulticlassInstance>,
+}
+
+impl MulticlassData {
+    pub fn n(&self) -> usize {
+        self.instances.len()
+    }
+}
+
+/// One labeled sequence: per-position features (row-major [len × feat])
+/// and per-position labels.
+#[derive(Clone, Debug)]
+pub struct SequenceInstance {
+    pub feats: Vec<f64>,
+    pub labels: Vec<u8>,
+}
+
+impl SequenceInstance {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+    pub fn psi(&self, l: usize, feat: usize) -> &[f64] {
+        &self.feats[l * feat..(l + 1) * feat]
+    }
+}
+
+/// Sequence-labeling dataset (OCR-like).
+#[derive(Clone, Debug)]
+pub struct SequenceData {
+    pub layout: SequenceLayout,
+    pub instances: Vec<SequenceInstance>,
+}
+
+impl SequenceData {
+    pub fn n(&self) -> usize {
+        self.instances.len()
+    }
+    pub fn mean_len(&self) -> f64 {
+        self.instances.iter().map(|s| s.len()).sum::<usize>() as f64 / self.n().max(1) as f64
+    }
+}
+
+/// One segmentation instance: superpixel features (row-major [count ×
+/// feat]), binary ground-truth labels, and the adjacency edge list.
+#[derive(Clone, Debug)]
+pub struct SegInstance {
+    pub feats: Vec<f64>,
+    pub labels: Vec<u8>,
+    pub edges: Vec<(u32, u32)>,
+}
+
+impl SegInstance {
+    pub fn num_superpixels(&self) -> usize {
+        self.labels.len()
+    }
+    pub fn psi(&self, l: usize, feat: usize) -> &[f64] {
+        &self.feats[l * feat..(l + 1) * feat]
+    }
+    /// Potts smoothness penalty Θ(y) = Σ_{k~l} [y_k ≠ y_l].
+    pub fn potts(&self, labels: &[u8]) -> f64 {
+        self.edges
+            .iter()
+            .filter(|(a, b)| labels[*a as usize] != labels[*b as usize])
+            .count() as f64
+    }
+}
+
+/// Segmentation dataset (HorseSeg-like).
+#[derive(Clone, Debug)]
+pub struct SegData {
+    pub layout: SegmentationLayout,
+    pub instances: Vec<SegInstance>,
+}
+
+impl SegData {
+    pub fn n(&self) -> usize {
+        self.instances.len()
+    }
+    pub fn mean_superpixels(&self) -> f64 {
+        self.instances.iter().map(|s| s.num_superpixels()).sum::<usize>() as f64
+            / self.n().max(1) as f64
+    }
+}
+
+/// Scale presets for the generators: `Tiny` for unit tests, `Small` for
+/// the default bench runs, `Paper` reproducing the paper's exact sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "tiny" => Some(Scale::Tiny),
+            "small" => Some(Scale::Small),
+            "paper" | "full" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+            Scale::Paper => "paper",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn potts_counts_disagreements() {
+        let inst = SegInstance {
+            feats: vec![0.0; 4],
+            labels: vec![0, 1, 1, 0],
+            edges: vec![(0, 1), (1, 2), (2, 3)],
+        };
+        assert_eq!(inst.potts(&[0, 1, 1, 0]), 2.0);
+        assert_eq!(inst.potts(&[0, 0, 0, 0]), 0.0);
+        assert_eq!(inst.potts(&[1, 0, 1, 0]), 3.0);
+    }
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("tiny"), Some(Scale::Tiny));
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("full"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("x"), None);
+    }
+}

@@ -1,0 +1,28 @@
+//! # mpbcfw — Multi-Plane Block-Coordinate Frank-Wolfe for Structural SVMs
+//!
+//! A Rust + JAX + Pallas reproduction of Shah, Kolmogorov & Lampert,
+//! *"A Multi-Plane Block-Coordinate Frank-Wolfe Algorithm for Training
+//! Structural SVMs with a Costly max-Oracle"* (2014).
+//!
+//! Layer 3 (this crate) implements the training coordinator — FW / BCFW /
+//! MP-BCFW optimizers with working sets, automatic parameter selection,
+//! inner-product caching and iterate averaging — plus every substrate the
+//! paper depends on: three max-oracles (multiclass, Viterbi, graph-cut on
+//! our own Boykov–Kolmogorov max-flow), synthetic counterparts of the
+//! paper's three datasets, and a figure-regeneration bench harness.
+//!
+//! Layers 2/1 (build-time Python under `python/`) AOT-lower the dense
+//! scoring hot spots (JAX + Pallas kernels) to HLO text; `runtime` loads
+//! and executes those artifacts through PJRT so the request path never
+//! touches Python.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+pub mod utils;
+pub mod model;
+pub mod maxflow;
+pub mod data;
+pub mod oracle;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod cli;

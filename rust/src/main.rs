@@ -1,0 +1,5 @@
+//! `mpbcfw` launcher — see `mpbcfw --help` (cli::commands::USAGE).
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(mpbcfw::cli::commands::dispatch(argv));
+}

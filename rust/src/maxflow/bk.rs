@@ -1,0 +1,542 @@
+//! Boykov–Kolmogorov max-flow / min-cut.
+//!
+//! This is the substrate behind the HorseSeg-style graph-cut max-oracle
+//! (paper appendix A.3 cites Boykov & Kolmogorov, PAMI 2004). The
+//! implementation follows the original algorithm: two search trees S and T
+//! grown from the terminals, augmentation along found s→t paths, and an
+//! adoption phase for orphaned subtrees, with the timestamp/distance
+//! heuristics from the paper.
+//!
+//! Terminal capacities are folded into a per-node residual `tcap`
+//! (positive = residual source→node capacity, negative = node→sink), the
+//! standard trick for energy minimization where a node never needs both.
+
+/// Index type for nodes.
+pub type NodeId = u32;
+
+const NONE: u32 = u32::MAX;
+/// Parent sentinel: node is attached directly to a terminal.
+const TERMINAL: u32 = u32::MAX - 1;
+/// Parent sentinel: orphan.
+const ORPHAN: u32 = u32::MAX - 2;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Tree {
+    Free,
+    S,
+    T,
+}
+
+struct Node {
+    first_arc: u32,
+    parent_arc: u32, // NONE / TERMINAL / ORPHAN or arc id into `arcs`
+    tree: Tree,
+    /// Residual capacity to terminal: >0 source→node, <0 node→sink.
+    tcap: f64,
+    ts: u32,
+    dist: u32,
+    next_active: u32, // intrusive queue link (NONE = not queued... see `active_tail` handling)
+    in_active: bool,
+}
+
+struct Arc {
+    head: u32,
+    next: u32, // next arc out of the same tail
+    rcap: f64,
+}
+
+/// s-t graph on which `maxflow` computes the min cut.
+pub struct BkGraph {
+    nodes: Vec<Node>,
+    arcs: Vec<Arc>, // arc 2k and 2k+1 are mutual reverses
+    flow: f64,
+    // active list (FIFO)
+    active_head: u32,
+    active_tail: u32,
+    orphans: Vec<u32>,
+    time: u32,
+}
+
+impl BkGraph {
+    /// Create a graph with `n` non-terminal nodes.
+    pub fn new(n: usize, expected_edges: usize) -> BkGraph {
+        BkGraph {
+            nodes: (0..n)
+                .map(|_| Node {
+                    first_arc: NONE,
+                    parent_arc: NONE,
+                    tree: Tree::Free,
+                    tcap: 0.0,
+                    ts: 0,
+                    dist: 0,
+                    next_active: NONE,
+                    in_active: false,
+                })
+                .collect(),
+            arcs: Vec::with_capacity(2 * expected_edges),
+            flow: 0.0,
+            active_head: NONE,
+            active_tail: NONE,
+            orphans: Vec::new(),
+            time: 0,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Add terminal capacities: source→i with `cap_source`, i→sink with
+    /// `cap_sink`. Common flow is cancelled and added to the flow value.
+    pub fn add_tweights(&mut self, i: NodeId, cap_source: f64, cap_sink: f64) {
+        debug_assert!(cap_source >= 0.0 && cap_sink >= 0.0);
+        let delta = cap_source.min(cap_sink);
+        self.flow += delta;
+        self.nodes[i as usize].tcap += cap_source - cap_sink;
+    }
+
+    /// Add an edge i→j with capacity `cap` and j→i with `rev_cap`.
+    pub fn add_edge(&mut self, i: NodeId, j: NodeId, cap: f64, rev_cap: f64) {
+        debug_assert!(i != j);
+        debug_assert!(cap >= 0.0 && rev_cap >= 0.0);
+        let a = self.arcs.len() as u32;
+        self.arcs.push(Arc { head: j, next: self.nodes[i as usize].first_arc, rcap: cap });
+        self.nodes[i as usize].first_arc = a;
+        self.arcs.push(Arc { head: i, next: self.nodes[j as usize].first_arc, rcap: rev_cap });
+        self.nodes[j as usize].first_arc = a + 1;
+    }
+
+    #[inline]
+    fn sister(a: u32) -> u32 {
+        a ^ 1
+    }
+
+    fn push_active(&mut self, i: u32) {
+        if self.nodes[i as usize].in_active {
+            return;
+        }
+        self.nodes[i as usize].in_active = true;
+        self.nodes[i as usize].next_active = NONE;
+        if self.active_tail == NONE {
+            self.active_head = i;
+        } else {
+            self.nodes[self.active_tail as usize].next_active = i;
+        }
+        self.active_tail = i;
+    }
+
+    fn pop_active(&mut self) -> Option<u32> {
+        loop {
+            let h = self.active_head;
+            if h == NONE {
+                return None;
+            }
+            self.active_head = self.nodes[h as usize].next_active;
+            if self.active_head == NONE {
+                self.active_tail = NONE;
+            }
+            self.nodes[h as usize].in_active = false;
+            // A node may have been deactivated (became free); skip those.
+            if self.nodes[h as usize].tree != Tree::Free {
+                return Some(h);
+            }
+        }
+    }
+
+    /// Run max-flow. Returns the flow value (= min-cut value given the
+    /// capacities added so far, plus any constant folded by add_tweights).
+    pub fn maxflow(&mut self) -> f64 {
+        self.init();
+        while let Some(i) = self.pop_active() {
+            // Re-queue policy: BK keeps processing node i until its grown
+            // edges are exhausted; we re-push after each augmentation.
+            if self.nodes[i as usize].parent_arc == NONE && self.nodes[i as usize].tree != Tree::Free
+            {
+                // Detached in the meantime.
+                continue;
+            }
+            if let Some(bridge) = self.grow(i) {
+                // Found an augmenting path through `bridge` (an arc from an
+                // S-node to a T-node). Node i may still have unexplored
+                // growth; keep it active.
+                self.push_active(i);
+                self.time += 1;
+                self.augment(bridge);
+                self.adopt();
+            }
+        }
+        self.flow
+    }
+
+    /// After maxflow: does node i belong to the source side of the cut?
+    pub fn is_source_side(&self, i: NodeId) -> bool {
+        // Free nodes can go either way; assign them to the sink side
+        // (standard convention: what_segment default SINK for free nodes
+        // in BK's implementation is SOURCE? BK defaults to SINK when tree
+        // is Free and default_segm==SINK; we fix sink).
+        self.nodes[i as usize].tree == Tree::S
+    }
+
+    fn init(&mut self) {
+        self.active_head = NONE;
+        self.active_tail = NONE;
+        self.orphans.clear();
+        self.time = 0;
+        for i in 0..self.nodes.len() as u32 {
+            let n = &mut self.nodes[i as usize];
+            n.next_active = NONE;
+            n.in_active = false;
+            n.ts = 0;
+            if n.tcap > 0.0 {
+                n.tree = Tree::S;
+                n.parent_arc = TERMINAL;
+                n.dist = 1;
+                self.push_active(i);
+            } else if n.tcap < 0.0 {
+                n.tree = Tree::T;
+                n.parent_arc = TERMINAL;
+                n.dist = 1;
+                self.push_active(i);
+            } else {
+                n.tree = Tree::Free;
+                n.parent_arc = NONE;
+            }
+        }
+    }
+
+    /// Grow the tree of node i; return a bridging arc (tail in S, head in
+    /// T, in the direction S→T) if the trees touch.
+    fn grow(&mut self, i: u32) -> Option<u32> {
+        let tree_i = self.nodes[i as usize].tree;
+        let mut a = self.nodes[i as usize].first_arc;
+        while a != NONE {
+            let (rcap, head) = {
+                let arc = &self.arcs[a as usize];
+                (arc.rcap, arc.head)
+            };
+            // For the S tree we need residual on the arc itself; for the T
+            // tree on the sister (flow toward the sink).
+            let usable = match tree_i {
+                Tree::S => rcap > 0.0,
+                Tree::T => self.arcs[Self::sister(a) as usize].rcap > 0.0,
+                Tree::Free => false,
+            };
+            if usable {
+                let h = head as usize;
+                match self.nodes[h].tree {
+                    Tree::Free => {
+                        self.nodes[h].tree = tree_i;
+                        self.nodes[h].parent_arc = Self::sister(a);
+                        self.nodes[h].ts = self.nodes[i as usize].ts;
+                        self.nodes[h].dist = self.nodes[i as usize].dist + 1;
+                        self.push_active(head);
+                    }
+                    t if t == tree_i => {
+                        // Heuristic: re-parent to a shorter path.
+                        if self.nodes[h].ts <= self.nodes[i as usize].ts
+                            && self.nodes[h].dist > self.nodes[i as usize].dist + 1
+                        {
+                            self.nodes[h].parent_arc = Self::sister(a);
+                            self.nodes[h].ts = self.nodes[i as usize].ts;
+                            self.nodes[h].dist = self.nodes[i as usize].dist + 1;
+                        }
+                    }
+                    _ => {
+                        // Trees meet: bridge found.
+                        return Some(if tree_i == Tree::S { a } else { Self::sister(a) });
+                    }
+                }
+            }
+            a = self.arcs[a as usize].next;
+        }
+        None
+    }
+
+    /// Walk from the bridge endpoints to the terminals, find the
+    /// bottleneck, push flow, and record orphans.
+    fn augment(&mut self, bridge: u32) {
+        // Bottleneck.
+        let mut bottleneck = self.arcs[bridge as usize].rcap;
+        // S side.
+        let mut i = self.arcs[Self::sister(bridge) as usize].head;
+        loop {
+            let p = self.nodes[i as usize].parent_arc;
+            if p == TERMINAL {
+                bottleneck = bottleneck.min(self.nodes[i as usize].tcap);
+                break;
+            }
+            let a = Self::sister(p);
+            bottleneck = bottleneck.min(self.arcs[a as usize].rcap);
+            i = self.arcs[p as usize].head;
+        }
+        // T side.
+        let mut j = self.arcs[bridge as usize].head;
+        loop {
+            let p = self.nodes[j as usize].parent_arc;
+            if p == TERMINAL {
+                bottleneck = bottleneck.min(-self.nodes[j as usize].tcap);
+                break;
+            }
+            bottleneck = bottleneck.min(self.arcs[p as usize].rcap);
+            j = self.arcs[p as usize].head;
+        }
+
+        // Push.
+        self.arcs[bridge as usize].rcap -= bottleneck;
+        self.arcs[Self::sister(bridge) as usize].rcap += bottleneck;
+
+        let mut i = self.arcs[Self::sister(bridge) as usize].head;
+        loop {
+            let p = self.nodes[i as usize].parent_arc;
+            if p == TERMINAL {
+                self.nodes[i as usize].tcap -= bottleneck;
+                if self.nodes[i as usize].tcap <= 0.0 {
+                    self.nodes[i as usize].parent_arc = ORPHAN;
+                    self.orphans.push(i);
+                }
+                break;
+            }
+            let a = Self::sister(p);
+            self.arcs[a as usize].rcap -= bottleneck;
+            self.arcs[p as usize].rcap += bottleneck;
+            if self.arcs[a as usize].rcap <= 0.0 {
+                self.nodes[i as usize].parent_arc = ORPHAN;
+                self.orphans.push(i);
+            }
+            i = self.arcs[p as usize].head;
+        }
+        let mut j = self.arcs[bridge as usize].head;
+        loop {
+            let p = self.nodes[j as usize].parent_arc;
+            if p == TERMINAL {
+                self.nodes[j as usize].tcap += bottleneck;
+                if self.nodes[j as usize].tcap >= 0.0 {
+                    self.nodes[j as usize].parent_arc = ORPHAN;
+                    self.orphans.push(j);
+                }
+                break;
+            }
+            self.arcs[p as usize].rcap -= bottleneck;
+            self.arcs[Self::sister(p) as usize].rcap += bottleneck;
+            if self.arcs[p as usize].rcap <= 0.0 {
+                self.nodes[j as usize].parent_arc = ORPHAN;
+                self.orphans.push(j);
+            }
+            j = self.arcs[p as usize].head;
+        }
+
+        self.flow += bottleneck;
+    }
+
+    /// Adoption phase: find new parents for orphans or free them.
+    fn adopt(&mut self) {
+        while let Some(i) = self.orphans.pop() {
+            self.process_orphan(i);
+        }
+    }
+
+    /// Is `arc_to_parent` a valid parent link for a node in `tree`?
+    /// The link must have residual capacity in the right direction and the
+    /// parent must ultimately connect to its terminal.
+    fn try_parent(&self, i: u32, tree: Tree) -> Option<(u32, u32)> {
+        // Returns (parent_arc, dist).
+        let mut best: Option<(u32, u32)> = None;
+        let mut a = self.nodes[i as usize].first_arc;
+        while a != NONE {
+            let head = self.arcs[a as usize].head;
+            let cap_ok = match tree {
+                Tree::S => self.arcs[Self::sister(a) as usize].rcap > 0.0,
+                Tree::T => self.arcs[a as usize].rcap > 0.0,
+                Tree::Free => false,
+            };
+            if cap_ok && self.nodes[head as usize].tree == tree {
+                // Check origin: walk to terminal.
+                if let Some(d) = self.origin_dist(head) {
+                    let cand = (a, d + 1);
+                    if best.map_or(true, |(_, bd)| cand.1 < bd) {
+                        best = Some(cand);
+                    }
+                }
+            }
+            a = self.arcs[a as usize].next;
+        }
+        best
+    }
+
+    /// Distance to terminal if `i`'s parent chain reaches one (with the
+    /// timestamp marking trick to amortize).
+    fn origin_dist(&self, start: u32) -> Option<u32> {
+        let mut i = start;
+        let mut d = 0u32;
+        loop {
+            if self.nodes[i as usize].ts == self.time {
+                return Some(self.nodes[i as usize].dist + d);
+            }
+            match self.nodes[i as usize].parent_arc {
+                TERMINAL => return Some(d + 1),
+                NONE | ORPHAN => return None,
+                p => {
+                    d += 1;
+                    i = self.arcs[p as usize].head;
+                }
+            }
+        }
+    }
+
+    /// Mark the chain from `start` with the current timestamp and final
+    /// distances (after a successful origin check).
+    fn mark_chain(&mut self, start: u32, total: u32) {
+        let mut i = start;
+        let mut d = total;
+        loop {
+            if self.nodes[i as usize].ts == self.time {
+                break;
+            }
+            self.nodes[i as usize].ts = self.time;
+            self.nodes[i as usize].dist = d;
+            match self.nodes[i as usize].parent_arc {
+                TERMINAL | NONE | ORPHAN => break,
+                p => {
+                    if d == 0 {
+                        break;
+                    }
+                    d -= 1;
+                    i = self.arcs[p as usize].head;
+                }
+            }
+        }
+    }
+
+    fn process_orphan(&mut self, i: u32) {
+        let tree = self.nodes[i as usize].tree;
+        if tree == Tree::Free {
+            return;
+        }
+        if let Some((parent_arc, dist)) = self.try_parent(i, tree) {
+            self.nodes[i as usize].parent_arc = parent_arc;
+            self.nodes[i as usize].ts = self.time;
+            self.nodes[i as usize].dist = dist;
+            let head = self.arcs[parent_arc as usize].head;
+            self.mark_chain(head, dist.saturating_sub(1));
+        } else {
+            // No parent: node becomes free; children become orphans and
+            // potential-parent neighbours become active.
+            let mut a = self.nodes[i as usize].first_arc;
+            while a != NONE {
+                let head = self.arcs[a as usize].head;
+                let (hn_tree, hn_parent) = {
+                    let hn = &self.nodes[head as usize];
+                    (hn.tree, hn.parent_arc)
+                };
+                if hn_tree == tree {
+                    let cap_ok = match tree {
+                        Tree::S => self.arcs[Self::sister(a) as usize].rcap > 0.0,
+                        Tree::T => self.arcs[a as usize].rcap > 0.0,
+                        Tree::Free => false,
+                    };
+                    if cap_ok {
+                        self.push_active(head);
+                    }
+                    if hn_parent != TERMINAL
+                        && hn_parent != NONE
+                        && hn_parent != ORPHAN
+                        && self.arcs[hn_parent as usize].head == i
+                    {
+                        self.nodes[head as usize].parent_arc = ORPHAN;
+                        self.orphans.push(head);
+                    }
+                }
+                a = self.arcs[a as usize].next;
+            }
+            self.nodes[i as usize].tree = Tree::Free;
+            self.nodes[i as usize].parent_arc = NONE;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxflow::reference::ref_maxflow;
+    use crate::utils::prop::prop_check;
+
+    #[test]
+    fn single_node_through_flow() {
+        let mut g = BkGraph::new(1, 0);
+        g.add_tweights(0, 5.0, 3.0);
+        assert_eq!(g.maxflow(), 3.0);
+        assert!(g.is_source_side(0));
+    }
+
+    #[test]
+    fn two_node_chain() {
+        // s -4-> 0 -2-> 1 -3-> t : flow 2
+        let mut g = BkGraph::new(2, 1);
+        g.add_tweights(0, 4.0, 0.0);
+        g.add_tweights(1, 0.0, 3.0);
+        g.add_edge(0, 1, 2.0, 0.0);
+        assert_eq!(g.maxflow(), 2.0);
+        assert!(g.is_source_side(0));
+        assert!(!g.is_source_side(1));
+    }
+
+    #[test]
+    fn bottleneck_at_source() {
+        let mut g = BkGraph::new(2, 1);
+        g.add_tweights(0, 1.0, 0.0);
+        g.add_tweights(1, 0.0, 10.0);
+        g.add_edge(0, 1, 5.0, 0.0);
+        assert_eq!(g.maxflow(), 1.0);
+        assert!(!g.is_source_side(0), "saturated source node falls to sink side");
+    }
+
+    #[test]
+    fn diamond_graph() {
+        //    s→0 (3), s→1 (2); 0→2 (2), 1→2 (2); 2→t (10) → flow 4
+        let mut g = BkGraph::new(3, 2);
+        g.add_tweights(0, 3.0, 0.0);
+        g.add_tweights(1, 2.0, 0.0);
+        g.add_tweights(2, 0.0, 10.0);
+        g.add_edge(0, 2, 2.0, 0.0);
+        g.add_edge(1, 2, 2.0, 0.0);
+        assert_eq!(g.maxflow(), 4.0);
+    }
+
+    #[test]
+    fn matches_reference_on_random_graphs() {
+        prop_check("bk == edmonds-karp", 120, |g| {
+            let n = g.usize(2, 14);
+            let m = g.usize(0, 3 * n);
+            let mut bk = BkGraph::new(n, m);
+            let mut rf = ref_maxflow::RefGraph::new(n);
+            for i in 0..n {
+                let cs = g.f64(0.0, 4.0);
+                let ct = g.f64(0.0, 4.0);
+                bk.add_tweights(i as u32, cs, ct);
+                rf.add_tweights(i, cs, ct);
+            }
+            for _ in 0..m {
+                let a = g.rng.below(n);
+                let mut b = g.rng.below(n);
+                if a == b {
+                    b = (b + 1) % n;
+                }
+                let c = g.f64(0.0, 3.0);
+                let rc = g.f64(0.0, 3.0);
+                bk.add_edge(a as u32, b as u32, c, rc);
+                rf.add_edge(a, b, c, rc);
+            }
+            let f_bk = bk.maxflow();
+            let f_rf = rf.maxflow();
+            if (f_bk - f_rf).abs() > 1e-6 * (1.0 + f_rf.abs()) {
+                return Err(format!("flow mismatch bk={f_bk} ref={f_rf} (n={n}, m={m})"));
+            }
+            // The cut given by the S side must have capacity == flow.
+            let cut = rf.cut_value(&(0..n).map(|i| bk.is_source_side(i as u32)).collect::<Vec<_>>());
+            if (cut - f_rf).abs() > 1e-6 * (1.0 + f_rf.abs()) {
+                return Err(format!("cut {cut} != flow {f_rf}"));
+            }
+            Ok(())
+        });
+    }
+}

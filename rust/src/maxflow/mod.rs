@@ -1,0 +1,6 @@
+//! s-t min-cut / max-flow substrate (Boykov–Kolmogorov) behind the
+//! graph-cut max-oracle, plus an Edmonds–Karp reference used by tests.
+pub mod bk;
+pub mod reference;
+
+pub use bk::BkGraph;

@@ -1,0 +1,142 @@
+//! Reference max-flow (Edmonds–Karp) used to validate the BK
+//! implementation on random graphs and to audit cut values. O(V·E²) — test
+//! and debugging use only; the oracle hot path uses `bk`.
+
+pub mod ref_maxflow {
+    const SOURCE: usize = usize::MAX - 1;
+
+    /// Adjacency-matrix graph over n regular nodes + implicit s, t.
+    pub struct RefGraph {
+        n: usize,
+        /// capacity[u][v] over node ids 0..n+2 (n = source, n+1 = sink).
+        cap: Vec<Vec<f64>>,
+        folded: f64,
+        orig: Vec<Vec<f64>>,
+    }
+
+    impl RefGraph {
+        pub fn new(n: usize) -> RefGraph {
+            let size = n + 2;
+            RefGraph {
+                n,
+                cap: vec![vec![0.0; size]; size],
+                folded: 0.0,
+                orig: vec![vec![0.0; size]; size],
+            }
+        }
+
+        fn s(&self) -> usize {
+            self.n
+        }
+        fn t(&self) -> usize {
+            self.n + 1
+        }
+
+        pub fn add_tweights(&mut self, i: usize, cap_source: f64, cap_sink: f64) {
+            // Match BkGraph::add_tweights: fold the common part.
+            let delta = cap_source.min(cap_sink);
+            self.folded += delta;
+            let (s, t) = (self.s(), self.t());
+            self.cap[s][i] += cap_source - delta;
+            self.cap[i][t] += cap_sink - delta;
+            self.orig[s][i] += cap_source - delta;
+            self.orig[i][t] += cap_sink - delta;
+        }
+
+        pub fn add_edge(&mut self, i: usize, j: usize, cap: f64, rev_cap: f64) {
+            self.cap[i][j] += cap;
+            self.cap[j][i] += rev_cap;
+            self.orig[i][j] += cap;
+            self.orig[j][i] += rev_cap;
+        }
+
+        pub fn maxflow(&mut self) -> f64 {
+            let (s, t) = (self.s(), self.t());
+            let size = self.cap.len();
+            let mut flow = 0.0;
+            loop {
+                // BFS for a shortest augmenting path.
+                let mut parent = vec![SOURCE; size];
+                let mut seen = vec![false; size];
+                let mut queue = std::collections::VecDeque::new();
+                queue.push_back(s);
+                seen[s] = true;
+                while let Some(u) = queue.pop_front() {
+                    for v in 0..size {
+                        if !seen[v] && self.cap[u][v] > 1e-12 {
+                            seen[v] = true;
+                            parent[v] = u;
+                            queue.push_back(v);
+                        }
+                    }
+                }
+                if !seen[t] {
+                    break;
+                }
+                // Bottleneck.
+                let mut bott = f64::INFINITY;
+                let mut v = t;
+                while v != s {
+                    let u = parent[v];
+                    bott = bott.min(self.cap[u][v]);
+                    v = u;
+                }
+                let mut v = t;
+                while v != s {
+                    let u = parent[v];
+                    self.cap[u][v] -= bott;
+                    self.cap[v][u] += bott;
+                    v = u;
+                }
+                flow += bott;
+            }
+            flow + self.folded
+        }
+
+        /// Capacity of the cut induced by `source_side` (over original
+        /// capacities), plus the folded constant — comparable to flow.
+        pub fn cut_value(&self, source_side: &[bool]) -> f64 {
+            let (s, t) = (self.s(), self.t());
+            let side = |u: usize| -> bool {
+                if u == s {
+                    true
+                } else if u == t {
+                    false
+                } else {
+                    source_side[u]
+                }
+            };
+            let size = self.orig.len();
+            let mut cut = self.folded;
+            for u in 0..size {
+                for v in 0..size {
+                    if side(u) && !side(v) {
+                        cut += self.orig[u][v];
+                    }
+                }
+            }
+            cut
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ref_maxflow::RefGraph;
+
+    #[test]
+    fn reference_simple_chain() {
+        let mut g = RefGraph::new(2);
+        g.add_tweights(0, 4.0, 0.0);
+        g.add_tweights(1, 0.0, 3.0);
+        g.add_edge(0, 1, 2.0, 0.0);
+        assert_eq!(g.maxflow(), 2.0);
+    }
+
+    #[test]
+    fn reference_folding() {
+        let mut g = RefGraph::new(1);
+        g.add_tweights(0, 5.0, 3.0);
+        assert_eq!(g.maxflow(), 3.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Weight-vector layouts of the three joint feature maps (appendix A).
+//!
+//! All three tasks use block-structured joint features; these helpers
+//! centralize the index arithmetic so oracles, data generators and tests
+//! agree on the layout.
+
+/// Multiclass map (Eq. 7): φ(x,y) places ψ(x) ∈ R^F in block y of K blocks.
+#[derive(Clone, Copy, Debug)]
+pub struct MulticlassLayout {
+    pub classes: usize,
+    pub feat: usize,
+}
+
+impl MulticlassLayout {
+    pub fn dim(&self) -> usize {
+        self.classes * self.feat
+    }
+
+    /// Start offset of class block y.
+    #[inline]
+    pub fn block(&self, y: usize) -> usize {
+        debug_assert!(y < self.classes);
+        y * self.feat
+    }
+
+    /// Score ⟨w_y, ψ⟩ of class y under weights w.
+    #[inline]
+    pub fn score(&self, w: &[f64], psi: &[f64], y: usize) -> f64 {
+        let b = self.block(y);
+        crate::utils::math::dot(&w[b..b + self.feat], psi)
+    }
+}
+
+/// Sequence map (Eq. 9): unary multiclass blocks (A labels × F features)
+/// followed by an A×A transition block.
+#[derive(Clone, Copy, Debug)]
+pub struct SequenceLayout {
+    pub alphabet: usize,
+    pub feat: usize,
+}
+
+impl SequenceLayout {
+    pub fn unary_dim(&self) -> usize {
+        self.alphabet * self.feat
+    }
+
+    pub fn dim(&self) -> usize {
+        self.unary_dim() + self.alphabet * self.alphabet
+    }
+
+    /// Offset of the unary block for label a.
+    #[inline]
+    pub fn unary(&self, a: usize) -> usize {
+        debug_assert!(a < self.alphabet);
+        a * self.feat
+    }
+
+    /// Offset of the transition weight (a → b).
+    #[inline]
+    pub fn pair(&self, a: usize, b: usize) -> usize {
+        debug_assert!(a < self.alphabet && b < self.alphabet);
+        self.unary_dim() + a * self.alphabet + b
+    }
+
+    /// Unary score ⟨w_a, ψ_l⟩.
+    #[inline]
+    pub fn unary_score(&self, w: &[f64], psi: &[f64], a: usize) -> f64 {
+        let b = self.unary(a);
+        crate::utils::math::dot(&w[b..b + self.feat], psi)
+    }
+}
+
+/// Segmentation map (Eq. 10): two unary blocks (binary labels × F); the
+/// Potts pairwise term has a fixed weight of 1 and contributes only to the
+/// plane offset φ_∘ (see appendix A.3), not to the weight vector.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentationLayout {
+    pub feat: usize,
+}
+
+impl SegmentationLayout {
+    pub fn dim(&self) -> usize {
+        2 * self.feat
+    }
+
+    #[inline]
+    pub fn block(&self, label: u8) -> usize {
+        debug_assert!(label < 2);
+        label as usize * self.feat
+    }
+
+    #[inline]
+    pub fn unary_score(&self, w: &[f64], psi: &[f64], label: u8) -> f64 {
+        let b = self.block(label);
+        crate::utils::math::dot(&w[b..b + self.feat], psi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiclass_blocks_disjoint_cover() {
+        let l = MulticlassLayout { classes: 10, feat: 256 };
+        assert_eq!(l.dim(), 2560);
+        let mut seen = vec![false; l.dim()];
+        for y in 0..10 {
+            for k in 0..256 {
+                let idx = l.block(y) + k;
+                assert!(!seen[idx]);
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn sequence_layout_matches_paper_dims() {
+        // OCR: 26 letters × 128 features + 26² transitions = 4004.
+        let l = SequenceLayout { alphabet: 26, feat: 128 };
+        assert_eq!(l.dim(), 26 * 128 + 676);
+        assert_eq!(l.pair(0, 0), 26 * 128);
+        assert_eq!(l.pair(25, 25), l.dim() - 1);
+    }
+
+    #[test]
+    fn segmentation_layout_matches_paper_dims() {
+        // HorseSeg: 649-dim superpixel features, binary labels → 1298.
+        let l = SegmentationLayout { feat: 649 };
+        assert_eq!(l.dim(), 1298);
+        assert_eq!(l.block(0), 0);
+        assert_eq!(l.block(1), 649);
+    }
+
+    #[test]
+    fn scores_use_right_block() {
+        let l = MulticlassLayout { classes: 2, feat: 2 };
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let psi = vec![1.0, 1.0];
+        assert_eq!(l.score(&w, &psi, 0), 3.0);
+        assert_eq!(l.score(&w, &psi, 1), 7.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Task losses Δ(y, ȳ) used by the three scenarios (appendix A).
+
+/// 0/1 loss for multiclass labels.
+#[inline]
+pub fn zero_one(y: usize, ybar: usize) -> f64 {
+    if y == ybar {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// Normalized Hamming loss over label sequences: (1/L) Σ [y_l ≠ ȳ_l].
+#[inline]
+pub fn hamming_normalized(y: &[u8], ybar: &[u8]) -> f64 {
+    debug_assert_eq!(y.len(), ybar.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    let miss = y.iter().zip(ybar.iter()).filter(|(a, b)| a != b).count();
+    miss as f64 / y.len() as f64
+}
+
+/// FNV-1a hash of a labeling, used as the plane's dedup tag.
+#[inline]
+pub fn label_hash(y: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in y {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash for a single multiclass label.
+#[inline]
+pub fn class_hash(y: usize) -> u64 {
+    label_hash(&[y as u8, 0x5a])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_one_basic() {
+        assert_eq!(zero_one(3, 3), 0.0);
+        assert_eq!(zero_one(3, 4), 1.0);
+    }
+
+    #[test]
+    fn hamming_counts_fraction() {
+        assert_eq!(hamming_normalized(&[1, 2, 3, 4], &[1, 0, 3, 0]), 0.5);
+        assert_eq!(hamming_normalized(&[], &[]), 0.0);
+        assert_eq!(hamming_normalized(&[5], &[5]), 0.0);
+    }
+
+    #[test]
+    fn hashes_distinguish_labelings() {
+        assert_ne!(label_hash(&[0, 1]), label_hash(&[1, 0]));
+        assert_ne!(class_hash(0), class_hash(1));
+        assert_eq!(label_hash(&[7, 7]), label_hash(&[7, 7]));
+    }
+}

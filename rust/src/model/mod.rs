@@ -1,0 +1,11 @@
+//! Problem model: planes (cutting-plane algebra), sparse/dense vectors,
+//! joint-feature layouts, task losses, and the `StructuredProblem` trait.
+pub mod vec;
+pub mod plane;
+pub mod features;
+pub mod loss;
+pub mod problem;
+
+pub use plane::{DensePlane, Plane};
+pub use problem::StructuredProblem;
+pub use vec::VecF;

@@ -1,0 +1,244 @@
+//! Cutting planes φ = [φ_* φ_∘] ∈ R^{d+1} and the dual bound F.
+//!
+//! A plane is a linear lower bound ⟨φ, [w 1]⟩ = ⟨φ_*, w⟩ + φ_∘ on a
+//! (partial) Hinge term. The dual objective of the SSVM (Eq. 5 of the
+//! paper) for a feasible φ is
+//!
+//! ```text
+//! F(φ) = min_w λ/2‖w‖² + ⟨φ,[w 1]⟩ = −‖φ_*‖²/(2λ) + φ_∘,
+//! ```
+//!
+//! attained at w = −φ_*/λ.
+
+use super::vec::VecF;
+use crate::utils::math;
+
+/// A cutting plane for one Hinge term: linear part + offset, plus an
+/// identity tag for deduplication (hash of the labeling that produced it).
+#[derive(Clone, Debug)]
+pub struct Plane {
+    pub star: VecF,
+    pub off: f64,
+    /// Hash of the labeling y that generated this plane (for dedup).
+    pub tag: u64,
+}
+
+impl Plane {
+    pub fn new(star: VecF, off: f64, tag: u64) -> Plane {
+        Plane { star, off, tag }
+    }
+
+    pub fn zero(dim: usize) -> Plane {
+        Plane { star: VecF::zeros(dim), off: 0.0, tag: 0 }
+    }
+
+    /// ⟨φ, [w 1]⟩ — the plane's value at weight vector w.
+    #[inline]
+    pub fn value_at(&self, w: &[f64]) -> f64 {
+        self.star.dot_dense(w) + self.off
+    }
+
+    pub fn dim(&self) -> usize {
+        self.star.dim()
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.star.mem_bytes() + 16
+    }
+}
+
+/// Dense accumulator plane (used for φ^i block states and the global φ):
+/// supports in-place convex updates.
+#[derive(Clone, Debug)]
+pub struct DensePlane {
+    pub star: Vec<f64>,
+    pub off: f64,
+}
+
+impl DensePlane {
+    pub fn zeros(dim: usize) -> DensePlane {
+        DensePlane { star: vec![0.0; dim], off: 0.0 }
+    }
+
+    pub fn from_plane(p: &Plane) -> DensePlane {
+        DensePlane { star: p.star.to_dense(), off: p.off }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.star.len()
+    }
+
+    /// self = (1-γ)·self + γ·p
+    pub fn interp_plane(&mut self, gamma: f64, p: &Plane) {
+        p.star.interp_into(gamma, &mut self.star);
+        self.off = (1.0 - gamma) * self.off + gamma * p.off;
+    }
+
+    /// self = (1-γ)·self + γ·other
+    pub fn interp_dense(&mut self, gamma: f64, other: &DensePlane) {
+        math::interp(gamma, &other.star, &mut self.star);
+        self.off = (1.0 - gamma) * self.off + gamma * other.off;
+    }
+
+    /// self += alpha·(a − b) for dense planes (used to maintain φ = Σφ^i).
+    pub fn add_scaled_diff(&mut self, alpha: f64, a: &DensePlane, b: &DensePlane) {
+        debug_assert_eq!(a.dim(), b.dim());
+        for ((s, &x), &y) in self.star.iter_mut().zip(a.star.iter()).zip(b.star.iter()) {
+            *s += alpha * (x - y);
+        }
+        self.off += alpha * (a.off - b.off);
+    }
+
+    /// Dual bound F(φ) = −‖φ_*‖²/(2λ) + φ_∘.
+    pub fn dual_bound(&self, lambda: f64) -> f64 {
+        -math::nrm2sq(&self.star) / (2.0 * lambda) + self.off
+    }
+
+    /// Primal minimizer w = −φ_*/λ.
+    pub fn weights(&self, lambda: f64) -> Vec<f64> {
+        self.star.iter().map(|&x| -x / lambda).collect()
+    }
+
+    /// Write w = −φ_*/λ into a caller buffer (hot path, no allocation).
+    pub fn weights_into(&self, lambda: f64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.star.len());
+        let inv = -1.0 / lambda;
+        for (o, &x) in out.iter_mut().zip(self.star.iter()) {
+            *o = inv * x;
+        }
+    }
+}
+
+/// Exact line search for the Frank-Wolfe step (Alg. 2 line 6):
+///
+///   γ* = argmax_{γ∈[0,1]} F(φ + γ(φ̂^i − φ^i))
+///      = [⟨φ^i_* − φ̂^i_*, φ_*⟩ − λ(φ^i_∘ − φ̂^i_∘)] / ‖φ^i_* − φ̂^i_*‖²,
+///
+/// clipped to [0,1]. `phi` is the global sum, `phi_i` the current block
+/// plane, `hat` the newly found plane for the block. Returns (γ, denom);
+/// γ = 0 when the denominator vanishes (plane unchanged).
+pub fn line_search(phi: &DensePlane, phi_i: &DensePlane, hat: &Plane, lambda: f64) -> f64 {
+    // u = φ^i − φ̂^i  (we need ⟨u_*, φ_*⟩ and ‖u_*‖²).
+    let dot_phii_phi = math::dot(&phi_i.star, &phi.star);
+    let dot_hat_phi = hat.star.dot_dense(&phi.star);
+    let num = (dot_phii_phi - dot_hat_phi) - lambda * (phi_i.off - hat.off);
+    let nrm_phii = math::nrm2sq(&phi_i.star);
+    let nrm_hat = hat.star.nrm2sq();
+    let dot_phii_hat = hat.star.dot_dense(&phi_i.star);
+    let denom = nrm_phii - 2.0 * dot_phii_hat + nrm_hat;
+    if denom <= 0.0 || !denom.is_finite() {
+        // φ̂ coincides with φ^i (or numerics collapsed): any γ is optimal,
+        // take 0 to keep the state unchanged.
+        return 0.0;
+    }
+    math::clip(num / denom, 0.0, 1.0)
+}
+
+/// Same line search, but from precomputed inner products (used by the
+/// §3.5 product cache and the XLA engine which returns these scalars).
+#[inline]
+pub fn line_search_from_products(
+    dot_phii_phi: f64,
+    dot_hat_phi: f64,
+    nrm_phii: f64,
+    nrm_hat: f64,
+    dot_phii_hat: f64,
+    off_phii: f64,
+    off_hat: f64,
+    lambda: f64,
+) -> f64 {
+    let num = (dot_phii_phi - dot_hat_phi) - lambda * (off_phii - off_hat);
+    let denom = nrm_phii - 2.0 * dot_phii_hat + nrm_hat;
+    if denom <= 0.0 || !denom.is_finite() {
+        return 0.0;
+    }
+    math::clip(num / denom, 0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop::prop_check;
+    use crate::utils::rng::Pcg;
+
+    fn rand_dense(rng: &mut Pcg, d: usize) -> DensePlane {
+        DensePlane { star: (0..d).map(|_| rng.normal()).collect(), off: rng.normal() }
+    }
+
+    #[test]
+    fn dual_bound_matches_definition() {
+        let p = DensePlane { star: vec![3.0, 4.0], off: 2.0 };
+        let lambda = 0.5;
+        // min_w λ/2||w||² + <φ*,w> + φ∘ at w = -φ*/λ = [-6,-8]
+        let w = p.weights(lambda);
+        let by_hand = lambda / 2.0 * math::nrm2sq(&w) + math::dot(&p.star, &w) + p.off;
+        assert!((p.dual_bound(lambda) - by_hand).abs() < 1e-12);
+        assert_eq!(w, vec![-6.0, -8.0]);
+    }
+
+    #[test]
+    fn line_search_maximizes_f() {
+        // Property: F at the returned γ ≥ F at any probed γ in [0,1].
+        prop_check("line search optimal", 150, |g| {
+            let d = g.usize(1, 12);
+            let lambda = g.f64(0.05, 2.0).max(0.05);
+            let mut rng = g.rng.fork(11);
+            let phi_i = rand_dense(&mut rng, d);
+            let other = rand_dense(&mut rng, d); // φ − φ^i (the rest)
+            let mut phi = other.clone();
+            phi.add_scaled_diff(1.0, &phi_i, &DensePlane::zeros(d));
+            let hat = Plane::new(
+                crate::model::vec::VecF::Dense((0..d).map(|_| rng.normal()).collect()),
+                rng.normal(),
+                7,
+            );
+            let gamma = line_search(&phi, &phi_i, &hat, lambda);
+            if !(0.0..=1.0).contains(&gamma) {
+                return Err(format!("gamma out of range: {gamma}"));
+            }
+            let f_at = |g2: f64| {
+                let mut phi2 = phi.clone();
+                let mut phii2 = phi_i.clone();
+                phii2.interp_plane(g2, &hat);
+                phi2.add_scaled_diff(1.0, &phii2, &phi_i);
+                phi2.dual_bound(lambda)
+            };
+            let f_star = f_at(gamma);
+            for k in 0..=10 {
+                let f_probe = f_at(k as f64 / 10.0);
+                if f_probe > f_star + 1e-9 * (1.0 + f_probe.abs()) {
+                    return Err(format!(
+                        "probe γ={} gives F={f_probe} > F(γ*={gamma})={f_star}",
+                        k as f64 / 10.0
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn line_search_zero_when_same_plane() {
+        let phi_i = DensePlane { star: vec![1.0, -2.0], off: 0.5 };
+        let phi = phi_i.clone();
+        let hat = Plane::new(crate::model::vec::VecF::Dense(vec![1.0, -2.0]), 0.5, 1);
+        assert_eq!(line_search(&phi, &phi_i, &hat, 1.0), 0.0);
+    }
+
+    #[test]
+    fn interp_plane_convexity() {
+        let mut acc = DensePlane { star: vec![2.0, 0.0], off: 1.0 };
+        let p = Plane::new(crate::model::vec::VecF::sparse(2, vec![(1, 4.0)]), 3.0, 1);
+        acc.interp_plane(0.5, &p);
+        assert_eq!(acc.star, vec![1.0, 2.0]);
+        assert_eq!(acc.off, 2.0);
+    }
+
+    #[test]
+    fn weights_into_matches_weights() {
+        let p = DensePlane { star: vec![1.0, -4.0, 2.0], off: 0.0 };
+        let mut buf = vec![0.0; 3];
+        p.weights_into(2.0, &mut buf);
+        assert_eq!(buf, p.weights(2.0));
+    }
+}

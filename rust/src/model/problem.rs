@@ -1,0 +1,73 @@
+//! The structured-problem abstraction the optimizers train against.
+//!
+//! A `StructuredProblem` bundles a training set with its joint feature
+//! map, task loss and max-oracle. The optimizers only ever see cutting
+//! planes φ^{iy} (Sec. 3 of the paper):
+//!
+//!   φ^{iy}_* = (φ(x_i, y) − φ(x_i, y_i)) / n,   φ^{iy}_∘ = Δ(y_i, y) / n,
+//!
+//! and the exact oracle returns argmax_y ⟨φ^{iy}, [w 1]⟩ for a given w.
+
+use super::plane::Plane;
+use crate::runtime::engine::ScoringEngine;
+
+/// A structured prediction training problem.
+pub trait StructuredProblem {
+    /// Number of training examples n.
+    fn n(&self) -> usize;
+
+    /// Weight dimensionality d.
+    fn dim(&self) -> usize;
+
+    /// Short identifier ("usps_like", ...). Used for artifact lookup.
+    fn name(&self) -> &'static str;
+
+    /// Exact max-oracle for example i at weights w: the plane φ^{iŷ} with
+    /// ŷ = argmax_y Δ(y_i,y) + ⟨w, φ(x_i,y) − φ(x_i,y_i)⟩.
+    ///
+    /// The returned plane's `value_at(w)` equals H_i(w) (≥ 0, since y_i is
+    /// always a candidate and yields value 0).
+    fn oracle(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> Plane;
+
+    /// Structured Hinge loss H_i(w). Default: one oracle call.
+    fn hinge(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> f64 {
+        self.oracle(i, w, eng).value_at(w)
+    }
+
+    /// Task loss of the current predictor on example i: Δ(y_i, h_w(x_i)),
+    /// where h_w is the *un-augmented* argmax. Used for reporting only.
+    fn train_loss(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> f64;
+
+    /// Size of the label space |Y| for example i if finite/known
+    /// (diagnostics only).
+    fn label_space_log2(&self, _i: usize) -> f64 {
+        f64::NAN
+    }
+}
+
+/// Full primal objective P(w) = λ/2‖w‖² + Σ_i H_i(w).
+/// Costs n oracle calls; the harness pauses the measurement clock and
+/// bypasses call counting around this (see `coordinator::metrics`).
+pub fn primal_value(
+    prob: &dyn StructuredProblem,
+    w: &[f64],
+    lambda: f64,
+    eng: &mut dyn ScoringEngine,
+) -> f64 {
+    let reg = 0.5 * lambda * crate::utils::math::nrm2sq(w);
+    let mut hinge_sum = 0.0;
+    for i in 0..prob.n() {
+        hinge_sum += prob.hinge(i, w, eng);
+    }
+    reg + hinge_sum
+}
+
+/// Average task loss of the predictor over the training set.
+pub fn mean_train_loss(
+    prob: &dyn StructuredProblem,
+    w: &[f64],
+    eng: &mut dyn ScoringEngine,
+) -> f64 {
+    let n = prob.n();
+    (0..n).map(|i| prob.train_loss(i, w, eng)).sum::<f64>() / n as f64
+}

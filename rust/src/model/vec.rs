@@ -1,0 +1,277 @@
+//! Sparse/dense vector representation for cutting planes.
+//!
+//! The `φ_*` part of a plane is a difference of joint feature vectors.
+//! For block-structured feature maps (multiclass, sequence unaries) that
+//! difference touches only a few blocks, so a sparse representation makes
+//! approximate-oracle scoring Θ(nnz) instead of Θ(d). The global sum
+//! `φ = Σ_i φ^i` is always dense.
+
+use crate::utils::math;
+
+/// Sparse or dense f64 vector of a fixed logical dimension.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VecF {
+    Dense(Vec<f64>),
+    /// Sorted unique indices + values, plus the logical dimension.
+    Sparse { dim: usize, idx: Vec<u32>, val: Vec<f64> },
+}
+
+impl VecF {
+    pub fn zeros(dim: usize) -> VecF {
+        VecF::Sparse { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
+    pub fn dense(v: Vec<f64>) -> VecF {
+        VecF::Dense(v)
+    }
+
+    /// Build a sparse vector from (index, value) pairs; duplicate indices
+    /// are summed, zeros dropped.
+    pub fn sparse(dim: usize, mut pairs: Vec<(u32, f64)>) -> VecF {
+        pairs.sort_by_key(|p| p.0);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<f64> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            debug_assert!((i as usize) < dim);
+            if let Some(&last) = idx.last() {
+                if last == i {
+                    *val.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            idx.push(i);
+            val.push(v);
+        }
+        // Drop explicit zeros produced by cancellation.
+        let mut j = 0;
+        for k in 0..idx.len() {
+            if val[k] != 0.0 {
+                idx[j] = idx[k];
+                val[j] = val[k];
+                j += 1;
+            }
+        }
+        idx.truncate(j);
+        val.truncate(j);
+        VecF::Sparse { dim, idx, val }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            VecF::Dense(v) => v.len(),
+            VecF::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            VecF::Dense(v) => v.len(),
+            VecF::Sparse { idx, .. } => idx.len(),
+        }
+    }
+
+    /// ⟨self, dense⟩
+    pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        match self {
+            VecF::Dense(v) => math::dot(v, w),
+            VecF::Sparse { idx, val, .. } => {
+                let mut s = 0.0;
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    s += w[*i as usize] * v;
+                }
+                s
+            }
+        }
+    }
+
+    /// ⟨self, self⟩
+    pub fn nrm2sq(&self) -> f64 {
+        match self {
+            VecF::Dense(v) => math::nrm2sq(v),
+            VecF::Sparse { val, .. } => val.iter().map(|v| v * v).sum(),
+        }
+    }
+
+    /// ⟨self, other⟩ for any representation mix.
+    pub fn dot(&self, other: &VecF) -> f64 {
+        debug_assert_eq!(self.dim(), other.dim());
+        match (self, other) {
+            (VecF::Dense(a), VecF::Dense(b)) => math::dot(a, b),
+            (VecF::Dense(a), s @ VecF::Sparse { .. }) => s.dot_dense(a),
+            (s @ VecF::Sparse { .. }, VecF::Dense(b)) => s.dot_dense(b),
+            (
+                VecF::Sparse { idx: ia, val: va, .. },
+                VecF::Sparse { idx: ib, val: vb, .. },
+            ) => {
+                // Merge-join over sorted indices.
+                let (mut p, mut q, mut s) = (0usize, 0usize, 0.0f64);
+                while p < ia.len() && q < ib.len() {
+                    match ia[p].cmp(&ib[q]) {
+                        std::cmp::Ordering::Less => p += 1,
+                        std::cmp::Ordering::Greater => q += 1,
+                        std::cmp::Ordering::Equal => {
+                            s += va[p] * vb[q];
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                s
+            }
+        }
+    }
+
+    /// dense_out += alpha * self
+    pub fn add_to(&self, alpha: f64, out: &mut [f64]) {
+        debug_assert_eq!(self.dim(), out.len());
+        match self {
+            VecF::Dense(v) => math::axpy(alpha, v, out),
+            VecF::Sparse { idx, val, .. } => {
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    out[*i as usize] += alpha * v;
+                }
+            }
+        }
+    }
+
+    /// Materialize as a dense Vec.
+    pub fn to_dense(&self) -> Vec<f64> {
+        match self {
+            VecF::Dense(v) => v.clone(),
+            VecF::Sparse { dim, idx, val } => {
+                let mut out = vec![0.0; *dim];
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    out[*i as usize] = *v;
+                }
+                out
+            }
+        }
+    }
+
+    /// Convex interpolation into a dense accumulator: acc = (1-g)·acc + g·self.
+    pub fn interp_into(&self, gamma: f64, acc: &mut [f64]) {
+        match self {
+            VecF::Dense(v) => math::interp(gamma, v, acc),
+            VecF::Sparse { idx, val, .. } => {
+                math::scal(1.0 - gamma, acc);
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    acc[*i as usize] += gamma * v;
+                }
+            }
+        }
+    }
+
+    /// Approximate heap size in bytes (for working-set accounting).
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            VecF::Dense(v) => v.len() * 8,
+            VecF::Sparse { idx, val, .. } => idx.len() * 4 + val.len() * 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop::prop_check;
+
+    fn dense_of(pairs: &[(u32, f64)], dim: usize) -> Vec<f64> {
+        let mut v = vec![0.0; dim];
+        for &(i, x) in pairs {
+            v[i as usize] += x;
+        }
+        v
+    }
+
+    #[test]
+    fn sparse_builder_sorts_dedups_drops_zeros() {
+        let v = VecF::sparse(10, vec![(5, 1.0), (2, 2.0), (5, -1.0), (7, 3.0)]);
+        match &v {
+            VecF::Sparse { idx, val, .. } => {
+                assert_eq!(idx, &vec![2, 7]);
+                assert_eq!(val, &vec![2.0, 3.0]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dot_mixed_representations_agree() {
+        prop_check("dot repr-invariant", 100, |g| {
+            let dim = g.usize(1, 40);
+            let k = g.usize(0, dim);
+            let pairs: Vec<(u32, f64)> =
+                (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+            let sp = VecF::sparse(dim, pairs.clone());
+            let de = VecF::Dense(dense_of(&pairs, dim));
+            let w = g.vec_normal(dim);
+            let wv = VecF::Dense(w.clone());
+            let a = sp.dot_dense(&w);
+            let b = de.dot_dense(&w);
+            let c = sp.dot(&wv);
+            // ⟨v, v⟩ through the mixed sparse·dense path equals nrm2sq.
+            let d = sp.dot(&de);
+            for (x, y) in [(a, b), (a, c), (d, sp.nrm2sq())] {
+                if (x - y).abs() > 1e-9 * (1.0 + x.abs()) {
+                    return Err(format!("dots disagree: {x} vs {y}"));
+                }
+            }
+            // sparse-sparse dot
+            let pairs2: Vec<(u32, f64)> =
+                (0..g.usize(0, dim)).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+            let sp2 = VecF::sparse(dim, pairs2.clone());
+            let de2 = dense_of(&pairs2, dim);
+            let e = sp.dot(&sp2);
+            let f = sp.dot_dense(&de2);
+            if (e - f).abs() > 1e-9 * (1.0 + e.abs()) {
+                return Err(format!("sparse-sparse dot: {e} vs {f}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn add_to_and_interp_match_dense_math() {
+        prop_check("add_to/interp", 100, |g| {
+            let dim = g.usize(1, 30);
+            let pairs: Vec<(u32, f64)> =
+                (0..g.usize(0, dim)).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+            let sp = VecF::sparse(dim, pairs.clone());
+            let dv = dense_of(&pairs, dim);
+            let base = g.vec_normal(dim);
+            let alpha = g.f64(-2.0, 2.0);
+            let mut a = base.clone();
+            sp.add_to(alpha, &mut a);
+            let mut b = base.clone();
+            math::axpy(alpha, &dv, &mut b);
+            if a.iter().zip(&b).any(|(x, y)| (x - y).abs() > 1e-9) {
+                return Err("add_to mismatch".into());
+            }
+            let gamma = g.f64(0.0, 1.0);
+            let mut c = base.clone();
+            sp.interp_into(gamma, &mut c);
+            let mut d = base.clone();
+            math::interp(gamma, &dv, &mut d);
+            if c.iter().zip(&d).any(|(x, y)| (x - y).abs() > 1e-9) {
+                return Err("interp mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nrm2sq_consistent() {
+        let sp = VecF::sparse(6, vec![(1, 3.0), (4, -4.0)]);
+        assert_eq!(sp.nrm2sq(), 25.0);
+        assert_eq!(VecF::Dense(sp.to_dense()).nrm2sq(), 25.0);
+    }
+
+    #[test]
+    fn zeros_has_no_entries() {
+        let z = VecF::zeros(8);
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.dim(), 8);
+        assert_eq!(z.dot_dense(&[1.0; 8]), 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Exact max-oracles for the three scenarios and instrumentation wrappers
+//! (call counting, synthetic latency injection).
+pub mod multiclass;
+pub mod sequence;
+pub mod graphcut;
+pub mod wrappers;
+
+pub use wrappers::{CountingOracle, OracleStats};

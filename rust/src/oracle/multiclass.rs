@@ -1,0 +1,191 @@
+//! Multiclass max-oracle (paper appendix A.1): explicit search over the
+//! 10-class label space. φ(x,y) places ψ(x) in the y-th block, loss is
+//! 0/1, so the loss-augmented argmax is
+//!
+//!   ŷ = argmax_y [y ≠ y_i] + ⟨w_y, ψ⟩   (the −⟨w_{y_i}, ψ⟩ term is
+//!                                        constant in y).
+//!
+//! The class-scoring mat-vec `W[K×F]·ψ` is the dense hot spot; it runs
+//! through the `ScoringEngine` so the XLA/PJRT backend can serve it from
+//! the AOT artifact.
+
+use crate::data::types::MulticlassData;
+use crate::model::loss::{class_hash, zero_one};
+use crate::model::plane::Plane;
+use crate::model::problem::StructuredProblem;
+use crate::model::vec::VecF;
+use crate::runtime::engine::ScoringEngine;
+
+pub struct MulticlassProblem {
+    pub data: MulticlassData,
+}
+
+impl MulticlassProblem {
+    pub fn new(data: MulticlassData) -> Self {
+        MulticlassProblem { data }
+    }
+
+    /// Scores ⟨w_y, ψ_i⟩ for all classes y (engine-backed mat-vec).
+    fn class_scores(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine, out: &mut Vec<f64>) {
+        let l = self.data.layout;
+        eng.matvec(w, l.classes, l.feat, &self.data.instances[i].psi, out);
+    }
+
+    /// Build the plane φ^{iŷ}: ±ψ/n in blocks ŷ / y_i, offset Δ/n.
+    fn plane_for(&self, i: usize, yhat: usize) -> Plane {
+        let l = self.data.layout;
+        let inst = &self.data.instances[i];
+        let n = self.data.n() as f64;
+        if yhat == inst.label {
+            return Plane::new(VecF::zeros(l.dim()), 0.0, class_hash(yhat));
+        }
+        let mut pairs = Vec::with_capacity(2 * l.feat);
+        let bp = l.block(yhat) as u32;
+        let bm = l.block(inst.label) as u32;
+        for (k, &x) in inst.psi.iter().enumerate() {
+            pairs.push((bp + k as u32, x / n));
+            pairs.push((bm + k as u32, -x / n));
+        }
+        Plane::new(VecF::sparse(l.dim(), pairs), zero_one(inst.label, yhat) / n, class_hash(yhat))
+    }
+}
+
+impl StructuredProblem for MulticlassProblem {
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn dim(&self) -> usize {
+        self.data.layout.dim()
+    }
+
+    fn name(&self) -> &'static str {
+        "usps_like"
+    }
+
+    fn oracle(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> Plane {
+        let mut scores = Vec::new();
+        self.class_scores(i, w, eng, &mut scores);
+        let y_i = self.data.instances[i].label;
+        let mut best = y_i;
+        let mut best_val = scores[y_i]; // Δ = 0 for the ground truth
+        for (y, &s) in scores.iter().enumerate() {
+            let val = zero_one(y_i, y) + s;
+            if val > best_val {
+                best_val = val;
+                best = y;
+            }
+        }
+        self.plane_for(i, best)
+    }
+
+    fn train_loss(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> f64 {
+        let mut scores = Vec::new();
+        self.class_scores(i, w, eng, &mut scores);
+        let pred = crate::utils::math::argmax(&scores);
+        zero_one(self.data.instances[i].label, pred)
+    }
+
+    fn label_space_log2(&self, _i: usize) -> f64 {
+        (self.data.layout.classes as f64).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::runtime::engine::NativeEngine;
+
+    fn problem() -> MulticlassProblem {
+        MulticlassProblem::new(generate(UspsLikeConfig::at_scale(Scale::Tiny), 1))
+    }
+
+    /// Brute-force H_i(w) = max_y Δ + ⟨w, φ(x,y) − φ(x,y_i)⟩ over all y.
+    fn brute_hinge(p: &MulticlassProblem, i: usize, w: &[f64]) -> f64 {
+        let l = p.data.layout;
+        let inst = &p.data.instances[i];
+        let n = p.data.n() as f64;
+        (0..l.classes)
+            .map(|y| {
+                (zero_one(inst.label, y) + l.score(w, &inst.psi, y)
+                    - l.score(w, &inst.psi, inst.label))
+                    / n
+            })
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    #[test]
+    fn oracle_plane_value_equals_brute_force_hinge() {
+        let p = problem();
+        let mut eng = NativeEngine;
+        let mut rng = crate::utils::rng::Pcg::seeded(42);
+        for i in [0usize, 3, 17, 59] {
+            let w: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+            let plane = p.oracle(i, &w, &mut eng);
+            let h = brute_hinge(&p, i, &w);
+            assert!(
+                (plane.value_at(&w) - h).abs() < 1e-10,
+                "i={i}: plane value {} vs brute {h}",
+                plane.value_at(&w)
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_at_zero_weights_returns_loss_one_plane() {
+        // At w = 0 every wrong label scores Δ = 1; the oracle must pick one
+        // of them, so the plane has offset 1/n and nonzero linear part.
+        let p = problem();
+        let mut eng = NativeEngine;
+        let w = vec![0.0; p.dim()];
+        let plane = p.oracle(0, &w, &mut eng);
+        assert!((plane.off - 1.0 / p.n() as f64).abs() < 1e-15);
+        assert!(plane.star.nnz() > 0);
+        assert!((plane.value_at(&w) - 1.0 / p.n() as f64).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hinge_nonnegative_everywhere() {
+        let p = problem();
+        let mut eng = NativeEngine;
+        let mut rng = crate::utils::rng::Pcg::seeded(7);
+        for _ in 0..20 {
+            let w: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+            let i = rng.below(p.n());
+            assert!(p.hinge(i, &w, &mut eng) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn plane_is_lower_bound_on_hinge() {
+        // ⟨φ^{iy}, [w' 1]⟩ ≤ H_i(w') for any w' (planes from one w must
+        // lower-bound the hinge at another w).
+        let p = problem();
+        let mut eng = NativeEngine;
+        let mut rng = crate::utils::rng::Pcg::seeded(9);
+        for _ in 0..10 {
+            let w: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+            let w2: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+            let i = rng.below(p.n());
+            let plane = p.oracle(i, &w, &mut eng);
+            let h2 = brute_hinge(&p, i, &w2);
+            assert!(plane.value_at(&w2) <= h2 + 1e-10);
+        }
+    }
+
+    #[test]
+    fn train_loss_zero_for_strong_correct_weights() {
+        // Construct w so that the true class block matches ψ exactly.
+        let p = problem();
+        let mut eng = NativeEngine;
+        let l = p.data.layout;
+        let i = 4;
+        let inst = &p.data.instances[i];
+        let mut w = vec![0.0; p.dim()];
+        let b = l.block(inst.label);
+        w[b..b + l.feat].copy_from_slice(&inst.psi);
+        assert_eq!(p.train_loss(i, &w, &mut eng), 0.0);
+    }
+}

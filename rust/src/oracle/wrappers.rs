@@ -1,0 +1,171 @@
+//! Instrumentation wrappers around `StructuredProblem`.
+//!
+//! `CountingOracle` decorates a problem with (a) exact-oracle call
+//! counting — the x-axis of the paper's Fig. 3 — (b) accumulated oracle
+//! wall-time — the oracle-time fraction reported in §4.1 — and (c) an
+//! optional *virtual latency* per call, which emulates a costly max-oracle
+//! (e.g. the paper's 2.2 s graph cuts) deterministically: the surcharge is
+//! added to the trainer's pausable clock rather than slept away, so
+//! crossover sweeps run in seconds instead of hours.
+
+use std::cell::RefCell;
+
+use crate::model::plane::Plane;
+use crate::model::problem::StructuredProblem;
+use crate::runtime::engine::ScoringEngine;
+use crate::utils::timer::Stopwatch;
+
+/// Mutable counters (interior mutability: the problem trait takes &self).
+#[derive(Clone, Debug, Default)]
+pub struct OracleStats {
+    /// Counted exact-oracle calls (training only; evaluation sweeps are
+    /// excluded via `set_counting(false)`).
+    pub calls: u64,
+    /// Total calls including evaluation sweeps.
+    pub calls_all: u64,
+    /// Real seconds spent inside counted oracle calls.
+    pub real_secs: f64,
+    /// Virtual seconds charged on counted calls (latency injection).
+    pub virtual_secs: f64,
+}
+
+pub struct CountingOracle {
+    inner: Box<dyn StructuredProblem>,
+    stats: RefCell<OracleStats>,
+    counting: RefCell<bool>,
+    /// Virtual per-call latency in seconds (0 = disabled).
+    pub delay: f64,
+}
+
+impl CountingOracle {
+    pub fn new(inner: Box<dyn StructuredProblem>) -> Self {
+        CountingOracle { inner, stats: RefCell::new(OracleStats::default()), counting: RefCell::new(true), delay: 0.0 }
+    }
+
+    pub fn with_delay(inner: Box<dyn StructuredProblem>, delay: f64) -> Self {
+        let mut s = Self::new(inner);
+        s.delay = delay;
+        s
+    }
+
+    /// Toggle counting (disabled during evaluation sweeps).
+    pub fn set_counting(&self, on: bool) {
+        *self.counting.borrow_mut() = on;
+    }
+
+    pub fn stats(&self) -> OracleStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = OracleStats::default();
+    }
+
+    pub fn inner(&self) -> &dyn StructuredProblem {
+        self.inner.as_ref()
+    }
+}
+
+impl StructuredProblem for CountingOracle {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn oracle(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> Plane {
+        let sw = Stopwatch::start();
+        let plane = self.inner.oracle(i, w, eng);
+        let secs = sw.secs();
+        let mut st = self.stats.borrow_mut();
+        st.calls_all += 1;
+        if *self.counting.borrow() {
+            st.calls += 1;
+            st.real_secs += secs;
+            st.virtual_secs += self.delay;
+        }
+        plane
+    }
+
+    fn train_loss(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> f64 {
+        self.inner.train_loss(i, w, eng)
+    }
+
+    fn label_space_log2(&self, i: usize) -> f64 {
+        self.inner.label_space_log2(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::oracle::multiclass::MulticlassProblem;
+    use crate::runtime::engine::NativeEngine;
+
+    fn wrapped() -> CountingOracle {
+        CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+            UspsLikeConfig::at_scale(Scale::Tiny),
+            1,
+        ))))
+    }
+
+    #[test]
+    fn counts_only_when_enabled() {
+        let p = wrapped();
+        let mut eng = NativeEngine;
+        let w = vec![0.0; p.dim()];
+        p.oracle(0, &w, &mut eng);
+        p.oracle(1, &w, &mut eng);
+        p.set_counting(false);
+        p.oracle(2, &w, &mut eng);
+        p.set_counting(true);
+        let st = p.stats();
+        assert_eq!(st.calls, 2);
+        assert_eq!(st.calls_all, 3);
+    }
+
+    #[test]
+    fn delay_accumulates_virtually() {
+        let mut p = wrapped();
+        p.delay = 0.5;
+        let mut eng = NativeEngine;
+        let w = vec![0.0; p.dim()];
+        for i in 0..4 {
+            p.oracle(i, &w, &mut eng);
+        }
+        let st = p.stats();
+        assert!((st.virtual_secs - 2.0).abs() < 1e-12);
+        assert!(st.real_secs < 1.0, "no actual sleeping");
+    }
+
+    #[test]
+    fn wrapper_preserves_oracle_output() {
+        let p = wrapped();
+        let mut eng = NativeEngine;
+        let mut rng = crate::utils::rng::Pcg::seeded(1);
+        let w: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+        let a = p.oracle(3, &w, &mut eng);
+        let b = p.inner().oracle(3, &w, &mut eng);
+        assert_eq!(a.tag, b.tag);
+        assert_eq!(a.off, b.off);
+    }
+
+    #[test]
+    fn reset_clears_counters() {
+        let p = wrapped();
+        let mut eng = NativeEngine;
+        let w = vec![0.0; p.dim()];
+        p.oracle(0, &w, &mut eng);
+        p.reset_stats();
+        assert_eq!(p.stats().calls, 0);
+        assert_eq!(p.stats().calls_all, 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest loader: `artifacts/manifest.json` written by
+//! `python/compile/aot.py`, mapping AOT ops at bucketed shapes to their
+//! HLO-text files.
+
+use std::path::{Path, PathBuf};
+
+use crate::utils::json::Json;
+
+/// A scoring mat-vec artifact (also used for the fused select).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatvecEntry {
+    pub rows: usize,
+    pub cols: usize,
+    pub file: String,
+}
+
+/// A transposed-weights matmul artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatmulBtEntry {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    pub matvec: Vec<MatvecEntry>,
+    pub select: Vec<MatvecEntry>,
+    pub matmul_bt: Vec<MatmulBtEntry>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display())
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: PathBuf, json: &Json) -> anyhow::Result<Manifest> {
+        let version = json.get("version").as_usize().unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let mut m = Manifest {
+            dir,
+            dtype: json.get("dtype").as_str().unwrap_or("f32").to_string(),
+            ..Default::default()
+        };
+        let ops = json.get("ops").as_arr().unwrap_or(&[]);
+        for op in ops {
+            let file = op
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("op without file"))?
+                .to_string();
+            match op.get("op").as_str() {
+                Some("plane_scores") | Some("approx_select") => {
+                    let e = MatvecEntry {
+                        rows: op.get("rows").as_usize().unwrap_or(0),
+                        cols: op.get("cols").as_usize().unwrap_or(0),
+                        file,
+                    };
+                    anyhow::ensure!(e.rows > 0 && e.cols > 0, "bad matvec entry");
+                    if op.get("op").as_str() == Some("plane_scores") {
+                        m.matvec.push(e);
+                    } else {
+                        m.select.push(e);
+                    }
+                }
+                Some("matmul_bt") => {
+                    let e = MatmulBtEntry {
+                        m: op.get("m").as_usize().unwrap_or(0),
+                        k: op.get("k").as_usize().unwrap_or(0),
+                        n: op.get("n").as_usize().unwrap_or(0),
+                        file,
+                    };
+                    anyhow::ensure!(e.m > 0 && e.k > 0 && e.n > 0, "bad matmul entry");
+                    m.matmul_bt.push(e);
+                }
+                other => anyhow::bail!("unknown op {other:?} in manifest"),
+            }
+        }
+        // Deterministic bucket search: smallest area first.
+        m.matvec.sort_by_key(|e| (e.rows * e.cols, e.rows));
+        m.select.sort_by_key(|e| (e.rows * e.cols, e.rows));
+        m.matmul_bt.sort_by_key(|e| (e.m * e.k * e.n, e.m));
+        Ok(m)
+    }
+
+    /// Smallest mat-vec bucket covering (rows, cols).
+    pub fn pick_matvec(&self, rows: usize, cols: usize) -> Option<&MatvecEntry> {
+        self.matvec.iter().find(|e| e.rows >= rows && e.cols >= cols)
+    }
+
+    /// Smallest fused-select bucket covering (rows, cols).
+    pub fn pick_select(&self, rows: usize, cols: usize) -> Option<&MatvecEntry> {
+        self.select.iter().find(|e| e.rows >= rows && e.cols >= cols)
+    }
+
+    /// Smallest matmul_bt bucket covering (m, k, n).
+    pub fn pick_matmul_bt(&self, m: usize, k: usize, n: usize) -> Option<&MatmulBtEntry> {
+        self.matmul_bt.iter().find(|e| e.m >= m && e.k >= k && e.n >= n)
+    }
+
+    pub fn file_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let json = Json::parse(
+            r#"{"version":1,"dtype":"f32","ops":[
+                {"op":"plane_scores","rows":16,"cols":64,"file":"a"},
+                {"op":"plane_scores","rows":64,"cols":256,"file":"b"},
+                {"op":"plane_scores","rows":1024,"cols":4096,"file":"c"},
+                {"op":"approx_select","rows":16,"cols":256,"file":"s"},
+                {"op":"matmul_bt","m":16,"k":32,"n":8,"file":"d"},
+                {"op":"matmul_bt","m":256,"k":64,"n":2,"file":"e"}
+            ]}"#,
+        )
+        .unwrap();
+        Manifest::from_json(PathBuf::from("/tmp/x"), &json).unwrap()
+    }
+
+    #[test]
+    fn picks_smallest_covering_bucket() {
+        let m = sample();
+        assert_eq!(m.pick_matvec(10, 60).unwrap().file, "a");
+        assert_eq!(m.pick_matvec(17, 64).unwrap().file, "b");
+        assert_eq!(m.pick_matvec(100, 3000).unwrap().file, "c");
+        assert!(m.pick_matvec(2000, 64).is_none());
+        assert_eq!(m.pick_matmul_bt(10, 30, 3).unwrap().file, "d");
+        assert_eq!(m.pick_matmul_bt(17, 33, 2).unwrap().file, "e");
+        assert!(m.pick_matmul_bt(10, 10, 100).is_none());
+        assert_eq!(m.pick_select(4, 200).unwrap().file, "s");
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_entries() {
+        assert!(Manifest::from_json(
+            PathBuf::new(),
+            &Json::parse(r#"{"version":2,"ops":[]}"#).unwrap()
+        )
+        .is_err());
+        assert!(Manifest::from_json(
+            PathBuf::new(),
+            &Json::parse(r#"{"version":1,"ops":[{"op":"wat","file":"x"}]}"#).unwrap()
+        )
+        .is_err());
+        assert!(Manifest::from_json(
+            PathBuf::new(),
+            &Json::parse(r#"{"version":1,"ops":[{"op":"plane_scores","file":"x"}]}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(!m.matvec.is_empty());
+        assert!(!m.matmul_bt.is_empty());
+        // Every shipped dataset shape must be covered (mirror of the
+        // python-side test_buckets_cover_all_shipped_dataset_shapes).
+        for cols in [161, 641, 2561, 85, 1509, 4005, 25, 129, 1299] {
+            assert!(m.pick_matvec(16, cols).is_some(), "cols={cols}");
+        }
+        for (mm, k, n) in
+            [(11, 8, 6), (11, 32, 26), (11, 128, 26), (36, 12, 2), (144, 64, 2), (289, 649, 2)]
+        {
+            assert!(m.pick_matmul_bt(mm, k, n).is_some(), "({mm},{k},{n})");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Runtime layer: scoring engines (native Rust and PJRT-backed XLA) and
+//! the artifact manifest loader for `artifacts/*.hlo.txt`.
+pub mod engine;
+pub mod manifest;
+#[cfg(feature = "xla-rt")]
+pub mod xla;
+
+pub use engine::{NativeEngine, ScoringEngine};

@@ -1,0 +1,214 @@
+//! PJRT-backed scoring engine: executes the AOT-compiled HLO artifacts
+//! produced by `python/compile/aot.py` (L2 JAX graphs wrapping the L1
+//! Pallas kernels).
+//!
+//! Requests are padded up to the artifact's bucket shape with zeros (a
+//! zero row scores 0 and a zero column contributes 0 to every dot
+//! product, so padding is semantically inert), executed on the PJRT CPU
+//! client, and the output is truncated back to the live size. Executables
+//! are compiled lazily on first use and memoized. Shapes with no covering
+//! bucket fall back to the native kernels and are counted in
+//! `stats.fallbacks` — the parity tests assert this stays at zero for
+//! every shipped dataset.
+//!
+//! Artifacts are f32 (the manifest records this); inputs are converted
+//! from the coordinator's f64. The parity tests pin the two engines to
+//! each other within f32 tolerance.
+
+use std::collections::HashMap;
+
+use super::engine::{NativeEngine, ScoringEngine};
+use super::manifest::Manifest;
+
+/// Execution counters (diagnostics + parity tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XlaStats {
+    /// PJRT executions.
+    pub calls: u64,
+    /// Requests served by the native fallback (no covering bucket).
+    pub fallbacks: u64,
+    /// Lazy compilations performed.
+    pub compiles: u64,
+}
+
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    native: NativeEngine,
+    pub stats: XlaStats,
+    // Reusable padding buffers.
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+}
+
+impl XlaEngine {
+    /// Load the manifest and create the PJRT CPU client. Executables are
+    /// compiled lazily per bucket on first use.
+    pub fn load(artifacts_dir: &str) -> anyhow::Result<XlaEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        anyhow::ensure!(manifest.dtype == "f32", "engine expects f32 artifacts");
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            native: NativeEngine,
+            stats: XlaStats::default(),
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, file: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(file) {
+            let path = self.manifest.file_path(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+            self.stats.compiles += 1;
+            self.compiled.insert(file.to_string(), exe);
+        }
+        Ok(self.compiled.get(file).unwrap())
+    }
+
+    /// Pad `src` ([rows × cols] row-major f64) into `dst` ([brows × bcols]
+    /// f32, zero-filled).
+    fn pad_into(src: &[f64], rows: usize, cols: usize, brows: usize, bcols: usize, dst: &mut Vec<f32>) {
+        dst.clear();
+        dst.resize(brows * bcols, 0.0);
+        for r in 0..rows {
+            let s = &src[r * cols..(r + 1) * cols];
+            let d = &mut dst[r * bcols..r * bcols + cols];
+            for (dv, &sv) in d.iter_mut().zip(s.iter()) {
+                *dv = sv as f32;
+            }
+        }
+    }
+
+
+    /// Build an f32 literal of the given dims from a padded buffer in one
+    /// copy (§Perf L3-4: `vec1 + reshape` copied the buffer twice).
+    fn literal_f32(buf: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+            .map_err(|e| anyhow::anyhow!("literal: {e:?}"))
+    }
+
+    fn run2(
+        &mut self,
+        file: &str,
+        a: xla::Literal,
+        b: xla::Literal,
+    ) -> anyhow::Result<xla::Literal> {
+        let file = file.to_string();
+        let exe = self.executable(&file)?;
+        let out = exe
+            .execute::<xla::Literal>(&[a, b])
+            .map_err(|e| anyhow::anyhow!("execute {file}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync {file}: {e:?}"))?;
+        self.stats.calls += 1;
+        // aot.py lowers with return_tuple=True.
+        out.to_tuple1().map_err(|e| anyhow::anyhow!("untuple {file}: {e:?}"))
+    }
+}
+
+impl ScoringEngine for XlaEngine {
+    fn matvec(&mut self, mat: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(mat.len(), rows * cols);
+        debug_assert_eq!(v.len(), cols);
+        let Some(entry) = self.manifest.pick_matvec(rows, cols).cloned() else {
+            self.stats.fallbacks += 1;
+            return self.native.matvec(mat, rows, cols, v, out);
+        };
+        let (brows, bcols) = (entry.rows, entry.cols);
+        let mut buf_a = std::mem::take(&mut self.buf_a);
+        let mut buf_b = std::mem::take(&mut self.buf_b);
+        Self::pad_into(mat, rows, cols, brows, bcols, &mut buf_a);
+        Self::pad_into(v, 1, cols, 1, bcols, &mut buf_b);
+        let result = (|| -> anyhow::Result<Vec<f32>> {
+            let la = Self::literal_f32(&buf_a, &[brows, bcols])?;
+            let lb = Self::literal_f32(&buf_b, &[bcols])?;
+            let lit = self.run2(&entry.file, la, lb)?;
+            lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+        })();
+        self.buf_a = buf_a;
+        self.buf_b = buf_b;
+        match result {
+            Ok(scores) => {
+                out.clear();
+                out.extend(scores[..rows].iter().map(|&x| x as f64));
+            }
+            Err(e) => {
+                // Execution problems are a deployment error worth seeing
+                // once, but training must not die mid-run: fall back.
+                eprintln!("[xla-engine] matvec fallback: {e}");
+                self.stats.fallbacks += 1;
+                self.native.matvec(mat, rows, cols, v, out);
+            }
+        }
+    }
+
+    fn matmul_bt(
+        &mut self,
+        a: &[f64],
+        m: usize,
+        k: usize,
+        b: &[f64],
+        n: usize,
+        out: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let Some(entry) = self.manifest.pick_matmul_bt(m, k, n).cloned() else {
+            self.stats.fallbacks += 1;
+            return self.native.matmul_bt(a, m, k, b, n, out);
+        };
+        let (bm, bk, bn) = (entry.m, entry.k, entry.n);
+        let mut buf_a = std::mem::take(&mut self.buf_a);
+        let mut buf_b = std::mem::take(&mut self.buf_b);
+        Self::pad_into(a, m, k, bm, bk, &mut buf_a);
+        Self::pad_into(b, n, k, bn, bk, &mut buf_b);
+        let result = (|| -> anyhow::Result<Vec<f32>> {
+            let la = Self::literal_f32(&buf_a, &[bm, bk])?;
+            let lb = Self::literal_f32(&buf_b, &[bn, bk])?;
+            let lit = self.run2(&entry.file, la, lb)?;
+            lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+        })();
+        self.buf_a = buf_a;
+        self.buf_b = buf_b;
+        match result {
+            Ok(full) => {
+                // Truncate [bm × bn] → [m × n].
+                out.clear();
+                out.reserve(m * n);
+                for r in 0..m {
+                    out.extend(full[r * bn..r * bn + n].iter().map(|&x| x as f64));
+                }
+            }
+            Err(e) => {
+                eprintln!("[xla-engine] matmul_bt fallback: {e}");
+                self.stats.fallbacks += 1;
+                self.native.matmul_bt(a, m, k, b, n, out);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,9 @@
+//! Support utilities hand-rolled for the offline build (no rand / serde /
+//! criterion / proptest available): seeded RNG, JSON, timing, CSV and a
+//! mini property-testing harness.
+pub mod rng;
+pub mod math;
+pub mod json;
+pub mod timer;
+pub mod csv;
+pub mod prop;

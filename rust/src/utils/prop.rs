@@ -1,0 +1,129 @@
+//! Miniature property-based testing harness.
+//!
+//! `proptest` is unavailable in the offline build, so this module provides
+//! the small subset we rely on: run a property over many seeded random
+//! cases, and on failure greedily shrink the failing case by re-sampling
+//! with smaller size hints, reporting the smallest reproduction seed.
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("gamma stays clipped", 200, |g| {
+//!     let n = g.usize(1, 50);
+//!     ...
+//!     Ok(())  // or Err("message".into())
+//! });
+//! ```
+
+use super::rng::Pcg;
+
+/// Case generator handed to properties; wraps a seeded RNG plus a size
+/// hint that shrinks on failure.
+pub struct Gen {
+    pub rng: Pcg,
+    /// 1.0 for the initial attempt; reduced toward 0 while shrinking.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi], scaled by the current size hint.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1) }
+    }
+
+    /// f64 in [lo, hi], scaled toward lo by the size hint.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.size * self.rng.f64()
+    }
+
+    /// Standard normal scaled by size.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal() * self.size
+    }
+
+    /// Vector of normals.
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.normal()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// The result of a property: Ok(()) or Err(description).
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`. Panics with the seed and message of
+/// the smallest failure found (after a bounded shrink search).
+pub fn prop_check<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: u64, mut prop: F) {
+    const STREAM: u64 = 0x9e37;
+    for seed in 0..cases {
+        let mut g = Gen { rng: Pcg::new(seed, STREAM), size: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the same seed with smaller size hints and
+            // report the smallest size that still fails.
+            let mut fail_size = 1.0;
+            let mut fail_msg = msg;
+            for k in 1..=8 {
+                let size = 1.0 / (1 << k) as f64;
+                let mut g = Gen { rng: Pcg::new(seed, STREAM), size };
+                match prop(&mut g) {
+                    Err(m) => {
+                        fail_size = size;
+                        fail_msg = m;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, size={fail_size}): {fail_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("sum commutes", 50, |g| {
+            let a = g.f64(-10.0, 10.0);
+            let b = g.f64(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        prop_check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        prop_check("gen ranges", 100, |g| {
+            let n = g.usize(3, 17);
+            if !(3..=17).contains(&n) {
+                return Err(format!("usize out of range: {n}"));
+            }
+            let x = g.f64(-1.0, 2.0);
+            if !(-1.0..=2.0).contains(&x) {
+                return Err(format!("f64 out of range: {x}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,123 @@
+//! Pausable wall-clock used by the measurement protocol.
+//!
+//! The paper plots convergence against *training* runtime; our harness
+//! periodically evaluates the exact primal objective (which needs n extra
+//! oracle calls) and must exclude that from the measured time. `Clock`
+//! supports pause/resume plus an optional *virtual* surcharge so benches
+//! can inject synthetic oracle latency deterministically without actually
+//! sleeping (see `oracle::DelayOracle`).
+
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Clock {
+    start: Instant,
+    /// Accumulated running time (seconds) from completed run segments.
+    banked: f64,
+    /// Start of the current running segment, None while paused.
+    running_since: Option<Instant>,
+    /// Extra virtual seconds added via `charge` (synthetic oracle cost).
+    virtual_secs: f64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Clock { start: now, banked: 0.0, running_since: Some(now), virtual_secs: 0.0 }
+    }
+
+    /// Elapsed *measured* seconds: running segments + virtual surcharges.
+    pub fn elapsed(&self) -> f64 {
+        let live = self
+            .running_since
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        self.banked + live + self.virtual_secs
+    }
+
+    /// Wall time since construction regardless of pauses.
+    pub fn wall(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Stop counting (e.g. while evaluating the exact primal).
+    pub fn pause(&mut self) {
+        if let Some(t) = self.running_since.take() {
+            self.banked += t.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Resume counting.
+    pub fn resume(&mut self) {
+        if self.running_since.is_none() {
+            self.running_since = Some(Instant::now());
+        }
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.running_since.is_some()
+    }
+
+    /// Add virtual seconds (deterministic synthetic latency).
+    pub fn charge(&mut self, secs: f64) {
+        self.virtual_secs += secs;
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Simple stopwatch for profiling sections.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+    use std::time::Duration;
+
+    #[test]
+    fn pause_excludes_time() {
+        let mut c = Clock::new();
+        sleep(Duration::from_millis(10));
+        c.pause();
+        let at_pause = c.elapsed();
+        sleep(Duration::from_millis(20));
+        assert!((c.elapsed() - at_pause).abs() < 1e-9, "clock advanced while paused");
+        c.resume();
+        sleep(Duration::from_millis(5));
+        assert!(c.elapsed() > at_pause);
+        assert!(c.wall() >= c.elapsed());
+    }
+
+    #[test]
+    fn charge_adds_virtual_time() {
+        let mut c = Clock::new();
+        c.pause();
+        let base = c.elapsed();
+        c.charge(1.5);
+        assert!((c.elapsed() - base - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn double_pause_resume_idempotent() {
+        let mut c = Clock::new();
+        c.pause();
+        c.pause();
+        c.resume();
+        c.resume();
+        assert!(c.is_running());
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration: convergence behaviour of the full optimizer stack on all
+//! three scenarios — the invariants behind the paper's Figs. 3 and 4.
+
+use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
+use mpbcfw::data::types::Scale;
+
+fn spec(dataset: DatasetKind, algo: Algo, iters: u64) -> TrainSpec {
+    TrainSpec { dataset, scale: Scale::Tiny, algo, max_iters: iters, ..Default::default() }
+}
+
+#[test]
+fn dual_monotone_and_gap_shrinks_on_every_dataset() {
+    for dataset in DatasetKind::all() {
+        for algo in [Algo::Bcfw, Algo::MpBcfw] {
+            let s = train(&spec(dataset, algo, 8)).unwrap();
+            for w in s.points.windows(2) {
+                assert!(
+                    w[1].dual >= w[0].dual - 1e-10,
+                    "{dataset:?}/{algo:?}: dual decreased {} -> {}",
+                    w[0].dual,
+                    w[1].dual
+                );
+            }
+            let first = &s.points[0];
+            let last = s.points.last().unwrap();
+            assert!(
+                last.primal - last.dual < 0.5 * (first.primal - first.dual),
+                "{dataset:?}/{algo:?}: gap didn't halve: {} -> {}",
+                first.primal - first.dual,
+                last.primal - last.dual
+            );
+            for p in &s.points {
+                assert!(p.primal >= p.dual - 1e-9, "{dataset:?}/{algo:?}: weak duality");
+            }
+        }
+    }
+}
+
+#[test]
+fn mp_bcfw_oracle_convergence_dominates_bcfw_on_structured_tasks() {
+    // The paper's Fig. 3 ordering: larger label spaces (OCR, HorseSeg)
+    // benefit more from the working set. Equal exact-call budgets.
+    for dataset in [DatasetKind::OcrLike, DatasetKind::HorsesegLike] {
+        let bcfw = train(&spec(dataset, Algo::Bcfw, 8)).unwrap();
+        let mp = train(&spec(dataset, Algo::MpBcfw, 8)).unwrap();
+        assert_eq!(
+            bcfw.points.last().unwrap().oracle_calls,
+            mp.points.last().unwrap().oracle_calls
+        );
+        let gap_bcfw = bcfw.final_gap();
+        let gap_mp = mp.final_gap();
+        assert!(gap_mp <= gap_bcfw * 1.05, "{dataset:?}: mp {gap_mp} vs bcfw {gap_bcfw}");
+    }
+}
+
+#[test]
+fn all_algorithms_approach_the_same_dual_optimum() {
+    // BCFW, MP-BCFW and cutting-plane solve the same convex dual; run
+    // them long on the same data and compare the optima they reach.
+    let mut duals = Vec::new();
+    for algo in [Algo::Bcfw, Algo::MpBcfw, Algo::CuttingPlane] {
+        let s = train(&spec(DatasetKind::UspsLike, algo, 40)).unwrap();
+        duals.push((algo, s.points.last().unwrap().dual));
+    }
+    let max = duals.iter().map(|(_, d)| *d).fold(f64::NEG_INFINITY, f64::max);
+    for (algo, d) in &duals {
+        assert!(
+            (max - d) / max.abs().max(1e-12) < 0.05,
+            "{algo:?} dual {d} far from best {max}"
+        );
+    }
+}
+
+#[test]
+fn averaged_dual_is_still_a_lower_bound() {
+    let avg = train(&spec(DatasetKind::UspsLike, Algo::MpBcfwAvg, 6)).unwrap();
+    assert!(avg.points.iter().any(|p| p.primal_avg.is_some()));
+    for p in &avg.points {
+        if let Some(da) = p.dual_avg {
+            assert!(da <= p.primal + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn working_set_shrinks_after_exploration_phase() {
+    // Fig. 5: after an initial exploration phase the TTL rule prunes the
+    // working sets down to the few relevant support planes.
+    let s = train(&spec(DatasetKind::UspsLike, Algo::MpBcfw, 25)).unwrap();
+    let peak = s.points.iter().map(|p| p.ws_mean).fold(0.0, f64::max);
+    let last = s.points.last().unwrap().ws_mean;
+    assert!(peak > 1.0, "working sets never grew (peak {peak})");
+    assert!(last <= peak, "working set kept growing: last {last} vs peak {peak}");
+}
+
+#[test]
+fn oracle_delay_inflates_measured_time_deterministically() {
+    let fast = train(&spec(DatasetKind::UspsLike, Algo::Bcfw, 2)).unwrap();
+    let slow = train(&TrainSpec {
+        oracle_delay: 0.05,
+        ..spec(DatasetKind::UspsLike, Algo::Bcfw, 2)
+    })
+    .unwrap();
+    let calls = slow.points.last().unwrap().oracle_calls as f64;
+    let t_fast = fast.points.last().unwrap().time;
+    let t_slow = slow.points.last().unwrap().time;
+    assert!(
+        (t_slow - t_fast - 0.05 * calls).abs() < 0.2 * (0.05 * calls),
+        "virtual delay not charged: fast {t_fast}, slow {t_slow}, calls {calls}"
+    );
+}
+
+#[test]
+fn lambda_sensitivity_smoke() {
+    // The optimizer must stay stable across regularization scales.
+    for lambda in [1e-4, 1e-2, 1.0] {
+        let s = train(&TrainSpec {
+            lambda: Some(lambda),
+            ..spec(DatasetKind::UspsLike, Algo::MpBcfw, 6)
+        })
+        .unwrap();
+        let last = s.points.last().unwrap();
+        assert!(last.primal.is_finite() && last.dual.is_finite(), "λ={lambda}");
+        assert!(last.primal >= last.dual - 1e-9, "λ={lambda}: weak duality");
+    }
+}

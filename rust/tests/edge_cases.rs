@@ -1,0 +1,201 @@
+//! Edge cases and failure injection across the stack: degenerate
+//! datasets, extreme configurations, numerical corner cases.
+
+use mpbcfw::coordinator::dual::DualState;
+use mpbcfw::coordinator::mp_bcfw::{self, MpBcfwConfig};
+use mpbcfw::coordinator::products::{cached_block_updates, GramCache};
+use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
+use mpbcfw::coordinator::working_set::WorkingSet;
+use mpbcfw::data::synth::usps_like::{generate, UspsLikeConfig};
+use mpbcfw::data::types::Scale;
+use mpbcfw::maxflow::BkGraph;
+use mpbcfw::model::plane::Plane;
+use mpbcfw::model::vec::VecF;
+use mpbcfw::oracle::multiclass::MulticlassProblem;
+use mpbcfw::oracle::wrappers::CountingOracle;
+use mpbcfw::runtime::engine::NativeEngine;
+
+#[test]
+fn single_example_dataset_trains() {
+    let mut cfg = UspsLikeConfig::at_scale(Scale::Tiny);
+    cfg.n = 1;
+    let problem = CountingOracle::new(Box::new(MulticlassProblem::new(generate(cfg, 0))));
+    let mut eng = NativeEngine;
+    let mp = MpBcfwConfig { max_iters: 10, ..MpBcfwConfig::mp_paper(1.0) };
+    let (series, run) = mp_bcfw::run(&problem, &mut eng, &mp);
+    let last = series.points.last().unwrap();
+    assert!(last.primal >= last.dual - 1e-12);
+    assert!(run.state.consistency_error() < 1e-9);
+}
+
+#[test]
+fn working_set_cap_one_still_converges() {
+    let spec = TrainSpec {
+        scale: Scale::Tiny,
+        algo: Algo::MpBcfw,
+        cap_n: 1,
+        max_iters: 8,
+        ..Default::default()
+    };
+    let s = train(&spec).unwrap();
+    let last = s.points.last().unwrap();
+    assert!(last.primal - last.dual < s.points[0].primal - s.points[0].dual);
+    assert!(last.ws_mean <= 1.0 + 1e-12);
+}
+
+#[test]
+fn ttl_zero_evicts_everything_each_iteration() {
+    let spec = TrainSpec {
+        scale: Scale::Tiny,
+        algo: Algo::MpBcfw,
+        ttl: 0,
+        max_iters: 4,
+        ..Default::default()
+    };
+    let s = train(&spec).unwrap();
+    // With TTL 0 only planes touched in the current iteration survive;
+    // training must still be sound (dual monotone).
+    for w in s.points.windows(2) {
+        assert!(w[1].dual >= w[0].dual - 1e-10);
+    }
+}
+
+#[test]
+fn zero_iterations_yields_initial_point_only() {
+    let spec = TrainSpec { scale: Scale::Tiny, max_iters: 0, ..Default::default() };
+    let s = train(&spec).unwrap();
+    assert_eq!(s.points.len(), 1);
+    assert_eq!(s.points[0].oracle_calls, 0);
+    assert_eq!(s.points[0].dual, 0.0);
+}
+
+#[test]
+fn huge_lambda_drives_weights_to_zero() {
+    let spec = TrainSpec {
+        scale: Scale::Tiny,
+        lambda: Some(1e6),
+        max_iters: 5,
+        ..Default::default()
+    };
+    let s = train(&spec).unwrap();
+    let last = s.points.last().unwrap();
+    // P(w*) ≈ P(0) = mean structured loss at w=0 (weights can't move).
+    assert!((last.primal - s.points[0].primal).abs() < 0.1 * s.points[0].primal + 1e-9);
+}
+
+#[test]
+fn duplicate_oracle_planes_do_not_bloat_working_set() {
+    // At the optimum the oracle keeps returning the same labelings; the
+    // tag-dedup in WorkingSet::insert must keep |W_i| small.
+    let spec = TrainSpec {
+        scale: Scale::Tiny,
+        algo: Algo::MpBcfw,
+        max_iters: 30,
+        ttl: 1000, // disable TTL so only dedup bounds the set
+        ..Default::default()
+    };
+    let s = train(&spec).unwrap();
+    let last = s.points.last().unwrap();
+    assert!(
+        last.ws_mean < 15.0,
+        "working sets grew unboundedly despite dedup: {}",
+        last.ws_mean
+    );
+}
+
+#[test]
+fn gram_cache_survives_working_set_eviction() {
+    // Stale Gram keys must never corrupt results: evict entries between
+    // cached visits and check the state stays consistent.
+    let dim = 12;
+    let mut st = DualState::new(1, dim, 0.5);
+    let mut ws = WorkingSet::new(100);
+    let mut gram = GramCache::new();
+    let mut rng = mpbcfw::utils::rng::Pcg::seeded(9);
+    for round in 0..10u64 {
+        for t in 0..4 {
+            let pairs: Vec<(u32, f64)> =
+                (0..dim).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
+            ws.insert(Plane::new(VecF::sparse(dim, pairs), rng.normal(), round * 100 + t), round);
+        }
+        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 6, round);
+        ws.evict_stale(round, 1);
+        assert!(st.consistency_error() < 1e-8, "round {round}");
+    }
+    // retain_ids drops dead keys without breaking live ones.
+    let live: Vec<u64> = ws.entries().iter().map(|e| e.id).collect();
+    gram.retain_ids(&move |id| live.contains(&id));
+    cached_block_updates(&mut st, &mut ws, &mut gram, 0, 6, 11);
+    assert!(st.consistency_error() < 1e-8);
+}
+
+#[test]
+fn bk_handles_disconnected_and_saturated_graphs() {
+    // No edges at all: flow = sum of min(t-weights).
+    let mut g = BkGraph::new(3, 0);
+    g.add_tweights(0, 2.0, 1.0);
+    g.add_tweights(1, 0.0, 5.0);
+    g.add_tweights(2, 3.0, 0.0);
+    assert_eq!(g.maxflow(), 1.0);
+    assert!(g.is_source_side(0));
+    assert!(!g.is_source_side(1));
+    assert!(g.is_source_side(2));
+
+    // Zero-capacity edges behave like no edges.
+    let mut g = BkGraph::new(2, 1);
+    g.add_tweights(0, 1.0, 0.0);
+    g.add_tweights(1, 0.0, 1.0);
+    g.add_edge(0, 1, 0.0, 0.0);
+    assert_eq!(g.maxflow(), 0.0);
+
+    // Very large capacities don't overflow the f64 bookkeeping.
+    let mut g = BkGraph::new(2, 1);
+    g.add_tweights(0, 1e15, 0.0);
+    g.add_tweights(1, 0.0, 1e15);
+    g.add_edge(0, 1, 1e15, 1e15);
+    assert_eq!(g.maxflow(), 1e15);
+}
+
+#[test]
+fn line_search_with_zero_norm_planes_is_safe() {
+    // Ground-truth planes are identically zero; repeated zero steps must
+    // not NaN the state.
+    let mut st = DualState::new(2, 4, 1.0);
+    let zero = Plane::zero(4);
+    for _ in 0..5 {
+        let g = st.block_step(0, &zero);
+        assert_eq!(g, 0.0);
+    }
+    assert!(st.dual_value() == 0.0);
+    assert!(st.consistency_error() == 0.0);
+}
+
+#[test]
+fn max_time_budget_stops_early() {
+    let spec = TrainSpec {
+        scale: Scale::Tiny,
+        algo: Algo::Bcfw,
+        max_iters: 10_000,
+        max_time: 0.05,
+        oracle_delay: 0.001, // virtual: each pass charges 60 ms
+        ..Default::default()
+    };
+    let s = train(&spec).unwrap();
+    let last = s.points.last().unwrap();
+    assert!(last.outer < 10_000, "time budget ignored (ran {} iters)", last.outer);
+}
+
+#[test]
+fn target_gap_stops_early() {
+    let spec = TrainSpec {
+        scale: Scale::Tiny,
+        algo: Algo::MpBcfw,
+        max_iters: 10_000,
+        target_gap: 1e-3,
+        ..Default::default()
+    };
+    let s = train(&spec).unwrap();
+    let last = s.points.last().unwrap();
+    assert!(last.primal - last.dual <= 1e-3 + 1e-12);
+    assert!(last.outer < 10_000);
+}

@@ -1,0 +1,107 @@
+//! Whole-system integration: the bench harness produces the paper's
+//! figure/table data end to end, and the headline result (Fig. 3/4
+//! ordering) reproduces on every dataset at test scale.
+
+use mpbcfw::bench::figures::{run_figures, FigureOpts};
+use mpbcfw::bench::harness::RunGroup;
+use mpbcfw::bench::tables::run_table;
+use mpbcfw::coordinator::trainer::{Algo, DatasetKind, TrainSpec};
+use mpbcfw::data::types::Scale;
+
+fn tiny_opts() -> FigureOpts {
+    FigureOpts { scale: Scale::Tiny, repeats: 2, max_iters: 4, ..Default::default() }
+}
+
+#[test]
+fn full_figure_suite_emits_all_csvs() {
+    let dir = std::env::temp_dir().join(format!("mpbcfw_e2e_figs_{}", std::process::id()));
+    run_figures("all", &DatasetKind::all(), &tiny_opts(), &dir, |_| {}).unwrap();
+    for ds in DatasetKind::all() {
+        let p = dir.join(format!("fig34_{}.csv", ds.name()));
+        let text = std::fs::read_to_string(&p).unwrap();
+        // 4 algorithms × 2 seeds × (4+1) eval points + header.
+        assert!(text.lines().count() >= 4 * 2 * 5, "{}", p.display());
+        // Fig. 5/6 columns present with data for mp-bcfw rows.
+        assert!(text.contains("mp-bcfw"));
+        let header = text.lines().next().unwrap();
+        for col in ["oracle_calls", "time_s", "primal_subopt", "dual_subopt", "ws_mean", "approx_passes"] {
+            assert!(header.contains(col), "missing column {col}");
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn full_table_suite_emits_all_csvs() {
+    let dir = std::env::temp_dir().join(format!("mpbcfw_e2e_tabs_{}", std::process::id()));
+    run_table("all", &[DatasetKind::UspsLike], &tiny_opts(), &dir, |_| {}).unwrap();
+    for f in [
+        "table_oracle_stats.csv",
+        "table_crossover.csv",
+        "table_product_cache.csv",
+        "table_t_sweep.csv",
+    ] {
+        assert!(dir.join(f).exists(), "{f} missing");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn headline_result_reproduces_on_all_datasets() {
+    // Fig. 3's claim at integration-test scale: with the same number of
+    // exact oracle calls, MP-BCFW's primal suboptimality is no worse than
+    // BCFW's (and substantially better on the structured tasks).
+    for dataset in DatasetKind::all() {
+        let base = TrainSpec {
+            dataset,
+            scale: Scale::Tiny,
+            max_iters: 6,
+            ..Default::default()
+        };
+        let group = RunGroup::run(&base, &[Algo::Bcfw, Algo::MpBcfw], &[0, 1, 2], |_| {}).unwrap();
+        let med = |algo: &str| -> f64 {
+            let mut v: Vec<f64> = group
+                .series
+                .iter()
+                .filter(|s| s.algo == algo)
+                .map(|s| s.points.last().unwrap().primal - group.best_dual)
+                .collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let (bcfw, mp) = (med("bcfw"), med("mp-bcfw"));
+        assert!(
+            mp <= bcfw * 1.10 + 1e-12,
+            "{dataset:?}: median mp-bcfw {mp} worse than bcfw {bcfw}"
+        );
+    }
+}
+
+#[test]
+fn crossover_speedup_grows_with_oracle_cost() {
+    // §4.1's runtime story, in miniature: make the oracle virtually
+    // expensive and check MP-BCFW reaches BCFW's final gap sooner.
+    let mk = |algo: Algo, delay: f64| TrainSpec {
+        dataset: DatasetKind::UspsLike,
+        scale: Scale::Tiny,
+        algo,
+        max_iters: 6,
+        oracle_delay: delay,
+        ..Default::default()
+    };
+    let delay = 0.01;
+    let bcfw = mpbcfw::coordinator::trainer::train(&mk(Algo::Bcfw, delay)).unwrap();
+    let target = bcfw.final_gap();
+    let t_bcfw = bcfw.points.last().unwrap().time;
+    let mp = mpbcfw::coordinator::trainer::train(&mk(Algo::MpBcfw, delay)).unwrap();
+    let t_mp = mp
+        .points
+        .iter()
+        .find(|p| p.primal - p.dual <= target)
+        .map(|p| p.time)
+        .unwrap_or(mp.points.last().unwrap().time);
+    assert!(
+        t_mp < t_bcfw,
+        "with a {delay}s oracle, MP-BCFW ({t_mp}s) should reach BCFW's gap before BCFW ({t_bcfw}s)"
+    );
+}
