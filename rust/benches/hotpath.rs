@@ -6,6 +6,7 @@
 use std::time::Instant;
 
 use mpbcfw::coordinator::dual::DualState;
+use mpbcfw::coordinator::parallel;
 use mpbcfw::coordinator::products::{cached_block_updates, GramCache};
 use mpbcfw::coordinator::working_set::WorkingSet;
 use mpbcfw::data::synth::{horseseg_like, ocr_like, usps_like};
@@ -17,6 +18,7 @@ use mpbcfw::model::vec::VecF;
 use mpbcfw::oracle::graphcut::GraphCutProblem;
 use mpbcfw::oracle::multiclass::MulticlassProblem;
 use mpbcfw::oracle::sequence::SequenceProblem;
+use mpbcfw::oracle::wrappers::CountingOracle;
 use mpbcfw::runtime::engine::{NativeEngine, ScoringEngine};
 use mpbcfw::utils::rng::Pcg;
 
@@ -143,6 +145,31 @@ fn main() {
         now += 1;
         std::hint::black_box(cached_block_updates(&mut st2, &mut ws2, &mut gram, 0, 10, now));
     });
+
+    // -- parallel sharded exact-pass dispatch (threads sweep) -----------
+    // The paper's costliest oracle (graph cut) is where sharding pays:
+    // one "op" here is a full exact pass over the dataset.
+    let segc = CountingOracle::new(Box::new(GraphCutProblem::new(horseseg_like::generate(
+        horseseg_like::HorseSegLikeConfig::at_scale(Scale::Small),
+        0,
+    ))));
+    let wseg: Vec<f64> = (0..segc.dim()).map(|_| 0.01 * rng.normal()).collect();
+    let order: Vec<usize> = (0..segc.n()).collect();
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let ns = bench(&format!("exact pass horseseg_like ({threads} threads)"), || {
+            std::hint::black_box(parallel::exact_pass(&segc, &wseg, &order, threads));
+        });
+        sweep.push((threads, ns));
+    }
+    let base_ns = sweep[0].1;
+    for &(threads, ns) in &sweep[1..] {
+        println!(
+            "{:44} {:14.2} x",
+            format!("  oracle-dispatch speedup @ {threads} threads"),
+            base_ns / ns
+        );
+    }
 
     // -- engine scoring paths -------------------------------------------
     let mat: Vec<f64> = (0..64 * 2561).map(|_| rng.normal()).collect();

@@ -1,5 +1,12 @@
-//! Figure/table regeneration harness (paper §4): convergence series
-//! recording, multi-seed sweeps, CSV emission.
+//! Figure/table regeneration harness (paper §4).
+//!
+//! [`harness`] runs algorithm × seed grids over a shared dataset and
+//! computes suboptimalities against the group-wide best dual bound (the
+//! paper's convention); [`figures`] and [`tables`] drive it to regenerate
+//! Figs. 3–6 and the §4.1 statistics / crossover / ablation tables as
+//! CSVs (plus SVG renders via [`plot`]) under `results/`. Entry points:
+//! `mpbcfw bench --figure ...|--table ...` or `cargo bench --bench
+//! figures`.
 pub mod harness;
 pub mod figures;
 pub mod tables;

@@ -17,7 +17,7 @@ USAGE:
   mpbcfw train    [--dataset usps|ocr|horseseg] [--algo fw|bcfw|bcfw-avg|mp-bcfw|mp-bcfw-avg|cutting-plane|ssg|ssg-avg]
                   [--scale tiny|small|paper] [--iters N] [--seed S] [--data-seed S]
                   [--lambda F] [--ttl T] [--cap-n N] [--inner-repeats R] [--no-auto-approx]
-                  [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
+                  [--threads N] [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
                   [--train-loss] [--max-oracle-calls N] [--target-gap F]
   mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
@@ -31,7 +31,13 @@ reloads it and reports the structured train loss on a (re-generated)
 dataset.
 
 The paper's defaults are built in: λ = 1/n, T = 10, N = M = 1000 with the
-§3.4 automatic selection rules active.";
+§3.4 automatic selection rules active.
+
+--threads N shards the exact max-oracle pass over N worker threads
+(native engine only). Oracles score against a per-pass snapshot of w and
+the Frank-Wolfe steps are applied in a deterministic merge order, so the
+convergence trajectory is identical for every N at a fixed seed — only
+the wall-clock changes.";
 
 fn parse_engine(args: &Args) -> anyhow::Result<EngineKind> {
     match args.get_or("engine", "native") {
@@ -79,13 +85,14 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ttl: args.u64_or("ttl", 10).map_err(err)?,
         cap_n: args.usize_or("cap-n", 1000).map_err(err)?,
         max_approx_passes: args.u64_or("max-approx", 1000).map_err(err)?,
+        threads: args.usize_or("threads", 0).map_err(err)?,
         auto_approx: !args.has("no-auto-approx"),
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
     };
     println!(
-        "training {} on {} (scale={}, λ={}, engine={})",
+        "training {} on {} (scale={}, λ={}, engine={}{})",
         spec.algo.name(),
         spec.dataset.name(),
         spec.scale.name(),
@@ -93,6 +100,11 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         match &spec.engine {
             EngineKind::Native => "native",
             EngineKind::Xla { .. } => "xla",
+        },
+        if spec.threads > 0 {
+            format!(", {} oracle threads", spec.threads)
+        } else {
+            String::new()
         },
     );
     let (series, model) = trainer::train_with_model(&spec)?;
@@ -291,6 +303,16 @@ mod tests {
     #[test]
     fn train_tiny_runs() {
         assert_eq!(dispatch(toks("train --scale tiny --iters 2 --dataset usps")), 0);
+    }
+
+    #[test]
+    fn train_with_threads_runs_and_xla_combo_fails() {
+        assert_eq!(dispatch(toks("train --scale tiny --iters 2 --dataset usps --threads 3")), 0);
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --threads 2 --engine xla")),
+            1,
+            "--threads with --engine xla must be rejected"
+        );
     }
 
     #[test]

@@ -1,5 +1,12 @@
-//! Hand-rolled CLI (no `clap` in the offline build): a small flag parser
-//! plus the subcommand implementations used by `main.rs`.
-
+//! Hand-rolled CLI for the `mpbcfw` launcher (no `clap` in the offline
+//! build).
+//!
+//! [`args`] is a tiny declarative flag parser (`--key value`,
+//! `--key=value`, boolean switches, positionals); [`commands`] implements
+//! the subcommands — `train`, `bench`, `gen-data`, `evaluate`, `inspect`
+//! — on top of `coordinator::trainer` and the bench harness. Run
+//! `mpbcfw --help` (or see `commands::USAGE`) for the full surface,
+//! including the `--threads` flag that shards the exact oracle pass over
+//! worker threads.
 pub mod args;
 pub mod commands;

@@ -75,6 +75,14 @@ pub struct Series {
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
     pub wall_secs: f64,
+    /// Cumulative real seconds each worker shard spent in the exact
+    /// oracle, summed over all parallel exact passes. Empty for
+    /// sequential runs; the spread across entries shows shard imbalance.
+    pub shard_secs: Vec<f64>,
+    /// Cumulative wall-clock seconds of the parallel exact passes (the
+    /// critical path — compare against `shard_secs.iter().sum()` to read
+    /// off the realized oracle-dispatch speedup).
+    pub exact_pass_secs: f64,
 }
 
 impl Series {
@@ -91,12 +99,29 @@ impl Series {
         self.points.last().map(|p| p.primal - p.dual).unwrap_or(f64::INFINITY)
     }
 
+    /// Accumulate the timing report of one parallel exact pass
+    /// (per-shard oracle seconds + pass wall time).
+    pub fn note_parallel_pass(&mut self, shard_secs: &[f64], wall_secs: f64) {
+        if self.shard_secs.len() < shard_secs.len() {
+            self.shard_secs.resize(shard_secs.len(), 0.0);
+        }
+        for (acc, &s) in self.shard_secs.iter_mut().zip(shard_secs) {
+            *acc += s;
+        }
+        self.exact_pass_secs += wall_secs;
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("algo", Json::s(&self.algo)),
             ("dataset", Json::s(&self.dataset)),
             ("seed", Json::Num(self.seed as f64)),
             ("wall_secs", Json::Num(self.wall_secs)),
+            (
+                "shard_secs",
+                Json::Arr(self.shard_secs.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            ("exact_pass_secs", Json::Num(self.exact_pass_secs)),
             ("points", Json::Arr(self.points.iter().map(|p| p.to_json()).collect())),
         ])
     }
@@ -182,12 +207,20 @@ mod tests {
         let s = Series {
             algo: "x".into(),
             dataset: "y".into(),
-            seed: 0,
             points: vec![mk(1.0, 0.2, None), mk(0.8, 0.5, Some(0.55)), mk(0.7, 0.52, None)],
-            wall_secs: 0.0,
+            ..Default::default()
         };
         assert_eq!(s.best_dual(), 0.55);
         assert!((s.final_gap() - (0.7 - 0.52)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn note_parallel_pass_accumulates_per_shard() {
+        let mut s = Series::default();
+        s.note_parallel_pass(&[1.0, 2.0], 2.5);
+        s.note_parallel_pass(&[0.5, 0.5, 1.0], 1.25);
+        assert_eq!(s.shard_secs, vec![1.5, 2.5, 1.0]);
+        assert!((s.exact_pass_secs - 3.75).abs() < 1e-12);
     }
 
     #[test]

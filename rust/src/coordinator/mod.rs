@@ -9,6 +9,7 @@ pub mod averaging;
 pub mod fw;
 pub mod bcfw;
 pub mod mp_bcfw;
+pub mod parallel;
 pub mod metrics;
 pub mod trainer;
 pub mod baselines;

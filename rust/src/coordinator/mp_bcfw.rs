@@ -5,7 +5,10 @@
 //! One outer iteration is:
 //!   1. an *exact pass*: for every example (random order) call the exact
 //!      max-oracle, take the line-searched Frank-Wolfe step, and add the
-//!      returned plane to the example's working set;
+//!      returned plane to the example's working set — optionally sharded
+//!      over worker threads (`threads` ≥ 1) via `coordinator::parallel`,
+//!      which snapshots w for the pass so the trajectory is independent
+//!      of the thread count;
 //!   2. up to M *approximate passes*: the same update but with the
 //!      argmax taken over the cached working set (no oracle call),
 //!      governed by the §3.4 slope rule when `auto_approx` is on, with
@@ -17,6 +20,7 @@ use super::auto::SlopeRule;
 use super::averaging::{best_interpolation, Averager};
 use super::dual::DualState;
 use super::metrics::{EvalCtx, EvalPoint, Series};
+use super::parallel;
 use super::products::{cached_block_updates, GramCache};
 use super::working_set::WorkingSet;
 use crate::model::problem::StructuredProblem;
@@ -30,14 +34,19 @@ use crate::utils::timer::Clock;
 pub struct MpBcfwConfig {
     /// Regularization λ (paper uses 1/n).
     pub lambda: f64,
-    /// Working-set capacity [N]. 0 disables caching entirely → plain BCFW.
+    /// Working-set capacity \[N\]. 0 disables caching entirely → plain BCFW.
     pub cap_n: usize,
-    /// Max approximate passes per outer iteration [M].
+    /// Max approximate passes per outer iteration \[M\].
     pub max_approx_passes: u64,
     /// Use the §3.4 slope rule to stop approximate passes early.
     pub auto_approx: bool,
-    /// Working-set TTL in outer iterations [T].
+    /// Working-set TTL in outer iterations \[T\].
     pub ttl: u64,
+    /// Worker threads for the exact pass. 0 = classic sequential BCFW
+    /// semantics (each oracle sees the freshest w). ≥ 1 switches to the
+    /// sharded snapshot dispatch of `coordinator::parallel`, whose
+    /// trajectory is identical for every thread count at a fixed seed.
+    pub threads: usize,
     /// §3.5 product-cached inner loop with this many repeats per block
     /// visit (paper: 10). 0 or 1 → plain single approximate updates.
     pub inner_repeats: usize,
@@ -69,6 +78,7 @@ impl Default for MpBcfwConfig {
             max_approx_passes: 1000,
             auto_approx: true,
             ttl: 10,
+            threads: 0,
             inner_repeats: 10,
             averaging: false,
             max_iters: 50,
@@ -114,11 +124,23 @@ pub struct MpBcfwRun {
 
 /// Train with MP-BCFW. Returns the convergence series and the final run
 /// state (weights are `run.state.w` after `refresh_w`).
+///
+/// Panics if `cfg.threads > 0` with a non-native engine: the parallel
+/// oracle workers score on per-thread native kernels, and silently
+/// mixing backends within one run would turn backend numeric drift into
+/// exact-vs-approximate inconsistency. The trainer façade rejects the
+/// combination gracefully before getting here.
 pub fn run(
     problem: &CountingOracle,
     eng: &mut dyn ScoringEngine,
     cfg: &MpBcfwConfig,
 ) -> (Series, MpBcfwRun) {
+    assert!(
+        cfg.threads == 0 || eng.name() == "native",
+        "threads > 0 requires the native engine (got {}): parallel oracle workers \
+         score on native kernels",
+        eng.name()
+    );
     let n = problem.n();
     let dim = problem.dim();
     let mut rng = Pcg::new(cfg.seed, 7001);
@@ -152,17 +174,33 @@ pub fn run(
         let mut slope = SlopeRule::start_iteration(f_now, measured(&clock, problem));
 
         // ---- Exact pass (Alg. 3 line 3) -------------------------------
-        for &i in rng.permutation(n).iter() {
+        if cfg.threads > 0 {
+            // Sharded parallel dispatch: all oracles score against the
+            // same snapshot of w, then the line-searched steps are applied
+            // sequentially in permutation order (minibatch-BCFW
+            // semantics; identical trajectory for every thread count).
             run.state.refresh_w();
-            let hat = problem.oracle(i, &run.state.w, eng);
-            // Virtual latency: charge the pausable clock deterministically.
-            if problem.delay > 0.0 {
-                clock.charge(problem.delay);
+            let mut order = rng.permutation(n);
+            // Respect the oracle budget exactly, like the sequential
+            // path's mid-pass break: dispatch only the calls that fit.
+            if cfg.max_oracle_calls > 0 {
+                let remaining =
+                    cfg.max_oracle_calls.saturating_sub(problem.stats().calls) as usize;
+                order.truncate(remaining);
             }
-            run.working_sets[i].insert(hat.clone(), outer);
-            run.state.block_step(i, &hat);
-            if cfg.averaging {
-                run.avg_exact.update(&run.state.phi);
+            let (planes, report) =
+                parallel::exact_pass(problem, &run.state.w, &order, cfg.threads);
+            // Virtual latency: the critical path is the largest shard.
+            if problem.delay > 0.0 {
+                clock.charge(problem.delay * report.max_shard_len as f64);
+            }
+            series.note_parallel_pass(&report.shard_secs, report.wall_secs);
+            for (&i, hat) in order.iter().zip(planes.iter()) {
+                run.working_sets[i].insert(hat.clone(), outer);
+                run.state.block_step(i, hat);
+                if cfg.averaging {
+                    run.avg_exact.update(&run.state.phi);
+                }
             }
             if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
                 record_point(
@@ -170,6 +208,27 @@ pub fn run(
                     &mut series,
                 );
                 break 'outer;
+            }
+        } else {
+            for &i in rng.permutation(n).iter() {
+                run.state.refresh_w();
+                let hat = problem.oracle(i, &run.state.w, eng);
+                // Virtual latency: charge the pausable clock deterministically.
+                if problem.delay > 0.0 {
+                    clock.charge(problem.delay);
+                }
+                run.working_sets[i].insert(hat.clone(), outer);
+                run.state.block_step(i, &hat);
+                if cfg.averaging {
+                    run.avg_exact.update(&run.state.phi);
+                }
+                if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
+                    record_point(
+                        problem, eng, &mut clock, cfg, &mut run, outer, last_approx_passes,
+                        &mut series,
+                    );
+                    break 'outer;
+                }
             }
         }
 

@@ -136,12 +136,18 @@ pub struct TrainSpec {
     pub oracle_delay: f64,
     /// §3.5 product cache inner repeats (0/1 disables).
     pub inner_repeats: usize,
-    /// Working-set TTL [T].
+    /// Working-set TTL \[T\].
     pub ttl: u64,
-    /// Working-set cap [N].
+    /// Working-set cap \[N\].
     pub cap_n: usize,
-    /// Max approximate passes [M].
+    /// Max approximate passes \[M\].
     pub max_approx_passes: u64,
+    /// Worker threads for the exact pass (BCFW/MP-BCFW family only).
+    /// 0 = classic sequential semantics; ≥ 1 = sharded snapshot dispatch
+    /// (`coordinator::parallel`), thread-count-invariant trajectory.
+    /// Workers score on native kernels, so this requires the native
+    /// engine.
+    pub threads: usize,
     /// Use the §3.4 slope rule.
     pub auto_approx: bool,
     pub engine: EngineKind,
@@ -167,6 +173,7 @@ impl Default for TrainSpec {
             ttl: 10,
             cap_n: 1000,
             max_approx_passes: 1000,
+            threads: 0,
             auto_approx: true,
             engine: EngineKind::Native,
             with_train_loss: false,
@@ -201,6 +208,16 @@ pub fn train(spec: &TrainSpec) -> anyhow::Result<Series> {
 
 /// Train and also return a persistable model checkpoint.
 pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckpoint)> {
+    anyhow::ensure!(
+        spec.threads == 0 || spec.engine == EngineKind::Native,
+        "--threads requires --engine native (parallel oracle workers score on native kernels)"
+    );
+    anyhow::ensure!(
+        spec.threads == 0
+            || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--threads applies to the bcfw/mp-bcfw family only; {} would silently ignore it",
+        spec.algo.name()
+    );
     let problem = build_problem(spec);
     let mut eng = spec.engine.build()?;
     let (series, phi) = train_on_full(spec, &problem, eng.as_mut());
@@ -287,6 +304,7 @@ pub fn train_on_full(
                 max_approx_passes: if multi { spec.max_approx_passes } else { 0 },
                 auto_approx: multi && spec.auto_approx,
                 ttl: spec.ttl,
+                threads: spec.threads,
                 inner_repeats: if multi { spec.inner_repeats } else { 0 },
                 averaging: matches!(spec.algo, Algo::BcfwAvg | Algo::MpBcfwAvg),
                 max_iters: spec.max_iters,
@@ -376,6 +394,31 @@ mod tests {
             assert!(last.dual > 0.0, "{ds:?}: dual not positive");
             assert!(last.primal >= last.dual - 1e-9, "{ds:?}: weak duality");
         }
+    }
+
+    #[test]
+    fn threads_train_and_xla_rejection() {
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 3,
+            threads: 2,
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        let last = series.points.last().unwrap();
+        assert!(last.primal >= last.dual - 1e-9);
+        assert!(!series.shard_secs.is_empty(), "parallel runs record shard timings");
+        // Parallel dispatch scores on native kernels only.
+        let bad = TrainSpec {
+            engine: EngineKind::Xla { artifacts_dir: "artifacts".into() },
+            ..spec.clone()
+        };
+        assert!(train(&bad).is_err());
+        // Algorithms outside the bcfw/mp-bcfw family would silently
+        // ignore --threads; reject instead of misleading the user.
+        let ignored = TrainSpec { algo: Algo::Fw, ..spec };
+        assert!(train(&ignored).is_err());
     }
 
     #[test]

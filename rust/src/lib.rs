@@ -4,19 +4,62 @@
 //! *"A Multi-Plane Block-Coordinate Frank-Wolfe Algorithm for Training
 //! Structural SVMs with a Costly max-Oracle"* (2014).
 //!
-//! Layer 3 (this crate) implements the training coordinator — FW / BCFW /
-//! MP-BCFW optimizers with working sets, automatic parameter selection,
-//! inner-product caching and iterate averaging — plus every substrate the
-//! paper depends on: three max-oracles (multiclass, Viterbi, graph-cut on
-//! our own Boykov–Kolmogorov max-flow), synthetic counterparts of the
-//! paper's three datasets, and a figure-regeneration bench harness.
+//! ## Architecture
+//!
+//! The system is three layers. Layer 3 (this crate) implements the
+//! training coordinator — FW / BCFW / MP-BCFW optimizers with working
+//! sets, automatic parameter selection, inner-product caching, iterate
+//! averaging, and a sharded parallel dispatch of the exact oracle pass —
+//! plus every substrate the paper depends on: three max-oracles
+//! (multiclass, Viterbi, graph-cut on our own Boykov–Kolmogorov
+//! max-flow), synthetic counterparts of the paper's three datasets, and a
+//! figure-regeneration bench harness.
 //!
 //! Layers 2/1 (build-time Python under `python/`) AOT-lower the dense
-//! scoring hot spots (JAX + Pallas kernels) to HLO text; `runtime` loads
-//! and executes those artifacts through PJRT so the request path never
-//! touches Python.
+//! scoring hot spots (JAX + Pallas kernels) to HLO text; [`runtime`]
+//! loads and executes those artifacts through PJRT (feature `xla-rt`) so
+//! the request path never touches Python.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! ## Module graph
+//!
+//! Dependencies point downward; each module only uses the layers below.
+//!
+//! ```text
+//!   cli ──► coordinator ──► oracle ──► model ──► utils
+//!    │        │    │          │
+//!    │        │    │          └──► maxflow        (BK min-cut substrate)
+//!    │        │    └─────────► data               (synthetic datasets + IO)
+//!    │        └──────────────► runtime            (scoring engines)
+//!    └──► bench               (figure/table regeneration harness)
+//! ```
+//!
+//! * [`utils`] — seeded RNG, timing, JSON/CSV, a mini property-testing
+//!   harness (the offline build has no external crates).
+//! * [`model`] — cutting-plane algebra (planes, line search, dual bound),
+//!   sparse/dense vectors, feature layouts, and the `StructuredProblem`
+//!   trait every oracle implements (required `Send + Sync` so problems
+//!   can be shared across worker threads).
+//! * [`maxflow`] — Boykov–Kolmogorov s-t min-cut, plus an Edmonds–Karp
+//!   reference used by tests.
+//! * [`data`] — USPS/OCR/HorseSeg-like dataset generators at three
+//!   scales, binary dataset IO.
+//! * [`oracle`] — the three exact max-oracles and the atomic
+//!   `CountingOracle` instrumentation wrapper (call counting, virtual
+//!   latency injection).
+//! * [`coordinator`] — the paper's contribution: `mp_bcfw` (Algorithms
+//!   2/3), `working_set` (§3.3), `auto` (§3.4 slope rule), `products`
+//!   (§3.5 Gram cache), `averaging` (§3.6), `parallel` (sharded exact
+//!   pass over `std::thread::scope` workers), classic `baselines`, and
+//!   the `trainer` façade.
+//! * [`runtime`] — the `ScoringEngine` abstraction with the native Rust
+//!   backend and the PJRT/XLA backend behind `xla-rt`.
+//! * [`bench`] — multi-seed run groups, CSV/SVG emission for the paper's
+//!   figures and tables.
+//! * [`cli`] — the `mpbcfw` launcher (`train`, `bench`, `gen-data`,
+//!   `evaluate`, `inspect`).
+//!
+//! See the repository `README.md` for a section-by-section map from the
+//! paper to these modules and for CLI quickstarts.
 pub mod utils;
 pub mod model;
 pub mod maxflow;

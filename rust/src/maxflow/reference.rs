@@ -8,7 +8,7 @@ pub mod ref_maxflow {
     /// Adjacency-matrix graph over n regular nodes + implicit s, t.
     pub struct RefGraph {
         n: usize,
-        /// capacity[u][v] over node ids 0..n+2 (n = source, n+1 = sink).
+        /// `capacity[u][v]` over node ids 0..n+2 (n = source, n+1 = sink).
         cap: Vec<Vec<f64>>,
         folded: f64,
         orig: Vec<Vec<f64>>,

@@ -12,7 +12,14 @@ use super::plane::Plane;
 use crate::runtime::engine::ScoringEngine;
 
 /// A structured prediction training problem.
-pub trait StructuredProblem {
+///
+/// Implementations must be `Send + Sync`: the parallel coordinator
+/// (`coordinator::parallel`) shares one problem across worker threads
+/// during the exact pass, with each worker calling `oracle` on its own
+/// shard of blocks concurrently. Everything `oracle` reads is immutable
+/// problem data, so for concrete problems this costs nothing; wrappers
+/// with instrumentation state (`oracle::CountingOracle`) use atomics.
+pub trait StructuredProblem: Send + Sync {
     /// Number of training examples n.
     fn n(&self) -> usize;
 

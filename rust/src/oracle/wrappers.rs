@@ -7,15 +7,23 @@
 //! (e.g. the paper's 2.2 s graph cuts) deterministically: the surcharge is
 //! added to the trainer's pausable clock rather than slept away, so
 //! crossover sweeps run in seconds instead of hours.
+//!
+//! All counters are atomic so one `CountingOracle` can be shared across
+//! the scoped worker threads of the parallel exact pass
+//! (`coordinator::parallel`): counts stay exact under concurrency, and
+//! the float accumulators use compare-and-swap addition. Relaxed ordering
+//! suffices — the counters carry no synchronization duties, and the
+//! thread join at the end of each parallel pass publishes them before the
+//! coordinator reads.
 
-use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use crate::model::plane::Plane;
 use crate::model::problem::StructuredProblem;
 use crate::runtime::engine::ScoringEngine;
 use crate::utils::timer::Stopwatch;
 
-/// Mutable counters (interior mutability: the problem trait takes &self).
+/// Snapshot of the oracle counters.
 #[derive(Clone, Debug, Default)]
 pub struct OracleStats {
     /// Counted exact-oracle calls (training only; evaluation sweeps are
@@ -29,17 +37,40 @@ pub struct OracleStats {
     pub virtual_secs: f64,
 }
 
+/// Lock-free `+=` on an f64 stored as bits in an `AtomicU64`.
+fn atomic_add_f64(cell: &AtomicU64, add: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + add).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
 pub struct CountingOracle {
     inner: Box<dyn StructuredProblem>,
-    stats: RefCell<OracleStats>,
-    counting: RefCell<bool>,
+    calls: AtomicU64,
+    calls_all: AtomicU64,
+    real_secs: AtomicU64,
+    virtual_secs: AtomicU64,
+    counting: AtomicBool,
     /// Virtual per-call latency in seconds (0 = disabled).
     pub delay: f64,
 }
 
 impl CountingOracle {
     pub fn new(inner: Box<dyn StructuredProblem>) -> Self {
-        CountingOracle { inner, stats: RefCell::new(OracleStats::default()), counting: RefCell::new(true), delay: 0.0 }
+        CountingOracle {
+            inner,
+            calls: AtomicU64::new(0),
+            calls_all: AtomicU64::new(0),
+            real_secs: AtomicU64::new(0),
+            virtual_secs: AtomicU64::new(0),
+            counting: AtomicBool::new(true),
+            delay: 0.0,
+        }
     }
 
     pub fn with_delay(inner: Box<dyn StructuredProblem>, delay: f64) -> Self {
@@ -50,15 +81,23 @@ impl CountingOracle {
 
     /// Toggle counting (disabled during evaluation sweeps).
     pub fn set_counting(&self, on: bool) {
-        *self.counting.borrow_mut() = on;
+        self.counting.store(on, Ordering::Relaxed);
     }
 
     pub fn stats(&self) -> OracleStats {
-        self.stats.borrow().clone()
+        OracleStats {
+            calls: self.calls.load(Ordering::Relaxed),
+            calls_all: self.calls_all.load(Ordering::Relaxed),
+            real_secs: f64::from_bits(self.real_secs.load(Ordering::Relaxed)),
+            virtual_secs: f64::from_bits(self.virtual_secs.load(Ordering::Relaxed)),
+        }
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = OracleStats::default();
+        self.calls.store(0, Ordering::Relaxed);
+        self.calls_all.store(0, Ordering::Relaxed);
+        self.real_secs.store(0, Ordering::Relaxed);
+        self.virtual_secs.store(0, Ordering::Relaxed);
     }
 
     pub fn inner(&self) -> &dyn StructuredProblem {
@@ -83,12 +122,11 @@ impl StructuredProblem for CountingOracle {
         let sw = Stopwatch::start();
         let plane = self.inner.oracle(i, w, eng);
         let secs = sw.secs();
-        let mut st = self.stats.borrow_mut();
-        st.calls_all += 1;
-        if *self.counting.borrow() {
-            st.calls += 1;
-            st.real_secs += secs;
-            st.virtual_secs += self.delay;
+        self.calls_all.fetch_add(1, Ordering::Relaxed);
+        if self.counting.load(Ordering::Relaxed) {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            atomic_add_f64(&self.real_secs, secs);
+            atomic_add_f64(&self.virtual_secs, self.delay);
         }
         plane
     }
@@ -167,5 +205,26 @@ mod tests {
         p.reset_stats();
         assert_eq!(p.stats().calls, 0);
         assert_eq!(p.stats().calls_all, 0);
+    }
+
+    #[test]
+    fn concurrent_counting_is_exact() {
+        let p = wrapped();
+        let w = vec![0.0; p.dim()];
+        let n = p.n();
+        let rounds = 8usize;
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let (p, w) = (&p, &w);
+                s.spawn(move || {
+                    let mut eng = NativeEngine;
+                    for k in 0..rounds {
+                        p.oracle((t + 4 * k) % n, w, &mut eng);
+                    }
+                });
+            }
+        });
+        assert_eq!(p.stats().calls, 4 * rounds as u64);
+        assert_eq!(p.stats().calls_all, 4 * rounds as u64);
     }
 }

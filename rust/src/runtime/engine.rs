@@ -15,7 +15,7 @@ use crate::utils::math;
 
 /// Dense scoring backend.
 pub trait ScoringEngine {
-    /// out = mat[rows×cols] · v[cols]   (row-major mat)
+    /// `out = mat[rows×cols] · v[cols]` (row-major `mat`)
     fn matvec(&mut self, mat: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut Vec<f64>);
 
     /// out = a[m×k] · bᵀ where b is [n×k] row-major (out is m×n).

@@ -1,5 +1,12 @@
-//! Runtime layer: scoring engines (native Rust and PJRT-backed XLA) and
-//! the artifact manifest loader for `artifacts/*.hlo.txt`.
+//! Runtime layer: dense-scoring backends behind one tiny trait.
+//!
+//! [`engine`] defines `ScoringEngine` (row-major mat·vec / mat·matᵀ) with
+//! the pure-Rust `NativeEngine`; behind the `xla-rt` feature, `xla`
+//! executes the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` through PJRT, with [`manifest`] describing the
+//! shipped shape buckets (`artifacts/*.hlo.txt`). The parity test suite
+//! pins both backends to the same numbers. Oracle workers in the parallel
+//! exact pass construct their own stateless `NativeEngine` per thread.
 pub mod engine;
 pub mod manifest;
 #[cfg(feature = "xla-rt")]

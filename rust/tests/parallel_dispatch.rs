@@ -1,0 +1,170 @@
+//! Integration tests for the sharded parallel exact-pass dispatch
+//! (`coordinator::parallel` + the `threads` knob of MP-BCFW).
+//!
+//! The contract under test: oracle calls are computed against a per-pass
+//! snapshot of w and the Frank-Wolfe steps are merged in permutation
+//! order, so at a fixed seed the convergence trajectory is *identical*
+//! for every thread count, and the atomic call counters stay exact under
+//! concurrency.
+
+use mpbcfw::coordinator::mp_bcfw::{self, MpBcfwConfig};
+use mpbcfw::coordinator::parallel;
+use mpbcfw::data::synth::usps_like::{generate, UspsLikeConfig};
+use mpbcfw::data::types::Scale;
+use mpbcfw::model::problem::StructuredProblem;
+use mpbcfw::oracle::multiclass::MulticlassProblem;
+use mpbcfw::oracle::wrappers::CountingOracle;
+use mpbcfw::runtime::engine::NativeEngine;
+use mpbcfw::utils::rng::Pcg;
+
+fn tiny_problem(seed: u64) -> CountingOracle {
+    CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+        UspsLikeConfig::at_scale(Scale::Tiny),
+        seed,
+    ))))
+}
+
+#[test]
+fn same_seed_trajectory_matches_across_thread_counts() {
+    // The fixed pass schedule (auto_approx off) removes the only
+    // timing-dependent decision; everything else is deterministic.
+    let mut all = Vec::new();
+    for threads in [1usize, 4] {
+        let problem = tiny_problem(5);
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig {
+            max_iters: 6,
+            seed: 11,
+            threads,
+            auto_approx: false,
+            max_approx_passes: 2,
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        let (series, _) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        all.push(series);
+    }
+    let (a, b) = (&all[0], &all[1]);
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(
+            pa.oracle_calls, pb.oracle_calls,
+            "atomic oracle-call counts must match exactly"
+        );
+        assert!(
+            (pa.dual - pb.dual).abs() <= 1e-9 * (1.0 + pa.dual.abs()),
+            "dual trajectory diverged: {} vs {} at outer {}",
+            pa.dual,
+            pb.dual,
+            pa.outer
+        );
+        assert!(
+            (pa.primal - pb.primal).abs() <= 1e-9 * (1.0 + pa.primal.abs()),
+            "primal trajectory diverged: {} vs {} at outer {}",
+            pa.primal,
+            pb.primal,
+            pa.outer
+        );
+    }
+}
+
+#[test]
+fn parallel_run_converges_with_defaults() {
+    let problem = tiny_problem(3);
+    let mut eng = NativeEngine;
+    let cfg = MpBcfwConfig { max_iters: 10, threads: 4, ..MpBcfwConfig::mp_paper(1.0 / 60.0) };
+    let (series, run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+    for w in series.points.windows(2) {
+        assert!(w[1].dual >= w[0].dual - 1e-10, "dual decreased: {w:?}");
+    }
+    let first = &series.points[0];
+    let last = series.points.last().unwrap();
+    assert!(last.primal - last.dual < first.primal - first.dual);
+    assert!(last.primal - last.dual >= -1e-9, "weak duality violated");
+    assert!(run.state.consistency_error() < 1e-6);
+    assert!(!series.shard_secs.is_empty(), "parallel runs must record shard timings");
+    assert!(series.exact_pass_secs > 0.0);
+}
+
+#[test]
+fn exact_pass_planes_match_sequential_oracle() {
+    let problem = tiny_problem(1);
+    let mut rng = Pcg::seeded(7);
+    let w: Vec<f64> = (0..problem.dim()).map(|_| rng.normal()).collect();
+    let order: Vec<usize> = (0..problem.n()).rev().collect();
+    let (planes, report) = parallel::exact_pass(&problem, &w, &order, 3);
+    assert_eq!(planes.len(), order.len());
+    assert_eq!(report.shard_secs.len(), 3);
+    let mut eng = NativeEngine;
+    for (&i, p) in order.iter().zip(&planes) {
+        let q = problem.inner().oracle(i, &w, &mut eng);
+        assert_eq!(p.tag, q.tag, "plane mismatch at block {i}");
+        assert_eq!(p.off, q.off);
+    }
+}
+
+#[test]
+fn virtual_latency_charged_for_critical_path_only() {
+    // n = 60, threads = 4 → 15 calls per shard per pass. With BCFW
+    // semantics (no approximate passes) and 2 outer iterations the
+    // parallel run must be charged 2·15·delay of virtual time, not the
+    // sequential 2·60·delay.
+    let delay = 0.01;
+    let problem = CountingOracle::with_delay(
+        Box::new(MulticlassProblem::new(generate(UspsLikeConfig::at_scale(Scale::Tiny), 2))),
+        delay,
+    );
+    let n = problem.n() as f64;
+    let mut eng = NativeEngine;
+    let cfg = MpBcfwConfig { max_iters: 2, threads: 4, ..MpBcfwConfig::bcfw(0.02) };
+    let (series, _) = mp_bcfw::run(&problem, &mut eng, &cfg);
+    let t = series.points.last().unwrap().time;
+    let critical = 2.0 * (n / 4.0) * delay;
+    let sequential = 2.0 * n * delay;
+    assert!(t >= critical - 1e-9, "measured {t} < critical-path charge {critical}");
+    assert!(
+        t < sequential,
+        "measured {t} should be far below the sequential charge {sequential}"
+    );
+    // The per-call oracle *stat* still accounts every virtual second.
+    let st = problem.stats();
+    assert!((st.virtual_secs - sequential).abs() < 1e-9);
+}
+
+#[test]
+fn oracle_budget_is_exact_in_parallel_mode() {
+    // n = 60; budget 90 → a full first pass (60) plus a truncated second
+    // pass (30), never an overshoot (the sequential path breaks mid-pass
+    // at exactly the budget; the parallel path truncates the dispatch).
+    let problem = tiny_problem(1);
+    let mut eng = NativeEngine;
+    let cfg = MpBcfwConfig {
+        max_iters: 100,
+        max_oracle_calls: 90,
+        threads: 4,
+        ..MpBcfwConfig::mp_paper(0.02)
+    };
+    let (series, _) = mp_bcfw::run(&problem, &mut eng, &cfg);
+    assert_eq!(series.points.last().unwrap().oracle_calls, 90);
+    assert_eq!(problem.stats().calls, 90);
+}
+
+#[test]
+fn counting_oracle_is_safe_under_scoped_threads() {
+    let problem = tiny_problem(4);
+    let w = vec![0.0; problem.dim()];
+    let n = problem.n();
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let (problem, w) = (&problem, &w);
+            s.spawn(move || {
+                let mut eng = NativeEngine;
+                for i in (t..n).step_by(4) {
+                    problem.oracle(i, w, &mut eng);
+                }
+            });
+        }
+    });
+    assert_eq!(problem.stats().calls, n as u64);
+    assert_eq!(problem.stats().calls_all, n as u64);
+    assert!(problem.stats().real_secs >= 0.0);
+}

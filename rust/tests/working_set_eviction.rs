@@ -1,0 +1,137 @@
+//! Integration coverage for the §3.3/§3.4 working-set eviction rules and
+//! the id contract the §3.5 Gram cache depends on: cap-N longest-inactive
+//! eviction, TTL-T expiry, tag refresh on reinsert, and stable entry ids
+//! across evictions (ids are never reused, so cached inner products can
+//! never be served for the wrong plane).
+
+use mpbcfw::coordinator::products::GramCache;
+use mpbcfw::coordinator::working_set::WorkingSet;
+use mpbcfw::model::plane::Plane;
+use mpbcfw::model::vec::VecF;
+
+fn plane(tag: u64, vals: &[f64]) -> Plane {
+    let pairs: Vec<(u32, f64)> =
+        vals.iter().enumerate().map(|(i, &v)| (i as u32, v)).collect();
+    Plane::new(VecF::sparse(4, pairs), 0.1 * tag as f64, tag)
+}
+
+fn tags(ws: &WorkingSet) -> Vec<u64> {
+    ws.entries().iter().map(|e| e.plane.tag).collect()
+}
+
+#[test]
+fn cap_evicts_longest_inactive_not_oldest_inserted() {
+    let mut ws = WorkingSet::new(2);
+    ws.insert(plane(1, &[1.0]), 0);
+    ws.insert(plane(2, &[2.0]), 1);
+    // Tag 1 was inserted first but is the most recently active.
+    ws.touch(0, 5);
+    ws.insert(plane(3, &[3.0]), 6);
+    assert_eq!(ws.len(), 2);
+    let t = tags(&ws);
+    assert!(t.contains(&1) && t.contains(&3), "victim must be tag 2 (inactive longest): {t:?}");
+}
+
+#[test]
+fn ttl_expiry_is_inclusive_at_the_cutoff() {
+    let mut ws = WorkingSet::new(100);
+    ws.insert(plane(1, &[1.0]), 2); // last_active 2
+    ws.insert(plane(2, &[2.0]), 7); // last_active 7 = cutoff → kept
+    ws.insert(plane(3, &[3.0]), 9);
+    // cutoff = now - ttl = 10 - 3 = 7; entries with last_active >= 7 stay.
+    let evicted = ws.evict_stale(10, 3);
+    assert_eq!(evicted, 1);
+    assert_eq!(tags(&ws), vec![2, 3]);
+}
+
+#[test]
+fn reinsert_refreshes_tag_without_new_entry_or_new_id() {
+    let mut ws = WorkingSet::new(10);
+    ws.insert(plane(7, &[1.0]), 0);
+    let id_before = ws.id(0);
+    let idx = ws.insert(plane(7, &[1.0]), 4);
+    assert_eq!(ws.len(), 1, "same-tag reinsert must dedup");
+    assert_eq!(idx, 0);
+    assert_eq!(ws.entries()[0].last_active, 4, "activity refreshed");
+    assert_eq!(ws.id(0), id_before, "dedup keeps the stable id");
+    // A refreshed entry survives a TTL sweep that would have killed the
+    // original insertion time.
+    assert_eq!(ws.evict_stale(6, 3), 0);
+    assert_eq!(ws.len(), 1);
+}
+
+#[test]
+fn ids_are_never_reused_across_evictions() {
+    let mut ws = WorkingSet::new(2);
+    let mut all_ids: Vec<u64> = Vec::new();
+    let mut prev_newest: Option<u64> = None;
+    for t in 0..20u64 {
+        ws.insert(plane(100 + t, &[t as f64 + 1.0]), t);
+        let step_ids: Vec<u64> = (0..ws.len()).map(|i| ws.id(i)).collect();
+        let newest = *step_ids.iter().max().unwrap();
+        if let Some(prev) = prev_newest {
+            assert!(newest > prev, "a fresh insert must mint a strictly larger id");
+        }
+        prev_newest = Some(newest);
+        all_ids.extend(step_ids);
+        ws.evict_stale(t, 2);
+    }
+    // 20 distinct tags inserted → 20 distinct ids handed out, none
+    // recycled from evicted entries.
+    let mut uniq = all_ids;
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), 20);
+}
+
+#[test]
+fn gram_cache_stays_consistent_across_evictions() {
+    let mut ws = WorkingSet::new(2);
+    let p1 = plane(1, &[1.0, 0.0, 0.0]);
+    let p2 = plane(2, &[0.0, 2.0, 0.0]);
+    let p3 = plane(3, &[3.0, 4.0, 0.0]);
+    ws.insert(p1, 0);
+    ws.insert(p2.clone(), 1);
+    let mut gram = GramCache::new();
+    // Warm the cache with ⟨p1, p2⟩ = 0 under ids (0, 1).
+    assert_eq!(gram.get(&ws, 0, 1), 0.0);
+    assert_eq!(gram.misses, 1);
+
+    // Insert p3: cap 2 evicts p1 (longest inactive). Entries are now
+    // p2 (id 1) and p3 (id 2) — the (index 0, index 1) pair maps to a
+    // *different* id key, so the stale ⟨p1, p2⟩ value cannot be served.
+    ws.insert(p3.clone(), 2);
+    assert_eq!(tags(&ws), vec![2, 3]);
+    let v = gram.get(&ws, 0, 1);
+    assert_eq!(v, 0.0 * 3.0 + 2.0 * 4.0, "fresh product ⟨p2, p3⟩ = 8");
+    assert_eq!(gram.misses, 2, "new id pair is a miss, not a stale hit");
+
+    // The surviving pair keeps hitting the cache.
+    let hits_before = gram.hits;
+    assert_eq!(gram.get(&ws, 0, 1), v);
+    assert_eq!(gram.hits, hits_before + 1);
+
+    // Dropping dead ids shrinks the cache without touching live entries.
+    let alive: Vec<u64> = (0..ws.len()).map(|i| ws.id(i)).collect();
+    gram.retain_ids(&|id| alive.contains(&id));
+    assert_eq!(gram.len(), 1);
+    assert_eq!(gram.get(&ws, 0, 1), v);
+}
+
+#[test]
+fn norms_follow_entries_through_cap_and_ttl_eviction() {
+    let mut ws = WorkingSet::new(3);
+    for t in 0..12u64 {
+        ws.insert(plane(t, &[t as f64, 1.0]), t);
+        if t % 3 == 0 {
+            ws.evict_stale(t, 2);
+        }
+        for idx in 0..ws.len() {
+            let expect = ws.plane(idx).star.nrm2sq();
+            assert!(
+                (ws.norm_sq(idx) - expect).abs() < 1e-12,
+                "norm cache out of sync at t={t} idx={idx}"
+            );
+        }
+    }
+}

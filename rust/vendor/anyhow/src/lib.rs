@@ -1,0 +1,148 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The image this repo builds in has no crates.io access, so the real
+//! `anyhow` cannot be fetched. This shim provides exactly the surface the
+//! workspace uses — [`Error`], [`Result`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros — with the same semantics for that subset:
+//!
+//!  * `Error` is an opaque, `Display`-able error value;
+//!  * any `std::error::Error` converts into it via `?`;
+//!  * `Error` deliberately does **not** implement `std::error::Error`
+//!    itself (exactly like the real crate), which is what makes the
+//!    blanket `From` impl coherent.
+//!
+//! Context chaining (`.context(...)`), backtraces and downcasting are not
+//! implemented; nothing in this workspace uses them.
+
+use std::fmt;
+
+/// An opaque error value carrying a human-readable message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The real anyhow's signature modulo backtraces: every standard error
+// converts. Coherent only because `Error` itself is not a
+// `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?; // std error converts via From
+        ensure!(v > 0, "value must be positive, got {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("3").unwrap(), 3);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("0").unwrap_err().to_string(), "value must be positive, got 0");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain literal");
+        assert_eq!(a.to_string(), "plain literal");
+        let x = 7;
+        let b = anyhow!("captured {x}");
+        assert_eq!(b.to_string(), "captured 7");
+        let c = anyhow!("fmt {} and {}", 1, 2);
+        assert_eq!(c.to_string(), "fmt 1 and 2");
+        let msg = String::from("from a value");
+        let d = anyhow!(msg);
+        assert_eq!(d.to_string(), "from a value");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(v: i32) -> Result<i32> {
+            ensure!(v % 2 == 0);
+            Ok(v)
+        }
+        assert!(f(2).is_ok());
+        assert!(f(3).unwrap_err().to_string().contains("condition failed"));
+    }
+}
