@@ -72,6 +72,10 @@ impl RunGroup {
                 "approx_passes",
                 "approx_steps",
                 "oracle_secs",
+                "sampling",
+                "steps",
+                "pairwise_steps",
+                "gap_est",
             ],
         )?;
         for s in &self.series {
@@ -104,6 +108,10 @@ impl RunGroup {
                     p.approx_passes.to_string(),
                     p.approx_steps.to_string(),
                     format!("{}", p.oracle_secs),
+                    s.sampling.clone(),
+                    s.steps.clone(),
+                    p.pairwise_steps.to_string(),
+                    format!("{}", p.gap_est),
                 ])?;
             }
         }

@@ -5,8 +5,10 @@
 
 use std::path::Path;
 
+use crate::coordinator::sampling::{SamplingStrategy, StepRule};
 use crate::coordinator::trainer::{self, Algo, DatasetKind, TrainSpec};
 use crate::utils::csv::CsvWriter;
+use crate::utils::json::Json;
 
 use super::figures::FigureOpts;
 
@@ -231,8 +233,129 @@ pub fn t_sweep(
     Ok(())
 }
 
-pub const TABLES: &[&str] = &["oracle-stats", "crossover", "product-cache", "t-sweep", "all"];
+/// SAMPLING — gap-aware exact-pass sampling and pairwise steps (Osokin
+/// et al., 2016) vs the paper's uniform permutation, on the two datasets
+/// whose max-oracles are costly (graph cut, Viterbi): exact-oracle calls
+/// needed to reach the duality gap the uniform run attains within the
+/// shared iteration budget. Emits `table_sampling.csv` plus a
+/// machine-readable `bench_sampling.json` BENCH record.
+pub fn sampling_sweep(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_sampling.csv"),
+        &[
+            "dataset",
+            "sampling",
+            "steps",
+            "target_gap",
+            "oracle_calls_to_target",
+            "reached",
+            "final_gap",
+            "time_s",
+        ],
+    )?;
+    let mut entries: Vec<Json> = Vec::new();
+    log("== SAMPLING: gap-aware block sampling + pairwise steps (Osokin '16)".into());
+    for ds in [DatasetKind::HorsesegLike, DatasetKind::OcrLike] {
+        // The paper-default uniform run at the shared iteration budget
+        // fixes the gap target every variant must reach.
+        let base = TrainSpec {
+            dataset: ds,
+            scale: opts.scale,
+            data_seed: opts.data_seed,
+            algo: Algo::MpBcfw,
+            max_iters: opts.max_iters,
+            oracle_delay: opts.oracle_delay,
+            engine: opts.engine.clone(),
+            ..Default::default()
+        };
+        let reference = trainer::train(&base)?;
+        let ref_last = reference.points.last().unwrap();
+        let target = (ref_last.primal - ref_last.dual).max(1e-12);
+        let ref_calls = ref_last.oracle_calls;
+        log(format!(
+            "   {}: target gap {:.3e} (uniform budget: {} exact calls)",
+            ds.name(),
+            target,
+            ref_calls
+        ));
+        for (sampling, steps) in [
+            (SamplingStrategy::Uniform, StepRule::Fw),
+            (SamplingStrategy::Cyclic, StepRule::Fw),
+            (SamplingStrategy::GapProportional, StepRule::Fw),
+            (SamplingStrategy::GapProportional, StepRule::Pairwise),
+        ] {
+            let spec = TrainSpec {
+                sampling,
+                steps,
+                target_gap: target,
+                // Headroom so slower variants still report a crossing.
+                max_iters: base.max_iters * 4,
+                max_oracle_calls: ref_calls * 4,
+                ..base.clone()
+            };
+            let s = trainer::train(&spec)?;
+            let hit = s.points.iter().find(|p| p.primal - p.dual <= target);
+            let (calls, reached) = match hit {
+                Some(p) => (p.oracle_calls, true),
+                None => (s.points.last().unwrap().oracle_calls, false),
+            };
+            let last = s.points.last().unwrap();
+            log(format!(
+                "   {:14} {:7}/{:8} calls-to-target {:>8}{}",
+                ds.name(),
+                sampling.name(),
+                steps.name(),
+                calls,
+                if reached { "" } else { " (not reached)" }
+            ));
+            csv.row(&[
+                ds.name().into(),
+                sampling.name().into(),
+                steps.name().into(),
+                format!("{target}"),
+                calls.to_string(),
+                reached.to_string(),
+                format!("{}", last.primal - last.dual),
+                format!("{}", last.time),
+            ])?;
+            entries.push(Json::obj(vec![
+                ("dataset", Json::s(ds.name())),
+                ("sampling", Json::s(sampling.name())),
+                ("steps", Json::s(steps.name())),
+                ("target_gap", Json::Num(target)),
+                ("oracle_calls_to_target", Json::Num(calls as f64)),
+                ("reached", Json::Bool(reached)),
+                ("budget_calls", Json::Num(ref_calls as f64)),
+                ("final_gap", Json::Num(last.primal - last.dual)),
+                ("time_s", Json::Num(last.time)),
+            ]));
+        }
+    }
+    csv.flush()?;
+    let bench = Json::obj(vec![
+        ("bench", Json::s("sampling")),
+        ("scale", Json::s(opts.scale.name())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(out_dir.join("bench_sampling.json"), bench.to_string())?;
+    log(format!(
+        "   wrote {} and {}",
+        out_dir.join("table_sampling.csv").display(),
+        out_dir.join("bench_sampling.json").display()
+    ));
+    Ok(())
+}
 
+/// Valid `--table` tokens.
+pub const TABLES: &[&str] =
+    &["oracle-stats", "crossover", "product-cache", "t-sweep", "sampling", "all"];
+
+/// Dispatch one `--table` selection.
 pub fn run_table(
     which: &str,
     datasets: &[DatasetKind],
@@ -245,11 +368,13 @@ pub fn run_table(
         "crossover" => crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, log),
         "product-cache" => product_cache_ablation(opts, out_dir, log),
         "t-sweep" => t_sweep(opts, out_dir, log),
+        "sampling" => sampling_sweep(opts, out_dir, log),
         "all" => {
             oracle_stats(datasets, opts, out_dir, &mut log)?;
             crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, &mut log)?;
             product_cache_ablation(opts, out_dir, &mut log)?;
-            t_sweep(opts, out_dir, &mut log)
+            t_sweep(opts, out_dir, &mut log)?;
+            sampling_sweep(opts, out_dir, &mut log)
         }
         other => anyhow::bail!("unknown table {other} (expected one of {TABLES:?})"),
     }
@@ -290,6 +415,24 @@ mod tests {
         assert!(lines.iter().any(|l| l.contains("speedup")));
         let text = std::fs::read_to_string(dir.join("table_crossover.csv")).unwrap();
         assert_eq!(text.lines().count(), 1 + 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sampling_sweep_writes_csv_and_bench_json() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_sampling_{}", std::process::id()));
+        let mut lines = Vec::new();
+        sampling_sweep(&tiny_opts(), &dir, |m| lines.push(m)).unwrap();
+        let text = std::fs::read_to_string(dir.join("table_sampling.csv")).unwrap();
+        assert!(text.starts_with("dataset,sampling,steps,target_gap"));
+        for needle in ["horseseg_like,uniform,fw", "horseseg_like,gap,fw", "ocr_like,gap,pairwise"]
+        {
+            assert!(text.contains(needle), "missing row {needle}:\n{text}");
+        }
+        let json = std::fs::read_to_string(dir.join("bench_sampling.json")).unwrap();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("sampling"));
+        assert_eq!(parsed.get("entries").as_arr().unwrap().len(), 8);
         std::fs::remove_dir_all(dir).ok();
     }
 

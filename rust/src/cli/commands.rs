@@ -4,6 +4,7 @@ use std::path::Path;
 
 use super::args::Args;
 use crate::bench::{figures, tables};
+use crate::coordinator::sampling::{SamplingStrategy, StepRule};
 use crate::coordinator::trainer::{self, Algo, DatasetKind, EngineKind, TrainSpec};
 use crate::model::problem::StructuredProblem as _;
 use crate::data::synth::{horseseg_like, ocr_like, usps_like};
@@ -17,9 +18,10 @@ USAGE:
   mpbcfw train    [--dataset usps|ocr|horseseg] [--algo fw|bcfw|bcfw-avg|mp-bcfw|mp-bcfw-avg|cutting-plane|ssg|ssg-avg]
                   [--scale tiny|small|paper] [--iters N] [--seed S] [--data-seed S]
                   [--lambda F] [--ttl T] [--cap-n N] [--inner-repeats R] [--no-auto-approx]
+                  [--sampling uniform|gap|cyclic] [--steps fw|pairwise]
                   [--threads N] [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
                   [--train-loss] [--max-oracle-calls N] [--target-gap F]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|all
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR]
   mpbcfw gen-data --dataset usps|ocr|horseseg --out FILE [--scale ...] [--seed S]
@@ -37,7 +39,16 @@ The paper's defaults are built in: λ = 1/n, T = 10, N = M = 1000 with the
 (native engine only). Oracles score against a per-pass snapshot of w and
 the Frank-Wolfe steps are applied in a deterministic merge order, so the
 convergence trajectory is identical for every N at a fixed seed — only
-the wall-clock changes.";
+the wall-clock changes.
+
+--sampling picks the exact-pass block order: uniform (the paper's random
+permutation — the default, bit-identical to previous releases at a fixed
+seed), gap (spend oracle calls proportionally to staleness-corrected
+per-block duality-gap estimates, after Osokin et al. 2016 — fewer exact
+calls to a target gap when the oracle is costly), or cyclic (fixed round
+robin). --steps picks the approximate-pass update: fw (the paper's
+toward-step) or pairwise (move weight from the worst cached plane to the
+best; mp-bcfw variants only). See docs/ALGORITHMS.md for guidance.";
 
 fn parse_engine(args: &Args) -> anyhow::Result<EngineKind> {
     match args.get_or("engine", "native") {
@@ -87,6 +98,10 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         max_approx_passes: args.u64_or("max-approx", 1000).map_err(err)?,
         threads: args.usize_or("threads", 0).map_err(err)?,
         auto_approx: !args.has("no-auto-approx"),
+        sampling: SamplingStrategy::parse(args.get_or("sampling", "uniform"))
+            .ok_or_else(|| anyhow::anyhow!("bad --sampling (uniform|gap|cyclic)"))?,
+        steps: StepRule::parse(args.get_or("steps", "fw"))
+            .ok_or_else(|| anyhow::anyhow!("bad --steps (fw|pairwise)"))?,
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
@@ -312,6 +327,26 @@ mod tests {
             dispatch(toks("train --scale tiny --iters 2 --threads 2 --engine xla")),
             1,
             "--threads with --engine xla must be rejected"
+        );
+    }
+
+    #[test]
+    fn train_with_sampling_and_steps_flags() {
+        assert_eq!(
+            dispatch(toks(
+                "train --scale tiny --iters 2 --dataset usps --sampling gap --steps pairwise"
+            )),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --sampling bogus")),
+            1,
+            "unknown --sampling must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --algo bcfw --steps pairwise")),
+            1,
+            "--steps pairwise without working sets must be rejected"
         );
     }
 

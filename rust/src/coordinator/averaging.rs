@@ -17,6 +17,7 @@ pub struct Averager {
 }
 
 impl Averager {
+    /// Empty average over `dim`-dimensional planes.
     pub fn new(dim: usize) -> Averager {
         Averager { k: 0, avg: DensePlane::zeros(dim) }
     }
@@ -37,6 +38,7 @@ impl Averager {
         self.k += 1;
     }
 
+    /// The current weighted average φ̄ (zero plane before any update).
     pub fn value(&self) -> &DensePlane {
         &self.avg
     }

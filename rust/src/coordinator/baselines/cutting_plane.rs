@@ -16,13 +16,16 @@ use crate::runtime::engine::ScoringEngine;
 use crate::utils::math;
 use crate::utils::timer::Clock;
 
+/// Configuration for the one-slack cutting-plane baseline.
 #[derive(Clone, Debug)]
 pub struct CuttingPlaneConfig {
+    /// Regularization λ.
     pub lambda: f64,
     /// Max cutting-plane iterations (= oracle sweeps).
     pub max_iters: u64,
     /// Stop when the master objective improves less than this.
     pub epsilon: f64,
+    /// Also record the mean train task loss at each evaluation (costly).
     pub with_train_loss: bool,
 }
 
@@ -32,6 +35,8 @@ impl Default for CuttingPlaneConfig {
     }
 }
 
+/// Train with one-slack cutting planes; returns the convergence series
+/// and the final weights.
 pub fn run(
     problem: &CountingOracle,
     eng: &mut dyn ScoringEngine,
@@ -142,6 +147,8 @@ fn record(
         ws_mean: 0.0,
         approx_passes: 0,
         approx_steps: 0,
+        pairwise_steps: 0,
+        gap_est: f64::NAN, // the global model tracks no per-block gaps
         oracle_secs: stats.real_secs + stats.virtual_secs,
         train_loss,
     });

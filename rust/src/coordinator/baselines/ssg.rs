@@ -11,14 +11,18 @@ use crate::utils::math;
 use crate::utils::rng::Pcg;
 use crate::utils::timer::Clock;
 
+/// Configuration for the stochastic-subgradient baseline.
 #[derive(Clone, Debug)]
 pub struct SsgConfig {
+    /// Regularization λ.
     pub lambda: f64,
     /// Epochs (n stochastic steps each).
     pub max_iters: u64,
     /// Polyak-style weighted iterate averaging (2t/(k(k+1)) weights).
     pub averaging: bool,
+    /// RNG seed for the stochastic block draws.
     pub seed: u64,
+    /// Also record the mean train task loss at each evaluation (costly).
     pub with_train_loss: bool,
 }
 
@@ -28,6 +32,8 @@ impl Default for SsgConfig {
     }
 }
 
+/// Train with stochastic subgradient descent; returns the convergence
+/// series and the final (averaged when configured) weights.
 pub fn run(
     problem: &CountingOracle,
     eng: &mut dyn ScoringEngine,
@@ -107,6 +113,8 @@ fn record(
         ws_mean: 0.0,
         approx_passes: 0,
         approx_steps: 0,
+        pairwise_steps: 0,
+        gap_est: f64::NAN, // no dual certificate, no gap estimates
         oracle_secs: stats.real_secs + stats.virtual_secs,
         train_loss,
     });

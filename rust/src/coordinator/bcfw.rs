@@ -3,7 +3,10 @@
 //! `MpBcfwConfig::bcfw()` (N = M = 0, same code base as the paper's
 //! runtime-fair comparison); this module exists as a cross-check — a
 //! direct transcription of Algorithm 2 that the test suite pins against
-//! the MP-BCFW special case step by step.
+//! the MP-BCFW special case step by step. It deliberately predates (and
+//! does not use) the `sampling` subsystem, which makes it the bitwise
+//! regression anchor for the uniform-sampling trajectory
+//! (`tests/sampling.rs`).
 
 use super::dual::DualState;
 use crate::model::problem::StructuredProblem;

@@ -22,11 +22,13 @@ pub struct ModelCheckpoint {
     pub problem: String,
     /// Weight dimensionality (consistency check at load/eval time).
     pub dim: usize,
+    /// Regularization λ the model was trained with.
     pub lambda: f64,
     /// Global dual plane φ at save time.
     pub phi: DensePlane,
-    /// Primal/dual values at save time (provenance).
+    /// Primal value at save time (provenance).
     pub primal: f64,
+    /// Dual value at save time (provenance).
     pub dual: f64,
 }
 
@@ -36,6 +38,7 @@ impl ModelCheckpoint {
         self.phi.weights(self.lambda)
     }
 
+    /// Write the checkpoint to `path` (versioned little-endian binary).
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let mut f = BufWriter::new(File::create(path)?);
         f.write_all(MAGIC)?;
@@ -53,6 +56,7 @@ impl ModelCheckpoint {
         f.flush()
     }
 
+    /// Read a checkpoint back; fails on a foreign or truncated file.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<ModelCheckpoint> {
         let mut f = BufReader::new(File::open(path)?);
         let mut magic = [0u8; 8];

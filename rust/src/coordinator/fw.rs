@@ -11,12 +11,18 @@ use crate::oracle::wrappers::CountingOracle;
 use crate::runtime::engine::ScoringEngine;
 use crate::utils::timer::Clock;
 
+/// Configuration for the batch Frank-Wolfe baseline.
 #[derive(Clone, Debug)]
 pub struct FwConfig {
+    /// Regularization λ.
     pub lambda: f64,
+    /// Stop after this many outer iterations.
     pub max_iters: u64,
+    /// Stop once this many exact oracle calls were made (0 = unlimited).
     pub max_oracle_calls: u64,
+    /// Stop once primal − dual ≤ target (0 = disabled).
     pub target_gap: f64,
+    /// Also record the mean train task loss at each evaluation (costly).
     pub with_train_loss: bool,
 }
 
@@ -32,6 +38,8 @@ impl Default for FwConfig {
     }
 }
 
+/// Train with batch Frank-Wolfe (Algorithm 1); returns the convergence
+/// series and the final weights.
 pub fn run(
     problem: &CountingOracle,
     eng: &mut dyn ScoringEngine,
@@ -117,6 +125,8 @@ fn record(
         ws_mean: 0.0,
         approx_passes: 0,
         approx_steps: 0,
+        pairwise_steps: 0,
+        gap_est: f64::NAN, // batch FW tracks no per-block gaps
         oracle_secs: stats.real_secs + stats.virtual_secs,
         train_loss,
     };

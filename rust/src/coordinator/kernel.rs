@@ -17,6 +17,7 @@ pub enum Kernel {
 }
 
 impl Kernel {
+    /// K(a, b).
     pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
         match self {
             Kernel::Linear => math::dot(a, b),
@@ -33,8 +34,8 @@ impl Kernel {
         }
     }
 
+    /// Parse `linear` | `rbf:<gamma>` | `poly:<degree>:<coef>`.
     pub fn parse(s: &str) -> Option<Kernel> {
-        // "linear" | "rbf:<gamma>" | "poly:<degree>:<coef>"
         if s == "linear" {
             return Some(Kernel::Linear);
         }
@@ -58,15 +59,18 @@ pub struct KernelCache<'a> {
     kernel: Kernel,
     feats: &'a [Vec<f64>],
     rows: Vec<Option<Vec<f64>>>,
+    /// Rows materialized so far (cost diagnostic).
     pub computed_rows: usize,
 }
 
 impl<'a> KernelCache<'a> {
+    /// Empty cache over a dataset's feature vectors.
     pub fn new(kernel: Kernel, feats: &'a [Vec<f64>]) -> Self {
         let n = feats.len();
         KernelCache { kernel, feats, rows: vec![None; n], computed_rows: 0 }
     }
 
+    /// Number of data points (matrix side length).
     pub fn n(&self) -> usize {
         self.feats.len()
     }
@@ -82,6 +86,7 @@ impl<'a> KernelCache<'a> {
         self.rows[i].as_ref().unwrap()
     }
 
+    /// Single entry K(i, j), served from a cached row when possible.
     pub fn get(&mut self, i: usize, j: usize) -> f64 {
         // Prefer whichever row is already cached.
         if let Some(r) = &self.rows[i] {

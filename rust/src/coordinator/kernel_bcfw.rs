@@ -24,11 +24,16 @@ use crate::data::types::MulticlassData;
 use crate::utils::math;
 use crate::utils::rng::Pcg;
 
+/// Configuration for the kernelized BCFW run.
 #[derive(Clone, Debug)]
 pub struct KernelBcfwConfig {
+    /// The Mercer kernel to train with.
     pub kernel: Kernel,
+    /// Regularization λ.
     pub lambda: f64,
+    /// Number of BCFW epochs.
     pub passes: u64,
+    /// RNG seed for the pass permutations.
     pub seed: u64,
 }
 
@@ -41,17 +46,24 @@ impl Default for KernelBcfwConfig {
 /// One evaluation point of the kernelized run.
 #[derive(Clone, Debug)]
 pub struct KernelEvalPoint {
+    /// Epoch index (1-based).
     pub pass: u64,
+    /// Primal objective at the epoch's end.
     pub primal: f64,
+    /// Dual objective at the epoch's end.
     pub dual: f64,
+    /// Mean train task loss at the epoch's end.
     pub train_loss: f64,
 }
 
+/// Result of a kernelized BCFW run.
 pub struct KernelBcfwResult {
+    /// Per-epoch evaluation points.
     pub points: Vec<KernelEvalPoint>,
-    /// Final signed dual coefficients g[j*classes + c] (the model: scoring
-    /// a new point x needs K(x_j, x) sums over these).
+    /// Final signed dual coefficients g\[j·classes + c\] (the model:
+    /// scoring a new point x needs K(x_j, x) sums over these).
     pub coeffs: Vec<f64>,
+    /// Kernel matrix rows materialized during training.
     pub kernel_rows_computed: usize,
 }
 

@@ -37,6 +37,13 @@ pub struct EvalPoint {
     pub approx_passes: u64,
     /// Cumulative approximate steps with γ > 0.
     pub approx_steps: u64,
+    /// Cumulative pairwise transfers with γ > 0 (`--steps pairwise`
+    /// only; 0 otherwise).
+    pub pairwise_steps: u64,
+    /// Sum of the per-block duality-gap estimates maintained by the
+    /// sampling subsystem (≈ the duality gap when fresh; NaN until every
+    /// block has been measured, and for optimizers that don't track it).
+    pub gap_est: f64,
     /// Seconds spent in counted oracle calls (real + virtual) so far.
     pub oracle_secs: f64,
     /// Mean task loss of the predictor on the training set (optional
@@ -60,6 +67,8 @@ impl EvalPoint {
             ("ws_mean", Json::Num(self.ws_mean)),
             ("approx_passes", Json::Num(self.approx_passes as f64)),
             ("approx_steps", Json::Num(self.approx_steps as f64)),
+            ("pairwise_steps", Json::Num(self.pairwise_steps as f64)),
+            ("gap_est", Json::Num(self.gap_est)),
             ("oracle_secs", Json::Num(self.oracle_secs)),
             ("train_loss", Json::Num(self.train_loss)),
         ])
@@ -69,9 +78,19 @@ impl EvalPoint {
 /// Full convergence trace of one training run.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
+    /// Algorithm name (`bcfw`, `mp-bcfw`, ...).
     pub algo: String,
+    /// Dataset name.
     pub dataset: String,
+    /// RNG seed of the run.
     pub seed: u64,
+    /// Exact-pass block sampling policy (`uniform` | `gap` | `cyclic`);
+    /// empty for optimizers without the sampling subsystem.
+    pub sampling: String,
+    /// Approximate-pass step rule (`fw` | `pairwise`); empty for
+    /// optimizers without approximate passes.
+    pub steps: String,
+    /// Evaluation snapshots, in order.
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
     pub wall_secs: f64,
@@ -95,6 +114,7 @@ impl Series {
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Duality gap at the last evaluation point (∞ for empty series).
     pub fn final_gap(&self) -> f64 {
         self.points.last().map(|p| p.primal - p.dual).unwrap_or(f64::INFINITY)
     }
@@ -111,11 +131,14 @@ impl Series {
         self.exact_pass_secs += wall_secs;
     }
 
+    /// Serialize the full series (used by the bench harness).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("algo", Json::s(&self.algo)),
             ("dataset", Json::s(&self.dataset)),
             ("seed", Json::Num(self.seed as f64)),
+            ("sampling", Json::s(&self.sampling)),
+            ("steps", Json::s(&self.steps)),
             ("wall_secs", Json::Num(self.wall_secs)),
             (
                 "shard_secs",
@@ -129,9 +152,13 @@ impl Series {
 
 /// Context handed to the evaluator by an optimizer loop.
 pub struct EvalCtx<'a> {
+    /// The instrumented problem (counting disabled during sweeps).
     pub problem: &'a CountingOracle,
+    /// Scoring engine for the evaluation oracles.
     pub eng: &'a mut dyn ScoringEngine,
+    /// The run's pausable measurement clock.
     pub clock: &'a mut Clock,
+    /// Regularization λ of the objective being evaluated.
     pub lambda: f64,
     /// Compute the (expensive) mean train task loss as well.
     pub with_train_loss: bool,
@@ -201,6 +228,8 @@ mod tests {
             ws_mean: 0.0,
             approx_passes: 0,
             approx_steps: 0,
+            pairwise_steps: 0,
+            gap_est: f64::NAN,
             oracle_secs: 0.0,
             train_loss: f64::NAN,
         };
@@ -236,6 +265,8 @@ mod tests {
             ws_mean: 2.5,
             approx_passes: 7,
             approx_steps: 100,
+            pairwise_steps: 40,
+            gap_est: 0.123,
             oracle_secs: 0.9,
             train_loss: 0.1,
         };
@@ -243,5 +274,7 @@ mod tests {
         assert_eq!(j.get("outer").as_f64(), Some(3.0));
         assert_eq!(j.get("primal_avg").as_f64(), Some(0.85));
         assert_eq!(*j.get("dual_avg"), Json::Null);
+        assert_eq!(j.get("pairwise_steps").as_f64(), Some(40.0));
+        assert_eq!(j.get("gap_est").as_f64(), Some(0.123));
     }
 }

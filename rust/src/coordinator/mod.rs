@@ -3,6 +3,7 @@
 //! inner-product caching and iterate averaging, plus classic baselines.
 pub mod dual;
 pub mod working_set;
+pub mod sampling;
 pub mod auto;
 pub mod products;
 pub mod averaging;

@@ -3,18 +3,28 @@
 //! N = M = 0, as in the paper's own runtime-fairness setup.
 //!
 //! One outer iteration is:
-//!   1. an *exact pass*: for every example (random order) call the exact
+//!   1. an *exact pass*: for every sampled block call the exact
 //!      max-oracle, take the line-searched Frank-Wolfe step, and add the
 //!      returned plane to the example's working set — optionally sharded
 //!      over worker threads (`threads` ≥ 1) via `coordinator::parallel`,
 //!      which snapshots w for the pass so the trajectory is independent
-//!      of the thread count;
+//!      of the thread count. The block order comes from the configured
+//!      `coordinator::sampling` policy (the paper's uniform permutation
+//!      by default; gap-proportional per Osokin et al., 2016, spends the
+//!      costly oracle calls where the duality gap concentrates);
 //!   2. up to M *approximate passes*: the same update but with the
 //!      argmax taken over the cached working set (no oracle call),
 //!      governed by the §3.4 slope rule when `auto_approx` is on, with
-//!      TTL eviction of planes inactive for T outer iterations;
+//!      TTL eviction of planes inactive for T outer iterations. With
+//!      `steps: Pairwise` the update moves convex mass from the worst
+//!      cached plane onto the best one instead of shrinking the whole
+//!      block toward it;
 //! plus the §3.6 iterate averaging and the §3.5 product-cached inner
 //! loop as options.
+//!
+//! Per-block duality-gap estimates are read off every line search for
+//! free (`DualState::block_step_info`) and drive both the
+//! gap-proportional sampler and the `gap_est` metrics column.
 
 use super::auto::SlopeRule;
 use super::averaging::{best_interpolation, Averager};
@@ -22,14 +32,35 @@ use super::dual::DualState;
 use super::metrics::{EvalCtx, EvalPoint, Series};
 use super::parallel;
 use super::products::{cached_block_updates, GramCache};
-use super::working_set::WorkingSet;
+use super::sampling::{build_sampler, BlockGaps, BlockSampler as _, SamplingStrategy, StepRule};
+use super::working_set::{BlockCoeffs, WorkingSet};
 use crate::model::problem::StructuredProblem;
 use crate::oracle::wrappers::CountingOracle;
 use crate::runtime::engine::ScoringEngine;
+use crate::utils::math;
 use crate::utils::rng::Pcg;
 use crate::utils::timer::Clock;
 
 /// Configuration for `run` (paper notation in brackets).
+///
+/// # Examples
+///
+/// The two presets reproduce the paper's configurations; the sampling
+/// and step-rule extensions default to the paper's behaviour:
+///
+/// ```
+/// use mpbcfw::coordinator::mp_bcfw::MpBcfwConfig;
+/// use mpbcfw::coordinator::sampling::{SamplingStrategy, StepRule};
+///
+/// let mp = MpBcfwConfig::mp_paper(0.01);
+/// assert_eq!(mp.ttl, 10); // paper default T
+/// assert_eq!(mp.sampling, SamplingStrategy::Uniform);
+/// assert_eq!(mp.steps, StepRule::Fw);
+///
+/// let plain = MpBcfwConfig::bcfw(0.01); // N = M = 0
+/// assert_eq!(plain.cap_n, 0);
+/// assert_eq!(plain.max_approx_passes, 0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct MpBcfwConfig {
     /// Regularization λ (paper uses 1/n).
@@ -52,6 +83,12 @@ pub struct MpBcfwConfig {
     pub inner_repeats: usize,
     /// §3.6 weighted iterate averaging.
     pub averaging: bool,
+    /// Exact-pass block-visit policy (`Uniform` reproduces the paper and
+    /// is bit-identical to the pre-sampling code at a fixed seed).
+    pub sampling: SamplingStrategy,
+    /// Approximate-pass step direction (`Fw` = paper; `Pairwise` moves
+    /// mass from the worst cached plane to the best).
+    pub steps: StepRule,
     /// Stop after this many outer iterations.
     pub max_iters: u64,
     /// Stop once this many exact oracle calls were made (0 = unlimited).
@@ -81,6 +118,8 @@ impl Default for MpBcfwConfig {
             threads: 0,
             inner_repeats: 10,
             averaging: false,
+            sampling: SamplingStrategy::Uniform,
+            steps: StepRule::Fw,
             max_iters: 50,
             max_oracle_calls: 0,
             max_time: 0.0,
@@ -114,12 +153,26 @@ impl MpBcfwConfig {
 
 /// Mutable run state exposed to inspection (examples / tests).
 pub struct MpBcfwRun {
+    /// The dual iterate (weights are `state.w` after `refresh_w`).
     pub state: DualState,
+    /// Per-example working sets W_i.
     pub working_sets: Vec<WorkingSet>,
+    /// Per-example §3.5 Gram caches.
     pub grams: Vec<GramCache>,
+    /// Per-example convex-coefficient ledgers (pairwise steps only;
+    /// empty under `StepRule::Fw`).
+    pub coeffs: Vec<BlockCoeffs>,
+    /// Per-block duality-gap estimates driving gap-proportional sampling
+    /// and the `gap_est` metrics column.
+    pub gaps: BlockGaps,
+    /// §3.6 average over post-exact-step iterates.
     pub avg_exact: Averager,
+    /// §3.6 average over post-approximate-step iterates.
     pub avg_approx: Averager,
+    /// Cumulative approximate steps with γ > 0 (toward + pairwise).
     pub approx_steps_total: u64,
+    /// Cumulative pairwise transfers with γ > 0 (subset of the above).
+    pub pairwise_steps_total: u64,
 }
 
 /// Train with MP-BCFW. Returns the convergence series and the final run
@@ -147,19 +200,26 @@ pub fn run(
     let mut clock = Clock::new();
     problem.reset_stats();
 
+    let pairwise = cfg.steps == StepRule::Pairwise && cfg.cap_n > 0;
+    let mut sampler = build_sampler(cfg.sampling, n);
     let mut run = MpBcfwRun {
         state: DualState::new(n, dim, cfg.lambda),
         working_sets: (0..n).map(|_| WorkingSet::new(cfg.cap_n)).collect(),
         grams: (0..n).map(|_| GramCache::new()).collect(),
+        coeffs: if pairwise { vec![BlockCoeffs::new(); n] } else { Vec::new() },
+        gaps: BlockGaps::new(n),
         avg_exact: Averager::new(dim),
         avg_approx: Averager::new(dim),
         approx_steps_total: 0,
+        pairwise_steps_total: 0,
     };
 
     let mut series = Series {
         algo: algo_name(cfg).to_string(),
         dataset: problem.name().to_string(),
         seed: cfg.seed,
+        sampling: cfg.sampling.name().to_string(),
+        steps: cfg.steps.name().to_string(),
         ..Default::default()
     };
 
@@ -174,13 +234,19 @@ pub fn run(
         let mut slope = SlopeRule::start_iteration(f_now, measured(&clock, problem));
 
         // ---- Exact pass (Alg. 3 line 3) -------------------------------
+        // The block order comes from the configured sampling policy;
+        // Uniform draws the identical permutation stream as the
+        // pre-sampling code, so seeded trajectories are unchanged.
+        run.gaps.begin_pass();
         if cfg.threads > 0 {
             // Sharded parallel dispatch: all oracles score against the
             // same snapshot of w, then the line-searched steps are applied
             // sequentially in permutation order (minibatch-BCFW
             // semantics; identical trajectory for every thread count).
+            // Gap estimates are recorded during that sequential merge, so
+            // the gap state is thread-count-invariant too.
             run.state.refresh_w();
-            let mut order = rng.permutation(n);
+            let mut order = sampler.pass_order(&mut rng, &run.gaps);
             // Respect the oracle budget exactly, like the sequential
             // path's mid-pass break: dispatch only the calls that fit.
             if cfg.max_oracle_calls > 0 {
@@ -188,19 +254,28 @@ pub fn run(
                     cfg.max_oracle_calls.saturating_sub(problem.stats().calls) as usize;
                 order.truncate(remaining);
             }
+            // Gap sampling draws with replacement, and every duplicate
+            // would score against the same snapshot — oracle each
+            // distinct block once and reuse its plane for the repeats
+            // (for a permutation this is the identity transform, so the
+            // uniform trajectory and call count are untouched).
+            let mut uniq: Vec<usize> = Vec::with_capacity(order.len());
+            let mut plane_slot = vec![usize::MAX; n];
+            for &i in &order {
+                if plane_slot[i] == usize::MAX {
+                    plane_slot[i] = uniq.len();
+                    uniq.push(i);
+                }
+            }
             let (planes, report) =
-                parallel::exact_pass(problem, &run.state.w, &order, cfg.threads);
+                parallel::exact_pass(problem, &run.state.w, &uniq, cfg.threads);
             // Virtual latency: the critical path is the largest shard.
             if problem.delay > 0.0 {
                 clock.charge(problem.delay * report.max_shard_len as f64);
             }
             series.note_parallel_pass(&report.shard_secs, report.wall_secs);
-            for (&i, hat) in order.iter().zip(planes.iter()) {
-                run.working_sets[i].insert(hat.clone(), outer);
-                run.state.block_step(i, hat);
-                if cfg.averaging {
-                    run.avg_exact.update(&run.state.phi);
-                }
+            for &i in order.iter() {
+                apply_exact_step(&mut run, i, &planes[plane_slot[i]], outer, pairwise, cfg);
             }
             if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
                 record_point(
@@ -210,18 +285,14 @@ pub fn run(
                 break 'outer;
             }
         } else {
-            for &i in rng.permutation(n).iter() {
+            for &i in sampler.pass_order(&mut rng, &run.gaps).iter() {
                 run.state.refresh_w();
                 let hat = problem.oracle(i, &run.state.w, eng);
                 // Virtual latency: charge the pausable clock deterministically.
                 if problem.delay > 0.0 {
                     clock.charge(problem.delay);
                 }
-                run.working_sets[i].insert(hat.clone(), outer);
-                run.state.block_step(i, &hat);
-                if cfg.averaging {
-                    run.avg_exact.update(&run.state.phi);
-                }
+                apply_exact_step(&mut run, i, &hat, outer, pairwise, cfg);
                 if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
                     record_point(
                         problem, eng, &mut clock, cfg, &mut run, outer, last_approx_passes,
@@ -238,7 +309,23 @@ pub fn run(
             while passes < cfg.max_approx_passes {
                 slope.begin_pass(run.state.dual_value(), measured(&clock, problem));
                 for &i in rng.permutation(n).iter() {
-                    if cfg.inner_repeats > 1 {
+                    if pairwise {
+                        let out = pairwise_block_updates(
+                            &mut run.state,
+                            &mut run.working_sets[i],
+                            &mut run.grams[i],
+                            &mut run.coeffs[i],
+                            i,
+                            cfg.inner_repeats.max(1),
+                            outer,
+                        );
+                        run.approx_steps_total += out.steps as u64;
+                        run.pairwise_steps_total += out.pairwise as u64;
+                        run.gaps.observe_floor(i, out.first_gap);
+                        if cfg.averaging && out.steps > 0 {
+                            run.avg_approx.update(&run.state.phi);
+                        }
+                    } else if cfg.inner_repeats > 1 {
                         let out = cached_block_updates(
                             &mut run.state,
                             &mut run.working_sets[i],
@@ -248,13 +335,20 @@ pub fn run(
                             outer,
                         );
                         run.approx_steps_total += out.steps as u64;
+                        run.gaps.observe_floor(i, out.first_gap);
                         if cfg.averaging && out.steps > 0 {
                             run.avg_approx.update(&run.state.phi);
                         }
                     } else {
                         run.state.refresh_w();
                         let best = run.working_sets[i].best_at(&run.state.w);
-                        if let Some((j, _)) = best {
+                        if let Some((j, best_val)) = best {
+                            // Working-set gap floor, from quantities in
+                            // hand (read-only; trajectory unchanged).
+                            let block_val =
+                                math::dot(&run.state.blocks[i].star, &run.state.w)
+                                    + run.state.blocks[i].off;
+                            run.gaps.observe_floor(i, (best_val - block_val).max(0.0));
                             let gamma = {
                                 let plane = run.working_sets[i].plane(j);
                                 run.state.block_step(i, plane)
@@ -269,8 +363,14 @@ pub fn run(
                         }
                     }
                     // TTL eviction runs with the approximate pass, as in
-                    // Alg. 3 line 4.
-                    run.working_sets[i].evict_stale(outer, cfg.ttl);
+                    // Alg. 3 line 4; under pairwise steps the evicted
+                    // ids reconcile the coefficient ledger.
+                    if pairwise {
+                        let dead = run.working_sets[i].evict_stale_ids(outer, cfg.ttl);
+                        run.coeffs[i].forget(&dead);
+                    } else {
+                        run.working_sets[i].evict_stale(outer, cfg.ttl);
+                    }
                 }
                 passes += 1;
                 if cfg.auto_approx
@@ -285,8 +385,13 @@ pub fn run(
         // If no approximate pass ran this iteration the TTL rule still
         // applies (otherwise caps-only eviction would let sets go stale).
         if cfg.cap_n > 0 && passes == 0 {
-            for ws in run.working_sets.iter_mut() {
-                ws.evict_stale(outer, cfg.ttl);
+            for (i, ws) in run.working_sets.iter_mut().enumerate() {
+                if pairwise {
+                    let dead = ws.evict_stale_ids(outer, cfg.ttl);
+                    run.coeffs[i].forget(&dead);
+                } else {
+                    ws.evict_stale(outer, cfg.ttl);
+                }
             }
         }
         last_approx_passes = passes;
@@ -312,6 +417,131 @@ pub fn run(
     series.wall_secs = clock.wall();
     run.state.refresh_w();
     (series, run)
+}
+
+/// Shared exact-pass bookkeeping for one block step, used verbatim by
+/// both dispatch paths (sequential and sharded merge) so the
+/// thread-count-invariance contract cannot drift between them: insert
+/// the oracle plane, take the line-searched step, record the block gap,
+/// and keep the pairwise coefficient ledger reconciled (including cap-N
+/// eviction victims).
+fn apply_exact_step(
+    run: &mut MpBcfwRun,
+    i: usize,
+    hat: &crate::model::plane::Plane,
+    outer: u64,
+    pairwise: bool,
+    cfg: &MpBcfwConfig,
+) {
+    let (ws_idx, cap_evicted) = run.working_sets[i].insert_with_evicted(hat.clone(), outer);
+    let info = run.state.block_step_info(i, hat);
+    run.gaps.record(i, info.gap);
+    if pairwise {
+        if let Some(dead) = cap_evicted {
+            run.coeffs[i].forget(&[dead]);
+        }
+        let id = (ws_idx != usize::MAX).then(|| run.working_sets[i].id(ws_idx));
+        run.coeffs[i].fw_step(id, info.gamma);
+    }
+    if cfg.averaging {
+        run.avg_exact.update(&run.state.phi);
+    }
+}
+
+/// Outcome of one pairwise inner loop over a block.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairwiseOutcome {
+    /// Steps with γ > 0 (pairwise transfers + toward fallbacks).
+    pub steps: usize,
+    /// Pairwise transfers with γ > 0 (subset of `steps`).
+    pub pairwise: usize,
+    /// Working-set gap estimate at the first selection (see
+    /// `products::BlockOutcome::first_gap`).
+    pub first_gap: f64,
+}
+
+/// Up to `repeats` pairwise steps on block `i` over its cached working
+/// set: move convex mass from the worst-valued plane the coefficient
+/// ledger holds mass on to the best-valued plane (`DualState::
+/// pairwise_step`, with the pair product served by the §3.5 Gram cache).
+/// While the ledger holds no movable mass — the first visits after a
+/// cold start or heavy eviction — the step falls back to the plain
+/// Frank-Wolfe toward-step, which is what stocks the ledger. Every γ > 0
+/// is an exact line search along an ascent direction, so the dual never
+/// decreases.
+///
+/// Cost note: unlike `products::cached_block_updates`, each repeat here
+/// re-evaluates the cached planes densely (Θ(|W_i|·nnz) selection plus
+/// an O(d) `refresh_w`); only the best–worst product comes from the
+/// Gram cache. That keeps the away bookkeeping simple and obviously
+/// correct; porting the pairwise update into the §3.5 all-scalar inner
+/// loop is a known follow-up optimization.
+pub fn pairwise_block_updates(
+    state: &mut DualState,
+    ws: &mut WorkingSet,
+    gram: &mut GramCache,
+    co: &mut BlockCoeffs,
+    i: usize,
+    repeats: usize,
+    now: u64,
+) -> PairwiseOutcome {
+    let mut out = PairwiseOutcome::default();
+    for r in 0..repeats.max(1) {
+        state.refresh_w();
+        let Some((jb, best_val)) = ws.best_at(&state.w) else { break };
+        if r == 0 {
+            let block_val =
+                math::dot(&state.blocks[i].star, &state.w) + state.blocks[i].off;
+            out.first_gap = (best_val - block_val).max(0.0);
+        }
+        // Away candidate: the worst-valued plane with ledger mass.
+        let mut worst: Option<(usize, f64)> = None;
+        for idx in 0..ws.len() {
+            if co.coef(ws.id(idx)) > 1e-12 {
+                let v = ws.plane(idx).value_at(&state.w);
+                if worst.map_or(true, |(_, wv)| v < wv) {
+                    worst = Some((idx, v));
+                }
+            }
+        }
+        let mut was_pairwise = false;
+        let mut gamma = 0.0;
+        if let Some((jw, _)) = worst {
+            if jw != jb {
+                let dot_bw = gram.get(ws, jb, jw);
+                let cap = co.coef(ws.id(jw));
+                gamma = state.pairwise_step(i, ws.plane(jb), ws.plane(jw), dot_bw, cap);
+                if gamma > 0.0 {
+                    co.transfer(ws.id(jb), ws.id(jw), gamma);
+                    ws.touch(jb, now);
+                    ws.touch(jw, now);
+                    was_pairwise = true;
+                }
+            }
+        }
+        if !was_pairwise {
+            // Pairwise direction absent (no massed away plane, best ==
+            // worst) or converged (γ* ≈ 0): fall back to the plain
+            // toward-step — it both stocks the ledger and can still
+            // improve the dual while untracked residual mass remains.
+            gamma = {
+                let plane = ws.plane(jb);
+                state.block_step(i, plane)
+            };
+            if gamma > 0.0 {
+                co.fw_step(Some(ws.id(jb)), gamma);
+                ws.touch(jb, now);
+            }
+        }
+        if gamma <= 1e-12 {
+            break;
+        }
+        out.steps += 1;
+        if was_pairwise {
+            out.pairwise += 1;
+        }
+    }
+    out
 }
 
 fn algo_name(cfg: &MpBcfwConfig) -> &'static str {
@@ -385,6 +615,10 @@ fn record_point(
         ws_mean,
         approx_passes,
         approx_steps: run.approx_steps_total,
+        pairwise_steps: run.pairwise_steps_total,
+        // Sum of per-block estimates ≈ the duality gap; NaN until every
+        // block has been measured once.
+        gap_est: if run.gaps.initialized() { run.gaps.total() } else { f64::NAN },
         oracle_secs: stats.real_secs + stats.virtual_secs,
         train_loss,
     };
@@ -512,6 +746,77 @@ mod tests {
         for (a, b) in s1.points.iter().zip(&s2.points) {
             assert_eq!(a.dual, b.dual);
             assert_eq!(a.primal, b.primal);
+        }
+    }
+
+    #[test]
+    fn pairwise_steps_keep_dual_monotone_and_ledger_conserved() {
+        let problem = tiny_problem(1);
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig {
+            max_iters: 8,
+            steps: StepRule::Pairwise,
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        let (series, run) = run(&problem, &mut eng, &cfg);
+        for w in series.points.windows(2) {
+            assert!(w[1].dual >= w[0].dual - 1e-10, "dual decreased: {w:?}");
+        }
+        assert!(run.pairwise_steps_total > 0, "no pairwise transfer ever fired");
+        assert_eq!(
+            series.points.last().unwrap().pairwise_steps,
+            run.pairwise_steps_total
+        );
+        // The convex-coefficient ledgers conserve unit mass.
+        for co in &run.coeffs {
+            assert!((co.total() - 1.0).abs() < 1e-6, "ledger mass {}", co.total());
+        }
+        assert!(run.state.consistency_error() < 1e-6);
+        assert_eq!(series.steps, "pairwise");
+    }
+
+    #[test]
+    fn gap_sampling_trains_and_reports_gap_estimates() {
+        let problem = tiny_problem(2);
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig {
+            max_iters: 6,
+            sampling: SamplingStrategy::GapProportional,
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        let (series, run) = run(&problem, &mut eng, &cfg);
+        let last = series.points.last().unwrap();
+        assert!(last.primal >= last.dual - 1e-9, "weak duality");
+        // After the first (fallback-permutation) pass every block is
+        // measured, so gap_est is finite and roughly tracks the gap.
+        assert!(last.gap_est.is_finite());
+        assert!(last.gap_est >= 0.0);
+        assert!(run.gaps.initialized());
+        assert_eq!(series.sampling, "gap");
+        // The estimates shrink as training converges.
+        let first_measured = series.points.iter().find(|p| p.gap_est.is_finite()).unwrap();
+        assert!(last.gap_est <= first_measured.gap_est * 1.5 + 1e-9);
+    }
+
+    #[test]
+    fn cyclic_sampling_is_deterministic_without_seed_changes() {
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig {
+            max_iters: 4,
+            auto_approx: false,
+            max_approx_passes: 2,
+            sampling: SamplingStrategy::Cyclic,
+            ..MpBcfwConfig::mp_paper(0.02)
+        };
+        let p1 = tiny_problem(1);
+        let (s1, _) = run(&p1, &mut eng, &cfg);
+        let p2 = tiny_problem(1);
+        let (s2, _) = run(&p2, &mut eng, &MpBcfwConfig { seed: 99, ..cfg.clone() });
+        // The exact pass consumes no RNG under cyclic sampling, but the
+        // approximate passes still permute; duals may differ. The exact
+        // oracle-call trace must match regardless of seed.
+        for (a, b) in s1.points.iter().zip(&s2.points) {
+            assert_eq!(a.oracle_calls, b.oracle_calls);
         }
     }
 

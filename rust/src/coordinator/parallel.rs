@@ -21,7 +21,11 @@
 //!    state, so F remains monotone (stale directions can only shrink γ,
 //!    not break feasibility);
 //!  * wall-clock of the pass drops to the slowest shard — for costly
-//!    oracles this approaches linear speedup in the thread count.
+//!    oracles this approaches linear speedup in the thread count;
+//!  * per-block duality-gap estimates (`coordinator::sampling`) are read
+//!    off during that sequential merge, not inside the workers, so the
+//!    gap state — and therefore gap-proportional sampling — is exactly
+//!    as thread-count-invariant as the steps themselves.
 //!
 //! Workers score on their own `NativeEngine` (stateless, zero-cost to
 //! construct). The PJRT engine is not shared across threads; the trainer

@@ -26,19 +26,24 @@ use crate::utils::math;
 #[derive(Default)]
 pub struct GramCache {
     map: HashMap<(u64, u64), f64>,
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that had to compute the product.
     pub misses: u64,
 }
 
 impl GramCache {
+    /// Empty cache.
     pub fn new() -> GramCache {
         GramCache::default()
     }
 
+    /// Number of cached pairwise products.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is cached yet.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
@@ -71,6 +76,13 @@ pub struct BlockOutcome {
     pub steps: usize,
     /// Dual improvement achieved by the loop.
     pub f_delta: f64,
+    /// Working-set duality gap of the block at the first selection,
+    /// max_j ⟨p_j − φ^i, (w, 1)⟩, clamped at 0 — a lower bound on the
+    /// block's true duality gap (the cached maximizer can only
+    /// under-estimate the oracle's), read off the already-computed
+    /// scalars. Feeds `BlockGaps::observe_floor`. 0 when the set is
+    /// empty.
+    pub first_gap: f64,
 }
 
 /// Run up to `repeats` approximate updates on block `i` using only scalar
@@ -109,9 +121,10 @@ pub fn cached_block_updates(
     let mut c0 = 1.0;
     let mut coef = vec![0.0f64; m];
     let mut steps = 0usize;
+    let mut first_gap = 0.0f64;
 
-    for _ in 0..repeats {
-        // Select ĵ = argmax ⟨p_j,[w 1]⟩ with w = −φ_*/λ ⇒ −A_j/λ + off_j.
+    for r in 0..repeats {
+        // Select ĵ = argmax ⟨p_j,(w,1)⟩ with w = −φ_*/λ ⇒ −A_j/λ + off_j.
         let mut jh = 0usize;
         let mut best = f64::NEG_INFINITY;
         for j in 0..m {
@@ -120,6 +133,11 @@ pub fn cached_block_updates(
                 best = s;
                 jh = j;
             }
+        }
+        if r == 0 {
+            // Working-set gap estimate from the scalars already in hand:
+            // value(best plane) − value(φ^i) at the current w.
+            first_gap = (best - (-b / lambda + off_i)).max(0.0);
         }
         let gg = ws.norm_sq(jh);
         let (a, c) = (a_j[jh], c_j[jh]);
@@ -156,7 +174,7 @@ pub fn cached_block_updates(
     }
 
     if steps == 0 {
-        return BlockOutcome::default();
+        return BlockOutcome { first_gap, ..BlockOutcome::default() };
     }
 
     // Materialize block' once and restore the φ = Σφ^i invariant.
@@ -172,7 +190,7 @@ pub fn cached_block_updates(
     state.replace_block(i, new_block);
 
     let f_end = -e / (2.0 * lambda) + off_phi;
-    BlockOutcome { steps, f_delta: f_end - f_start }
+    BlockOutcome { steps, f_delta: f_end - f_start, first_gap }
 }
 
 #[cfg(test)]
@@ -301,5 +319,36 @@ mod tests {
         let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 1);
         assert_eq!(out.steps, 0);
         assert_eq!(out.f_delta, 0.0);
+        assert_eq!(out.first_gap, 0.0);
+    }
+
+    #[test]
+    fn first_gap_matches_dense_evaluation() {
+        prop_check("first_gap == best value - block value", 60, |g| {
+            let dim = g.usize(2, 8);
+            let lambda = 0.5 + g.f64(0.0, 1.0);
+            let mut st = DualState::new(2, dim, lambda);
+            let mut ws = rand_ws(g, dim, g.usize(1, 5));
+            let hat = Plane::new(
+                VecF::sparse(dim, vec![(0, g.normal()), (1, g.normal())]),
+                g.normal(),
+                999,
+            );
+            st.block_step(0, &hat);
+            // Reference: evaluate every plane densely at w.
+            st.refresh_w();
+            let best = (0..ws.len())
+                .map(|j| ws.plane(j).value_at(&st.w))
+                .fold(f64::NEG_INFINITY, f64::max);
+            let block_val = st.blocks[0].star.iter().zip(&st.w).map(|(a, b)| a * b).sum::<f64>()
+                + st.blocks[0].off;
+            let expect = (best - block_val).max(0.0);
+            let mut gram = GramCache::new();
+            let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 3, 1);
+            if (out.first_gap - expect).abs() > 1e-8 * (1.0 + expect.abs()) {
+                return Err(format!("first_gap {} vs dense {}", out.first_gap, expect));
+            }
+            Ok(())
+        });
     }
 }

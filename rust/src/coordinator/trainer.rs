@@ -7,6 +7,7 @@ use super::checkpoint::ModelCheckpoint;
 use super::fw;
 use super::metrics::Series;
 use super::mp_bcfw::{self, MpBcfwConfig};
+use super::sampling::{SamplingStrategy, StepRule};
 use crate::data::synth::{horseseg_like, ocr_like, usps_like};
 use crate::data::types::Scale;
 use crate::model::problem::StructuredProblem;
@@ -30,6 +31,8 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Parse a CLI token (`fw` | `bcfw` | `bcfw-avg` | `mp-bcfw` |
+    /// `mp-bcfw-avg` | `cutting-plane`/`cp` | `ssg` | `ssg-avg`).
     pub fn parse(s: &str) -> Option<Algo> {
         match s {
             "fw" => Some(Algo::Fw),
@@ -44,6 +47,7 @@ impl Algo {
         }
     }
 
+    /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             Algo::Fw => "fw",
@@ -72,6 +76,7 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
+    /// Parse a CLI token, accepting `usps`/`usps_like`-style aliases.
     pub fn parse(s: &str) -> Option<DatasetKind> {
         match s {
             "usps" | "usps_like" | "usps-like" => Some(DatasetKind::UspsLike),
@@ -81,6 +86,7 @@ impl DatasetKind {
         }
     }
 
+    /// Canonical dataset name (as reported in result series).
     pub fn name(&self) -> &'static str {
         match self {
             DatasetKind::UspsLike => "usps_like",
@@ -89,6 +95,7 @@ impl DatasetKind {
         }
     }
 
+    /// All three datasets, in the paper's order.
     pub fn all() -> [DatasetKind; 3] {
         [DatasetKind::UspsLike, DatasetKind::OcrLike, DatasetKind::HorsesegLike]
     }
@@ -103,6 +110,8 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Construct the engine (fails for `Xla` without the `xla-rt`
+    /// feature or a readable artifacts directory).
     pub fn build(&self) -> anyhow::Result<Box<dyn ScoringEngine>> {
         match self {
             EngineKind::Native => Ok(Box::new(NativeEngine)),
@@ -121,16 +130,25 @@ impl EngineKind {
 /// Everything needed to run one training job.
 #[derive(Clone, Debug)]
 pub struct TrainSpec {
+    /// Which synthetic dataset to train on.
     pub dataset: DatasetKind,
+    /// Dataset scale (tiny/small/paper).
     pub scale: Scale,
+    /// Seed of the dataset generator.
     pub data_seed: u64,
+    /// Training algorithm.
     pub algo: Algo,
+    /// RNG seed of the optimizer (pass permutations / sampling draws).
     pub seed: u64,
     /// None → the paper's λ = 1/n.
     pub lambda: Option<f64>,
+    /// Stop after this many outer iterations.
     pub max_iters: u64,
+    /// Stop once this many exact oracle calls were made (0 = unlimited).
     pub max_oracle_calls: u64,
+    /// Stop once the measured time exceeds this (0 = unlimited).
     pub max_time: f64,
+    /// Stop once primal − dual ≤ target (0 = disabled).
     pub target_gap: f64,
     /// Virtual per-oracle-call latency (crossover studies).
     pub oracle_delay: f64,
@@ -150,8 +168,17 @@ pub struct TrainSpec {
     pub threads: usize,
     /// Use the §3.4 slope rule.
     pub auto_approx: bool,
+    /// Exact-pass block sampling policy (bcfw/mp-bcfw family only;
+    /// `Uniform` reproduces the paper and the pre-sampling trajectories).
+    pub sampling: SamplingStrategy,
+    /// Approximate-pass step rule (`Pairwise` needs working sets, i.e.
+    /// the mp-bcfw variants).
+    pub steps: StepRule,
+    /// Scoring engine to run on.
     pub engine: EngineKind,
+    /// Also record the mean train task loss at each evaluation (costly).
     pub with_train_loss: bool,
+    /// Evaluate metrics every this many outer iterations.
     pub eval_every: u64,
 }
 
@@ -175,6 +202,8 @@ impl Default for TrainSpec {
             max_approx_passes: 1000,
             threads: 0,
             auto_approx: true,
+            sampling: SamplingStrategy::Uniform,
+            steps: StepRule::Fw,
             engine: EngineKind::Native,
             with_train_loss: false,
             eval_every: 1,
@@ -202,6 +231,25 @@ pub fn build_problem(spec: &TrainSpec) -> CountingOracle {
 }
 
 /// Run one training job end to end; returns the convergence series.
+///
+/// # Examples
+///
+/// ```
+/// use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
+/// use mpbcfw::data::types::Scale;
+///
+/// let spec = TrainSpec {
+///     dataset: DatasetKind::UspsLike,
+///     scale: Scale::Tiny,
+///     algo: Algo::MpBcfw,
+///     max_iters: 2,
+///     ..Default::default()
+/// };
+/// let series = train(&spec).unwrap();
+/// let last = series.points.last().unwrap();
+/// assert!(last.primal >= last.dual - 1e-9, "weak duality");
+/// assert_eq!(series.sampling, "uniform");
+/// ```
 pub fn train(spec: &TrainSpec) -> anyhow::Result<Series> {
     Ok(train_with_model(spec)?.0)
 }
@@ -216,6 +264,17 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
         spec.threads == 0
             || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
         "--threads applies to the bcfw/mp-bcfw family only; {} would silently ignore it",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.sampling == SamplingStrategy::Uniform
+            || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--sampling applies to the bcfw/mp-bcfw family only; {} would silently ignore it",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.steps == StepRule::Fw || matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--steps pairwise needs cached working sets (mp-bcfw variants); {} has none",
         spec.algo.name()
     );
     let problem = build_problem(spec);
@@ -307,6 +366,8 @@ pub fn train_on_full(
                 threads: spec.threads,
                 inner_repeats: if multi { spec.inner_repeats } else { 0 },
                 averaging: matches!(spec.algo, Algo::BcfwAvg | Algo::MpBcfwAvg),
+                sampling: spec.sampling,
+                steps: if multi { spec.steps } else { StepRule::Fw },
                 max_iters: spec.max_iters,
                 max_oracle_calls: spec.max_oracle_calls,
                 max_time: spec.max_time,
@@ -419,6 +480,60 @@ mod tests {
         // ignore --threads; reject instead of misleading the user.
         let ignored = TrainSpec { algo: Algo::Fw, ..spec };
         assert!(train(&ignored).is_err());
+    }
+
+    #[test]
+    fn sampling_and_steps_train_and_reject() {
+        // Every sampling × step combination trains on the mp variants.
+        for sampling in SamplingStrategy::all() {
+            for steps in [StepRule::Fw, StepRule::Pairwise] {
+                let spec = TrainSpec {
+                    scale: Scale::Tiny,
+                    algo: Algo::MpBcfw,
+                    max_iters: 3,
+                    sampling,
+                    steps,
+                    ..Default::default()
+                };
+                let series = train(&spec).unwrap();
+                let last = series.points.last().unwrap();
+                assert!(last.primal >= last.dual - 1e-9, "{sampling:?}/{steps:?}");
+                assert_eq!(series.sampling, sampling.name());
+                assert_eq!(series.steps, steps.name());
+            }
+        }
+        // Non-bcfw algorithms would silently ignore --sampling; reject.
+        let bad = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::Ssg,
+            sampling: SamplingStrategy::GapProportional,
+            ..Default::default()
+        };
+        assert!(train(&bad).is_err());
+        // Pairwise steps need working sets; plain bcfw has none.
+        let bad = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::Bcfw,
+            steps: StepRule::Pairwise,
+            ..Default::default()
+        };
+        assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn gap_sampling_composes_with_threads() {
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 3,
+            threads: 2,
+            sampling: SamplingStrategy::GapProportional,
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        let last = series.points.last().unwrap();
+        assert!(last.primal >= last.dual - 1e-9);
+        assert!(last.gap_est.is_finite(), "gap estimates tracked under threads");
     }
 
     #[test]

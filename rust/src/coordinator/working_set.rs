@@ -12,10 +12,14 @@
 //! Entries carry stable ids so the §3.5 Gram cache can key inner products
 //! across evictions.
 
+use std::collections::HashMap;
+
 use crate::model::plane::Plane;
 
+/// One cached plane with its activity bookkeeping.
 #[derive(Debug)]
 pub struct WsEntry {
+    /// The cached cutting plane.
     pub plane: Plane,
     /// Outer iteration at which the plane was last returned as maximizer.
     pub last_active: u64,
@@ -23,6 +27,7 @@ pub struct WsEntry {
     pub id: u64,
 }
 
+/// A per-example working set W_i of cached planes (see module docs).
 pub struct WorkingSet {
     entries: Vec<WsEntry>,
     next_id: u64,
@@ -33,30 +38,37 @@ pub struct WorkingSet {
 }
 
 impl WorkingSet {
+    /// Empty working set with hard cap `cap` (0 disables caching).
     pub fn new(cap: usize) -> WorkingSet {
         WorkingSet { entries: Vec::new(), next_id: 0, cap, norms: Vec::new() }
     }
 
+    /// Number of cached planes |W_i|.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no planes are cached.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// All entries, in insertion order.
     pub fn entries(&self) -> &[WsEntry] {
         &self.entries
     }
 
+    /// The plane at entry `idx`.
     pub fn plane(&self, idx: usize) -> &Plane {
         &self.entries[idx].plane
     }
 
+    /// Cached ‖p_*‖² of entry `idx` (Gram diagonal).
     pub fn norm_sq(&self, idx: usize) -> f64 {
         self.norms[idx]
     }
 
+    /// Stable id of entry `idx` (survives evictions of other entries).
     pub fn id(&self, idx: usize) -> u64 {
         self.entries[idx].id
     }
@@ -65,17 +77,26 @@ impl WorkingSet {
     /// activity if a plane with the same tag is already cached). Applies
     /// the cap-N eviction. Returns the index of the entry.
     pub fn insert(&mut self, plane: Plane, now: u64) -> usize {
+        self.insert_with_evicted(plane, now).0
+    }
+
+    /// As `insert`, additionally returning the stable id of the entry
+    /// the cap-N rule evicted (if any), so callers holding per-plane
+    /// state — the pairwise coefficient ledger — can reconcile exactly
+    /// like they do for TTL eviction (`evict_stale_ids`).
+    pub fn insert_with_evicted(&mut self, plane: Plane, now: u64) -> (usize, Option<u64>) {
         if self.cap == 0 {
-            return usize::MAX; // working sets disabled (plain BCFW)
+            return (usize::MAX, None); // working sets disabled (plain BCFW)
         }
         if let Some(idx) = self.entries.iter().position(|e| e.plane.tag == plane.tag) {
             self.entries[idx].last_active = now;
-            return idx;
+            return (idx, None);
         }
         let nrm = plane.star.nrm2sq();
         self.entries.push(WsEntry { plane, last_active: now, id: self.next_id });
         self.norms.push(nrm);
         self.next_id += 1;
+        let mut evicted = None;
         if self.entries.len() > self.cap {
             // Drop the longest-inactive entry (ties: oldest id).
             let victim = self
@@ -85,10 +106,13 @@ impl WorkingSet {
                 .min_by_key(|(_, e)| (e.last_active, e.id))
                 .map(|(i, _)| i)
                 .unwrap();
+            evicted = Some(self.entries[victim].id);
             self.entries.remove(victim);
             self.norms.remove(victim);
         }
-        self.entries.iter().position(|e| e.id == self.next_id - 1).unwrap_or(usize::MAX)
+        let idx =
+            self.entries.iter().position(|e| e.id == self.next_id - 1).unwrap_or(usize::MAX);
+        (idx, evicted)
     }
 
     /// Mark entry `idx` active at outer iteration `now`.
@@ -99,19 +123,29 @@ impl WorkingSet {
     /// TTL eviction: drop entries inactive for the last `ttl` outer
     /// iterations (i.e. last_active < now − ttl). Returns #evicted.
     pub fn evict_stale(&mut self, now: u64, ttl: u64) -> usize {
+        self.evict_stale_ids(now, ttl).len()
+    }
+
+    /// As `evict_stale`, but returns the stable ids of the evicted
+    /// entries so callers holding per-plane state (convex-coefficient
+    /// ledgers, Gram caches) can reconcile.
+    pub fn evict_stale_ids(&mut self, now: u64, ttl: u64) -> Vec<u64> {
         let cutoff = now.saturating_sub(ttl);
         let before = self.entries.len();
         let mut keep = Vec::with_capacity(before);
         let mut keep_norms = Vec::with_capacity(before);
+        let mut dead = Vec::new();
         for (e, n) in self.entries.drain(..).zip(self.norms.drain(..)) {
             if e.last_active >= cutoff {
                 keep.push(e);
                 keep_norms.push(n);
+            } else {
+                dead.push(e.id);
             }
         }
         self.entries = keep;
         self.norms = keep_norms;
-        before - self.entries.len()
+        dead
     }
 
     /// Best plane at weights w: argmax ⟨p, [w 1]⟩. Returns (idx, value).
@@ -129,6 +163,117 @@ impl WorkingSet {
     /// Total heap use of the cached planes (diagnostics).
     pub fn mem_bytes(&self) -> usize {
         self.entries.iter().map(|e| e.plane.mem_bytes()).sum()
+    }
+}
+
+/// Convex-combination ledger of one block plane over its working set:
+///
+/// ```text
+/// φ^i = residual·(untracked mass) + Σ_id coef[id]·p_id
+/// ```
+///
+/// Every Frank-Wolfe step shrinks all coefficients by (1−γ) and credits
+/// γ to the stepped plane; pairwise steps transfer mass between two
+/// tracked planes. The *residual* carries the mass on planes the ledger
+/// cannot name — the zero (ground-truth) plane the state starts on and
+/// any plane evicted from the working set — which pairwise steps can
+/// never move away from. Coefficients are what bounds the pairwise
+/// away-step: moving at most `coef(worst)` keeps φ^i inside the convex
+/// hull of its planes, which the dual-feasibility argument needs.
+#[derive(Debug, Clone)]
+pub struct BlockCoeffs {
+    coef: HashMap<u64, f64>,
+    residual: f64,
+}
+
+/// Coefficients below this are dropped (pure float dust after many
+/// (1−γ) decays); the mass moves to the residual so totals stay ≈ 1.
+const COEF_DUST: f64 = 1e-15;
+
+impl BlockCoeffs {
+    /// Fresh ledger: all mass on the untracked zero plane.
+    pub fn new() -> BlockCoeffs {
+        BlockCoeffs { coef: HashMap::new(), residual: 1.0 }
+    }
+
+    /// Account a Frank-Wolfe step φ^i ← (1−γ)φ^i + γ·p. `id` is the
+    /// plane's working-set id, or `None` when the plane is not tracked
+    /// (cap-0 runs) — its mass then lands in the residual.
+    pub fn fw_step(&mut self, id: Option<u64>, gamma: f64) {
+        if gamma <= 0.0 {
+            return;
+        }
+        let om = 1.0 - gamma;
+        self.residual *= om;
+        for v in self.coef.values_mut() {
+            *v *= om;
+        }
+        match id {
+            Some(id) => *self.coef.entry(id).or_insert(0.0) += gamma,
+            None => self.residual += gamma,
+        }
+        self.prune();
+    }
+
+    /// Account a pairwise transfer of γ mass from `worst` onto `best`.
+    /// γ must not exceed `coef(worst)` (the caller clips via the line
+    /// search); any float undershoot is clamped at zero.
+    pub fn transfer(&mut self, best: u64, worst: u64, gamma: f64) {
+        if gamma <= 0.0 || best == worst {
+            return;
+        }
+        let w = self.coef.entry(worst).or_insert(0.0);
+        *w = (*w - gamma).max(0.0);
+        *self.coef.entry(best).or_insert(0.0) += gamma;
+        self.prune();
+    }
+
+    /// Mass currently attributed to plane `id` (0 when untracked).
+    pub fn coef(&self, id: u64) -> f64 {
+        self.coef.get(&id).copied().unwrap_or(0.0)
+    }
+
+    /// Mass on planes the ledger cannot name (zero plane + evicted).
+    pub fn residual(&self) -> f64 {
+        self.residual
+    }
+
+    /// Move the coefficients of evicted plane ids into the residual.
+    pub fn forget(&mut self, dead: &[u64]) {
+        for id in dead {
+            if let Some(v) = self.coef.remove(id) {
+                self.residual += v;
+            }
+        }
+    }
+
+    /// Σ coef + residual — stays ≈ 1 (diagnostics/tests).
+    pub fn total(&self) -> f64 {
+        self.residual + self.coef.values().sum::<f64>()
+    }
+
+    /// Number of tracked planes with nonzero mass.
+    pub fn tracked(&self) -> usize {
+        self.coef.len()
+    }
+
+    fn prune(&mut self) {
+        let mut dust = 0.0;
+        self.coef.retain(|_, v| {
+            if *v < COEF_DUST {
+                dust += *v;
+                false
+            } else {
+                true
+            }
+        });
+        self.residual += dust;
+    }
+}
+
+impl Default for BlockCoeffs {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -210,6 +355,89 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn insert_with_evicted_reports_cap_victim() {
+        let mut ws = WorkingSet::new(2);
+        ws.insert(plane(1, 1.0), 0);
+        ws.insert(plane(2, 2.0), 1);
+        let victim_id = ws.entries()[0].id; // tag 1, last_active 0
+        ws.touch(1, 5); // keep tag 2 fresh
+        let (idx, evicted) = ws.insert_with_evicted(plane(3, 3.0), 6);
+        assert_eq!(evicted, Some(victim_id));
+        assert_eq!(ws.plane(idx).tag, 3);
+        // Dedup path evicts nothing.
+        let (_, evicted) = ws.insert_with_evicted(plane(3, 3.0), 7);
+        assert_eq!(evicted, None);
+        assert_eq!(ws.len(), 2);
+    }
+
+    #[test]
+    fn evict_stale_ids_reports_the_dead() {
+        let mut ws = WorkingSet::new(100);
+        ws.insert(plane(1, 1.0), 0);
+        ws.insert(plane(2, 2.0), 5);
+        ws.insert(plane(3, 3.0), 9);
+        let id0 = ws.id(0);
+        let id1 = ws.id(1);
+        let dead = ws.evict_stale_ids(10, 3);
+        assert_eq!(dead, vec![id0, id1]);
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws.entries()[0].plane.tag, 3);
+    }
+
+    #[test]
+    fn coeffs_sum_to_one_under_mixed_steps() {
+        prop_check("ledger mass conserved", 100, |g| {
+            let mut co = BlockCoeffs::new();
+            for _ in 0..50 {
+                match g.usize(0, 3) {
+                    0 => co.fw_step(Some(g.rng.below(6) as u64), g.f64(0.0, 1.0)),
+                    1 => co.fw_step(None, g.f64(0.0, 1.0)),
+                    2 => {
+                        let a = g.rng.below(6) as u64;
+                        let b = g.rng.below(6) as u64;
+                        let cap = co.coef(b);
+                        co.transfer(a, b, g.f64(0.0, 1.0).min(cap));
+                    }
+                    _ => co.forget(&[g.rng.below(6) as u64]),
+                }
+                if (co.total() - 1.0).abs() > 1e-9 {
+                    return Err(format!("mass drifted to {}", co.total()));
+                }
+                if co.residual() < -1e-12 {
+                    return Err("negative residual".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn coeffs_fw_step_decays_and_credits() {
+        let mut co = BlockCoeffs::new();
+        co.fw_step(Some(7), 0.5);
+        assert_eq!(co.coef(7), 0.5);
+        assert_eq!(co.residual(), 0.5);
+        co.fw_step(Some(8), 0.2);
+        assert!((co.coef(7) - 0.4).abs() < 1e-15);
+        assert!((co.coef(8) - 0.2).abs() < 1e-15);
+        assert!((co.residual() - 0.4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn coeffs_transfer_and_forget() {
+        let mut co = BlockCoeffs::new();
+        co.fw_step(Some(1), 0.6);
+        co.transfer(2, 1, 0.25);
+        assert!((co.coef(1) - 0.35).abs() < 1e-15);
+        assert!((co.coef(2) - 0.25).abs() < 1e-15);
+        co.forget(&[1]);
+        assert_eq!(co.coef(1), 0.0);
+        assert!((co.residual() - 0.75).abs() < 1e-15);
+        assert!((co.total() - 1.0).abs() < 1e-15);
+        assert_eq!(co.tracked(), 1);
     }
 
     #[test]

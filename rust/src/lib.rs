@@ -48,9 +48,11 @@
 //!   latency injection).
 //! * [`coordinator`] — the paper's contribution: `mp_bcfw` (Algorithms
 //!   2/3), `working_set` (§3.3), `auto` (§3.4 slope rule), `products`
-//!   (§3.5 Gram cache), `averaging` (§3.6), `parallel` (sharded exact
-//!   pass over `std::thread::scope` workers), classic `baselines`, and
-//!   the `trainer` façade.
+//!   (§3.5 Gram cache), `averaging` (§3.6), `sampling` (gap-aware
+//!   adaptive block sampling and pairwise-step selection, after Osokin
+//!   et al. 2016), `parallel` (sharded exact pass over
+//!   `std::thread::scope` workers), classic `baselines`, and the
+//!   `trainer` façade.
 //! * [`runtime`] — the `ScoringEngine` abstraction with the native Rust
 //!   backend and the PJRT/XLA backend behind `xla-rt`.
 //! * [`bench`] — multi-seed run groups, CSV/SVG emission for the paper's
@@ -58,8 +60,9 @@
 //! * [`cli`] — the `mpbcfw` launcher (`train`, `bench`, `gen-data`,
 //!   `evaluate`, `inspect`).
 //!
-//! See the repository `README.md` for a section-by-section map from the
-//! paper to these modules and for CLI quickstarts.
+//! See the repository `README.md` for CLI quickstarts and
+//! `docs/ALGORITHMS.md` for the full paper-section ↔ module
+//! cross-reference plus a variant/flag decision guide.
 pub mod utils;
 pub mod model;
 pub mod maxflow;

@@ -49,6 +49,32 @@ fn atomic_add_f64(cell: &AtomicU64, add: f64) {
     }
 }
 
+/// Instrumented wrapper every optimizer trains against: counts exact
+/// oracle calls, accumulates oracle seconds, and optionally charges a
+/// deterministic virtual latency per call.
+///
+/// # Examples
+///
+/// ```
+/// use mpbcfw::data::synth::usps_like::{generate, UspsLikeConfig};
+/// use mpbcfw::data::types::Scale;
+/// use mpbcfw::model::problem::StructuredProblem;
+/// use mpbcfw::oracle::multiclass::MulticlassProblem;
+/// use mpbcfw::oracle::wrappers::CountingOracle;
+/// use mpbcfw::runtime::engine::NativeEngine;
+///
+/// let problem = CountingOracle::new(Box::new(MulticlassProblem::new(
+///     generate(UspsLikeConfig::at_scale(Scale::Tiny), 0),
+/// )));
+/// let mut eng = NativeEngine;
+/// let w = vec![0.0; problem.dim()];
+/// problem.oracle(0, &w, &mut eng);
+/// assert_eq!(problem.stats().calls, 1);
+/// problem.set_counting(false); // evaluation sweeps are free
+/// problem.oracle(1, &w, &mut eng);
+/// assert_eq!(problem.stats().calls, 1);
+/// assert_eq!(problem.stats().calls_all, 2);
+/// ```
 pub struct CountingOracle {
     inner: Box<dyn StructuredProblem>,
     calls: AtomicU64,
@@ -61,6 +87,7 @@ pub struct CountingOracle {
 }
 
 impl CountingOracle {
+    /// Wrap a problem with zeroed counters and no virtual latency.
     pub fn new(inner: Box<dyn StructuredProblem>) -> Self {
         CountingOracle {
             inner,
@@ -73,6 +100,7 @@ impl CountingOracle {
         }
     }
 
+    /// As `new`, charging `delay` virtual seconds per counted call.
     pub fn with_delay(inner: Box<dyn StructuredProblem>, delay: f64) -> Self {
         let mut s = Self::new(inner);
         s.delay = delay;
@@ -84,6 +112,7 @@ impl CountingOracle {
         self.counting.store(on, Ordering::Relaxed);
     }
 
+    /// Snapshot of all counters (exact under concurrency).
     pub fn stats(&self) -> OracleStats {
         OracleStats {
             calls: self.calls.load(Ordering::Relaxed),
@@ -93,6 +122,7 @@ impl CountingOracle {
         }
     }
 
+    /// Zero all counters (each training run starts fresh).
     pub fn reset_stats(&self) {
         self.calls.store(0, Ordering::Relaxed);
         self.calls_all.store(0, Ordering::Relaxed);
@@ -100,6 +130,7 @@ impl CountingOracle {
         self.virtual_secs.store(0, Ordering::Relaxed);
     }
 
+    /// The wrapped (uncounted) problem.
     pub fn inner(&self) -> &dyn StructuredProblem {
         self.inner.as_ref()
     }
