@@ -12,9 +12,8 @@ use mpbcfw::coordinator::working_set::WorkingSet;
 use mpbcfw::data::synth::{horseseg_like, ocr_like, usps_like};
 use mpbcfw::data::types::Scale;
 use mpbcfw::maxflow::BkGraph;
-use mpbcfw::model::plane::Plane;
+use mpbcfw::model::plane::{Plane, PlaneVec};
 use mpbcfw::model::problem::StructuredProblem;
-use mpbcfw::model::vec::VecF;
 use mpbcfw::oracle::graphcut::GraphCutProblem;
 use mpbcfw::oracle::multiclass::MulticlassProblem;
 use mpbcfw::oracle::sequence::SequenceProblem;
@@ -120,7 +119,7 @@ fn main() {
         for t in 0..m {
             let pairs: Vec<(u32, f64)> =
                 (0..200).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
-            ws.insert(Plane::new(VecF::sparse(dim, pairs), rng.normal(), t as u64), 0);
+            ws.insert(Plane::new(PlaneVec::sparse(dim, pairs), rng.normal(), t as u64), 0);
         }
         ws
     };

@@ -76,6 +76,9 @@ impl RunGroup {
                 "steps",
                 "pairwise_steps",
                 "gap_est",
+                "plane_repr",
+                "plane_bytes",
+                "plane_nnz_mean",
             ],
         )?;
         for s in &self.series {
@@ -112,6 +115,9 @@ impl RunGroup {
                     s.steps.clone(),
                     p.pairwise_steps.to_string(),
                     format!("{}", p.gap_est),
+                    s.plane_repr.clone(),
+                    p.plane_bytes.to_string(),
+                    format!("{}", p.plane_nnz_mean),
                 ])?;
             }
         }

@@ -351,9 +351,112 @@ pub fn sampling_sweep(
     Ok(())
 }
 
+/// SPARSITY — plane-representation A/B: the default sparse `PlaneVec`
+/// storage (with auto-compaction) vs forced dense storage
+/// (`--dense-planes`), on all three synthetic scenarios. Because the
+/// plane kernels accumulate in index order regardless of storage, the
+/// two runs follow bitwise-identical trajectories — the table isolates
+/// the storage/runtime effect: wall time, plane bytes, and mean stored
+/// entries per cached plane. Emits `table_sparsity.csv` plus a
+/// machine-readable `bench_sparsity.json` BENCH record.
+pub fn sparsity_sweep(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_sparsity.csv"),
+        &[
+            "dataset",
+            "plane_repr",
+            "wall_s",
+            "plane_bytes",
+            "plane_nnz_mean",
+            "ws_mean",
+            "final_gap",
+            "trajectory_matches_sparse",
+        ],
+    )?;
+    let mut entries: Vec<Json> = Vec::new();
+    log("== SPARSITY: sparse vs dense plane storage (PlaneVec layer)".into());
+    for ds in DatasetKind::all() {
+        // auto_approx is timing-based; pin the pass schedule so the two
+        // storage modes run the exact same step sequence and the
+        // bitwise-trajectory check below is meaningful.
+        let base = TrainSpec {
+            dataset: ds,
+            scale: opts.scale,
+            data_seed: opts.data_seed,
+            algo: Algo::MpBcfw,
+            max_iters: opts.max_iters,
+            oracle_delay: opts.oracle_delay,
+            engine: opts.engine.clone(),
+            auto_approx: false,
+            max_approx_passes: 3,
+            ..Default::default()
+        };
+        let mut sparse_duals: Vec<f64> = Vec::new();
+        for dense in [false, true] {
+            let spec = TrainSpec { dense_planes: dense, ..base.clone() };
+            let s = trainer::train(&spec)?;
+            let last = s.points.last().unwrap();
+            let matches = if dense {
+                s.points.len() == sparse_duals.len()
+                    && s.points.iter().zip(&sparse_duals).all(|(p, &d)| p.dual == d)
+            } else {
+                sparse_duals = s.points.iter().map(|p| p.dual).collect();
+                true
+            };
+            log(format!(
+                "   {:14} {:6}  wall={:7.2}s  bytes={:>10}  nnz/plane={:8.1}  match={}",
+                ds.name(),
+                s.plane_repr,
+                s.wall_secs,
+                last.plane_bytes,
+                last.plane_nnz_mean,
+                matches
+            ));
+            csv.row(&[
+                ds.name().into(),
+                s.plane_repr.clone(),
+                format!("{}", s.wall_secs),
+                last.plane_bytes.to_string(),
+                format!("{}", last.plane_nnz_mean),
+                format!("{}", last.ws_mean),
+                format!("{}", last.primal - last.dual),
+                matches.to_string(),
+            ])?;
+            entries.push(Json::obj(vec![
+                ("dataset", Json::s(ds.name())),
+                ("plane_repr", Json::s(&s.plane_repr)),
+                ("wall_s", Json::Num(s.wall_secs)),
+                ("plane_bytes", Json::Num(last.plane_bytes as f64)),
+                ("plane_nnz_mean", Json::Num(last.plane_nnz_mean)),
+                ("ws_mean", Json::Num(last.ws_mean)),
+                ("final_gap", Json::Num(last.primal - last.dual)),
+                ("trajectory_matches_sparse", Json::Bool(matches)),
+            ]));
+        }
+    }
+    csv.flush()?;
+    let bench = Json::obj(vec![
+        ("bench", Json::s("sparsity")),
+        ("scale", Json::s(opts.scale.name())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(out_dir.join("bench_sparsity.json"), bench.to_string())?;
+    log(format!(
+        "   wrote {} and {}",
+        out_dir.join("table_sparsity.csv").display(),
+        out_dir.join("bench_sparsity.json").display()
+    ));
+    Ok(())
+}
+
 /// Valid `--table` tokens.
 pub const TABLES: &[&str] =
-    &["oracle-stats", "crossover", "product-cache", "t-sweep", "sampling", "all"];
+    &["oracle-stats", "crossover", "product-cache", "t-sweep", "sampling", "sparsity", "all"];
 
 /// Dispatch one `--table` selection.
 pub fn run_table(
@@ -369,12 +472,14 @@ pub fn run_table(
         "product-cache" => product_cache_ablation(opts, out_dir, log),
         "t-sweep" => t_sweep(opts, out_dir, log),
         "sampling" => sampling_sweep(opts, out_dir, log),
+        "sparsity" => sparsity_sweep(opts, out_dir, log),
         "all" => {
             oracle_stats(datasets, opts, out_dir, &mut log)?;
             crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, &mut log)?;
             product_cache_ablation(opts, out_dir, &mut log)?;
             t_sweep(opts, out_dir, &mut log)?;
-            sampling_sweep(opts, out_dir, &mut log)
+            sampling_sweep(opts, out_dir, &mut log)?;
+            sparsity_sweep(opts, out_dir, &mut log)
         }
         other => anyhow::bail!("unknown table {other} (expected one of {TABLES:?})"),
     }
@@ -433,6 +538,25 @@ mod tests {
         let parsed = Json::parse(&json).unwrap();
         assert_eq!(parsed.get("bench").as_str(), Some("sampling"));
         assert_eq!(parsed.get("entries").as_arr().unwrap().len(), 8);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sparsity_sweep_writes_csv_and_json_with_matching_trajectories() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_sparsity_{}", std::process::id()));
+        let mut lines = Vec::new();
+        sparsity_sweep(&tiny_opts(), &dir, |m| lines.push(m)).unwrap();
+        let text = std::fs::read_to_string(dir.join("table_sparsity.csv")).unwrap();
+        assert!(text.starts_with("dataset,plane_repr,wall_s,plane_bytes"));
+        for ds in ["usps_like", "ocr_like", "horseseg_like"] {
+            assert!(text.contains(&format!("{ds},sparse")), "missing sparse row for {ds}");
+            assert!(text.contains(&format!("{ds},dense")), "missing dense row for {ds}");
+        }
+        assert!(!text.contains("false"), "a dense run diverged from its sparse twin:\n{text}");
+        let json = std::fs::read_to_string(dir.join("bench_sparsity.json")).unwrap();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("sparsity"));
+        assert_eq!(parsed.get("entries").as_arr().unwrap().len(), 6);
         std::fs::remove_dir_all(dir).ok();
     }
 

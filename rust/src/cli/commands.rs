@@ -18,12 +18,12 @@ USAGE:
   mpbcfw train    [--dataset usps|ocr|horseseg] [--algo fw|bcfw|bcfw-avg|mp-bcfw|mp-bcfw-avg|cutting-plane|ssg|ssg-avg]
                   [--scale tiny|small|paper] [--iters N] [--seed S] [--data-seed S]
                   [--lambda F] [--ttl T] [--cap-n N] [--inner-repeats R] [--no-auto-approx]
-                  [--sampling uniform|gap|cyclic] [--steps fw|pairwise]
+                  [--sampling uniform|gap|cyclic] [--steps fw|pairwise] [--dense-planes]
                   [--threads N] [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
                   [--train-loss] [--max-oracle-calls N] [--target-gap F]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|all
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
-                  [--scale ...] [--engine ...] [--out DIR]
+                  [--scale ...] [--engine ...] [--out DIR] [--smoke]
   mpbcfw gen-data --dataset usps|ocr|horseseg --out FILE [--scale ...] [--seed S]
   mpbcfw evaluate --model FILE [--dataset ...] [--scale ...] [--data-seed S] [--engine ...]
   mpbcfw inspect  [--artifacts DIR]
@@ -48,7 +48,14 @@ per-block duality-gap estimates, after Osokin et al. 2016 — fewer exact
 calls to a target gap when the oracle is costly), or cyclic (fixed round
 robin). --steps picks the approximate-pass update: fw (the paper's
 toward-step) or pairwise (move weight from the worst cached plane to the
-best; mp-bcfw variants only). See docs/ALGORITHMS.md for guidance.";
+best; mp-bcfw variants only). See docs/ALGORITHMS.md for guidance.
+
+Cutting planes are stored sparse by default (the oracles emit
+block-structured ψ differences), auto-densified above a density
+threshold; --dense-planes forces dense storage. Either way the training
+trajectory is bitwise identical — compare footprints with
+`bench --table sparsity` (plane bytes + mean nnz columns). --smoke runs
+any bench at tiny scale with a 2-iteration budget (CI rot check).";
 
 fn parse_engine(args: &Args) -> anyhow::Result<EngineKind> {
     match args.get_or("engine", "native") {
@@ -102,6 +109,7 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad --sampling (uniform|gap|cyclic)"))?,
         steps: StepRule::parse(args.get_or("steps", "fw"))
             .ok_or_else(|| anyhow::anyhow!("bad --steps (fw|pairwise)"))?,
+        dense_planes: args.has("dense-planes"),
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
@@ -194,7 +202,7 @@ pub fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
 }
 
 pub fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    let opts = figures::FigureOpts {
+    let mut opts = figures::FigureOpts {
         scale: parse_scale(args)?,
         repeats: args.u64_or("repeats", 10).map_err(err)?,
         max_iters: args.u64_or("iters", 30).map_err(err)?,
@@ -202,6 +210,13 @@ pub fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         oracle_delay: args.f64_or("oracle-delay", 0.0).map_err(err)?,
         data_seed: args.u64_or("data-seed", 0).map_err(err)?,
     };
+    if args.has("smoke") {
+        // CI rot check: the smallest configuration that still exercises
+        // every code path of the selected figure/table.
+        opts.scale = Scale::Tiny;
+        opts.repeats = 1;
+        opts.max_iters = 2;
+    }
     let out_dir = Path::new(args.get_or("out", "results")).to_path_buf();
     let datasets = parse_datasets(args)?;
     let log = |m: String| println!("{m}");
@@ -268,7 +283,7 @@ pub fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 
 /// Entry point used by main.rs; returns the process exit code.
 pub fn dispatch(argv: Vec<String>) -> i32 {
-    let bool_flags = ["no-auto-approx", "train-loss", "help"];
+    let bool_flags = ["no-auto-approx", "train-loss", "help", "dense-planes", "smoke"];
     let args = match Args::parse(argv, &bool_flags) {
         Ok(a) => a,
         Err(e) => {
@@ -348,6 +363,30 @@ mod tests {
             1,
             "--steps pairwise without working sets must be rejected"
         );
+    }
+
+    #[test]
+    fn train_with_dense_planes_flag() {
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --dataset usps --dense-planes")),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --algo ssg --dense-planes")),
+            1,
+            "--dense-planes without plane caches must be rejected"
+        );
+    }
+
+    #[test]
+    fn bench_sparsity_smoke_runs() {
+        let dir =
+            std::env::temp_dir().join(format!("mpbcfw_cli_sparsity_{}", std::process::id()));
+        let cmd = format!("bench --table sparsity --smoke --out {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(dir.join("table_sparsity.csv").exists());
+        assert!(dir.join("bench_sparsity.json").exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

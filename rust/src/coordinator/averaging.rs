@@ -6,6 +6,13 @@
 //! MP-BCFW-avg keeps two such averages — one over the iterates after
 //! *exact* oracle calls, one after *approximate* calls — and reports the
 //! convex interpolation of the two that maximizes the dual bound F.
+//!
+//! Averages are taken over the global φ, which is structurally dense (a
+//! convex mixture across all blocks), so this module works on
+//! [`DensePlane`] accumulators; the per-plane sparse representation
+//! (`model::plane::PlaneVec`) stops one layer below, at the working
+//! sets. The `interp_dense` update is `math::scale_add` under the hood —
+//! the same order-deterministic primitive the plane layer uses.
 
 use crate::model::plane::DensePlane;
 use crate::utils::math;

@@ -71,7 +71,7 @@ pub fn run(
             if problem.delay > 0.0 {
                 clock.charge(problem.delay);
             }
-            p.star.add_to(1.0, &mut cut.star);
+            p.star.axpy_into(1.0, &mut cut.star);
             cut.off += p.off;
         }
         // Grow the Gram matrix.
@@ -145,6 +145,8 @@ fn record(
         primal_avg: None,
         dual_avg: None,
         ws_mean: 0.0,
+        plane_bytes: 0,
+        plane_nnz_mean: 0.0,
         approx_passes: 0,
         approx_steps: 0,
         pairwise_steps: 0,

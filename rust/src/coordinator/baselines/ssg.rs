@@ -67,7 +67,7 @@ pub fn run(
             }
             // g = λw + n·φ̂_* (the oracle plane already carries the 1/n).
             math::scal(1.0 - eta * cfg.lambda, &mut w);
-            hat.star.add_to(-eta * n as f64, &mut w);
+            hat.star.axpy_into(-eta * n as f64, &mut w);
             if cfg.averaging {
                 // w̄_k+1 = k/(k+2) w̄_k + 2/(k+2) w_k+1  (k = t−1)
                 let g = 2.0 / (t + 1) as f64;
@@ -111,6 +111,8 @@ fn record(
         primal_avg: None,
         dual_avg: None,
         ws_mean: 0.0,
+        plane_bytes: 0,
+        plane_nnz_mean: 0.0,
         approx_passes: 0,
         approx_steps: 0,
         pairwise_steps: 0,

@@ -9,6 +9,12 @@
 //!  * every φ^i stays a convex combination of planes {φ^{iy}},
 //!  * φ = Σ_i φ^i at all times,
 //!  * F(φ) never decreases.
+//!
+//! Incoming planes carry a [`crate::model::plane::PlaneVec`] linear part
+//! (sparse or dense); every product against them goes through the
+//! representation-invariant `PlaneVec` API, so each step costs
+//! Θ(nnz(φ̂)) on top of the O(d) accumulator updates and the trajectory
+//! does not depend on how a plane is stored.
 
 use crate::model::plane::{DensePlane, Plane};
 use crate::utils::math;
@@ -95,7 +101,7 @@ impl DualState {
         let dot_phii_phi = math::dot(&self.blocks[i].star, &self.phi.star);
         let dot_hat_phi = hat.star.dot_dense(&self.phi.star);
         let nrm_phii = self.block_nrm2[i];
-        let nrm_hat = hat.star.nrm2sq();
+        let nrm_hat = hat.star.norm_sq();
         let dot_phii_hat = hat.star.dot_dense(&self.blocks[i].star);
         // gap_i = ⟨φ̂ − φ^i, (w, 1)⟩ at w = −φ_*/λ; this is exactly the
         // line-search numerator divided by λ.
@@ -144,7 +150,7 @@ impl DualState {
         let dot_best_phi = best.star.dot_dense(&self.phi.star);
         let dot_worst_phi = worst.star.dot_dense(&self.phi.star);
         let nrm_d =
-            best.star.nrm2sq() - 2.0 * dot_best_worst + worst.star.nrm2sq();
+            best.star.norm_sq() - 2.0 * dot_best_worst + worst.star.norm_sq();
         // F(φ + γd) = −‖φ_* + γd_*‖²/(2λ) + φ_∘ + γd_∘ with d = best − worst;
         // γ* = (λ d_∘ − ⟨φ_*, d_*⟩)/‖d_*‖², clipped to [0, max_gamma].
         let num = self.lambda * d_off - (dot_best_phi - dot_worst_phi);
@@ -162,11 +168,11 @@ impl DualState {
         let dot_block_d = best.star.dot_dense(&self.blocks[i].star)
             - worst.star.dot_dense(&self.blocks[i].star);
         let block = &mut self.blocks[i];
-        best.star.add_to(gamma, &mut block.star);
-        worst.star.add_to(-gamma, &mut block.star);
+        best.star.axpy_into(gamma, &mut block.star);
+        worst.star.axpy_into(-gamma, &mut block.star);
         block.off += gamma * d_off;
-        best.star.add_to(gamma, &mut self.phi.star);
-        worst.star.add_to(-gamma, &mut self.phi.star);
+        best.star.axpy_into(gamma, &mut self.phi.star);
+        worst.star.axpy_into(-gamma, &mut self.phi.star);
         self.phi.off += gamma * d_off;
         self.block_nrm2[i] += 2.0 * gamma * dot_block_d + gamma * gamma * nrm_d;
         gamma
@@ -175,7 +181,7 @@ impl DualState {
     /// Apply φ^i ← (1−γ)φ^i + γφ̂ and φ ← φ + (φ^i_new − φ^i_old).
     pub fn apply_step(&mut self, i: usize, hat: &Plane, gamma: f64) {
         let dot_phii_hat = hat.star.dot_dense(&self.blocks[i].star);
-        let nrm_hat = hat.star.nrm2sq();
+        let nrm_hat = hat.star.norm_sq();
         self.apply_step_with_products(i, hat, gamma, dot_phii_hat, nrm_hat);
     }
 
@@ -190,7 +196,7 @@ impl DualState {
         let block = &mut self.blocks[i];
         // φ update first, using the old φ^i: φ += γ(φ̂ − φ^i_old).
         math::axpy(-gamma, &block.star, &mut self.phi.star);
-        hat.star.add_to(gamma, &mut self.phi.star);
+        hat.star.axpy_into(gamma, &mut self.phi.star);
         self.phi.off += gamma * (hat.off - block.off);
         // Block update + incremental norm.
         block.interp_plane(gamma, hat);
@@ -207,11 +213,7 @@ impl DualState {
         debug_assert_eq!(new_block.dim(), self.dim());
         {
             let old = &self.blocks[i];
-            for ((p, &nb), &ob) in
-                self.phi.star.iter_mut().zip(new_block.star.iter()).zip(old.star.iter())
-            {
-                *p += nb - ob;
-            }
+            math::axpy_diff(1.0, &new_block.star, &old.star, &mut self.phi.star);
             self.phi.off += new_block.off - old.off;
         }
         self.block_nrm2[i] = math::nrm2sq(&new_block.star);
@@ -270,14 +272,14 @@ impl DualState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::vec::VecF;
+    use crate::model::plane::PlaneVec;
     use crate::utils::prop::prop_check;
 
     fn sparse_plane(g: &mut crate::utils::prop::Gen, dim: usize, tag: u64) -> Plane {
         let k = g.usize(0, dim);
         let pairs: Vec<(u32, f64)> =
             (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
-        Plane::new(VecF::sparse(dim, pairs), g.normal(), tag)
+        Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), tag)
     }
 
     #[test]
@@ -323,7 +325,7 @@ mod tests {
     #[test]
     fn replace_block_keeps_consistency() {
         let mut st = DualState::new(3, 4, 1.0);
-        let hat = Plane::new(VecF::Dense(vec![1.0, -1.0, 0.5, 0.0]), 0.3, 1);
+        let hat = Plane::new(PlaneVec::Dense(vec![1.0, -1.0, 0.5, 0.0]), 0.3, 1);
         st.block_step(1, &hat);
         let mut nb = DensePlane::zeros(4);
         nb.star = vec![0.2, 0.2, 0.2, 0.2];
@@ -336,7 +338,7 @@ mod tests {
     #[test]
     fn refresh_w_is_neg_phi_over_lambda() {
         let mut st = DualState::new(1, 3, 2.0);
-        let hat = Plane::new(VecF::Dense(vec![2.0, -4.0, 6.0]), 1.0, 1);
+        let hat = Plane::new(PlaneVec::Dense(vec![2.0, -4.0, 6.0]), 1.0, 1);
         // Force γ=1 via apply_step to make the expectation exact.
         st.apply_step(0, &hat, 1.0);
         st.refresh_w();
@@ -432,8 +434,8 @@ mod tests {
     #[test]
     fn pairwise_step_respects_mass_cap_and_zero_cap() {
         let mut st = DualState::new(1, 3, 1.0);
-        let p1 = Plane::new(VecF::Dense(vec![1.0, 0.0, 0.0]), 0.2, 1);
-        let p2 = Plane::new(VecF::Dense(vec![0.0, 1.0, 0.0]), 5.0, 2);
+        let p1 = Plane::new(PlaneVec::Dense(vec![1.0, 0.0, 0.0]), 0.2, 1);
+        let p2 = Plane::new(PlaneVec::Dense(vec![0.0, 1.0, 0.0]), 5.0, 2);
         st.block_step(0, &p1);
         let dot = p1.star.dot(&p2.star);
         // Zero available mass: no move regardless of how attractive p2 is.
@@ -447,7 +449,7 @@ mod tests {
     #[test]
     fn renormalize_removes_drift() {
         let mut st = DualState::new(2, 3, 1.0);
-        let hat = Plane::new(VecF::Dense(vec![1.0, 2.0, 3.0]), 0.5, 1);
+        let hat = Plane::new(PlaneVec::Dense(vec![1.0, 2.0, 3.0]), 0.5, 1);
         st.block_step(0, &hat);
         // Inject artificial drift.
         st.phi.star[0] += 1e-7;

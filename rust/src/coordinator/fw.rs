@@ -4,9 +4,8 @@
 //! step. Same dual, n× coarser steps than BCFW.
 
 use super::metrics::{EvalCtx, EvalPoint, Series};
-use crate::model::plane::{line_search, DensePlane, Plane};
+use crate::model::plane::{line_search, DensePlane, Plane, PlaneVec};
 use crate::model::problem::StructuredProblem;
-use crate::model::vec::VecF;
 use crate::oracle::wrappers::CountingOracle;
 use crate::runtime::engine::ScoringEngine;
 use crate::utils::timer::Clock;
@@ -71,10 +70,10 @@ pub fn run(
             if problem.delay > 0.0 {
                 clock.charge(problem.delay);
             }
-            p.star.add_to(1.0, &mut hat.star);
+            p.star.axpy_into(1.0, &mut hat.star);
             hat.off += p.off;
         }
-        let hat_plane = Plane::new(VecF::Dense(hat.star.clone()), hat.off, outer);
+        let hat_plane = Plane::new(PlaneVec::Dense(hat.star.clone()), hat.off, outer);
         let gamma = line_search(&phi, &phi.clone(), &hat_plane, cfg.lambda);
         // For the single-plane FW the "block" IS φ, so the line search is
         // over φ ← (1−γ)φ + γφ̂.
@@ -123,6 +122,8 @@ fn record(
         primal_avg: None,
         dual_avg: None,
         ws_mean: 0.0,
+        plane_bytes: 0,
+        plane_nnz_mean: 0.0,
         approx_passes: 0,
         approx_steps: 0,
         pairwise_steps: 0,

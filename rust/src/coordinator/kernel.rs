@@ -4,6 +4,7 @@
 //! functions; `kernel_bcfw` runs BCFW entirely in coefficient space on
 //! top of them.
 
+use crate::model::plane::PlaneVec;
 use crate::utils::math;
 
 /// A Mercer kernel over dense feature vectors.
@@ -31,6 +32,36 @@ impl Kernel {
                 (-gamma * d2).exp()
             }
             Kernel::Polynomial { degree, coef } => (math::dot(a, b) + coef).powi(*degree as i32),
+        }
+    }
+
+    /// K(a, b) over `PlaneVec` operands — the plane-representation-layer
+    /// entry point for kernelized extensions: a linear kernel between two
+    /// sparse vectors is a Θ(nnz) merge-join; linear values match
+    /// [`Kernel::eval`] on the densified operands bitwise.
+    pub fn eval_planes(&self, a: &PlaneVec, b: &PlaneVec) -> f64 {
+        match self {
+            Kernel::Linear => a.dot(b),
+            Kernel::Rbf { gamma } => {
+                // ‖a−b‖² = ‖a‖² − 2⟨a,b⟩ + ‖b‖² loses precision for
+                // near-identical vectors, so use it only for the
+                // sparse·sparse pair (where it avoids densification);
+                // any mix involving a dense operand walks elementwise.
+                match (a, b) {
+                    (PlaneVec::Sparse { .. }, PlaneVec::Sparse { .. }) => {
+                        let d2 = a.norm_sq() - 2.0 * a.dot(b) + b.norm_sq();
+                        (-gamma * d2.max(0.0)).exp()
+                    }
+                    (PlaneVec::Dense(x), PlaneVec::Dense(y)) => self.eval(x, y),
+                    (PlaneVec::Dense(x), s @ PlaneVec::Sparse { .. }) => {
+                        self.eval(x, &s.to_dense())
+                    }
+                    (s @ PlaneVec::Sparse { .. }, PlaneVec::Dense(y)) => {
+                        self.eval(&s.to_dense(), y)
+                    }
+                }
+            }
+            Kernel::Polynomial { degree, coef } => (a.dot(b) + coef).powi(*degree as i32),
         }
     }
 
@@ -123,6 +154,31 @@ mod tests {
     fn polynomial_degree_two() {
         let k = Kernel::Polynomial { degree: 2, coef: 1.0 };
         assert_eq!(k.eval(&[1.0], &[2.0]), 9.0);
+    }
+
+    #[test]
+    fn eval_planes_matches_dense_eval() {
+        use crate::model::plane::PlaneVec;
+        let a = PlaneVec::sparse(12, vec![(0, 1.0), (5, -2.0), (9, 0.5)]);
+        let b = PlaneVec::sparse(12, vec![(5, 3.0), (9, 1.0), (11, 4.0)]);
+        let (da, db) = (a.to_dense(), b.to_dense());
+        for k in [
+            Kernel::Linear,
+            Kernel::Rbf { gamma: 0.3 },
+            Kernel::Polynomial { degree: 2, coef: 1.0 },
+        ] {
+            let sparse = k.eval_planes(&a, &b);
+            let dense = k.eval(&da, &db);
+            assert!(
+                (sparse - dense).abs() < 1e-12 * (1.0 + dense.abs()),
+                "{k:?}: {sparse} vs {dense}"
+            );
+        }
+        // Linear over PlaneVec is the contract's bitwise case.
+        assert_eq!(
+            Kernel::Linear.eval_planes(&a, &b),
+            Kernel::Linear.eval_planes(&PlaneVec::dense(da), &PlaneVec::dense(db))
+        );
     }
 
     #[test]

@@ -33,6 +33,14 @@ pub struct EvalPoint {
     pub dual_avg: Option<f64>,
     /// Mean working-set size over examples (Fig. 5).
     pub ws_mean: f64,
+    /// Total heap bytes of the cached working-set planes — the
+    /// multi-plane memory ceiling (§3.3/§3.4); 0 for optimizers without
+    /// working sets.
+    pub plane_bytes: u64,
+    /// Mean stored entries (`PlaneVec::nnz`) per cached plane;
+    /// dense-stored planes count their full dimension d. 0 when no
+    /// planes are cached.
+    pub plane_nnz_mean: f64,
     /// Approximate passes run in the last outer iteration (Fig. 6).
     pub approx_passes: u64,
     /// Cumulative approximate steps with γ > 0.
@@ -65,6 +73,8 @@ impl EvalPoint {
             ),
             ("dual_avg", self.dual_avg.map(Json::Num).unwrap_or(Json::Null)),
             ("ws_mean", Json::Num(self.ws_mean)),
+            ("plane_bytes", Json::Num(self.plane_bytes as f64)),
+            ("plane_nnz_mean", Json::Num(self.plane_nnz_mean)),
             ("approx_passes", Json::Num(self.approx_passes as f64)),
             ("approx_steps", Json::Num(self.approx_steps as f64)),
             ("pairwise_steps", Json::Num(self.pairwise_steps as f64)),
@@ -90,6 +100,10 @@ pub struct Series {
     /// Approximate-pass step rule (`fw` | `pairwise`); empty for
     /// optimizers without approximate passes.
     pub steps: String,
+    /// Cutting-plane storage policy (`sparse` = oracle representation
+    /// with auto-compaction, `dense` = `--dense-planes`); empty for
+    /// optimizers without plane caches.
+    pub plane_repr: String,
     /// Evaluation snapshots, in order.
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
@@ -139,6 +153,7 @@ impl Series {
             ("seed", Json::Num(self.seed as f64)),
             ("sampling", Json::s(&self.sampling)),
             ("steps", Json::s(&self.steps)),
+            ("plane_repr", Json::s(&self.plane_repr)),
             ("wall_secs", Json::Num(self.wall_secs)),
             (
                 "shard_secs",
@@ -226,6 +241,8 @@ mod tests {
             primal_avg: None,
             dual_avg,
             ws_mean: 0.0,
+            plane_bytes: 0,
+            plane_nnz_mean: 0.0,
             approx_passes: 0,
             approx_steps: 0,
             pairwise_steps: 0,
@@ -263,6 +280,8 @@ mod tests {
             primal_avg: Some(0.85),
             dual_avg: None,
             ws_mean: 2.5,
+            plane_bytes: 4096,
+            plane_nnz_mean: 12.5,
             approx_passes: 7,
             approx_steps: 100,
             pairwise_steps: 40,
@@ -276,5 +295,7 @@ mod tests {
         assert_eq!(*j.get("dual_avg"), Json::Null);
         assert_eq!(j.get("pairwise_steps").as_f64(), Some(40.0));
         assert_eq!(j.get("gap_est").as_f64(), Some(0.123));
+        assert_eq!(j.get("plane_bytes").as_f64(), Some(4096.0));
+        assert_eq!(j.get("plane_nnz_mean").as_f64(), Some(12.5));
     }
 }

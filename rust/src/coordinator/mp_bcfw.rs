@@ -56,6 +56,7 @@ use crate::utils::timer::Clock;
 /// assert_eq!(mp.ttl, 10); // paper default T
 /// assert_eq!(mp.sampling, SamplingStrategy::Uniform);
 /// assert_eq!(mp.steps, StepRule::Fw);
+/// assert!(!mp.dense_planes); // sparse plane storage by default
 ///
 /// let plain = MpBcfwConfig::bcfw(0.01); // N = M = 0
 /// assert_eq!(plain.cap_n, 0);
@@ -89,6 +90,15 @@ pub struct MpBcfwConfig {
     /// Approximate-pass step direction (`Fw` = paper; `Pairwise` moves
     /// mass from the worst cached plane to the best).
     pub steps: StepRule,
+    /// Escape hatch: force every oracle plane to dense storage before it
+    /// enters the dual state and the working sets (CLI `--dense-planes`).
+    /// The default (`false`) keeps the oracle's sparse representation
+    /// with automatic density-threshold compaction. Bitwise-neutral for
+    /// the trajectory — the `PlaneVec` kernels accumulate in index order
+    /// regardless of storage (pinned in `tests/plane_repr.rs`) — so this
+    /// only trades memory/speed, and is kept as the A/B lever for
+    /// `bench --table sparsity`.
+    pub dense_planes: bool,
     /// Stop after this many outer iterations.
     pub max_iters: u64,
     /// Stop once this many exact oracle calls were made (0 = unlimited).
@@ -120,6 +130,7 @@ impl Default for MpBcfwConfig {
             averaging: false,
             sampling: SamplingStrategy::Uniform,
             steps: StepRule::Fw,
+            dense_planes: false,
             max_iters: 50,
             max_oracle_calls: 0,
             max_time: 0.0,
@@ -220,6 +231,7 @@ pub fn run(
         seed: cfg.seed,
         sampling: cfg.sampling.name().to_string(),
         steps: cfg.steps.name().to_string(),
+        plane_repr: if cfg.dense_planes { "dense" } else { "sparse" }.to_string(),
         ..Default::default()
     };
 
@@ -269,6 +281,14 @@ pub fn run(
             }
             let (planes, report) =
                 parallel::exact_pass(problem, &run.state.w, &uniq, cfg.threads);
+            // `--dense-planes`: storage-only change, applied once per
+            // distinct plane at the oracle boundary (bitwise-neutral
+            // downstream by the PlaneVec representation contract).
+            let planes: Vec<crate::model::plane::Plane> = if cfg.dense_planes {
+                planes.into_iter().map(crate::model::plane::Plane::into_dense).collect()
+            } else {
+                planes
+            };
             // Virtual latency: the critical path is the largest shard.
             if problem.delay > 0.0 {
                 clock.charge(problem.delay * report.max_shard_len as f64);
@@ -288,6 +308,7 @@ pub fn run(
             for &i in sampler.pass_order(&mut rng, &run.gaps).iter() {
                 run.state.refresh_w();
                 let hat = problem.oracle(i, &run.state.w, eng);
+                let hat = if cfg.dense_planes { hat.into_dense() } else { hat };
                 // Virtual latency: charge the pausable clock deterministically.
                 if problem.delay > 0.0 {
                     clock.charge(problem.delay);
@@ -603,6 +624,17 @@ fn record_point(
         run.working_sets.iter().map(|w| w.len()).sum::<usize>() as f64
             / run.working_sets.len() as f64
     };
+    // Plane-storage accounting (the sparsity win in one pair of numbers:
+    // bytes actually held by the multi-plane caches, and mean stored
+    // entries per plane — dense storage counts d per plane).
+    let plane_bytes: usize = run.working_sets.iter().map(|w| w.mem_bytes()).sum();
+    let plane_count: usize = run.working_sets.iter().map(|w| w.len()).sum();
+    let plane_nnz_mean = if plane_count > 0 {
+        run.working_sets.iter().map(|w| w.nnz_total()).sum::<usize>() as f64
+            / plane_count as f64
+    } else {
+        0.0
+    };
 
     let pt = EvalPoint {
         outer,
@@ -613,6 +645,8 @@ fn record_point(
         primal_avg,
         dual_avg,
         ws_mean,
+        plane_bytes: plane_bytes as u64,
+        plane_nnz_mean,
         approx_passes,
         approx_steps: run.approx_steps_total,
         pairwise_steps: run.pairwise_steps_total,
@@ -773,6 +807,37 @@ mod tests {
         }
         assert!(run.state.consistency_error() < 1e-6);
         assert_eq!(series.steps, "pairwise");
+    }
+
+    #[test]
+    fn dense_planes_wires_plane_repr_and_storage_metrics() {
+        // Config/metrics wiring only — the cross-mode bitwise trajectory
+        // identity itself is pinned in tests/plane_repr.rs (and re-checked
+        // by the sparsity bench smoke in CI).
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig {
+            max_iters: 3,
+            auto_approx: false,
+            max_approx_passes: 2,
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        let p1 = tiny_problem(1);
+        let (s1, _) = run(&p1, &mut eng, &cfg);
+        let p2 = tiny_problem(1);
+        let (s2, _) = run(&p2, &mut eng, &MpBcfwConfig { dense_planes: true, ..cfg });
+        assert_eq!(s1.plane_repr, "sparse");
+        assert_eq!(s2.plane_repr, "dense");
+        let (a, b) = (s1.points.last().unwrap(), s2.points.last().unwrap());
+        assert!(a.plane_bytes > 0 && b.plane_bytes > 0);
+        // usps_like planes are ~0.2-dense, so forcing dense storage must
+        // cost strictly more bytes and more stored entries per plane.
+        assert!(
+            b.plane_bytes > a.plane_bytes,
+            "dense {} vs sparse {}",
+            b.plane_bytes,
+            a.plane_bytes
+        );
+        assert!(b.plane_nnz_mean > a.plane_nnz_mean);
     }
 
     #[test]

@@ -13,6 +13,12 @@
 //! Since all quantities are inner products, the same scheme kernelizes
 //! (the paper's "caching of kernel values"); our Gram cache is exactly
 //! the kernel cache in that reading.
+//!
+//! All plane·plane and plane·accumulator products route through the
+//! [`crate::model::plane::PlaneVec`] API: a Gram miss between two sparse
+//! planes is a Θ(nnz) merge-join rather than a Θ(d) dense dot, and by
+//! the representation-invariance contract every cached scalar is
+//! bitwise identical whether the planes are stored sparse or dense.
 
 use std::collections::HashMap;
 
@@ -183,7 +189,7 @@ pub fn cached_block_updates(
     math::axpy(c0, &state.blocks[i].star, &mut new_block.star);
     for (j, &x) in coef.iter().enumerate() {
         if x != 0.0 {
-            ws.plane(j).star.add_to(x, &mut new_block.star);
+            ws.plane(j).star.axpy_into(x, &mut new_block.star);
         }
     }
     new_block.off = off_i;
@@ -197,7 +203,7 @@ pub fn cached_block_updates(
 mod tests {
     use super::*;
     use crate::model::plane::Plane;
-    use crate::model::vec::VecF;
+    use crate::model::plane::PlaneVec;
     use crate::utils::prop::prop_check;
 
     fn rand_ws(g: &mut crate::utils::prop::Gen, dim: usize, m: usize) -> WorkingSet {
@@ -206,7 +212,7 @@ mod tests {
             let k = g.usize(1, dim);
             let pairs: Vec<(u32, f64)> =
                 (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
-            ws.insert(Plane::new(VecF::sparse(dim, pairs), g.normal(), t as u64 + 1), 0);
+            ws.insert(Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), t as u64 + 1), 0);
         }
         ws
     }
@@ -229,7 +235,7 @@ mod tests {
                 let k = g.usize(1, dim);
                 let pairs: Vec<(u32, f64)> =
                     (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
-                let hat = Plane::new(VecF::sparse(dim, pairs), g.normal(), 100 + t as u64);
+                let hat = Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), 100 + t as u64);
                 st1.block_step(t % n, &hat);
             }
             let mut st2 = st1.clone_state();
@@ -330,7 +336,7 @@ mod tests {
             let mut st = DualState::new(2, dim, lambda);
             let mut ws = rand_ws(g, dim, g.usize(1, 5));
             let hat = Plane::new(
-                VecF::sparse(dim, vec![(0, g.normal()), (1, g.normal())]),
+                PlaneVec::sparse(dim, vec![(0, g.normal()), (1, g.normal())]),
                 g.normal(),
                 999,
             );

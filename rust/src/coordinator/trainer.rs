@@ -174,6 +174,11 @@ pub struct TrainSpec {
     /// Approximate-pass step rule (`Pairwise` needs working sets, i.e.
     /// the mp-bcfw variants).
     pub steps: StepRule,
+    /// Force dense plane storage (CLI `--dense-planes`; bcfw/mp-bcfw
+    /// family only). Default: the oracle's sparse representation with
+    /// automatic compaction. Trajectories are bitwise identical either
+    /// way; only memory and speed change.
+    pub dense_planes: bool,
     /// Scoring engine to run on.
     pub engine: EngineKind,
     /// Also record the mean train task loss at each evaluation (costly).
@@ -204,6 +209,7 @@ impl Default for TrainSpec {
             auto_approx: true,
             sampling: SamplingStrategy::Uniform,
             steps: StepRule::Fw,
+            dense_planes: false,
             engine: EngineKind::Native,
             with_train_loss: false,
             eval_every: 1,
@@ -275,6 +281,12 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
     anyhow::ensure!(
         spec.steps == StepRule::Fw || matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg),
         "--steps pairwise needs cached working sets (mp-bcfw variants); {} has none",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        !spec.dense_planes
+            || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--dense-planes applies to the bcfw/mp-bcfw family only; {} stores no planes",
         spec.algo.name()
     );
     let problem = build_problem(spec);
@@ -368,6 +380,7 @@ pub fn train_on_full(
                 averaging: matches!(spec.algo, Algo::BcfwAvg | Algo::MpBcfwAvg),
                 sampling: spec.sampling,
                 steps: if multi { spec.steps } else { StepRule::Fw },
+                dense_planes: spec.dense_planes,
                 max_iters: spec.max_iters,
                 max_oracle_calls: spec.max_oracle_calls,
                 max_time: spec.max_time,
@@ -517,6 +530,26 @@ mod tests {
             steps: StepRule::Pairwise,
             ..Default::default()
         };
+        assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn dense_planes_trains_and_rejects_planeless_algos() {
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 3,
+            dense_planes: true,
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        let last = series.points.last().unwrap();
+        assert!(last.primal >= last.dual - 1e-9);
+        assert_eq!(series.plane_repr, "dense");
+        assert!(last.plane_bytes > 0);
+        // Algorithms without plane caches would silently ignore the
+        // flag; reject instead.
+        let bad = TrainSpec { algo: Algo::Ssg, ..spec };
         assert!(train(&bad).is_err());
     }
 

@@ -11,6 +11,12 @@
 //!
 //! Entries carry stable ids so the §3.5 Gram cache can key inner products
 //! across evictions.
+//!
+//! Planes are stored with their oracle-produced
+//! [`crate::model::plane::PlaneVec`] representation (sparse for the
+//! block-structured feature maps, auto-densified above the density
+//! threshold, or forced dense under `--dense-planes`); `mem_bytes` /
+//! `nnz_total` expose the storage cost for the sparsity metrics.
 
 use std::collections::HashMap;
 
@@ -92,7 +98,7 @@ impl WorkingSet {
             self.entries[idx].last_active = now;
             return (idx, None);
         }
-        let nrm = plane.star.nrm2sq();
+        let nrm = plane.star.norm_sq();
         self.entries.push(WsEntry { plane, last_active: now, id: self.next_id });
         self.norms.push(nrm);
         self.next_id += 1;
@@ -160,9 +166,17 @@ impl WorkingSet {
         best
     }
 
-    /// Total heap use of the cached planes (diagnostics).
+    /// Total heap use of the cached planes (the `plane_bytes` metric:
+    /// this working-set storage is the memory ceiling of the multi-plane
+    /// scheme, §3.3/§3.4).
     pub fn mem_bytes(&self) -> usize {
         self.entries.iter().map(|e| e.plane.mem_bytes()).sum()
+    }
+
+    /// Total stored entries across the cached planes' `PlaneVec`s
+    /// (feeds the `plane_nnz_mean` metric; dense-stored planes count d).
+    pub fn nnz_total(&self) -> usize {
+        self.entries.iter().map(|e| e.plane.star.nnz()).sum()
     }
 }
 
@@ -280,11 +294,11 @@ impl Default for BlockCoeffs {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::vec::VecF;
+    use crate::model::plane::PlaneVec;
     use crate::utils::prop::prop_check;
 
     fn plane(tag: u64, val: f64) -> Plane {
-        Plane::new(VecF::sparse(3, vec![(0, val)]), 0.0, tag)
+        Plane::new(PlaneVec::sparse(3, vec![(0, val)]), 0.0, tag)
     }
 
     #[test]
@@ -448,7 +462,7 @@ mod tests {
                 ws.insert(plane(g.rng.below(10) as u64, g.normal()), t);
                 ws.evict_stale(t, 3);
                 for idx in 0..ws.len() {
-                    let expect = ws.plane(idx).star.nrm2sq();
+                    let expect = ws.plane(idx).star.norm_sq();
                     if (ws.norm_sq(idx) - expect).abs() > 1e-12 {
                         return Err("norm cache out of sync".into());
                     }

@@ -35,8 +35,10 @@
 //!
 //! * [`utils`] — seeded RNG, timing, JSON/CSV, a mini property-testing
 //!   harness (the offline build has no external crates).
-//! * [`model`] — cutting-plane algebra (planes, line search, dual bound),
-//!   sparse/dense vectors, feature layouts, and the `StructuredProblem`
+//! * [`model`] — the plane representation layer (`PlaneVec`:
+//!   sparse/dense plane vectors with order-deterministic kernels and
+//!   density-threshold auto-compaction), cutting-plane algebra (line
+//!   search, dual bound), feature layouts, and the `StructuredProblem`
 //!   trait every oracle implements (required `Send + Sync` so problems
 //!   can be shared across worker threads).
 //! * [`maxflow`] — Boykov–Kolmogorov s-t min-cut, plus an Edmonds–Karp

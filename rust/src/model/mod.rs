@@ -1,11 +1,11 @@
-//! Problem model: planes (cutting-plane algebra), sparse/dense vectors,
+//! Problem model: the plane representation layer (sparse/dense plane
+//! vectors, cutting-plane algebra, line search, dual bound),
 //! joint-feature layouts, task losses, and the `StructuredProblem` trait.
-pub mod vec;
+
 pub mod plane;
 pub mod features;
 pub mod loss;
 pub mod problem;
 
-pub use plane::{DensePlane, Plane};
+pub use plane::{DensePlane, Plane, PlaneVec};
 pub use problem::StructuredProblem;
-pub use vec::VecF;

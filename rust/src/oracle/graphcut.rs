@@ -22,9 +22,8 @@
 use crate::data::types::SegData;
 use crate::maxflow::bk::BkGraph;
 use crate::model::loss::{hamming_normalized, label_hash};
-use crate::model::plane::Plane;
+use crate::model::plane::{Plane, PlaneVec};
 use crate::model::problem::StructuredProblem;
-use crate::model::vec::VecF;
 use crate::runtime::engine::ScoringEngine;
 
 pub struct GraphCutProblem {
@@ -86,7 +85,7 @@ impl GraphCutProblem {
         let off = (hamming_normalized(&inst.labels, yhat) - inst.potts(yhat)
             + inst.potts(&inst.labels))
             / n;
-        Plane::new(VecF::sparse(lay.dim(), pairs), off, label_hash(yhat))
+        Plane::new(PlaneVec::sparse(lay.dim(), pairs), off, label_hash(yhat))
     }
 
     /// Loss-augmented unary costs u_l(c) for example i at weights w.

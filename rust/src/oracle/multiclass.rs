@@ -11,9 +11,8 @@
 
 use crate::data::types::MulticlassData;
 use crate::model::loss::{class_hash, zero_one};
-use crate::model::plane::Plane;
+use crate::model::plane::{Plane, PlaneVec};
 use crate::model::problem::StructuredProblem;
-use crate::model::vec::VecF;
 use crate::runtime::engine::ScoringEngine;
 
 pub struct MulticlassProblem {
@@ -37,7 +36,7 @@ impl MulticlassProblem {
         let inst = &self.data.instances[i];
         let n = self.data.n() as f64;
         if yhat == inst.label {
-            return Plane::new(VecF::zeros(l.dim()), 0.0, class_hash(yhat));
+            return Plane::new(PlaneVec::zeros(l.dim()), 0.0, class_hash(yhat));
         }
         let mut pairs = Vec::with_capacity(2 * l.feat);
         let bp = l.block(yhat) as u32;
@@ -46,7 +45,8 @@ impl MulticlassProblem {
             pairs.push((bp + k as u32, x / n));
             pairs.push((bm + k as u32, -x / n));
         }
-        Plane::new(VecF::sparse(l.dim(), pairs), zero_one(inst.label, yhat) / n, class_hash(yhat))
+        let off = zero_one(inst.label, yhat) / n;
+        Plane::new(PlaneVec::sparse(l.dim(), pairs), off, class_hash(yhat))
     }
 }
 

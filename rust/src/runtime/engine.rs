@@ -10,6 +10,13 @@
 //!
 //! Both backends implement `ScoringEngine`, which is deliberately tiny:
 //! row-major mat·vec and mat·mat. Callers own all shape bookkeeping.
+//!
+//! Scope note: the engines score *data* features (ψ matrices), which are
+//! genuinely dense. Cutting-plane storage and plane inner products live
+//! in the sparse-aware representation layer
+//! (`model::plane::PlaneVec`) instead — oracles build sparse planes from
+//! the dense scores produced here, and the coordinator never routes
+//! plane algebra through the engine.
 
 use crate::utils::math;
 

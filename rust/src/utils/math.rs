@@ -39,7 +39,38 @@ pub fn nrm2sq(a: &[f64]) -> f64 {
     dot(a, a)
 }
 
+/// Dot product accumulated strictly in index order (no unrolling, no
+/// compensation).
+///
+/// This is the order-deterministic kernel behind `model::plane::PlaneVec`:
+/// a sparse vector accumulates its products in increasing index order, and
+/// a dense vector holding the same values accumulates the same nonzero
+/// products in the same order — the structural zeros contribute exact-zero
+/// additions, which leave an IEEE-754 running sum unchanged for finite
+/// operands. Every `PlaneVec` reduction routes through this function or
+/// its sparse mirror, which is what makes training trajectories
+/// independent of the plane representation (`--dense-planes` vs the
+/// default; pinned in `tests/plane_repr.rs`). The unrolled [`dot`] is
+/// faster but re-orders the accumulation, so it is reserved for the
+/// representation-independent dense accumulators (φ, φ^i) that never
+/// switch storage.
+#[inline]
+pub fn dot_seq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        s += x * y;
+    }
+    s
+}
+
 /// y += alpha * x
+///
+/// Order-deterministic contract: each element is updated independently
+/// (`y[i] += alpha·x[i]`), so the result is identical whether the zero
+/// entries of `x` are visited (dense storage) or skipped (sparse
+/// storage), for finite inputs. No compensated summation — determinism
+/// comes from the fixed order, not from extra precision.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
@@ -48,14 +79,38 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// y = alpha·y + beta·x, elementwise, in index order.
+///
+/// The shared scale-and-add primitive of the dense and sparse plane
+/// paths: convex interpolation is `scale_add(1−γ, γ, x, y)`, and the
+/// sparse mirror performs `scal(alpha, y)` followed by indexed
+/// `y[i] += beta·x[i]` — the identical two operations per touched index,
+/// hence bitwise-equal results across representations (same
+/// compensated-summation-free, order-deterministic contract as
+/// [`axpy`]).
+#[inline]
+pub fn scale_add(alpha: f64, beta: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = alpha * *yi + beta * xi;
+    }
+}
+
+/// y += alpha·(a − b), elementwise (maintains φ = Σφ^i style sums
+/// without intermediate allocation).
+#[inline]
+pub fn axpy_diff(alpha: f64, a: &[f64], b: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(a.len(), y.len());
+    debug_assert_eq!(b.len(), y.len());
+    for ((yi, ai), bi) in y.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *yi += alpha * (ai - bi);
+    }
+}
+
 /// y = (1 - gamma) * y + gamma * x   (convex interpolation, in place)
 #[inline]
 pub fn interp(gamma: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    let om = 1.0 - gamma;
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi = om * *yi + gamma * xi;
-    }
+    scale_add(1.0 - gamma, gamma, x, y);
 }
 
 /// y *= alpha
@@ -119,6 +174,57 @@ mod tests {
         assert_eq!(y, vec![12.0, 24.0, 36.0]);
         interp(0.25, &x, &mut y);
         assert_eq!(y, vec![12.0 * 0.75 + 0.25, 24.0 * 0.75 + 0.5, 36.0 * 0.75 + 0.75]);
+    }
+
+    #[test]
+    fn dot_seq_matches_dot_within_tolerance_and_is_order_stable() {
+        let a: Vec<f64> = (0..97).map(|i| (i as f64 * 0.77).cos()).collect();
+        let b: Vec<f64> = (0..97).map(|i| (i as f64 * 1.3).sin()).collect();
+        assert!((dot_seq(&a, &b) - dot(&a, &b)).abs() < 1e-9);
+        // Zero entries leave the running sum bitwise unchanged: dotting
+        // against a sparsity pattern's densified form is exact.
+        let mut a_masked = a.clone();
+        for (i, x) in a_masked.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *x = 0.0;
+            }
+        }
+        let manual: f64 = {
+            let mut s = 0.0;
+            for (i, (x, y)) in a_masked.iter().zip(&b).enumerate() {
+                if i % 3 != 0 {
+                    s += x * y;
+                }
+            }
+            s
+        };
+        assert_eq!(dot_seq(&a_masked, &b), manual);
+    }
+
+    #[test]
+    fn scale_add_matches_interp_and_axpy_compositions() {
+        let x = vec![1.0, -2.0, 0.5];
+        let mut y1 = vec![4.0, 1.0, -3.0];
+        let mut y2 = y1.clone();
+        scale_add(0.75, 0.25, &x, &mut y1);
+        interp(0.25, &x, &mut y2);
+        assert_eq!(y1, y2);
+        // The sparse mirror (scal then indexed add) is bitwise equal.
+        let mut y3 = vec![4.0, 1.0, -3.0];
+        scal(0.75, &mut y3);
+        for (yi, xi) in y3.iter_mut().zip(&x) {
+            *yi += 0.25 * xi;
+        }
+        assert_eq!(y1, y3);
+    }
+
+    #[test]
+    fn axpy_diff_matches_two_axpys() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![0.5, -1.0, 4.0];
+        let mut y1 = vec![1.0, 1.0, 1.0];
+        axpy_diff(2.0, &a, &b, &mut y1);
+        assert_eq!(y1, vec![1.0 + 2.0 * 0.5, 1.0 + 2.0 * 3.0, 1.0 - 2.0]);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use mpbcfw::data::synth::usps_like::{generate, UspsLikeConfig};
 use mpbcfw::data::types::Scale;
 use mpbcfw::maxflow::BkGraph;
 use mpbcfw::model::plane::Plane;
-use mpbcfw::model::vec::VecF;
+use mpbcfw::model::plane::PlaneVec;
 use mpbcfw::oracle::multiclass::MulticlassProblem;
 use mpbcfw::oracle::wrappers::CountingOracle;
 use mpbcfw::runtime::engine::NativeEngine;
@@ -116,7 +116,8 @@ fn gram_cache_survives_working_set_eviction() {
         for t in 0..4 {
             let pairs: Vec<(u32, f64)> =
                 (0..dim).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
-            ws.insert(Plane::new(VecF::sparse(dim, pairs), rng.normal(), round * 100 + t), round);
+            let p = Plane::new(PlaneVec::sparse(dim, pairs), rng.normal(), round * 100 + t);
+            ws.insert(p, round);
         }
         cached_block_updates(&mut st, &mut ws, &mut gram, 0, 6, round);
         ws.evict_stale(round, 1);

@@ -1,0 +1,214 @@
+//! Integration coverage for the plane representation layer
+//! (`model::plane::PlaneVec`) across the whole training stack:
+//!
+//! * the representation-invariance contract end to end — `--dense-planes`
+//!   and the default sparse storage produce **bit-identical** eval
+//!   trajectories at a fixed seed on horseseg_like and ocr_like (the
+//!   `PlaneVec` kernels accumulate in index order regardless of storage);
+//! * the auto-compaction density thresholds;
+//! * Gram-cache id stability when sparse-stored planes are evicted and
+//!   replaced by dense-stored ones (and vice versa);
+//! * the plane-storage metrics (`plane_bytes`, `plane_nnz_mean`) that
+//!   make the sparsity win measurable in `bench --table sparsity`.
+
+use mpbcfw::coordinator::products::GramCache;
+use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
+use mpbcfw::coordinator::working_set::WorkingSet;
+use mpbcfw::data::types::Scale;
+use mpbcfw::model::plane::{DENSIFY_ABOVE, Plane, PlaneVec, SPARSIFY_BELOW};
+
+fn spec(ds: DatasetKind, dense_planes: bool) -> TrainSpec {
+    TrainSpec {
+        dataset: ds,
+        scale: Scale::Tiny,
+        algo: Algo::MpBcfw,
+        max_iters: 5,
+        seed: 11,
+        data_seed: 3,
+        // The §3.4 slope rule is timing-based; pin the pass schedule so
+        // the two storage modes execute the identical step sequence.
+        auto_approx: false,
+        max_approx_passes: 2,
+        dense_planes,
+        ..Default::default()
+    }
+}
+
+fn assert_bit_identical_trajectories(ds: DatasetKind) {
+    let a = train(&spec(ds, false)).unwrap();
+    let b = train(&spec(ds, true)).unwrap();
+    assert_eq!(a.plane_repr, "sparse");
+    assert_eq!(b.plane_repr, "dense");
+    assert_eq!(a.points.len(), b.points.len());
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.outer, q.outer);
+        assert_eq!(p.oracle_calls, q.oracle_calls);
+        assert_eq!(p.primal, q.primal, "primal diverged at outer {}", p.outer);
+        assert_eq!(p.dual, q.dual, "dual diverged at outer {}", p.outer);
+        assert_eq!(p.approx_passes, q.approx_passes);
+        assert_eq!(p.approx_steps, q.approx_steps);
+        assert_eq!(p.ws_mean, q.ws_mean);
+        assert!(
+            p.gap_est == q.gap_est || (p.gap_est.is_nan() && q.gap_est.is_nan()),
+            "gap_est diverged at outer {}: {} vs {}",
+            p.outer,
+            p.gap_est,
+            q.gap_est
+        );
+    }
+    // Storage is the only thing allowed to differ; dense can never be
+    // smaller than the compacted representation.
+    let (pa, pb) = (a.points.last().unwrap(), b.points.last().unwrap());
+    assert!(pa.plane_bytes > 0 && pb.plane_bytes > 0);
+    assert!(pb.plane_bytes >= pa.plane_bytes);
+    assert!(pb.plane_nnz_mean >= pa.plane_nnz_mean);
+}
+
+#[test]
+fn dense_and_sparse_trajectories_bit_identical_on_horseseg_like() {
+    assert_bit_identical_trajectories(DatasetKind::HorsesegLike);
+}
+
+#[test]
+fn dense_and_sparse_trajectories_bit_identical_on_ocr_like() {
+    assert_bit_identical_trajectories(DatasetKind::OcrLike);
+}
+
+#[test]
+fn multiclass_planes_actually_stored_sparse() {
+    // The sparsity machinery must be exercised, not vacuous. Multiclass
+    // planes touch exactly two of K class blocks (density 2/K < the
+    // densify threshold by construction), so in the default mode every
+    // nonzero cached plane is sparse-stored and forcing dense storage
+    // costs strictly more. (OCR and graph-cut planes have data-dependent
+    // density and may legitimately auto-densify; the trajectory tests
+    // above only require `>=` there.)
+    let a = train(&spec(DatasetKind::UspsLike, false)).unwrap();
+    let b = train(&spec(DatasetKind::UspsLike, true)).unwrap();
+    let (pa, pb) = (a.points.last().unwrap(), b.points.last().unwrap());
+    assert!(
+        pb.plane_bytes > pa.plane_bytes,
+        "dense {} bytes should exceed sparse {} bytes on usps_like",
+        pb.plane_bytes,
+        pa.plane_bytes
+    );
+    assert!(pb.plane_nnz_mean > pa.plane_nnz_mean);
+}
+
+// ---- PlaneVec compaction thresholds ---------------------------------
+
+#[test]
+fn sparse_builder_densifies_only_above_threshold() {
+    // Just below the threshold: stays sparse.
+    let at = (DENSIFY_ABOVE * 100.0) as u32; // 50 entries of 100
+    let below = PlaneVec::sparse(100, (0..at).map(|i| (i, 1.0)).collect());
+    assert!(!below.is_dense(), "density {} must stay sparse", below.density());
+    // Just above: densifies.
+    let above = PlaneVec::sparse(100, (0..at + 1).map(|i| (i, 1.0)).collect());
+    assert!(above.is_dense(), "density {} must densify", above.density());
+    // Values survive compaction exactly.
+    assert_eq!(above.to_dense()[..51], vec![1.0; 51][..]);
+    assert_eq!(above.to_dense()[51..], vec![0.0; 49][..]);
+}
+
+#[test]
+fn compact_resparsifies_only_below_threshold() {
+    let d = 100usize;
+    let nnz_keep = (SPARSIFY_BELOW * d as f64) as usize; // 25: not < threshold
+    let mut v = vec![0.0; d];
+    for x in v.iter_mut().take(nnz_keep) {
+        *x = 2.0;
+    }
+    assert!(PlaneVec::dense(v.clone()).compact().is_dense(), "at the threshold: keep dense");
+    let mut v2 = vec![0.0; d];
+    for x in v2.iter_mut().take(nnz_keep - 1) {
+        *x = 2.0;
+    }
+    let re = PlaneVec::dense(v2.clone()).compact();
+    assert!(!re.is_dense(), "below the threshold: re-sparsify");
+    assert_eq!(re.nnz(), nnz_keep - 1);
+    assert_eq!(re.to_dense(), v2);
+}
+
+#[test]
+fn compaction_is_bitwise_neutral_for_all_kernels() {
+    // Whatever representation compaction picks, every reduction agrees
+    // bit for bit with the explicit dense storage of the same values.
+    let dim = 64usize;
+    let pairs: Vec<(u32, f64)> = (0..dim as u32)
+        .filter(|i| i % 3 == 0)
+        .map(|i| (i, (i as f64 * 0.37).sin()))
+        .collect();
+    let compacted = PlaneVec::sparse(dim, pairs.clone());
+    let dense = {
+        let mut v = vec![0.0; dim];
+        for &(i, x) in &pairs {
+            v[i as usize] = x;
+        }
+        PlaneVec::dense(v)
+    };
+    let w: Vec<f64> = (0..dim).map(|i| (i as f64 * 0.11).cos()).collect();
+    assert_eq!(compacted.dot_dense(&w), dense.dot_dense(&w));
+    assert_eq!(compacted.norm_sq(), dense.norm_sq());
+    let other = PlaneVec::sparse(dim, vec![(0, 1.0), (3, -2.0), (63, 0.5)]);
+    assert_eq!(compacted.dot(&other), dense.dot(&other));
+    let mut acc1 = w.clone();
+    let mut acc2 = w.clone();
+    compacted.axpy_into(-0.7, &mut acc1);
+    dense.axpy_into(-0.7, &mut acc2);
+    assert_eq!(acc1, acc2);
+    let mut acc1 = w.clone();
+    let mut acc2 = w;
+    compacted.interp_into(0.3, &mut acc1);
+    dense.interp_into(0.3, &mut acc2);
+    assert_eq!(acc1, acc2);
+}
+
+// ---- Gram-cache id stability across sparse eviction ------------------
+
+fn sparse_plane(tag: u64, dim: usize, stride: usize) -> Plane {
+    let pairs: Vec<(u32, f64)> = (0..dim)
+        .step_by(stride)
+        .map(|i| (i as u32, (tag as f64 + 1.0) * (i as f64 + 0.5)))
+        .collect();
+    Plane::new(PlaneVec::sparse(dim, pairs), 0.1, tag)
+}
+
+#[test]
+fn gram_cache_ids_stable_across_mixed_representation_eviction() {
+    let dim = 24usize;
+    let mut ws = WorkingSet::new(100);
+    let mut gram = GramCache::new();
+    // A mix of sparse- and dense-stored planes (stride 1 → density 1 →
+    // auto-densified; larger strides stay sparse).
+    for (t, stride) in [(1u64, 8usize), (2, 1), (3, 4), (4, 2)] {
+        ws.insert(sparse_plane(t, dim, stride), t);
+    }
+    let reference = |ws: &WorkingSet, a: usize, b: usize| ws.plane(a).star.dot(&ws.plane(b).star);
+    // Warm every pair and validate against direct dots.
+    for a in 0..ws.len() {
+        for b in 0..ws.len() {
+            assert_eq!(gram.get(&ws, a, b), reference(&ws, a, b), "warm ({a},{b})");
+        }
+    }
+    let warm_misses = gram.misses;
+    // Evict the stale half (tags 1 and 2), keeping ids 2 and 3 alive.
+    let dead = ws.evict_stale_ids(5, 2);
+    assert_eq!(dead.len(), 2);
+    gram.retain_ids(&|id| !dead.contains(&id));
+    // Surviving pairs are still served from cache, still correct.
+    for a in 0..ws.len() {
+        for b in 0..ws.len() {
+            assert_eq!(gram.get(&ws, a, b), reference(&ws, a, b), "post-evict ({a},{b})");
+        }
+    }
+    assert_eq!(gram.misses, warm_misses, "surviving pairs must hit the warm cache");
+    // New planes get fresh ids — a recycled index must not alias an old
+    // product even when the new plane has a different representation.
+    ws.insert(sparse_plane(9, dim, 1), 6); // dense-stored newcomer
+    for a in 0..ws.len() {
+        for b in 0..ws.len() {
+            assert_eq!(gram.get(&ws, a, b), reference(&ws, a, b), "post-insert ({a},{b})");
+        }
+    }
+}

@@ -7,12 +7,12 @@
 use mpbcfw::coordinator::products::GramCache;
 use mpbcfw::coordinator::working_set::WorkingSet;
 use mpbcfw::model::plane::Plane;
-use mpbcfw::model::vec::VecF;
+use mpbcfw::model::plane::PlaneVec;
 
 fn plane(tag: u64, vals: &[f64]) -> Plane {
     let pairs: Vec<(u32, f64)> =
         vals.iter().enumerate().map(|(i, &v)| (i as u32, v)).collect();
-    Plane::new(VecF::sparse(4, pairs), 0.1 * tag as f64, tag)
+    Plane::new(PlaneVec::sparse(4, pairs), 0.1 * tag as f64, tag)
 }
 
 fn tags(ws: &WorkingSet) -> Vec<u64> {
@@ -127,7 +127,7 @@ fn norms_follow_entries_through_cap_and_ttl_eviction() {
             ws.evict_stale(t, 2);
         }
         for idx in 0..ws.len() {
-            let expect = ws.plane(idx).star.nrm2sq();
+            let expect = ws.plane(idx).star.norm_sq();
             assert!(
                 (ws.norm_sq(idx) - expect).abs() < 1e-12,
                 "norm cache out of sync at t={t} idx={idx}"
