@@ -14,6 +14,7 @@ use mpbcfw::data::types::Scale;
 use mpbcfw::maxflow::BkGraph;
 use mpbcfw::model::plane::{Plane, PlaneVec};
 use mpbcfw::model::problem::StructuredProblem;
+use mpbcfw::model::scratch::OracleScratch;
 use mpbcfw::oracle::graphcut::GraphCutProblem;
 use mpbcfw::oracle::multiclass::MulticlassProblem;
 use mpbcfw::oracle::sequence::SequenceProblem;
@@ -86,9 +87,18 @@ fn main() {
         0,
     ));
     let w3: Vec<f64> = (0..seg.dim()).map(|_| 0.01 * rng.normal()).collect();
-    bench("oracle horseseg_like (BK min-cut)", || {
+    bench("oracle horseseg_like (BK min-cut, cold)", || {
         i = (i + 1) % seg.n();
         std::hint::black_box(seg.oracle(i, &w3, &mut eng));
+    });
+
+    // Warm-start A/B: persistent per-example graphs + reused buffers
+    // (the --oracle-reuse on path). Identical planes; only the per-call
+    // construction work disappears.
+    let mut warm = OracleScratch::new(true);
+    bench("oracle horseseg_like (BK min-cut, warm)", || {
+        i = (i + 1) % seg.n();
+        std::hint::black_box(seg.oracle_scratch(i, &w3, &mut eng, &mut warm));
     });
 
     // -- BK max-flow on a 16x16 grid -----------------------------------
@@ -140,9 +150,18 @@ fn main() {
     let mut st2 = DualState::new(4, dim, 0.01);
     let mut ws2 = mk_ws(rng, 12);
     let mut now = 0u64;
+    let mut coef_scratch: Vec<f64> = Vec::new();
     bench("approx block cached r=10 (12 planes)", || {
         now += 1;
-        std::hint::black_box(cached_block_updates(&mut st2, &mut ws2, &mut gram, 0, 10, now));
+        std::hint::black_box(cached_block_updates(
+            &mut st2,
+            &mut ws2,
+            &mut gram,
+            0,
+            10,
+            now,
+            &mut coef_scratch,
+        ));
     });
 
     // -- parallel sharded exact-pass dispatch (threads sweep) -----------

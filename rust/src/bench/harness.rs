@@ -79,6 +79,9 @@ impl RunGroup {
                 "plane_repr",
                 "plane_bytes",
                 "plane_nnz_mean",
+                "oracle_reuse",
+                "oracle_build_s",
+                "oracle_solve_s",
             ],
         )?;
         for s in &self.series {
@@ -118,6 +121,9 @@ impl RunGroup {
                     s.plane_repr.clone(),
                     p.plane_bytes.to_string(),
                     format!("{}", p.plane_nnz_mean),
+                    s.oracle_reuse.clone(),
+                    format!("{}", p.oracle_build_s),
+                    format!("{}", p.oracle_solve_s),
                 ])?;
             }
         }

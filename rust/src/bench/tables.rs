@@ -454,9 +454,135 @@ pub fn sparsity_sweep(
     Ok(())
 }
 
+/// ORACLE — warm-start dynamic max-oracle A/B: persistent per-worker
+/// solver arenas (`--oracle-reuse on`, the default) vs cold per-call
+/// construction (`off`), on all three scenarios. Warm solves replay the
+/// cold arithmetic bit-exactly (pinned in `tests/oracle_reuse.rs` and
+/// re-checked here via the `trajectory_matches_cold` column), so the
+/// table isolates the construction cost: wall time, cumulative oracle
+/// seconds, and the build/solve split — with reuse on, `oracle_build_s`
+/// stops growing once every example's graph exists, which the
+/// `build_s_after_pass1` column makes visible (≈ 0 for warm runs on
+/// horseseg_like, where graph construction is the per-call overhead).
+/// Emits `table_oracle.csv` plus a machine-readable `bench_oracle.json`.
+pub fn oracle_reuse_sweep(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_oracle.csv"),
+        &[
+            "dataset",
+            "oracle_reuse",
+            "wall_s",
+            "oracle_secs",
+            "oracle_build_s",
+            "oracle_solve_s",
+            "build_s_pass1",
+            "build_s_after_pass1",
+            "final_gap",
+            "trajectory_matches_cold",
+        ],
+    )?;
+    let mut entries: Vec<Json> = Vec::new();
+    log("== ORACLE: warm-start dynamic max-oracle (persistent arenas) vs cold".into());
+    for ds in DatasetKind::all() {
+        // auto_approx is timing-based; pin the pass schedule so the two
+        // reuse modes run the exact same step sequence and the bitwise
+        // trajectory check below is meaningful.
+        let base = TrainSpec {
+            dataset: ds,
+            scale: opts.scale,
+            data_seed: opts.data_seed,
+            algo: Algo::MpBcfw,
+            max_iters: opts.max_iters,
+            oracle_delay: opts.oracle_delay,
+            engine: opts.engine.clone(),
+            auto_approx: false,
+            max_approx_passes: 3,
+            ..Default::default()
+        };
+        let mut cold_duals: Vec<f64> = Vec::new();
+        for reuse in [false, true] {
+            let spec = TrainSpec { oracle_reuse: reuse, ..base.clone() };
+            let s = trainer::train(&spec)?;
+            let last = s.points.last().unwrap();
+            let matches = if reuse {
+                s.points.len() == cold_duals.len()
+                    && s.points.iter().zip(&cold_duals).all(|(p, &d)| p.dual == d)
+            } else {
+                cold_duals = s.points.iter().map(|p| p.dual).collect();
+                true
+            };
+            // Split the build cost at the first outer iteration: with
+            // reuse on, everything after pass 1 is terminal patching only.
+            let build_pass1 = s.points.get(1).map(|p| p.oracle_build_s).unwrap_or(0.0);
+            let build_after = (last.oracle_build_s - build_pass1).max(0.0);
+            log(format!(
+                "   {:14} {:3}  wall={:7.2}s  build={:.4}s (after pass 1: {:.4}s)  \
+                 solve={:.4}s  match={}",
+                ds.name(),
+                s.oracle_reuse,
+                s.wall_secs,
+                last.oracle_build_s,
+                build_after,
+                last.oracle_solve_s,
+                matches
+            ));
+            csv.row(&[
+                ds.name().into(),
+                s.oracle_reuse.clone(),
+                format!("{}", s.wall_secs),
+                format!("{}", last.oracle_secs),
+                format!("{}", last.oracle_build_s),
+                format!("{}", last.oracle_solve_s),
+                format!("{build_pass1}"),
+                format!("{build_after}"),
+                format!("{}", last.primal - last.dual),
+                matches.to_string(),
+            ])?;
+            entries.push(Json::obj(vec![
+                ("dataset", Json::s(ds.name())),
+                ("oracle_reuse", Json::s(&s.oracle_reuse)),
+                ("wall_s", Json::Num(s.wall_secs)),
+                ("oracle_secs", Json::Num(last.oracle_secs)),
+                ("oracle_build_s", Json::Num(last.oracle_build_s)),
+                ("oracle_solve_s", Json::Num(last.oracle_solve_s)),
+                ("build_s_pass1", Json::Num(build_pass1)),
+                ("build_s_after_pass1", Json::Num(build_after)),
+                ("final_gap", Json::Num(last.primal - last.dual)),
+                ("trajectory_matches_cold", Json::Bool(matches)),
+            ]));
+        }
+    }
+    csv.flush()?;
+    let bench = Json::obj(vec![
+        ("bench", Json::s("oracle")),
+        ("scale", Json::s(opts.scale.name())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(out_dir.join("bench_oracle.json"), bench.to_string())?;
+    log(format!(
+        "   wrote {} and {}",
+        out_dir.join("table_oracle.csv").display(),
+        out_dir.join("bench_oracle.json").display()
+    ));
+    Ok(())
+}
+
 /// Valid `--table` tokens.
-pub const TABLES: &[&str] =
-    &["oracle-stats", "crossover", "product-cache", "t-sweep", "sampling", "sparsity", "all"];
+pub const TABLES: &[&str] = &[
+    "oracle-stats",
+    "crossover",
+    "product-cache",
+    "t-sweep",
+    "sampling",
+    "sparsity",
+    "oracle",
+    "all",
+];
 
 /// Dispatch one `--table` selection.
 pub fn run_table(
@@ -473,13 +599,15 @@ pub fn run_table(
         "t-sweep" => t_sweep(opts, out_dir, log),
         "sampling" => sampling_sweep(opts, out_dir, log),
         "sparsity" => sparsity_sweep(opts, out_dir, log),
+        "oracle" => oracle_reuse_sweep(opts, out_dir, log),
         "all" => {
             oracle_stats(datasets, opts, out_dir, &mut log)?;
             crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, &mut log)?;
             product_cache_ablation(opts, out_dir, &mut log)?;
             t_sweep(opts, out_dir, &mut log)?;
             sampling_sweep(opts, out_dir, &mut log)?;
-            sparsity_sweep(opts, out_dir, &mut log)
+            sparsity_sweep(opts, out_dir, &mut log)?;
+            oracle_reuse_sweep(opts, out_dir, &mut log)
         }
         other => anyhow::bail!("unknown table {other} (expected one of {TABLES:?})"),
     }
@@ -556,6 +684,25 @@ mod tests {
         let json = std::fs::read_to_string(dir.join("bench_sparsity.json")).unwrap();
         let parsed = Json::parse(&json).unwrap();
         assert_eq!(parsed.get("bench").as_str(), Some("sparsity"));
+        assert_eq!(parsed.get("entries").as_arr().unwrap().len(), 6);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn oracle_reuse_sweep_writes_csv_and_json_with_matching_trajectories() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_oracle_{}", std::process::id()));
+        let mut lines = Vec::new();
+        oracle_reuse_sweep(&tiny_opts(), &dir, |m| lines.push(m)).unwrap();
+        let text = std::fs::read_to_string(dir.join("table_oracle.csv")).unwrap();
+        assert!(text.starts_with("dataset,oracle_reuse,wall_s,oracle_secs"));
+        for ds in ["usps_like", "ocr_like", "horseseg_like"] {
+            assert!(text.contains(&format!("{ds},off")), "missing cold row for {ds}");
+            assert!(text.contains(&format!("{ds},on")), "missing warm row for {ds}");
+        }
+        assert!(!text.contains("false"), "a warm run diverged from its cold twin:\n{text}");
+        let json = std::fs::read_to_string(dir.join("bench_oracle.json")).unwrap();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("oracle"));
         assert_eq!(parsed.get("entries").as_arr().unwrap().len(), 6);
         std::fs::remove_dir_all(dir).ok();
     }

@@ -19,9 +19,10 @@ USAGE:
                   [--scale tiny|small|paper] [--iters N] [--seed S] [--data-seed S]
                   [--lambda F] [--ttl T] [--cap-n N] [--inner-repeats R] [--no-auto-approx]
                   [--sampling uniform|gap|cyclic] [--steps fw|pairwise] [--dense-planes]
-                  [--threads N] [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
+                  [--oracle-reuse on|off] [--threads N] [--oracle-delay SECONDS]
+                  [--engine native|xla] [--artifacts DIR]
                   [--train-loss] [--max-oracle-calls N] [--target-gap F]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|all
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR] [--smoke]
   mpbcfw gen-data --dataset usps|ocr|horseseg --out FILE [--scale ...] [--seed S]
@@ -55,7 +56,21 @@ block-structured ψ differences), auto-densified above a density
 threshold; --dense-planes forces dense storage. Either way the training
 trajectory is bitwise identical — compare footprints with
 `bench --table sparsity` (plane bytes + mean nnz columns). --smoke runs
-any bench at tiny scale with a 2-iteration budget (CI rot check).";
+any bench at tiny scale with a 2-iteration budget (CI rot check).
+
+The exact oracles warm-start by default (--oracle-reuse on): each
+worker keeps per-example min-cut graphs alive across passes — only the
+terminal capacities change between calls, since unaries are affine in w
+— and reuses its Viterbi/score buffers, so solver construction and
+decode run allocation-free (the returned cutting plane is still
+assembled fresh per call). Warm solves replay the cold arithmetic
+bit-exactly:
+every oracle output is identical either way, and with a fixed pass
+schedule (--no-auto-approx; the automatic rule is wall-clock-driven) the
+whole trajectory matches bit for bit. --oracle-reuse off restores the
+cold build-every-call baseline, and `bench --table oracle` quantifies
+the difference (wall time plus the oracle_build_s/oracle_solve_s
+split).";
 
 fn parse_engine(args: &Args) -> anyhow::Result<EngineKind> {
     match args.get_or("engine", "native") {
@@ -85,6 +100,11 @@ fn err(msg: String) -> anyhow::Error {
 }
 
 pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let oracle_reuse = match args.get_or("oracle-reuse", "on") {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("bad --oracle-reuse {other} (on|off)"),
+    };
     let spec = TrainSpec {
         dataset: DatasetKind::parse(args.get_or("dataset", "usps"))
             .ok_or_else(|| anyhow::anyhow!("bad --dataset"))?,
@@ -110,6 +130,7 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         steps: StepRule::parse(args.get_or("steps", "fw"))
             .ok_or_else(|| anyhow::anyhow!("bad --steps (fw|pairwise)"))?,
         dense_planes: args.has("dense-planes"),
+        oracle_reuse,
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
@@ -362,6 +383,26 @@ mod tests {
             dispatch(toks("train --scale tiny --iters 2 --algo bcfw --steps pairwise")),
             1,
             "--steps pairwise without working sets must be rejected"
+        );
+    }
+
+    #[test]
+    fn train_with_oracle_reuse_flag() {
+        assert_eq!(
+            dispatch(toks(
+                "train --scale tiny --iters 2 --dataset horseseg --oracle-reuse off"
+            )),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --oracle-reuse sometimes")),
+            1,
+            "unknown --oracle-reuse value must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --algo ssg --oracle-reuse off")),
+            1,
+            "--oracle-reuse off on a baseline (always cold) must be rejected"
         );
     }
 

@@ -118,6 +118,8 @@ fn record(
         pairwise_steps: 0,
         gap_est: f64::NAN, // no dual certificate, no gap estimates
         oracle_secs: stats.real_secs + stats.virtual_secs,
+        oracle_build_s: 0.0, // no scratch-threaded oracle path
+        oracle_solve_s: 0.0,
         train_loss,
     });
 }

@@ -54,6 +54,20 @@ pub struct EvalPoint {
     pub gap_est: f64,
     /// Seconds spent in counted oracle calls (real + virtual) so far.
     pub oracle_secs: f64,
+    /// Seconds spent *constructing* per-example oracle solver
+    /// structures so far (graph-arena builds: allocation + edge-list
+    /// assembly), summed over the worker scratch arenas in index order.
+    /// With `--oracle-reuse on` this stops growing once every example's
+    /// graph exists (≈ 0 after the first pass); cold runs pay it on
+    /// every call. 0 for optimizers without the scratch-threaded oracle
+    /// path, and for oracles with no solver structure (multiclass,
+    /// sequence).
+    pub oracle_build_s: f64,
+    /// Seconds spent producing the argmax given the solver structure —
+    /// engine scoring, loss augmentation, terminal-capacity patching,
+    /// the combinatorial solve (min-cut / Viterbi / argmax scan), and
+    /// the decode; same accounting as `oracle_build_s`.
+    pub oracle_solve_s: f64,
     /// Mean task loss of the predictor on the training set (optional
     /// diagnostic; NaN when not computed).
     pub train_loss: f64,
@@ -80,6 +94,8 @@ impl EvalPoint {
             ("pairwise_steps", Json::Num(self.pairwise_steps as f64)),
             ("gap_est", Json::Num(self.gap_est)),
             ("oracle_secs", Json::Num(self.oracle_secs)),
+            ("oracle_build_s", Json::Num(self.oracle_build_s)),
+            ("oracle_solve_s", Json::Num(self.oracle_solve_s)),
             ("train_loss", Json::Num(self.train_loss)),
         ])
     }
@@ -104,6 +120,10 @@ pub struct Series {
     /// with auto-compaction, `dense` = `--dense-planes`); empty for
     /// optimizers without plane caches.
     pub plane_repr: String,
+    /// Oracle warm-start policy (`on` = persistent per-worker scratch
+    /// arenas, `off` = cold per-call construction); empty for
+    /// optimizers without the scratch-threaded oracle path.
+    pub oracle_reuse: String,
     /// Evaluation snapshots, in order.
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
@@ -154,6 +174,7 @@ impl Series {
             ("sampling", Json::s(&self.sampling)),
             ("steps", Json::s(&self.steps)),
             ("plane_repr", Json::s(&self.plane_repr)),
+            ("oracle_reuse", Json::s(&self.oracle_reuse)),
             ("wall_secs", Json::Num(self.wall_secs)),
             (
                 "shard_secs",
@@ -248,6 +269,8 @@ mod tests {
             pairwise_steps: 0,
             gap_est: f64::NAN,
             oracle_secs: 0.0,
+            oracle_build_s: 0.0,
+            oracle_solve_s: 0.0,
             train_loss: f64::NAN,
         };
         let s = Series {
@@ -287,6 +310,8 @@ mod tests {
             pairwise_steps: 40,
             gap_est: 0.123,
             oracle_secs: 0.9,
+            oracle_build_s: 0.2,
+            oracle_solve_s: 0.6,
             train_loss: 0.1,
         };
         let j = p.to_json();
@@ -297,5 +322,7 @@ mod tests {
         assert_eq!(j.get("gap_est").as_f64(), Some(0.123));
         assert_eq!(j.get("plane_bytes").as_f64(), Some(4096.0));
         assert_eq!(j.get("plane_nnz_mean").as_f64(), Some(12.5));
+        assert_eq!(j.get("oracle_build_s").as_f64(), Some(0.2));
+        assert_eq!(j.get("oracle_solve_s").as_f64(), Some(0.6));
     }
 }

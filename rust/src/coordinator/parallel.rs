@@ -7,9 +7,10 @@
 //! drives cluster-scale systems (Lee et al., 2015) applies on a single
 //! machine across cores.
 //!
-//! Semantics: one exact pass takes a *snapshot* of the weights w, shards
-//! the permuted block order into `threads` contiguous chunks, and lets
-//! each scoped worker thread call the exact oracle on its shard against
+//! Semantics: one exact pass takes a *snapshot* of the weights w, splits
+//! the permuted block order into per-worker shards (by block id modulo
+//! the worker count — see the arena paragraph below), and lets each
+//! scoped worker thread call the exact oracle on its shard against
 //! that snapshot (minibatch-BCFW semantics). The coordinator then applies
 //! the resulting line-searched Frank-Wolfe steps *sequentially in the
 //! original permutation order*. Consequences:
@@ -30,9 +31,25 @@
 //! Workers score on their own `NativeEngine` (stateless, zero-cost to
 //! construct). The PJRT engine is not shared across threads; the trainer
 //! rejects `--threads` together with `--engine xla`.
+//!
+//! Each worker additionally owns an [`OracleScratch`] arena
+//! (`exact_pass_with`): persistent per-example solver graphs and decode
+//! buffers that live across passes, so warm-started oracles compose with
+//! sharding. Blocks are assigned to workers by **block id modulo the
+//! shard count** — not by contiguous chunks of the pass order — so an
+//! example's persistent graph is pinned to one worker arena no matter
+//! how the sampler reshuffles the order between passes: total arena
+//! memory stays at one graph per example and every revisit is a warm
+//! hit. For a full permutation the residue classes are exactly as
+//! balanced as contiguous chunks. Arena reuse is value-neutral (the
+//! planes depend only on `(block, snapshot-w)`), so the
+//! thread-count-invariance contract above is untouched, and the arenas'
+//! build/solve timing splits merge deterministically by summing in
+//! shard-index order.
 
 use crate::model::plane::Plane;
 use crate::model::problem::StructuredProblem;
+use crate::model::scratch::OracleScratch;
 use crate::oracle::wrappers::CountingOracle;
 use crate::runtime::engine::NativeEngine;
 use crate::utils::timer::Stopwatch;
@@ -50,8 +67,11 @@ pub struct PassReport {
     pub max_shard_len: usize,
 }
 
-/// Balanced contiguous shard sizes: `n` items over `t` shards, sizes
-/// differing by at most one, larger shards first.
+/// Balanced shard sizes: `n` items over `t` shards, sizes differing by
+/// at most one, larger shards first. For a full pass over blocks
+/// `0..n` these are exactly the per-worker loads of the id-mod-`t`
+/// assignment `exact_pass_with` uses (worker k serves the residue
+/// class k, which has `n/t + (k < n%t)` members).
 pub fn shard_sizes(n: usize, t: usize) -> Vec<usize> {
     let t = t.max(1);
     let base = n / t;
@@ -59,51 +79,93 @@ pub fn shard_sizes(n: usize, t: usize) -> Vec<usize> {
     (0..t).map(|k| base + usize::from(k < rem)).collect()
 }
 
-/// Run one sharded exact pass: call the exact oracle for every block in
-/// `order` against the weight snapshot `w`, using up to `threads` scoped
-/// worker threads. Returns the planes aligned with `order` (concatenated
-/// contiguous shards preserve the order exactly) plus a timing report.
-///
-/// Counting/latency instrumentation on `problem` is atomic, so counts are
-/// exact under concurrency. `threads` is clamped to `[1, order.len()]`.
+/// Run one sharded exact pass with per-call (cold) oracle state: builds
+/// one throwaway scratch arena per worker and delegates to
+/// [`exact_pass_with`]. Kept as the convenience entry for callers that
+/// do not hold arenas across passes (benches, tests).
 pub fn exact_pass(
     problem: &CountingOracle,
     w: &[f64],
     order: &[usize],
     threads: usize,
 ) -> (Vec<Plane>, PassReport) {
-    let t = threads.max(1).min(order.len().max(1));
-    let sizes = shard_sizes(order.len(), t);
-    let mut chunks: Vec<&[usize]> = Vec::with_capacity(t);
-    let mut start = 0usize;
-    for &sz in &sizes {
-        chunks.push(&order[start..start + sz]);
-        start += sz;
+    let mut arenas: Vec<OracleScratch> =
+        (0..threads.max(1)).map(|_| OracleScratch::cold()).collect();
+    exact_pass_with(problem, w, order, threads, &mut arenas)
+}
+
+/// Run one sharded exact pass: call the exact oracle for every block in
+/// `order` against the weight snapshot `w`, with the block→arena
+/// assignment `id % m` where `m = min(threads, arenas.len())` (the
+/// stable pinning the module docs describe), and one scoped worker
+/// thread per *non-empty* residue class — so never more threads than
+/// blocks, while a short or truncated `order` cannot change the
+/// modulus and remap blocks to foreign arenas. Returns the planes
+/// aligned with `order` plus a timing report (`shard_secs` has one
+/// entry per arena; empty classes report 0).
+///
+/// Counting/latency instrumentation on `problem` is atomic, so counts
+/// are exact under concurrency. The trainer allocates one arena per
+/// configured thread up front and keeps them across passes, which is
+/// what makes the oracles warm.
+pub fn exact_pass_with(
+    problem: &CountingOracle,
+    w: &[f64],
+    order: &[usize],
+    threads: usize,
+    arenas: &mut [OracleScratch],
+) -> (Vec<Plane>, PassReport) {
+    assert!(!arenas.is_empty(), "exact_pass_with needs at least one worker arena");
+    // The modulus must be a per-run constant — never derived from this
+    // pass's `order` length — or a truncated final pass would remap
+    // blocks to different arenas and cold-build duplicate graphs.
+    let m = threads.max(1).min(arenas.len());
+    // Stable block→arena assignment by id: arena k serves the blocks of
+    // `order` with id ≡ k (mod m), in order of appearance. `slots`
+    // records each order position's arena so the planes can be
+    // reassembled in `order` alignment afterwards (within a chunk the
+    // results come back in the same sequence they were enqueued).
+    let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut slots: Vec<usize> = Vec::with_capacity(order.len());
+    for &i in order {
+        let k = i % m;
+        slots.push(k);
+        chunks[k].push(i);
     }
+    let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
 
     let sw_pass = Stopwatch::start();
-    let mut shard_secs = vec![0.0f64; t];
-    let mut shards: Vec<Vec<Plane>> = Vec::with_capacity(t);
+    let mut shard_secs = vec![0.0f64; m];
+    let mut shards: Vec<Vec<Plane>> = (0..m).map(|_| Vec::new()).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = chunks
             .iter()
-            .map(|&chunk| {
-                s.spawn(move || {
+            .enumerate()
+            .zip(arenas.iter_mut())
+            .filter(|((_, chunk), _)| !chunk.is_empty())
+            .map(|((k, chunk), arena)| {
+                let handle = s.spawn(move || {
                     let sw = Stopwatch::start();
                     let mut eng = NativeEngine;
-                    let planes: Vec<Plane> =
-                        chunk.iter().map(|&i| problem.oracle(i, w, &mut eng)).collect();
+                    let planes: Vec<Plane> = chunk
+                        .iter()
+                        .map(|&i| problem.oracle_scratch(i, w, &mut eng, arena))
+                        .collect();
                     (planes, sw.secs())
-                })
+                });
+                (k, handle)
             })
             .collect();
-        for (k, h) in handles.into_iter().enumerate() {
+        for (k, h) in handles {
             let (planes, secs) = h.join().expect("oracle worker panicked");
             shard_secs[k] = secs;
-            shards.push(planes);
+            shards[k] = planes;
         }
     });
-    let planes: Vec<Plane> = shards.into_iter().flatten().collect();
+    let mut iters: Vec<std::vec::IntoIter<Plane>> =
+        shards.into_iter().map(|v| v.into_iter()).collect();
+    let planes: Vec<Plane> =
+        slots.iter().map(|&k| iters[k].next().expect("shard underflow")).collect();
     let report = PassReport {
         shard_secs,
         wall_secs: sw_pass.secs(),
@@ -156,7 +218,9 @@ mod tests {
                 assert_eq!(a.tag, b.tag);
                 assert_eq!(a.off, b.off);
             }
-            assert_eq!(report.shard_secs.len(), threads.min(order.len()));
+            // One shard_secs slot per arena (the wrapper allocates one
+            // per requested thread); empty residue classes report 0.
+            assert_eq!(report.shard_secs.len(), threads);
         }
     }
 
@@ -181,6 +245,11 @@ mod tests {
         assert_eq!(report.max_shard_len, 0);
         assert_eq!(problem.stats().calls, 0);
     }
+
+    // Warm-arena behaviour (pass-1 builds, residue-class isolation,
+    // zero builds on warm and reshuffled passes, warm ≡ cold planes) is
+    // covered at the integration level in `tests/oracle_reuse.rs`
+    // (`worker_arenas_stay_isolated_under_sharded_dispatch`).
 
     #[test]
     fn matches_direct_sequential_calls() {

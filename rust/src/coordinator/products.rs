@@ -95,6 +95,12 @@ pub struct BlockOutcome {
 /// bookkeeping, then materialize the block once. Marks selected planes
 /// active at `now`. Requires `state.w` to be anything (w is derived from
 /// the product state, not the buffer).
+///
+/// `coef` is a caller-owned scratch for the coefficient tracking (same
+/// arena pattern as the oracle scratches: the approximate pass visits
+/// every block every pass, so a per-call `vec![0.0; m]` here allocates
+/// n times per pass). It is fully reinitialized on entry; its contents
+/// after the call are meaningless to the caller.
 pub fn cached_block_updates(
     state: &mut DualState,
     ws: &mut WorkingSet,
@@ -102,6 +108,7 @@ pub fn cached_block_updates(
     i: usize,
     repeats: usize,
     now: u64,
+    coef: &mut Vec<f64>,
 ) -> BlockOutcome {
     let m = ws.len();
     if m == 0 || repeats == 0 {
@@ -123,9 +130,11 @@ pub fn cached_block_updates(
 
     let f_start = -e / (2.0 * lambda) + off_phi;
 
-    // Coefficient tracking: block' = c0·block_orig + Σ coef_j · p_j.
+    // Coefficient tracking: block' = c0·block_orig + Σ coef_j · p_j
+    // (caller-owned scratch, reinitialized here).
     let mut c0 = 1.0;
-    let mut coef = vec![0.0f64; m];
+    coef.clear();
+    coef.resize(m, 0.0);
     let mut steps = 0usize;
     let mut first_gap = 0.0f64;
 
@@ -242,7 +251,8 @@ mod tests {
 
             // Cached path.
             let mut gram = GramCache::new();
-            let out = cached_block_updates(&mut st1, &mut ws, &mut gram, 0, repeats, 1);
+            let out =
+                cached_block_updates(&mut st1, &mut ws, &mut gram, 0, repeats, 1, &mut Vec::new());
 
             // Dense reference path.
             for _ in 0..repeats {
@@ -292,7 +302,7 @@ mod tests {
             let mut ws = rand_ws(g, dim, 4);
             let f0 = st.dual_value();
             let mut gram = GramCache::new();
-            let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 5, 1);
+            let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 5, 1, &mut Vec::new());
             let f1 = st.dual_value();
             if (out.f_delta - (f1 - f0)).abs() > 1e-8 {
                 return Err(format!("f_delta {} vs {}", out.f_delta, f1 - f0));
@@ -311,9 +321,9 @@ mod tests {
         let mut st = DualState::new(1, dim, 1.0);
         let mut ws = rand_ws(&mut g, dim, 5);
         let mut gram = GramCache::new();
-        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 1);
+        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 1, &mut Vec::new());
         let misses_first = gram.misses;
-        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 2);
+        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 2, &mut Vec::new());
         assert!(gram.misses == misses_first || gram.hits > 0);
     }
 
@@ -322,7 +332,7 @@ mod tests {
         let mut st = DualState::new(1, 4, 1.0);
         let mut ws = WorkingSet::new(10);
         let mut gram = GramCache::new();
-        let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 1);
+        let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 10, 1, &mut Vec::new());
         assert_eq!(out.steps, 0);
         assert_eq!(out.f_delta, 0.0);
         assert_eq!(out.first_gap, 0.0);
@@ -350,7 +360,7 @@ mod tests {
                 + st.blocks[0].off;
             let expect = (best - block_val).max(0.0);
             let mut gram = GramCache::new();
-            let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 3, 1);
+            let out = cached_block_updates(&mut st, &mut ws, &mut gram, 0, 3, 1, &mut Vec::new());
             if (out.first_gap - expect).abs() > 1e-8 * (1.0 + expect.abs()) {
                 return Err(format!("first_gap {} vs dense {}", out.first_gap, expect));
             }

@@ -179,6 +179,16 @@ pub struct TrainSpec {
     /// automatic compaction. Trajectories are bitwise identical either
     /// way; only memory and speed change.
     pub dense_planes: bool,
+    /// Warm-start the exact oracles from persistent per-worker scratch
+    /// arenas (CLI `--oracle-reuse {on,off}`, default on; disabling is
+    /// meaningful for the bcfw/mp-bcfw family only — the baselines
+    /// always run cold). Every oracle output is bitwise identical either
+    /// way; only per-call construction cost changes, so trajectories
+    /// match bit for bit under a wall-clock-independent pass schedule
+    /// (pair with `auto_approx: false` for bitwise-reproducible runs,
+    /// as with any speed-affecting knob — the §3.4 rule is
+    /// timing-based).
+    pub oracle_reuse: bool,
     /// Scoring engine to run on.
     pub engine: EngineKind,
     /// Also record the mean train task loss at each evaluation (costly).
@@ -210,6 +220,7 @@ impl Default for TrainSpec {
             sampling: SamplingStrategy::Uniform,
             steps: StepRule::Fw,
             dense_planes: false,
+            oracle_reuse: true,
             engine: EngineKind::Native,
             with_train_loss: false,
             eval_every: 1,
@@ -287,6 +298,12 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
         !spec.dense_planes
             || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
         "--dense-planes applies to the bcfw/mp-bcfw family only; {} stores no planes",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.oracle_reuse
+            || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--oracle-reuse off applies to the bcfw/mp-bcfw family only; {} always runs cold oracles",
         spec.algo.name()
     );
     let problem = build_problem(spec);
@@ -381,6 +398,7 @@ pub fn train_on_full(
                 sampling: spec.sampling,
                 steps: if multi { spec.steps } else { StepRule::Fw },
                 dense_planes: spec.dense_planes,
+                oracle_reuse: spec.oracle_reuse,
                 max_iters: spec.max_iters,
                 max_oracle_calls: spec.max_oracle_calls,
                 max_time: spec.max_time,
@@ -550,6 +568,30 @@ mod tests {
         // Algorithms without plane caches would silently ignore the
         // flag; reject instead.
         let bad = TrainSpec { algo: Algo::Ssg, ..spec };
+        assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn oracle_reuse_trains_and_rejects_cold_flag_on_baselines() {
+        let spec = TrainSpec {
+            dataset: DatasetKind::HorsesegLike,
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 3,
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        assert_eq!(series.oracle_reuse, "on");
+        let last = series.points.last().unwrap();
+        assert!(last.primal >= last.dual - 1e-9);
+        // The build/solve split is populated on the scratch-threaded path.
+        assert!(last.oracle_solve_s > 0.0, "solve timings recorded");
+        let off = TrainSpec { oracle_reuse: false, ..spec.clone() };
+        let series_off = train(&off).unwrap();
+        assert_eq!(series_off.oracle_reuse, "off");
+        // Baselines always run cold; an explicit `off` would be silently
+        // ignored there — reject instead.
+        let bad = TrainSpec { algo: Algo::Ssg, oracle_reuse: false, ..spec };
         assert!(train(&bad).is_err());
     }
 

@@ -26,8 +26,8 @@
 //!
 //! ```text
 //!   cli ──► coordinator ──► oracle ──► model ──► utils
-//!    │        │    │          │
-//!    │        │    │          └──► maxflow        (BK min-cut substrate)
+//!    │        │    │          │          │
+//!    │        │    │          └──────────┴──► maxflow  (BK min-cut substrate)
 //!    │        │    └─────────► data               (synthetic datasets + IO)
 //!    │        └──────────────► runtime            (scoring engines)
 //!    └──► bench               (figure/table regeneration harness)
@@ -38,11 +38,15 @@
 //! * [`model`] — the plane representation layer (`PlaneVec`:
 //!   sparse/dense plane vectors with order-deterministic kernels and
 //!   density-threshold auto-compaction), cutting-plane algebra (line
-//!   search, dual bound), feature layouts, and the `StructuredProblem`
+//!   search, dual bound), feature layouts, the `StructuredProblem`
 //!   trait every oracle implements (required `Send + Sync` so problems
-//!   can be shared across worker threads).
-//! * [`maxflow`] — Boykov–Kolmogorov s-t min-cut, plus an Edmonds–Karp
-//!   reference used by tests.
+//!   can be shared across worker threads), and the per-worker
+//!   `OracleScratch` arena (persistent min-cut graphs + decode buffers)
+//!   threaded through its warm-startable oracle entry point.
+//! * [`maxflow`] — Boykov–Kolmogorov s-t min-cut with warm restarts
+//!   (`maxflow_reuse`: persistent arenas, terminal-capacity patching,
+//!   bitwise warm ≡ cold), plus an Edmonds–Karp reference used by
+//!   tests.
 //! * [`data`] — USPS/OCR/HorseSeg-like dataset generators at three
 //!   scales, binary dataset IO.
 //! * [`oracle`] — the three exact max-oracles and the atomic

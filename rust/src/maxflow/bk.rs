@@ -10,6 +10,34 @@
 //! Terminal capacities are folded into a per-node residual `tcap`
 //! (positive = residual source→node capacity, negative = node→sink), the
 //! standard trick for energy minimization where a node never needs both.
+//!
+//! ## Warm restarts (`reset_tweights` / `update_tweights` / `maxflow_reuse`)
+//!
+//! In the BCFW training loop the same example's graph is cut once per
+//! exact pass, and between passes **only the terminal capacities change**
+//! (the unary costs are affine in `w`; the pairwise Potts weights are
+//! fixed — see `oracle::graphcut`). A `BkGraph` can therefore be kept
+//! alive per example: `reset_tweights` + `update_tweights` re-specify the
+//! terminal arcs in place, and `maxflow_reuse` re-solves without touching
+//! the node/arc arenas or the adjacency lists — zero allocation, zero
+//! edge-list rebuilding.
+//!
+//! **Determinism contract.** A warm `maxflow_reuse` returns *bitwise
+//! identical* flow values and labelings to a cold build-and-solve with
+//! the same capacities. This holds because the warm path restores every
+//! arc residual to its original capacity (each arc stores `cap` next to
+//! `rcap`) and re-seeds the S/T search trees from the patched terminal
+//! capacities in the same deterministic order a cold `maxflow` uses
+//! (nodes scanned in index order, FIFO active list, arcs in adjacency
+//! order) — the search then replays the exact same augmentation sequence.
+//! The alternative — carrying residual flow and search trees across
+//! solves à la Kohli & Torr's dynamic graph cuts — was evaluated and
+//! rejected: with floating-point capacities a different augmentation
+//! history leaves different round-off in the residuals, which can flip
+//! tie-broken cut sides and breaks the warm ≡ cold bitwise contract the
+//! trainer's `--oracle-reuse` escape hatch is pinned to
+//! (`tests/oracle_reuse.rs`). The construction cost is what dominates the
+//! non-search overhead, and that is what reuse eliminates.
 
 /// Index type for nodes.
 pub type NodeId = u32;
@@ -43,6 +71,9 @@ struct Arc {
     head: u32,
     next: u32, // next arc out of the same tail
     rcap: f64,
+    /// Original capacity as specified by `add_edge` — the reset target
+    /// for warm restarts (`maxflow_reuse`).
+    cap: f64,
 }
 
 /// s-t graph on which `maxflow` computes the min cut.
@@ -100,9 +131,14 @@ impl BkGraph {
         debug_assert!(i != j);
         debug_assert!(cap >= 0.0 && rev_cap >= 0.0);
         let a = self.arcs.len() as u32;
-        self.arcs.push(Arc { head: j, next: self.nodes[i as usize].first_arc, rcap: cap });
+        self.arcs.push(Arc { head: j, next: self.nodes[i as usize].first_arc, rcap: cap, cap });
         self.nodes[i as usize].first_arc = a;
-        self.arcs.push(Arc { head: i, next: self.nodes[j as usize].first_arc, rcap: rev_cap });
+        self.arcs.push(Arc {
+            head: i,
+            next: self.nodes[j as usize].first_arc,
+            rcap: rev_cap,
+            cap: rev_cap,
+        });
         self.nodes[j as usize].first_arc = a + 1;
     }
 
@@ -141,6 +177,43 @@ impl BkGraph {
                 return Some(h);
             }
         }
+    }
+
+    /// Clear every terminal capacity (and the flow constant the
+    /// `add_tweights` folds accumulated) while keeping the node/arc
+    /// arenas and the adjacency structure intact. Together with
+    /// [`update_tweights`](Self::update_tweights) this re-specifies the
+    /// terminal arcs of a persistent graph between solves — the only
+    /// part of the Potts construction that depends on the weights.
+    pub fn reset_tweights(&mut self) {
+        self.flow = 0.0;
+        for n in self.nodes.iter_mut() {
+            n.tcap = 0.0;
+        }
+    }
+
+    /// Set the terminal capacities of node `i` on a graph cleared by
+    /// [`reset_tweights`](Self::reset_tweights). Performs the identical
+    /// fold arithmetic as [`add_tweights`](Self::add_tweights), so a
+    /// reset + update sweep (in node order) leaves the graph in the
+    /// bit-exact state a cold build with the same values produces.
+    pub fn update_tweights(&mut self, i: NodeId, cap_source: f64, cap_sink: f64) {
+        self.add_tweights(i, cap_source, cap_sink);
+    }
+
+    /// Warm-restarted max-flow on a persistent graph: restore every arc
+    /// residual to its original capacity in arena order (no allocation,
+    /// no edge rebuilding), then re-seed the S/T search trees from the
+    /// patched terminal capacities and run the same deterministic search
+    /// as [`maxflow`](Self::maxflow). Returns a flow value (and leaves a
+    /// labeling) **bitwise identical** to a cold build-and-solve with the
+    /// same capacities — see the module docs for why residuals are
+    /// re-derived rather than carried over.
+    pub fn maxflow_reuse(&mut self) -> f64 {
+        for a in self.arcs.iter_mut() {
+            a.rcap = a.cap;
+        }
+        self.maxflow()
     }
 
     /// Run max-flow. Returns the flow value (= min-cut value given the
@@ -538,5 +611,27 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn warm_reuse_replays_cold_solves_on_fixed_graph() {
+        // Unit-level warm-restart check on a hand-built graph (the
+        // randomized bitwise warm ≡ cold property over arbitrary
+        // reset/update sequences lives in `tests/oracle_reuse.rs`).
+        let mut g = BkGraph::new(2, 1);
+        g.add_edge(0, 1, 2.0, 0.0);
+        // Round 1: same terminals as `two_node_chain`.
+        g.reset_tweights();
+        g.update_tweights(0, 4.0, 0.0);
+        g.update_tweights(1, 0.0, 3.0);
+        assert_eq!(g.maxflow_reuse(), 2.0);
+        assert!(g.is_source_side(0) && !g.is_source_side(1));
+        // Round 2: reversed roles — the patched terminals fully replace
+        // the old ones and the arc residual is restored.
+        g.reset_tweights();
+        g.update_tweights(0, 1.0, 0.0);
+        g.update_tweights(1, 0.0, 10.0);
+        assert_eq!(g.maxflow_reuse(), 1.0);
+        assert!(!g.is_source_side(0), "saturated source node falls to sink side");
     }
 }

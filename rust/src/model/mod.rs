@@ -1,11 +1,15 @@
 //! Problem model: the plane representation layer (sparse/dense plane
 //! vectors, cutting-plane algebra, line search, dual bound),
-//! joint-feature layouts, task losses, and the `StructuredProblem` trait.
+//! joint-feature layouts, task losses, the `StructuredProblem` trait,
+//! and the per-worker `OracleScratch` arena its warm-startable oracle
+//! entry point is threaded with.
 
 pub mod plane;
 pub mod features;
 pub mod loss;
 pub mod problem;
+pub mod scratch;
 
 pub use plane::{DensePlane, Plane, PlaneVec};
 pub use problem::StructuredProblem;
+pub use scratch::OracleScratch;

@@ -9,6 +9,7 @@
 //! and the exact oracle returns argmax_y ⟨φ^{iy}, [w 1]⟩ for a given w.
 
 use super::plane::Plane;
+use super::scratch::OracleScratch;
 use crate::runtime::engine::ScoringEngine;
 
 /// A structured prediction training problem.
@@ -35,6 +36,29 @@ pub trait StructuredProblem: Send + Sync {
     /// The returned plane's `value_at(w)` equals H_i(w) (≥ 0, since y_i is
     /// always a candidate and yields value 0).
     fn oracle(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> Plane;
+
+    /// As [`oracle`](Self::oracle), but drawing all solver state —
+    /// persistent per-example graphs, decode buffers — from a
+    /// caller-owned [`OracleScratch`] arena, so solver construction and
+    /// decode run allocation-free (and, for graph-cut, warm-started;
+    /// the returned plane is still assembled fresh per call).
+    ///
+    /// The contract: the returned plane is **identical** to what
+    /// `oracle` returns for the same `(i, w)` — reuse is a pure
+    /// allocation/construction optimization; the scratch only
+    /// additionally accumulates the build/solve timing split. The
+    /// default implementation ignores the scratch and delegates, which
+    /// is correct for any problem with nothing to reuse.
+    fn oracle_scratch(
+        &self,
+        i: usize,
+        w: &[f64],
+        eng: &mut dyn ScoringEngine,
+        scratch: &mut OracleScratch,
+    ) -> Plane {
+        let _ = scratch;
+        self.oracle(i, w, eng)
+    }
 
     /// Structured Hinge loss H_i(w). Default: one oracle call.
     fn hinge(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> f64 {

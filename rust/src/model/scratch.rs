@@ -1,0 +1,196 @@
+//! Per-worker oracle scratch state: persistent solver graphs and
+//! reusable decode buffers — the memory side of the warm-start dynamic
+//! max-oracle (see `docs/ALGORITHMS.md` §"Dynamic max-oracle").
+//!
+//! The paper's premise is that the exact max-oracle dominates training
+//! cost; our oracle implementations used to make every call maximally
+//! expensive by rebuilding their solver state from scratch — a fresh
+//! `BkGraph` per graph-cut call, fresh Viterbi/score tables per
+//! sequence/multiclass call. Across BCFW iterations only the *unary*
+//! terms change (they are affine in `w`; pairwise Potts weights and the
+//! graph structure are constant), so all of that state can persist.
+//!
+//! [`OracleScratch`] is the arena that holds it: one per sequential
+//! trainer, one per worker thread in the sharded parallel exact pass
+//! (`coordinator::parallel`). It is threaded through
+//! [`StructuredProblem::oracle_scratch`](crate::model::problem::StructuredProblem::oracle_scratch);
+//! problems that have nothing to reuse simply ignore it.
+//!
+//! ## Determinism
+//!
+//! Reuse is *value-neutral by construction*: buffers are fully
+//! overwritten before they are read (`clear` + `extend`/`resize` with
+//! every slot assigned), and the persistent [`BkGraph`]s are re-solved
+//! through [`BkGraph::maxflow_reuse`], whose warm ≡ cold bitwise
+//! contract is pinned in `maxflow::bk`. Consequently `--oracle-reuse on`
+//! and `off` produce bit-identical training trajectories
+//! (`tests/oracle_reuse.rs`); only allocation and construction work —
+//! tracked by [`build_secs`](OracleScratch::build_secs) — changes.
+//!
+//! With reuse *off* the arena still passes through the same code paths,
+//! but [`GraphArena::acquire`] rebuilds the graph on every call instead
+//! of serving the persistent one — that is the whole difference, and the
+//! A/B lever `bench --table oracle` measures.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use crate::maxflow::bk::BkGraph;
+
+/// Persistent per-example solver graphs for the graph-cut oracle.
+///
+/// Keyed by example index. With reuse enabled, the first call for an
+/// example builds its (edge-only) graph and every later call patches
+/// terminal capacities in place; with reuse disabled every call builds a
+/// fresh graph (the cold baseline the `--oracle-reuse off` escape hatch
+/// exposes).
+pub struct GraphArena {
+    reuse: bool,
+    graphs: HashMap<usize, BkGraph>,
+    /// Cold-mode slot: holds the (rebuilt-per-call) current graph so
+    /// `acquire` can hand out a reference with a uniform lifetime.
+    cold_slot: Option<BkGraph>,
+    /// Graphs constructed from scratch so far (diagnostics/tests: a warm
+    /// pass after warm-up builds zero).
+    pub built: u64,
+}
+
+impl GraphArena {
+    fn new(reuse: bool) -> GraphArena {
+        GraphArena { reuse, graphs: HashMap::new(), cold_slot: None, built: 0 }
+    }
+
+    /// Whether persistent reuse is enabled for this arena.
+    pub fn reuse(&self) -> bool {
+        self.reuse
+    }
+
+    /// Number of persistent graphs currently held (0 when reuse is off).
+    pub fn held(&self) -> usize {
+        self.graphs.len()
+    }
+
+    /// The solver graph for example `i`: the persistent warm graph when
+    /// reuse is on (constructed via `build` on first touch), a freshly
+    /// built graph otherwise.
+    pub fn acquire(&mut self, i: usize, build: impl FnOnce() -> BkGraph) -> &mut BkGraph {
+        if self.reuse {
+            match self.graphs.entry(i) {
+                Entry::Occupied(e) => e.into_mut(),
+                Entry::Vacant(v) => {
+                    self.built += 1;
+                    v.insert(build())
+                }
+            }
+        } else {
+            self.built += 1;
+            self.cold_slot.insert(build())
+        }
+    }
+}
+
+/// Reusable per-worker oracle state: the graph arena plus decode buffers
+/// shared by all three exact oracles, and the build/solve timing split
+/// surfaced as `oracle_build_s` / `oracle_solve_s` in the eval series.
+///
+/// The fields are deliberately public: the oracles borrow them
+/// *disjointly* (e.g. the graph arena mutably while writing the labeling
+/// buffer), which method-based access would forbid.
+pub struct OracleScratch {
+    /// Persistent per-example solver graphs (graph-cut oracle).
+    pub arena: GraphArena,
+    /// Engine score buffer θ (unary scores / multiclass class scores).
+    pub theta: Vec<f64>,
+    /// Loss-augmented unary cost buffer (graph-cut oracle).
+    pub unary: Vec<f64>,
+    /// Decoded labeling ŷ of the last solve.
+    pub labels: Vec<u8>,
+    /// Viterbi DP row (current position scores).
+    pub vit_score: Vec<f64>,
+    /// Viterbi DP row (next position scores).
+    pub vit_next: Vec<f64>,
+    /// Viterbi backpointers (row-major \[len−1 × A\]).
+    pub vit_back: Vec<u8>,
+    /// Cumulative seconds spent *constructing* per-example solver
+    /// structures (graph allocation + edge-list assembly) — the cost
+    /// warm starts eliminate; ≈ 0 once every served example's graph
+    /// exists.
+    pub build_secs: f64,
+    /// Cumulative seconds spent producing argmaxes given the structure:
+    /// engine scoring, loss augmentation, terminal patching, the
+    /// combinatorial solve (min-cut / Viterbi / argmax scan), decode.
+    pub solve_secs: f64,
+}
+
+impl OracleScratch {
+    /// Fresh arena; `reuse` controls whether solver graphs persist
+    /// across calls (buffers are reused either way — they are
+    /// value-neutral).
+    pub fn new(reuse: bool) -> OracleScratch {
+        OracleScratch {
+            arena: GraphArena::new(reuse),
+            theta: Vec::new(),
+            unary: Vec::new(),
+            labels: Vec::new(),
+            vit_score: Vec::new(),
+            vit_next: Vec::new(),
+            vit_back: Vec::new(),
+            build_secs: 0.0,
+            solve_secs: 0.0,
+        }
+    }
+
+    /// Cold scratch (no persistent graphs) — what the plain
+    /// `StructuredProblem::oracle` entry point uses per call, and the
+    /// `--oracle-reuse off` baseline holds for a whole run.
+    pub fn cold() -> OracleScratch {
+        OracleScratch::new(false)
+    }
+
+    /// Whether persistent graph reuse is enabled.
+    pub fn reuse(&self) -> bool {
+        self.arena.reuse()
+    }
+}
+
+impl Default for OracleScratch {
+    fn default() -> Self {
+        OracleScratch::cold()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> BkGraph {
+        let mut g = BkGraph::new(2, 1);
+        g.add_edge(0, 1, 1.0, 1.0);
+        g
+    }
+
+    #[test]
+    fn warm_arena_builds_each_example_once() {
+        let mut s = OracleScratch::new(true);
+        for _ in 0..3 {
+            for i in 0..4 {
+                let g = s.arena.acquire(i, tiny_graph);
+                assert_eq!(g.num_nodes(), 2);
+            }
+        }
+        assert_eq!(s.arena.built, 4, "one build per distinct example");
+        assert_eq!(s.arena.held(), 4);
+        assert!(s.reuse());
+    }
+
+    #[test]
+    fn cold_arena_rebuilds_every_call_and_holds_nothing() {
+        let mut s = OracleScratch::cold();
+        for _ in 0..3 {
+            s.arena.acquire(0, tiny_graph);
+        }
+        assert_eq!(s.arena.built, 3);
+        assert_eq!(s.arena.held(), 0);
+        assert!(!s.reuse());
+    }
+}

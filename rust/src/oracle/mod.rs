@@ -1,8 +1,19 @@
 //! Exact max-oracles for the three scenarios and instrumentation wrappers
 //! (call counting, synthetic latency injection).
+//!
+//! All three oracles implement both `StructuredProblem` entry points:
+//! the plain `oracle` (cold — per-call state) and `oracle_scratch`,
+//! which draws solver graphs and decode buffers from a caller-owned
+//! [`crate::model::scratch::OracleScratch`] arena so solver
+//! construction and decode run allocation-free — and, for the graph-cut
+//! oracle, per-example `BkGraph`s stay alive across passes
+//! (warm-started min-cuts). Both paths return identical planes by
+//! construction (the returned plane itself is assembled fresh either
+//! way).
 pub mod multiclass;
 pub mod sequence;
 pub mod graphcut;
 pub mod wrappers;
 
+pub use crate::model::scratch::OracleScratch;
 pub use wrappers::{CountingOracle, OracleStats};

@@ -13,7 +13,9 @@ use crate::data::types::MulticlassData;
 use crate::model::loss::{class_hash, zero_one};
 use crate::model::plane::{Plane, PlaneVec};
 use crate::model::problem::StructuredProblem;
+use crate::model::scratch::OracleScratch;
 use crate::runtime::engine::ScoringEngine;
+use crate::utils::timer::Stopwatch;
 
 pub struct MulticlassProblem {
     pub data: MulticlassData,
@@ -64,18 +66,34 @@ impl StructuredProblem for MulticlassProblem {
     }
 
     fn oracle(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> Plane {
-        let mut scores = Vec::new();
-        self.class_scores(i, w, eng, &mut scores);
+        self.oracle_scratch(i, w, eng, &mut OracleScratch::cold())
+    }
+
+    fn oracle_scratch(
+        &self,
+        i: usize,
+        w: &[f64],
+        eng: &mut dyn ScoringEngine,
+        scratch: &mut OracleScratch,
+    ) -> Plane {
+        // The class-score buffer is the only reusable state here (the
+        // engine overwrites it fully). Timing convention (uniform across
+        // the three oracles): `build_secs` is reserved for constructing
+        // per-example solver *structures* — this oracle has none, so the
+        // whole call (scoring + argmax scan) is solve time.
+        let sw_solve = Stopwatch::start();
+        self.class_scores(i, w, eng, &mut scratch.theta);
         let y_i = self.data.instances[i].label;
         let mut best = y_i;
-        let mut best_val = scores[y_i]; // Δ = 0 for the ground truth
-        for (y, &s) in scores.iter().enumerate() {
+        let mut best_val = scratch.theta[y_i]; // Δ = 0 for the ground truth
+        for (y, &s) in scratch.theta.iter().enumerate() {
             let val = zero_one(y_i, y) + s;
             if val > best_val {
                 best_val = val;
                 best = y;
             }
         }
+        scratch.solve_secs += sw_solve.secs();
         self.plane_for(i, best)
     }
 

@@ -13,7 +13,9 @@ use crate::data::types::SequenceData;
 use crate::model::loss::{hamming_normalized, label_hash};
 use crate::model::plane::{Plane, PlaneVec};
 use crate::model::problem::StructuredProblem;
+use crate::model::scratch::OracleScratch;
 use crate::runtime::engine::ScoringEngine;
+use crate::utils::timer::Stopwatch;
 
 pub struct SequenceProblem {
     pub data: SequenceData,
@@ -33,8 +35,12 @@ impl SequenceProblem {
 
     /// Viterbi argmax of Σ_l θ'_l(y_l) + Σ w_pair(y_l, y_{l+1}), where
     /// θ' includes any per-position additive term already folded into
-    /// `theta`. Returns the best labeling.
-    fn viterbi(&self, theta: &[f64], len: usize, w: &[f64]) -> Vec<u8> {
+    /// `theta`. DP rows, backpointers and the labeling live in the
+    /// scratch arena (`vit_score`/`vit_next`/`vit_back`/`labels`), so
+    /// repeated calls are allocation-free; every slot is overwritten
+    /// before being read, so reuse is value-neutral. The labeling lands
+    /// in `scratch.labels`.
+    fn viterbi_into(&self, theta: &[f64], len: usize, w: &[f64], scratch: &mut OracleScratch) {
         let lay = self.data.layout;
         let a = lay.alphabet;
         debug_assert_eq!(theta.len(), len * a);
@@ -43,10 +49,16 @@ impl SequenceProblem {
         // order for contiguous transition rows; it measured ~10% *slower*
         // than this (b-outer) order (the branchy backpointer update
         // defeats vectorization), so the straightforward order stays.
-        let mut score = theta[0..a].to_vec();
-        let mut back: Vec<u8> = Vec::with_capacity(len.saturating_sub(1) * a);
+        let score = &mut scratch.vit_score;
+        let next = &mut scratch.vit_next;
+        let back = &mut scratch.vit_back;
+        score.clear();
+        score.extend_from_slice(&theta[0..a]);
+        back.clear();
+        back.reserve(len.saturating_sub(1) * a);
         for l in 1..len {
-            let mut next = vec![f64::NEG_INFINITY; a];
+            next.clear();
+            next.resize(a, f64::NEG_INFINITY);
             for b in 0..a {
                 let th = theta[l * a + b];
                 let mut best_prev = 0u8;
@@ -61,7 +73,7 @@ impl SequenceProblem {
                 next[b] = best_val + th;
                 back.push(best_prev);
             }
-            score = next;
+            std::mem::swap(score, next);
         }
         // Backtrack.
         let mut best_last = 0usize;
@@ -72,13 +84,24 @@ impl SequenceProblem {
                 best_last = b;
             }
         }
-        let mut labels = vec![0u8; len];
+        let labels = &mut scratch.labels;
+        labels.clear();
+        labels.resize(len, 0u8);
         labels[len - 1] = best_last as u8;
         for l in (1..len).rev() {
             let b = labels[l] as usize;
             labels[l - 1] = back[(l - 1) * a + b];
         }
-        labels
+    }
+
+    /// Cold one-shot wrapper around [`viterbi_into`] (prediction /
+    /// train-loss path). Returns the best labeling.
+    ///
+    /// [`viterbi_into`]: SequenceProblem::viterbi_into
+    fn viterbi(&self, theta: &[f64], len: usize, w: &[f64]) -> Vec<u8> {
+        let mut scratch = OracleScratch::cold();
+        self.viterbi_into(theta, len, w, &mut scratch);
+        scratch.labels
     }
 
     /// Assemble the plane φ^{iŷ} for labeling `yhat`.
@@ -127,10 +150,28 @@ impl StructuredProblem for SequenceProblem {
     }
 
     fn oracle(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> Plane {
+        self.oracle_scratch(i, w, eng, &mut OracleScratch::cold())
+    }
+
+    fn oracle_scratch(
+        &self,
+        i: usize,
+        w: &[f64],
+        eng: &mut dyn ScoringEngine,
+        scratch: &mut OracleScratch,
+    ) -> Plane {
         let lay = self.data.layout;
         let inst = &self.data.instances[i];
         let len = inst.len();
-        let mut theta = Vec::new();
+        // Timing convention (uniform across the three oracles):
+        // `build_secs` is reserved for constructing per-example solver
+        // *structures* — this oracle has none (buffers only), so
+        // scoring, loss augmentation and the Viterbi solve are all
+        // solve time.
+        let sw_solve = Stopwatch::start();
+        // Move the θ buffer out so the Viterbi pass can borrow the
+        // scratch mutably; returned below (allocation-free steady state).
+        let mut theta = std::mem::take(&mut scratch.theta);
         self.unary_scores(i, w, eng, &mut theta);
         // Loss augmentation: add (1/L)[a ≠ y_i^l] to each unary.
         let inv_len = 1.0 / len as f64;
@@ -142,8 +183,10 @@ impl StructuredProblem for SequenceProblem {
                 }
             }
         }
-        let yhat = self.viterbi(&theta, len, w);
-        self.plane_for(i, &yhat)
+        self.viterbi_into(&theta, len, w, scratch);
+        scratch.solve_secs += sw_solve.secs();
+        scratch.theta = theta;
+        self.plane_for(i, &scratch.labels)
     }
 
     fn train_loss(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> f64 {
@@ -226,6 +269,27 @@ mod tests {
                 plane.value_at(&w)
             );
         }
+    }
+
+    #[test]
+    fn scratch_reuse_returns_identical_planes() {
+        // The arena-threaded entry point must agree exactly with the
+        // cold per-call path across repeated passes (buffer reuse is
+        // value-neutral: every slot is overwritten before being read).
+        let p = problem();
+        let mut eng = NativeEngine;
+        let mut warm = OracleScratch::new(true);
+        let mut rng = Pcg::seeded(12);
+        for round in 0..3 {
+            for i in 0..p.n() {
+                let w: Vec<f64> = (0..p.dim()).map(|_| 0.3 * rng.normal()).collect();
+                let a = p.oracle(i, &w, &mut eng);
+                let b = p.oracle_scratch(i, &w, &mut eng, &mut warm);
+                assert_eq!(a.tag, b.tag, "labeling diverged round {round} i={i}");
+                assert_eq!(a.off, b.off);
+            }
+        }
+        assert!(warm.solve_secs >= 0.0 && warm.build_secs >= 0.0);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use crate::model::plane::Plane;
 use crate::model::problem::StructuredProblem;
+use crate::model::scratch::OracleScratch;
 use crate::runtime::engine::ScoringEngine;
 use crate::utils::timer::Stopwatch;
 
@@ -134,6 +135,16 @@ impl CountingOracle {
     pub fn inner(&self) -> &dyn StructuredProblem {
         self.inner.as_ref()
     }
+
+    /// Shared per-call accounting for both oracle entry points.
+    fn note_call(&self, secs: f64) {
+        self.calls_all.fetch_add(1, Ordering::Relaxed);
+        if self.counting.load(Ordering::Relaxed) {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            atomic_add_f64(&self.real_secs, secs);
+            atomic_add_f64(&self.virtual_secs, self.delay);
+        }
+    }
 }
 
 impl StructuredProblem for CountingOracle {
@@ -152,13 +163,20 @@ impl StructuredProblem for CountingOracle {
     fn oracle(&self, i: usize, w: &[f64], eng: &mut dyn ScoringEngine) -> Plane {
         let sw = Stopwatch::start();
         let plane = self.inner.oracle(i, w, eng);
-        let secs = sw.secs();
-        self.calls_all.fetch_add(1, Ordering::Relaxed);
-        if self.counting.load(Ordering::Relaxed) {
-            self.calls.fetch_add(1, Ordering::Relaxed);
-            atomic_add_f64(&self.real_secs, secs);
-            atomic_add_f64(&self.virtual_secs, self.delay);
-        }
+        self.note_call(sw.secs());
+        plane
+    }
+
+    fn oracle_scratch(
+        &self,
+        i: usize,
+        w: &[f64],
+        eng: &mut dyn ScoringEngine,
+        scratch: &mut OracleScratch,
+    ) -> Plane {
+        let sw = Stopwatch::start();
+        let plane = self.inner.oracle_scratch(i, w, eng, scratch);
+        self.note_call(sw.secs());
         plane
     }
 

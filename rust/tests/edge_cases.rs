@@ -119,14 +119,14 @@ fn gram_cache_survives_working_set_eviction() {
             let p = Plane::new(PlaneVec::sparse(dim, pairs), rng.normal(), round * 100 + t);
             ws.insert(p, round);
         }
-        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 6, round);
+        cached_block_updates(&mut st, &mut ws, &mut gram, 0, 6, round, &mut Vec::new());
         ws.evict_stale(round, 1);
         assert!(st.consistency_error() < 1e-8, "round {round}");
     }
     // retain_ids drops dead keys without breaking live ones.
     let live: Vec<u64> = ws.entries().iter().map(|e| e.id).collect();
     gram.retain_ids(&move |id| live.contains(&id));
-    cached_block_updates(&mut st, &mut ws, &mut gram, 0, 6, 11);
+    cached_block_updates(&mut st, &mut ws, &mut gram, 0, 6, 11, &mut Vec::new());
     assert!(st.consistency_error() < 1e-8);
 }
 

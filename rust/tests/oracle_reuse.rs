@@ -1,0 +1,187 @@
+//! Integration coverage for the warm-start dynamic max-oracle layer:
+//!
+//! * the `BkGraph` warm-restart contract — after arbitrary
+//!   `reset_tweights`/`update_tweights` sequences on a persistent graph,
+//!   `maxflow_reuse` returns **bitwise identical** flow values and
+//!   labelings to cold builds with the same capacities;
+//! * end-to-end trajectory neutrality — `--oracle-reuse on` and `off`
+//!   produce bit-identical eval series at a fixed seed on horseseg_like
+//!   (the graph-cut scenario, where reuse actually persists solver
+//!   state);
+//! * per-worker arena isolation under sharded dispatch — each example's
+//!   graph lives in exactly one worker arena, warm passes construct
+//!   nothing, and `--threads 4` with reuse on still matches the
+//!   sequential cold trajectory.
+
+use mpbcfw::coordinator::parallel;
+use mpbcfw::coordinator::trainer::{build_problem, train, Algo, DatasetKind, TrainSpec};
+use mpbcfw::data::types::Scale;
+use mpbcfw::maxflow::BkGraph;
+use mpbcfw::model::problem::StructuredProblem;
+use mpbcfw::model::scratch::OracleScratch;
+use mpbcfw::utils::rng::Pcg;
+
+fn spec(reuse: bool, threads: usize) -> TrainSpec {
+    TrainSpec {
+        dataset: DatasetKind::HorsesegLike,
+        scale: Scale::Tiny,
+        algo: Algo::MpBcfw,
+        max_iters: 4,
+        seed: 7,
+        data_seed: 2,
+        // The §3.4 slope rule is timing-based; pin the pass schedule so
+        // the reuse modes execute the identical step sequence.
+        auto_approx: false,
+        max_approx_passes: 2,
+        oracle_reuse: reuse,
+        threads,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn warm_bk_graph_bitwise_matches_cold_after_tweight_updates() {
+    // Randomized Potts-style instances: persistent graph vs cold rebuild
+    // across rounds of fresh terminal capacities.
+    let mut rng = Pcg::seeded(41);
+    for trial in 0..25 {
+        let n = 2 + rng.below(12);
+        let m = rng.below(3 * n + 1);
+        let edges: Vec<(u32, u32, f64, f64)> = (0..m)
+            .map(|_| {
+                let a = rng.below(n);
+                let mut b = rng.below(n);
+                if a == b {
+                    b = (b + 1) % n;
+                }
+                // Potts graphs use symmetric unit-ish weights; vary them
+                // anyway to stress the reset path.
+                (a as u32, b as u32, rng.f64() * 2.0, rng.f64() * 2.0)
+            })
+            .collect();
+        let mut warm = BkGraph::new(n, m);
+        for &(a, b, c, rc) in &edges {
+            warm.add_edge(a, b, c, rc);
+        }
+        for round in 0..5 {
+            let tw: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.f64() * 4.0, rng.f64() * 4.0)).collect();
+            warm.reset_tweights();
+            for (i, &(cs, ct)) in tw.iter().enumerate() {
+                warm.update_tweights(i as u32, cs, ct);
+            }
+            let f_warm = warm.maxflow_reuse();
+            let mut cold = BkGraph::new(n, m);
+            for (i, &(cs, ct)) in tw.iter().enumerate() {
+                cold.add_tweights(i as u32, cs, ct);
+            }
+            for &(a, b, c, rc) in &edges {
+                cold.add_edge(a, b, c, rc);
+            }
+            let f_cold = cold.maxflow();
+            assert_eq!(
+                f_warm.to_bits(),
+                f_cold.to_bits(),
+                "trial {trial} round {round}: flow {f_warm} vs {f_cold} not bitwise equal"
+            );
+            for i in 0..n as u32 {
+                assert_eq!(
+                    warm.is_source_side(i),
+                    cold.is_source_side(i),
+                    "trial {trial} round {round}: labeling differs at node {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn oracle_reuse_on_off_trajectories_bitwise_identical_on_horseseg() {
+    let on = train(&spec(true, 0)).unwrap();
+    let off = train(&spec(false, 0)).unwrap();
+    assert_eq!(on.oracle_reuse, "on");
+    assert_eq!(off.oracle_reuse, "off");
+    assert_eq!(on.points.len(), off.points.len());
+    for (p, q) in on.points.iter().zip(&off.points) {
+        assert_eq!(p.outer, q.outer);
+        assert_eq!(p.oracle_calls, q.oracle_calls);
+        assert_eq!(p.primal, q.primal, "primal diverged at outer {}", p.outer);
+        assert_eq!(p.dual, q.dual, "dual diverged at outer {}", p.outer);
+        assert_eq!(p.approx_passes, q.approx_passes);
+        assert_eq!(p.approx_steps, q.approx_steps);
+        assert_eq!(p.ws_mean, q.ws_mean);
+        assert!(
+            p.gap_est == q.gap_est || (p.gap_est.is_nan() && q.gap_est.is_nan()),
+            "gap_est diverged at outer {}: {} vs {}",
+            p.outer,
+            p.gap_est,
+            q.gap_est
+        );
+    }
+    // Both modes populate the oracle timing split.
+    let (a, b) = (on.points.last().unwrap(), off.points.last().unwrap());
+    assert!(a.oracle_solve_s > 0.0 && b.oracle_solve_s > 0.0);
+    assert!(a.oracle_build_s >= 0.0 && b.oracle_build_s >= 0.0);
+}
+
+#[test]
+fn threaded_warm_run_matches_sequential_cold_run() {
+    // Thread-count invariance and reuse neutrality compose: 4 warm
+    // worker arenas must reproduce the sequential cold trajectory.
+    let warm4 = train(&spec(true, 4)).unwrap();
+    let cold0 = train(&spec(false, 0)).unwrap();
+    assert_eq!(warm4.points.len(), cold0.points.len());
+    for (p, q) in warm4.points.iter().zip(&cold0.points) {
+        assert_eq!(p.primal, q.primal, "primal diverged at outer {}", p.outer);
+        assert_eq!(p.dual, q.dual, "dual diverged at outer {}", p.outer);
+        assert_eq!(p.oracle_calls, q.oracle_calls);
+    }
+}
+
+#[test]
+fn worker_arenas_stay_isolated_under_sharded_dispatch() {
+    let problem = build_problem(&spec(true, 0));
+    let mut rng = Pcg::seeded(3);
+    let w: Vec<f64> = (0..problem.dim()).map(|_| 0.1 * rng.normal()).collect();
+    let order: Vec<usize> = (0..problem.n()).collect();
+    let threads = 4usize;
+    let mut arenas: Vec<OracleScratch> =
+        (0..threads).map(|_| OracleScratch::new(true)).collect();
+    let (pass1, _) = parallel::exact_pass_with(&problem, &w, &order, threads, &mut arenas);
+    // Id-mod sharding: worker k's arena holds exactly the graphs of its
+    // residue class (sizes match `shard_sizes` for a full pass) — no
+    // example is ever built in two arenas.
+    let held: Vec<usize> = arenas.iter().map(|a| a.arena.held()).collect();
+    assert_eq!(held, parallel::shard_sizes(problem.n(), threads));
+    assert_eq!(held.iter().sum::<usize>(), problem.n());
+    let built: u64 = arenas.iter().map(|a| a.arena.built).sum();
+    assert_eq!(built as usize, problem.n(), "pass 1 builds each graph exactly once");
+    // A second pass over the same order is fully warm: zero builds, and
+    // the planes match the cold dispatch bit for bit.
+    let (pass2, _) = parallel::exact_pass_with(&problem, &w, &order, threads, &mut arenas);
+    let built_after: u64 = arenas.iter().map(|a| a.arena.built).sum();
+    assert_eq!(built_after, built, "warm pass must construct zero graphs");
+    let (cold, _) = parallel::exact_pass(&problem, &w, &order, threads);
+    for ((a, b), c) in pass1.iter().zip(&pass2).zip(&cold) {
+        assert_eq!(a.tag, b.tag);
+        assert_eq!(a.off, b.off);
+        assert_eq!(a.tag, c.tag);
+        assert_eq!(a.off, c.off);
+    }
+    // The pinning is by block id, not by position in the pass order, so
+    // a *reshuffled* order (samplers permute every pass) is still fully
+    // warm: zero builds, same arena occupancy, planes aligned with the
+    // new order.
+    let reversed: Vec<usize> = order.iter().rev().copied().collect();
+    let (pass3, _) = parallel::exact_pass_with(&problem, &w, &reversed, threads, &mut arenas);
+    assert_eq!(
+        arenas.iter().map(|a| a.arena.built).sum::<u64>(),
+        built,
+        "a reshuffled warm pass must construct zero graphs"
+    );
+    assert_eq!(arenas.iter().map(|a| a.arena.held()).collect::<Vec<_>>(), held);
+    for (p, q) in pass3.iter().zip(pass1.iter().rev()) {
+        assert_eq!(p.tag, q.tag, "reshuffled pass planes misaligned");
+        assert_eq!(p.off, q.off);
+    }
+}
