@@ -82,6 +82,10 @@ impl RunGroup {
                 "oracle_reuse",
                 "oracle_build_s",
                 "oracle_solve_s",
+                "gram_bytes",
+                "gram_hit_rate",
+                "cached_visits",
+                "product_refreshes",
             ],
         )?;
         for s in &self.series {
@@ -124,6 +128,10 @@ impl RunGroup {
                     s.oracle_reuse.clone(),
                     format!("{}", p.oracle_build_s),
                     format!("{}", p.oracle_solve_s),
+                    p.gram_bytes.to_string(),
+                    format!("{}", p.gram_hit_rate),
+                    p.cached_visits.to_string(),
+                    p.product_refreshes.to_string(),
                 ])?;
             }
         }

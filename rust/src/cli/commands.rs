@@ -4,6 +4,7 @@ use std::path::Path;
 
 use super::args::Args;
 use crate::bench::{figures, tables};
+use crate::coordinator::products::{GramBackend, ProductMode};
 use crate::coordinator::sampling::{SamplingStrategy, StepRule};
 use crate::coordinator::trainer::{self, Algo, DatasetKind, EngineKind, TrainSpec};
 use crate::model::problem::StructuredProblem as _;
@@ -19,10 +20,11 @@ USAGE:
                   [--scale tiny|small|paper] [--iters N] [--seed S] [--data-seed S]
                   [--lambda F] [--ttl T] [--cap-n N] [--inner-repeats R] [--no-auto-approx]
                   [--sampling uniform|gap|cyclic] [--steps fw|pairwise] [--dense-planes]
-                  [--oracle-reuse on|off] [--threads N] [--oracle-delay SECONDS]
-                  [--engine native|xla] [--artifacts DIR]
+                  [--products recompute|incremental] [--gram hashmap|triangular]
+                  [--product-refresh K] [--oracle-reuse on|off] [--threads N]
+                  [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
                   [--train-loss] [--max-oracle-calls N] [--target-gap F]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|all
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR] [--smoke]
   mpbcfw gen-data --dataset usps|ocr|horseseg --out FILE [--scale ...] [--seed S]
@@ -57,6 +59,19 @@ threshold; --dense-planes forces dense storage. Either way the training
 trajectory is bitwise identical — compare footprints with
 `bench --table sparsity` (plane bytes + mean nnz columns). --smoke runs
 any bench at tiny scale with a 2-iteration budget (CI rot check).
+
+The §3.5 approximate-pass products are maintained incrementally by
+default (--products incremental): each block persists its plane
+products across visits, so a warm visit starts from Θ(|W_i|) scalars
+with zero dense dots — an exact O(d) monotone guard plus a periodic
+refresh (--product-refresh K, default 8) bound the drift other blocks'
+movement causes, and the dual never decreases. --products recompute
+restores the paper-literal dense-per-visit scheme, which is also the
+bitwise regression anchor. Pairwise plane products are served from a
+slot-keyed triangular Gram arena (--gram triangular, default): O(1)
+unhashed lookups in memory bounded by the working-set high-water mark;
+--gram hashmap keeps the legacy id-keyed map as the A/B baseline.
+`bench --table products` sweeps both axes on all three scenarios.
 
 The exact oracles warm-start by default (--oracle-reuse on): each
 worker keeps per-example min-cut graphs alive across passes — only the
@@ -130,6 +145,11 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         steps: StepRule::parse(args.get_or("steps", "fw"))
             .ok_or_else(|| anyhow::anyhow!("bad --steps (fw|pairwise)"))?,
         dense_planes: args.has("dense-planes"),
+        products: ProductMode::parse(args.get_or("products", "incremental"))
+            .ok_or_else(|| anyhow::anyhow!("bad --products (recompute|incremental)"))?,
+        gram: GramBackend::parse(args.get_or("gram", "triangular"))
+            .ok_or_else(|| anyhow::anyhow!("bad --gram (hashmap|triangular)"))?,
+        product_refresh_every: args.u64_or("product-refresh", 8).map_err(err)?,
         oracle_reuse,
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
@@ -417,6 +437,43 @@ mod tests {
             1,
             "--dense-planes without plane caches must be rejected"
         );
+    }
+
+    #[test]
+    fn train_with_products_and_gram_flags() {
+        assert_eq!(
+            dispatch(toks(
+                "train --scale tiny --iters 2 --dataset usps --products recompute \
+                 --gram hashmap --product-refresh 4"
+            )),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --products sometimes")),
+            1,
+            "unknown --products value must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --gram btree")),
+            1,
+            "unknown --gram value must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --algo bcfw --products recompute")),
+            1,
+            "--products recompute without cached passes must be rejected"
+        );
+    }
+
+    #[test]
+    fn bench_products_smoke_runs() {
+        let dir =
+            std::env::temp_dir().join(format!("mpbcfw_cli_products_{}", std::process::id()));
+        let cmd = format!("bench --table products --smoke --out {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(dir.join("table_products.csv").exists());
+        assert!(dir.join("bench_products.json").exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

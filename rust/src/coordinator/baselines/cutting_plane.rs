@@ -154,6 +154,10 @@ fn record(
         oracle_secs: stats.real_secs + stats.virtual_secs,
         oracle_build_s: 0.0, // no scratch-threaded oracle path
         oracle_solve_s: 0.0,
+        gram_bytes: 0, // no §3.5 product layer
+        gram_hit_rate: f64::NAN,
+        cached_visits: 0,
+        product_refreshes: 0,
         train_loss,
     });
 }

@@ -16,10 +16,16 @@
 //! Θ(nnz(φ̂)) on top of the O(d) accumulator updates and the trajectory
 //! does not depend on how a plane is stored.
 
-use crate::model::plane::{DensePlane, Plane};
+use crate::model::plane::{DensePlane, Plane, PlaneRef};
 use crate::utils::math;
 
 /// Outcome of one block-coordinate Frank-Wolfe step.
+///
+/// Besides γ and the gap it carries the five *pre-step* inner products
+/// the line search already computed — the §3.5 incremental product
+/// maintenance (`products::BlockProducts::note_exact_step`) folds an
+/// exact step into its persisted rows from exactly these scalars, with
+/// zero additional dense work.
 #[derive(Clone, Copy, Debug)]
 pub struct StepInfo {
     /// Line-searched step size γ ∈ \[0, 1\] (0 = state unchanged).
@@ -31,6 +37,16 @@ pub struct StepInfo {
     /// measured at the same w) this is the global duality gap — the
     /// quantity gap-proportional sampling allocates oracle calls by.
     pub gap: f64,
+    /// ⟨φ^i_*, φ_*⟩ before the step.
+    pub dot_phii_phi: f64,
+    /// ⟨φ̂_*, φ_*⟩ before the step.
+    pub dot_hat_phi: f64,
+    /// ‖φ^i_*‖² before the step (served from the incremental cache).
+    pub nrm_phii: f64,
+    /// ‖φ̂_*‖².
+    pub nrm_hat: f64,
+    /// ⟨φ^i_*, φ̂_*⟩ before the step.
+    pub dot_phii_hat: f64,
 }
 
 /// Shared dual iterate of all Frank-Wolfe-family optimizers; see the
@@ -82,12 +98,24 @@ impl DualState {
         self.phi.dual_bound(self.lambda)
     }
 
+    /// Cached ‖φ^i_*‖² of block `i` (incrementally maintained; refreshed
+    /// by `renormalize`). The §3.5 incremental product path reads its
+    /// warm `d` from here instead of a dense reduction.
+    pub fn block_norm_sq(&self, i: usize) -> f64 {
+        self.block_nrm2[i]
+    }
+
     /// One block-coordinate Frank-Wolfe update with plane `hat` for block
     /// `i` (exact Alg. 2 lines 4–6, also used for approximate steps with a
     /// cached plane). Returns the step size γ. Leaves `w` stale; callers
     /// decide when to `refresh_w` (usually right before the next oracle).
     pub fn block_step(&mut self, i: usize, hat: &Plane) -> f64 {
-        self.block_step_info(i, hat).gamma
+        self.block_step_info_ref(i, hat.view()).gamma
+    }
+
+    /// As `block_step`, for a borrowed (slab-resident) plane.
+    pub fn block_step_ref(&mut self, i: usize, hat: PlaneRef<'_>) -> f64 {
+        self.block_step_info_ref(i, hat).gamma
     }
 
     /// As `block_step`, additionally returning the block duality gap read
@@ -95,6 +123,15 @@ impl DualState {
     /// arithmetic for the step itself — seeded trajectories are unchanged
     /// whether callers take `block_step` or `block_step_info`).
     pub fn block_step_info(&mut self, i: usize, hat: &Plane) -> StepInfo {
+        self.block_step_info_ref(i, hat.view())
+    }
+
+    /// The step kernel. All entry points (`block_step`,
+    /// `block_step_info`, and the `_ref` variants) funnel here, so owned
+    /// and slab-borrowed planes share one arithmetic path — the borrowed
+    /// view performs the identical operations, keeping trajectories
+    /// bitwise independent of where a plane's payload lives.
+    pub fn block_step_info_ref(&mut self, i: usize, hat: PlaneRef<'_>) -> StepInfo {
         // All inner products computed once, shared between the line
         // search, the gap estimate and the incremental norm update
         // (§Perf L3-3).
@@ -120,7 +157,7 @@ impl DualState {
         if gamma > 0.0 {
             self.apply_step_with_products(i, hat, gamma, dot_phii_hat, nrm_hat);
         }
-        StepInfo { gamma, gap }
+        StepInfo { gamma, gap, dot_phii_phi, dot_hat_phi, nrm_phii, nrm_hat, dot_phii_hat }
     }
 
     /// Pairwise Frank-Wolfe step on block `i`: move up to `max_gamma` of
@@ -140,6 +177,20 @@ impl DualState {
         i: usize,
         best: &Plane,
         worst: &Plane,
+        dot_best_worst: f64,
+        max_gamma: f64,
+    ) -> f64 {
+        self.pairwise_step_ref(i, best.view(), worst.view(), dot_best_worst, max_gamma)
+    }
+
+    /// As `pairwise_step`, for borrowed (slab-resident) planes — the
+    /// form the approximate-pass loop uses, since both endpoints live in
+    /// the working-set slab.
+    pub fn pairwise_step_ref(
+        &mut self,
+        i: usize,
+        best: PlaneRef<'_>,
+        worst: PlaneRef<'_>,
         dot_best_worst: f64,
         max_gamma: f64,
     ) -> f64 {
@@ -180,6 +231,7 @@ impl DualState {
 
     /// Apply φ^i ← (1−γ)φ^i + γφ̂ and φ ← φ + (φ^i_new − φ^i_old).
     pub fn apply_step(&mut self, i: usize, hat: &Plane, gamma: f64) {
+        let hat = hat.view();
         let dot_phii_hat = hat.star.dot_dense(&self.blocks[i].star);
         let nrm_hat = hat.star.norm_sq();
         self.apply_step_with_products(i, hat, gamma, dot_phii_hat, nrm_hat);
@@ -188,7 +240,7 @@ impl DualState {
     fn apply_step_with_products(
         &mut self,
         i: usize,
-        hat: &Plane,
+        hat: PlaneRef<'_>,
         gamma: f64,
         dot_phii_hat: f64,
         nrm_hat: f64,
@@ -199,7 +251,7 @@ impl DualState {
         hat.star.axpy_into(gamma, &mut self.phi.star);
         self.phi.off += gamma * (hat.off - block.off);
         // Block update + incremental norm.
-        block.interp_plane(gamma, hat);
+        block.interp_ref(gamma, hat);
         let om = 1.0 - gamma;
         self.block_nrm2[i] = om * om * self.block_nrm2[i]
             + 2.0 * gamma * om * dot_phii_hat
@@ -393,6 +445,47 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn ref_and_owned_step_entry_points_agree_bitwise() {
+        prop_check("block_step == block_step_ref", 40, |g| {
+            let dim = g.usize(1, 8);
+            let mut a = DualState::new(2, dim, 0.9);
+            let mut b = DualState::new(2, dim, 0.9);
+            for t in 0..12u64 {
+                let hat = sparse_plane(g, dim, t);
+                let ga = a.block_step(t as usize % 2, &hat);
+                let gb = b.block_step_ref(t as usize % 2, hat.view());
+                if ga != gb {
+                    return Err(format!("gamma diverged: {ga} vs {gb}"));
+                }
+            }
+            for (x, y) in a.phi.star.iter().zip(&b.phi.star) {
+                if x != y {
+                    return Err("phi diverged".into());
+                }
+            }
+            if a.block_norm_sq(0) != b.block_norm_sq(0) {
+                return Err("block norm cache diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn step_info_carries_the_line_search_products() {
+        let mut st = DualState::new(1, 3, 1.0);
+        let p1 = Plane::new(PlaneVec::Dense(vec![1.0, 2.0, 0.0]), 0.5, 1);
+        st.apply_step(0, &p1, 1.0); // φ = φ^0 = p1
+        let hat = Plane::new(PlaneVec::Dense(vec![0.0, 1.0, 3.0]), 0.2, 2);
+        let info = st.block_step_info(0, &hat);
+        // Pre-step products against φ = [1, 2, 0].
+        assert_eq!(info.dot_hat_phi, 2.0);
+        assert_eq!(info.dot_phii_hat, 2.0);
+        assert_eq!(info.nrm_hat, 10.0);
+        assert_eq!(info.nrm_phii, 5.0);
+        assert_eq!(info.dot_phii_phi, 5.0);
     }
 
     #[test]

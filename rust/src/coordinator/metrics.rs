@@ -68,6 +68,23 @@ pub struct EvalPoint {
     /// the combinatorial solve (min-cut / Viterbi / argmax scan), and
     /// the decode; same accounting as `oracle_build_s`.
     pub oracle_solve_s: f64,
+    /// Heap bytes held by the §3.5 Gram caches (triangular arenas are
+    /// bounded by the slot high-water mark; hashmap backends estimate
+    /// ~32 B per live pair). 0 for optimizers without Gram caches.
+    pub gram_bytes: u64,
+    /// Fraction of Gram lookups served from cache so far (NaN before
+    /// any lookup, and for optimizers without Gram caches).
+    pub gram_hit_rate: f64,
+    /// Cached §3.5 block visits so far (inner loops entered with a
+    /// non-empty working set). 0 for optimizers without the cached
+    /// inner loop.
+    pub cached_visits: u64,
+    /// Cached visits that paid the dense Θ(|W_i|·d) product pass. Under
+    /// `--products recompute` this equals `cached_visits`; under
+    /// `incremental` it counts cold starts + periodic refreshes only —
+    /// the gap to `cached_visits` is the warm visits that ran with zero
+    /// dense dots.
+    pub product_refreshes: u64,
     /// Mean task loss of the predictor on the training set (optional
     /// diagnostic; NaN when not computed).
     pub train_loss: f64,
@@ -96,6 +113,10 @@ impl EvalPoint {
             ("oracle_secs", Json::Num(self.oracle_secs)),
             ("oracle_build_s", Json::Num(self.oracle_build_s)),
             ("oracle_solve_s", Json::Num(self.oracle_solve_s)),
+            ("gram_bytes", Json::Num(self.gram_bytes as f64)),
+            ("gram_hit_rate", Json::Num(self.gram_hit_rate)),
+            ("cached_visits", Json::Num(self.cached_visits as f64)),
+            ("product_refreshes", Json::Num(self.product_refreshes as f64)),
             ("train_loss", Json::Num(self.train_loss)),
         ])
     }
@@ -271,6 +292,10 @@ mod tests {
             oracle_secs: 0.0,
             oracle_build_s: 0.0,
             oracle_solve_s: 0.0,
+            gram_bytes: 0,
+            gram_hit_rate: f64::NAN,
+            cached_visits: 0,
+            product_refreshes: 0,
             train_loss: f64::NAN,
         };
         let s = Series {
@@ -312,6 +337,10 @@ mod tests {
             oracle_secs: 0.9,
             oracle_build_s: 0.2,
             oracle_solve_s: 0.6,
+            gram_bytes: 2048,
+            gram_hit_rate: 0.75,
+            cached_visits: 50,
+            product_refreshes: 5,
             train_loss: 0.1,
         };
         let j = p.to_json();
@@ -324,5 +353,9 @@ mod tests {
         assert_eq!(j.get("plane_nnz_mean").as_f64(), Some(12.5));
         assert_eq!(j.get("oracle_build_s").as_f64(), Some(0.2));
         assert_eq!(j.get("oracle_solve_s").as_f64(), Some(0.6));
+        assert_eq!(j.get("gram_bytes").as_f64(), Some(2048.0));
+        assert_eq!(j.get("gram_hit_rate").as_f64(), Some(0.75));
+        assert_eq!(j.get("cached_visits").as_f64(), Some(50.0));
+        assert_eq!(j.get("product_refreshes").as_f64(), Some(5.0));
     }
 }

@@ -31,7 +31,9 @@ use super::averaging::{best_interpolation, Averager};
 use super::dual::DualState;
 use super::metrics::{EvalCtx, EvalPoint, Series};
 use super::parallel;
-use super::products::{cached_block_updates, GramCache};
+use super::products::{
+    cached_block_updates_with, BlockProducts, GramBackend, GramCache, ProductMode, ProductStats,
+};
 use super::sampling::{build_sampler, BlockGaps, BlockSampler as _, SamplingStrategy, StepRule};
 use super::working_set::{BlockCoeffs, WorkingSet};
 use crate::model::problem::StructuredProblem;
@@ -59,6 +61,11 @@ use crate::utils::timer::Clock;
 /// assert_eq!(mp.steps, StepRule::Fw);
 /// assert!(!mp.dense_planes); // sparse plane storage by default
 /// assert!(mp.oracle_reuse); // warm-started oracles by default
+///
+/// use mpbcfw::coordinator::products::{GramBackend, ProductMode};
+/// assert_eq!(mp.products, ProductMode::Incremental); // warm §3.5 visits
+/// assert_eq!(mp.gram, GramBackend::Triangular); // unhashed Gram lookups
+/// assert_eq!(mp.product_refresh_every, 8); // drift guard cadence
 ///
 /// let plain = MpBcfwConfig::bcfw(0.01); // N = M = 0
 /// assert_eq!(plain.cap_n, 0);
@@ -101,6 +108,31 @@ pub struct MpBcfwConfig {
     /// only trades memory/speed, and is kept as the A/B lever for
     /// `bench --table sparsity`.
     pub dense_planes: bool,
+    /// §3.5 product maintenance for the cached inner loop (CLI
+    /// `--products {recompute,incremental}`, default incremental):
+    /// `Recompute` pays the dense Θ(|W_i|·d) product pass on every block
+    /// visit — the paper's literal scheme and the bitwise regression
+    /// anchor (pinned in `tests/products_modes.rs`) — while
+    /// `Incremental` persists the products across visits so warm visits
+    /// start in Θ(|W_i|) scalars with zero dense dots, guarded by an
+    /// exact O(d) dual-monotonicity check on every warm materialization
+    /// plus the periodic refresh below (drift from other blocks'
+    /// movement is the price; the dual still never decreases).
+    pub products: ProductMode,
+    /// Gram-cache backend for pairwise plane products (CLI
+    /// `--gram {hashmap,triangular}`, default triangular): the
+    /// slot-keyed lower-triangular arena serves O(1) unhashed lookups in
+    /// bounded memory; `hashmap` is the legacy id-keyed map kept as the
+    /// `bench --table products` baseline. Served values are identical
+    /// bitwise, so this is a pure speed/memory knob.
+    pub gram: GramBackend,
+    /// Under `--products incremental`, refresh a block's persisted
+    /// products with a dense pass every this many warm visits (the
+    /// drift guard; 0 disables the periodic schedule — the monotone
+    /// guard still rejects bad materializations, and a streak of
+    /// zero-step warm visits still forces a stall-refresh so drift can
+    /// never silently disable a block's approximate pass).
+    pub product_refresh_every: u64,
     /// Warm-start the exact oracles from persistent per-worker scratch
     /// arenas (CLI `--oracle-reuse {on,off}`, default on): per-example
     /// `BkGraph`s are kept alive across passes with only their terminal
@@ -147,6 +179,9 @@ impl Default for MpBcfwConfig {
             sampling: SamplingStrategy::Uniform,
             steps: StepRule::Fw,
             dense_planes: false,
+            products: ProductMode::Incremental,
+            gram: GramBackend::Triangular,
+            product_refresh_every: 8,
             oracle_reuse: true,
             max_iters: 50,
             max_oracle_calls: 0,
@@ -185,8 +220,14 @@ pub struct MpBcfwRun {
     pub state: DualState,
     /// Per-example working sets W_i.
     pub working_sets: Vec<WorkingSet>,
-    /// Per-example §3.5 Gram caches.
+    /// Per-example §3.5 Gram caches (backend per `cfg.gram`).
     pub grams: Vec<GramCache>,
+    /// Per-example persisted §3.5 products (`--products incremental`;
+    /// empty rows under `recompute`).
+    pub products: Vec<BlockProducts>,
+    /// Visit/refresh/guard counters of the product-maintenance layer
+    /// (feeds the `product_refreshes` / `cached_visits` eval columns).
+    pub product_stats: ProductStats,
     /// Per-example convex-coefficient ledgers (pairwise steps only;
     /// empty under `StepRule::Fw`).
     pub coeffs: Vec<BlockCoeffs>,
@@ -247,7 +288,9 @@ pub fn run(
     let mut run = MpBcfwRun {
         state: DualState::new(n, dim, cfg.lambda),
         working_sets: (0..n).map(|_| WorkingSet::new(cfg.cap_n)).collect(),
-        grams: (0..n).map(|_| GramCache::new()).collect(),
+        grams: (0..n).map(|_| GramCache::with_backend(cfg.gram)).collect(),
+        products: (0..n).map(|_| BlockProducts::new()).collect(),
+        product_stats: ProductStats::default(),
         coeffs: if pairwise { vec![BlockCoeffs::new(); n] } else { Vec::new() },
         gaps: BlockGaps::new(n),
         avg_exact: Averager::new(dim),
@@ -387,7 +430,7 @@ pub fn run(
                             run.avg_approx.update(&run.state.phi);
                         }
                     } else if cfg.inner_repeats > 1 {
-                        let out = cached_block_updates(
+                        let out = cached_block_updates_with(
                             &mut run.state,
                             &mut run.working_sets[i],
                             &mut run.grams[i],
@@ -395,9 +438,19 @@ pub fn run(
                             cfg.inner_repeats,
                             outer,
                             &mut run.coef_scratch,
+                            cfg.products,
+                            cfg.product_refresh_every,
+                            &mut run.products[i],
+                            &mut run.product_stats,
                         );
                         run.approx_steps_total += out.steps as u64;
-                        run.gaps.observe_floor(i, out.first_gap);
+                        // Warm visits compute first_gap from persisted
+                        // (possibly drifted) scalars; keep those out of
+                        // the gap-sampling floors — only dense-fresh
+                        // estimates may raise them.
+                        if !out.warm {
+                            run.gaps.observe_floor(i, out.first_gap);
+                        }
                         if cfg.averaging && out.steps > 0 {
                             run.avg_approx.update(&run.state.phi);
                         }
@@ -411,10 +464,8 @@ pub fn run(
                                 math::dot(&run.state.blocks[i].star, &run.state.w)
                                     + run.state.blocks[i].off;
                             run.gaps.observe_floor(i, (best_val - block_val).max(0.0));
-                            let gamma = {
-                                let plane = run.working_sets[i].plane(j);
-                                run.state.block_step(i, plane)
-                            };
+                            let plane = run.working_sets[i].plane_ref(j);
+                            let gamma = run.state.block_step_ref(i, plane);
                             run.working_sets[i].touch(j, outer);
                             if gamma > 0.0 {
                                 run.approx_steps_total += 1;
@@ -425,14 +476,10 @@ pub fn run(
                         }
                     }
                     // TTL eviction runs with the approximate pass, as in
-                    // Alg. 3 line 4; under pairwise steps the evicted
-                    // ids reconcile the coefficient ledger.
-                    if pairwise {
-                        let dead = run.working_sets[i].evict_stale_ids(outer, cfg.ttl);
-                        run.coeffs[i].forget(&dead);
-                    } else {
-                        run.working_sets[i].evict_stale(outer, cfg.ttl);
-                    }
+                    // Alg. 3 line 4; the evicted ids reconcile every
+                    // piece of per-plane state (coefficient ledger,
+                    // Gram cache — the leak fix — and product rows).
+                    ttl_evict(&mut run, i, outer, cfg, pairwise);
                 }
                 passes += 1;
                 if cfg.auto_approx
@@ -447,13 +494,8 @@ pub fn run(
         // If no approximate pass ran this iteration the TTL rule still
         // applies (otherwise caps-only eviction would let sets go stale).
         if cfg.cap_n > 0 && passes == 0 {
-            for (i, ws) in run.working_sets.iter_mut().enumerate() {
-                if pairwise {
-                    let dead = ws.evict_stale_ids(outer, cfg.ttl);
-                    run.coeffs[i].forget(&dead);
-                } else {
-                    ws.evict_stale(outer, cfg.ttl);
-                }
+            for i in 0..n {
+                ttl_evict(&mut run, i, outer, cfg, pairwise);
             }
         }
         last_approx_passes = passes;
@@ -498,15 +540,46 @@ fn apply_exact_step(
     let (ws_idx, cap_evicted) = run.working_sets[i].insert_with_evicted(hat.clone(), outer);
     let info = run.state.block_step_info(i, hat);
     run.gaps.record(i, info.gap);
-    if pairwise {
-        if let Some(dead) = cap_evicted {
+    if let Some(dead) = cap_evicted {
+        // Reconcile every piece of per-plane state with the cap victim
+        // (for the Gram cache this is the eviction wiring the old code
+        // lacked — hashmap entries of evicted planes now die with them).
+        run.grams[i].forget_ids(&[dead]);
+        run.products[i].forget(&[dead]);
+        if pairwise {
             run.coeffs[i].forget(&[dead]);
         }
+    }
+    if pairwise {
         let id = (ws_idx != usize::MAX).then(|| run.working_sets[i].id(ws_idx));
         run.coeffs[i].fw_step(id, info.gamma);
+    } else if cfg.products == ProductMode::Incremental
+        && cfg.inner_repeats > 1
+        && ws_idx != usize::MAX
+    {
+        // Fold the exact step into the persisted §3.5 products: one
+        // Gram-row pass keeps c_j exact and seeds the new plane's row
+        // from the step's own products (see BlockProducts docs).
+        run.products[i].note_exact_step(&run.working_sets[i], &mut run.grams[i], ws_idx, &info);
     }
     if cfg.averaging {
         run.avg_exact.update(&run.state.phi);
+    }
+}
+
+/// TTL eviction plus the per-plane state reconciliation every holder
+/// needs: the pairwise coefficient ledger, the Gram cache (hashmap
+/// backend pruning — the triangular arena self-invalidates via slot
+/// generations), and the persisted §3.5 product rows.
+fn ttl_evict(run: &mut MpBcfwRun, i: usize, outer: u64, cfg: &MpBcfwConfig, pairwise: bool) {
+    let dead = run.working_sets[i].evict_stale_ids(outer, cfg.ttl);
+    if dead.is_empty() {
+        return;
+    }
+    run.grams[i].forget_ids(&dead);
+    run.products[i].forget(&dead);
+    if pairwise {
+        run.coeffs[i].forget(&dead);
     }
 }
 
@@ -560,7 +633,7 @@ pub fn pairwise_block_updates(
         let mut worst: Option<(usize, f64)> = None;
         for idx in 0..ws.len() {
             if co.coef(ws.id(idx)) > 1e-12 {
-                let v = ws.plane(idx).value_at(&state.w);
+                let v = ws.plane_ref(idx).value_at(&state.w);
                 if worst.map_or(true, |(_, wv)| v < wv) {
                     worst = Some((idx, v));
                 }
@@ -572,7 +645,8 @@ pub fn pairwise_block_updates(
             if jw != jb {
                 let dot_bw = gram.get(ws, jb, jw);
                 let cap = co.coef(ws.id(jw));
-                gamma = state.pairwise_step(i, ws.plane(jb), ws.plane(jw), dot_bw, cap);
+                gamma =
+                    state.pairwise_step_ref(i, ws.plane_ref(jb), ws.plane_ref(jw), dot_bw, cap);
                 if gamma > 0.0 {
                     co.transfer(ws.id(jb), ws.id(jw), gamma);
                     ws.touch(jb, now);
@@ -586,10 +660,7 @@ pub fn pairwise_block_updates(
             // worst) or converged (γ* ≈ 0): fall back to the plain
             // toward-step — it both stocks the ledger and can still
             // improve the dual while untracked residual mass remains.
-            gamma = {
-                let plane = ws.plane(jb);
-                state.block_step(i, plane)
-            };
+            gamma = state.block_step_ref(i, ws.plane_ref(jb));
             if gamma > 0.0 {
                 co.fw_step(Some(ws.id(jb)), gamma);
                 ws.touch(jb, now);
@@ -682,6 +753,20 @@ fn record_point(
     let oracle_build_s: f64 = run.oracle_scratches.iter().map(|s| s.build_secs).sum();
     let oracle_solve_s: f64 = run.oracle_scratches.iter().map(|s| s.solve_secs).sum();
 
+    // §3.5 product-layer accounting: Gram memory/hit-rate over the
+    // per-example caches, and the visit/refresh counters that make the
+    // "warm visits do zero dense work" claim measurable.
+    let gram_bytes: usize = run.grams.iter().map(|g| g.mem_bytes()).sum();
+    let (gram_hits, gram_misses) = run
+        .grams
+        .iter()
+        .fold((0u64, 0u64), |(h, m), g| (h + g.hits, m + g.misses));
+    let gram_hit_rate = if gram_hits + gram_misses > 0 {
+        gram_hits as f64 / (gram_hits + gram_misses) as f64
+    } else {
+        f64::NAN
+    };
+
     let pt = EvalPoint {
         outer,
         oracle_calls: stats.calls,
@@ -702,6 +787,10 @@ fn record_point(
         oracle_secs: stats.real_secs + stats.virtual_secs,
         oracle_build_s,
         oracle_solve_s,
+        gram_bytes: gram_bytes as u64,
+        gram_hit_rate,
+        cached_visits: run.product_stats.cached_visits,
+        product_refreshes: run.product_stats.dense_refreshes,
         train_loss,
     };
     series.points.push(pt.clone());
@@ -958,6 +1047,53 @@ mod tests {
         // oracle-call trace must match regardless of seed.
         for (a, b) in s1.points.iter().zip(&s2.points) {
             assert_eq!(a.oracle_calls, b.oracle_calls);
+        }
+    }
+
+    #[test]
+    fn products_modes_wire_metrics_and_recompute_is_backend_invariant() {
+        let mut eng = NativeEngine;
+        let base = MpBcfwConfig {
+            max_iters: 4,
+            auto_approx: false,
+            max_approx_passes: 3,
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        // Default (incremental, triangular): warm visits must actually
+        // happen, the Gram arena must hold bytes, and the monotone
+        // guard must keep the dual non-decreasing.
+        let p1 = tiny_problem(1);
+        let (s1, r1) = run(&p1, &mut eng, &base);
+        let last = s1.points.last().unwrap();
+        assert!(last.cached_visits > 0);
+        assert!(
+            last.product_refreshes < last.cached_visits,
+            "incremental mode never ran a warm visit: {} refreshes / {} visits",
+            last.product_refreshes,
+            last.cached_visits
+        );
+        assert!(r1.product_stats.warm_visits > 0);
+        assert!(last.gram_bytes > 0);
+        assert!(last.gram_hit_rate.is_nan() || (0.0..=1.0).contains(&last.gram_hit_rate));
+        for w in s1.points.windows(2) {
+            assert!(w[1].dual >= w[0].dual - 1e-10, "dual decreased: {w:?}");
+        }
+        // Recompute mode pays the dense pass on every visit.
+        let p2 = tiny_problem(1);
+        let cfg2 = MpBcfwConfig { products: ProductMode::Recompute, ..base.clone() };
+        let (s2, _) = run(&p2, &mut eng, &cfg2);
+        let last2 = s2.points.last().unwrap();
+        assert_eq!(last2.product_refreshes, last2.cached_visits);
+        // Under recompute the Gram backend is a pure speed/memory knob:
+        // hashmap and triangular trajectories must match bitwise.
+        let p3 = tiny_problem(1);
+        let cfg3 = MpBcfwConfig { gram: GramBackend::Hashmap, ..cfg2.clone() };
+        let (s3, _) = run(&p3, &mut eng, &cfg3);
+        assert_eq!(s2.points.len(), s3.points.len());
+        for (a, b) in s2.points.iter().zip(&s3.points) {
+            assert_eq!(a.dual, b.dual, "gram backend changed the trajectory");
+            assert_eq!(a.primal, b.primal);
+            assert_eq!(a.approx_steps, b.approx_steps);
         }
     }
 

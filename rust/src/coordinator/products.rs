@@ -1,77 +1,476 @@
-//! Inner-product caching for approximate updates (§3.5).
+//! Inner-product caching for approximate updates (§3.5), and the
+//! matrix-free product-maintenance layer on top of it.
 //!
 //! When visiting block i, MP-BCFW can run the approximate update several
 //! times in a row (the paper uses 10). Done naively each update costs
-//! Θ(|W_i|·d). This module implements the paper's caching scheme: on the
-//! first step compute the products ⟨p_j,φ⟩, ⟨p_j,φ^i⟩, ⟨φ^i,φ⟩, ‖φ^i‖²,
-//! ‖φ‖², then run every subsequent step purely on scalars, using pairwise
-//! plane products ⟨p_j,p_k⟩ fetched on demand from a persistent Gram
-//! cache. Once the Gram entries are warm each inner step is Θ(|W_i|).
-//! The block (and φ) are materialized once at the end via coefficient
-//! tracking — not once per step.
+//! Θ(|W_i|·d). This module implements the paper's caching scheme — on
+//! the first step compute the products ⟨p_j,φ⟩, ⟨p_j,φ^i⟩, ⟨φ^i,φ⟩,
+//! ‖φ^i‖², ‖φ‖², then run every subsequent step purely on scalars, with
+//! pairwise plane products ⟨p_j,p_k⟩ served by a persistent Gram cache —
+//! plus two layers the paper only gestures at:
+//!
+//! * **Triangular Gram arena** (the default [`GramCache`] backend):
+//!   pairwise products are keyed by *slab slot* in a lower-triangular
+//!   `f64` matrix with per-slot generation stamps, so the innermost
+//!   scalar loop does an O(1) array lookup instead of hashing a
+//!   `(u64, u64)` key. Slots are reused by the working set, which bounds
+//!   the arena at the concurrent-plane high-water mark — evicted planes
+//!   cannot accumulate stale entries (the legacy id-keyed `HashMap`
+//!   backend is kept as the A/B baseline for `bench --table products`
+//!   and is now pruned on eviction, fixing its unbounded growth).
+//! * **Incremental product maintenance** (`--products incremental`,
+//!   the default): the per-block products are persisted across visits in
+//!   [`BlockProducts`], so a *warm* visit starts in Θ(|W_i|) scalars
+//!   with **zero dense dots**. See the decomposition below.
+//!
+//! ## The c/r decomposition
+//!
+//! For each cached plane j of block i, split
+//!
+//! ```text
+//! a_j = ⟨p_j, φ⟩ = c_j + r_j,   c_j = ⟨p_j, φ^i⟩,  r_j = ⟨p_j, φ − φ^i⟩,
+//! ```
+//!
+//! and likewise `⟨φ^i, φ⟩ = ‖φ^i‖² + b_r`. Everything block i does to
+//! itself — the cached inner loop's steps and the exact pass's
+//! Frank-Wolfe step — moves φ and φ^i by the *same* delta, so `r_j` and
+//! `b_r` are invariant under the block's own movement, while `c_j`
+//! updates exactly through Gram entries:
+//!
+//! * inner loop (already scalar): `c_j ← (1−γ)c_j + γ⟨p_j, p_ĵ⟩`,
+//! * exact step with plane p̂: one Θ(|W_i|·nnz) Gram-row pass for
+//!   ⟨p_j, p̂⟩ ([`BlockProducts::note_exact_step`]), and the freshly
+//!   inserted plane's own row seeds from the step's already-computed
+//!   products — zero extra dense work.
+//!
+//! The only quantity that drifts is `r_j`, and only when *other* blocks
+//! move. That drift is controlled three ways: a periodic refresh (every
+//! `--product-refresh` warm visits the block pays one dense fused pass),
+//! a **monotone guard** on every warm materialization (the true dual
+//! change is computed exactly in O(d); a non-improving materialization
+//! is rejected and the block refreshed — the dual never decreases, same
+//! invariant as the recompute path), and `--products recompute`, which
+//! disables persistence entirely and reproduces the pre-maintenance
+//! trajectory bit for bit (pinned in `tests/products_modes.rs`).
 //!
 //! Since all quantities are inner products, the same scheme kernelizes
-//! (the paper's "caching of kernel values"); our Gram cache is exactly
+//! (the paper's "caching of kernel values"); the Gram arena is exactly
 //! the kernel cache in that reading.
-//!
-//! All plane·plane and plane·accumulator products route through the
-//! [`crate::model::plane::PlaneVec`] API: a Gram miss between two sparse
-//! planes is a Θ(nnz) merge-join rather than a Θ(d) dense dot, and by
-//! the representation-invariance contract every cached scalar is
-//! bitwise identical whether the planes are stored sparse or dense.
 
 use std::collections::HashMap;
 
-use super::dual::DualState;
+use super::dual::{DualState, StepInfo};
 use super::working_set::WorkingSet;
 use crate::model::plane::{line_search_from_products, DensePlane};
 use crate::utils::math;
 
-/// Persistent cache of pairwise plane products ⟨p_a_*, p_b_*⟩, keyed by
-/// stable working-set entry ids.
-#[derive(Default)]
+/// Which `GramCache` backend serves pairwise plane products.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GramBackend {
+    /// Legacy id-keyed `HashMap<(u64, u64), f64>` (the A/B baseline).
+    Hashmap,
+    /// Slot-keyed lower-triangular arena with generation stamps (the
+    /// default: O(1) unhashed lookups, bounded memory).
+    Triangular,
+}
+
+impl GramBackend {
+    /// Parse a CLI token (`hashmap` | `triangular`).
+    pub fn parse(s: &str) -> Option<GramBackend> {
+        match s {
+            "hashmap" => Some(GramBackend::Hashmap),
+            "triangular" => Some(GramBackend::Triangular),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GramBackend::Hashmap => "hashmap",
+            GramBackend::Triangular => "triangular",
+        }
+    }
+}
+
+/// How the §3.5 per-block products are obtained at each cached visit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProductMode {
+    /// Recompute the Θ(|W_i|·d) products on every visit (the paper's
+    /// literal scheme and the bitwise regression anchor).
+    Recompute,
+    /// Persist products across visits (`BlockProducts`); warm visits
+    /// start in Θ(|W_i|) scalars with zero dense dots (the default).
+    Incremental,
+}
+
+impl ProductMode {
+    /// Parse a CLI token (`recompute` | `incremental`).
+    pub fn parse(s: &str) -> Option<ProductMode> {
+        match s {
+            "recompute" => Some(ProductMode::Recompute),
+            "incremental" => Some(ProductMode::Incremental),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProductMode::Recompute => "recompute",
+            ProductMode::Incremental => "incremental",
+        }
+    }
+}
+
+/// Stamp value marking an empty triangular cell. Unreachable as a real
+/// stamp until both slots' u32 generations hit `u32::MAX` — four billion
+/// evictions of the same slot.
+const EMPTY_STAMP: u64 = u64::MAX;
+
+enum Store {
+    Map(HashMap<(u64, u64), f64>),
+    Tri {
+        /// Lower-triangular values, row-major: cell (hi, lo), hi ≥ lo,
+        /// lives at `hi·(hi+1)/2 + lo`.
+        vals: Vec<f64>,
+        /// Per-cell validity stamp: the packed slot generations at write
+        /// time. A recycled slot bumps its generation, implicitly
+        /// invalidating every cell it touches — O(1) eviction.
+        stamps: Vec<u64>,
+        /// Triangular dimension currently allocated (grows lazily to the
+        /// working set's slot high-water mark).
+        slots: usize,
+    },
+}
+
+/// Persistent cache of pairwise plane products ⟨p_a_*, p_b_*⟩ (see the
+/// module docs for the two backends). Lookups are by working-set entry
+/// index; the backend translates to its own key (stable ids for the
+/// hashmap, slab slots + generations for the triangular arena).
 pub struct GramCache {
-    map: HashMap<(u64, u64), f64>,
+    store: Store,
     /// Lookups served from the cache.
     pub hits: u64,
     /// Lookups that had to compute the product.
     pub misses: u64,
 }
 
+impl Default for GramCache {
+    fn default() -> Self {
+        GramCache::new()
+    }
+}
+
 impl GramCache {
-    /// Empty cache.
+    /// Empty cache on the default (triangular) backend.
     pub fn new() -> GramCache {
-        GramCache::default()
+        GramCache::with_backend(GramBackend::Triangular)
     }
 
-    /// Number of cached pairwise products.
+    /// Empty cache on the legacy hashmap backend.
+    pub fn hashmap() -> GramCache {
+        GramCache::with_backend(GramBackend::Hashmap)
+    }
+
+    /// Empty cache on an explicit backend (`bench --table products`
+    /// sweeps both).
+    pub fn with_backend(backend: GramBackend) -> GramCache {
+        let store = match backend {
+            GramBackend::Hashmap => Store::Map(HashMap::new()),
+            GramBackend::Triangular => {
+                Store::Tri { vals: Vec::new(), stamps: Vec::new(), slots: 0 }
+            }
+        };
+        GramCache { store, hits: 0, misses: 0 }
+    }
+
+    /// Which backend this cache runs on.
+    pub fn backend(&self) -> GramBackend {
+        match self.store {
+            Store::Map(_) => GramBackend::Hashmap,
+            Store::Tri { .. } => GramBackend::Triangular,
+        }
+    }
+
+    /// Number of live cached products (triangular: cells whose stamp is
+    /// current-epoch-valid at write time; superseded cells of recycled
+    /// slots still count until overwritten — use [`mem_bytes`] for the
+    /// memory story).
+    ///
+    /// [`mem_bytes`]: GramCache::mem_bytes
     pub fn len(&self) -> usize {
-        self.map.len()
+        match &self.store {
+            Store::Map(map) => map.len(),
+            Store::Tri { stamps, .. } => {
+                stamps.iter().filter(|&&s| s != EMPTY_STAMP).count()
+            }
+        }
     }
 
     /// True when nothing is cached yet.
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
+    }
+
+    /// Heap bytes held by the cache (the `gram_bytes` metric). The
+    /// triangular arena is bounded by the slot high-water mark; the
+    /// hashmap estimate charges ~32 bytes per live pair.
+    pub fn mem_bytes(&self) -> usize {
+        match &self.store {
+            Store::Map(map) => map.len() * 32,
+            Store::Tri { vals, stamps, .. } => vals.len() * 8 + stamps.len() * 8,
+        }
+    }
+
+    /// Fraction of lookups served from cache (NaN before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            f64::NAN
+        } else {
+            self.hits as f64 / total as f64
+        }
     }
 
     /// ⟨p_a, p_b⟩ with lazy computation.
     pub fn get(&mut self, ws: &WorkingSet, a: usize, b: usize) -> f64 {
-        let (ia, ib) = (ws.id(a), ws.id(b));
-        let key = (ia.min(ib), ia.max(ib));
-        if let Some(&v) = self.map.get(&key) {
-            self.hits += 1;
-            return v;
+        match &mut self.store {
+            Store::Map(map) => {
+                let (ia, ib) = (ws.id(a), ws.id(b));
+                let key = (ia.min(ib), ia.max(ib));
+                if let Some(&v) = map.get(&key) {
+                    self.hits += 1;
+                    return v;
+                }
+                self.misses += 1;
+                let v = ws.plane_ref(a).star.dot(ws.plane_ref(b).star);
+                map.insert(key, v);
+                v
+            }
+            Store::Tri { vals, stamps, slots } => {
+                let (sa, sb) = (ws.slot(a), ws.slot(b));
+                let (hi, lo) = if sa >= sb { (sa, sb) } else { (sb, sa) };
+                let need = hi as usize + 1;
+                if *slots < need {
+                    let new_len = need * (need + 1) / 2;
+                    vals.resize(new_len, 0.0);
+                    stamps.resize(new_len, EMPTY_STAMP);
+                    *slots = need;
+                }
+                let k = (hi as usize) * (hi as usize + 1) / 2 + lo as usize;
+                let stamp =
+                    ((ws.slot_gen(hi) as u64) << 32) | ws.slot_gen(lo) as u64;
+                if stamps[k] == stamp {
+                    self.hits += 1;
+                    return vals[k];
+                }
+                self.misses += 1;
+                let v = ws.plane_ref(a).star.dot(ws.plane_ref(b).star);
+                vals[k] = v;
+                stamps[k] = stamp;
+                v
+            }
         }
-        self.misses += 1;
-        let v = ws.plane(a).star.dot(&ws.plane(b).star);
-        self.map.insert(key, v);
-        v
     }
 
-    /// Drop entries touching evicted ids (call occasionally; stale keys
-    /// are harmless but waste memory).
+    /// Reconcile with an eviction: drop hashmap entries touching the
+    /// dead ids (this is the leak fix — the trainer now calls it from
+    /// every eviction site). The triangular arena is a no-op: freeing a
+    /// slot bumps its generation, which invalidates its cells in O(1).
+    pub fn forget_ids(&mut self, dead: &[u64]) {
+        if dead.is_empty() {
+            return;
+        }
+        if let Store::Map(map) = &mut self.store {
+            map.retain(|&(a, b), _| !dead.contains(&a) && !dead.contains(&b));
+        }
+    }
+
+    /// Drop hashmap entries touching ids the predicate rejects (legacy
+    /// API; no-op on the triangular arena, which self-invalidates via
+    /// generations).
     pub fn retain_ids(&mut self, alive: &dyn Fn(u64) -> bool) {
-        self.map.retain(|&(a, b), _| alive(a) && alive(b));
+        if let Store::Map(map) = &mut self.store {
+            map.retain(|&(a, b), _| alive(a) && alive(b));
+        }
+    }
+}
+
+/// Counters for the product-maintenance layer (summed over blocks by
+/// the trainer; `dense_refreshes` feeds the `product_refreshes` eval
+/// column, `cached_visits` its denominator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProductStats {
+    /// Cached visits entered with a non-empty working set.
+    pub cached_visits: u64,
+    /// Visits that paid the dense Θ(|W_i|·d) product pass (every visit
+    /// under `recompute`; cold starts + periodic refreshes under
+    /// `incremental`).
+    pub dense_refreshes: u64,
+    /// Visits that started from persisted scalars — zero dense dots.
+    pub warm_visits: u64,
+    /// Warm materializations rejected by the monotone guard (the block
+    /// is refreshed on its next visit).
+    pub guard_rejects: u64,
+}
+
+/// Per-block persisted §3.5 products (`--products incremental`): the
+/// c/r decomposition of `a_j = ⟨p_j, φ⟩` plus `b_r = ⟨φ^i, φ − φ^i⟩`,
+/// keyed by working-set entry id and maintained exactly under the
+/// block's own movement (see the module docs).
+#[derive(Debug, Default)]
+pub struct BlockProducts {
+    ids: Vec<u64>,
+    /// c_j = ⟨p_j, φ^i⟩ (maintained exactly via Gram entries).
+    c: Vec<f64>,
+    /// r_j = ⟨p_j, φ − φ^i⟩ (invariant under own movement; drifts when
+    /// other blocks move — the refresh/guard policy bounds it).
+    r: Vec<f64>,
+    /// ⟨φ^i, φ − φ^i⟩ (same invariance).
+    b_r: f64,
+    valid: bool,
+    visits_since_refresh: u64,
+    /// Consecutive warm visits that made zero steps. A genuine
+    /// convergence verdict and a drift-induced stall look identical
+    /// from the warm scalars (no materialization happens, so the
+    /// monotone guard never runs); after [`WARM_STALL_REFRESH`] such
+    /// visits in a row the rows are invalidated so a dense pass can
+    /// tell the two apart — this is what keeps `--product-refresh 0`
+    /// from silently disabling a block's approximate pass forever.
+    zero_step_streak: u64,
+}
+
+/// Invalidate a block's persisted rows after this many consecutive
+/// zero-step warm visits (see `BlockProducts::zero_step_streak`).
+/// Genuinely converged blocks then pay one dense pass every
+/// `WARM_STALL_REFRESH` visits instead of every visit.
+const WARM_STALL_REFRESH: u64 = 4;
+
+impl BlockProducts {
+    pub fn new() -> BlockProducts {
+        BlockProducts::default()
+    }
+
+    /// Whether persisted rows exist (diagnostics/tests).
+    pub fn is_valid(&self) -> bool {
+        self.valid
+    }
+
+    /// Drop all persisted state; the next visit refreshes densely.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+        self.ids.clear();
+        self.c.clear();
+        self.r.clear();
+        self.b_r = 0.0;
+        self.zero_step_streak = 0;
+    }
+
+    /// Reconcile with an eviction: drop the rows of dead ids (row order
+    /// is preserved, mirroring the working set's entry order).
+    pub fn forget(&mut self, dead: &[u64]) {
+        if !self.valid || dead.is_empty() {
+            return;
+        }
+        let mut j = 0;
+        for k in 0..self.ids.len() {
+            if !dead.contains(&self.ids[k]) {
+                self.ids[j] = self.ids[k];
+                self.c[j] = self.c[k];
+                self.r[j] = self.r[k];
+                j += 1;
+            }
+        }
+        self.ids.truncate(j);
+        self.c.truncate(j);
+        self.r.truncate(j);
+    }
+
+    /// Rows currently persisted and usable as a warm start: one per
+    /// working-set entry, in entry order, not past the refresh budget.
+    fn aligned(&self, ws: &WorkingSet) -> bool {
+        self.valid
+            && self.ids.len() == ws.len()
+            && self.ids.iter().enumerate().all(|(j, &id)| id == ws.id(j))
+    }
+
+    /// Seed rows from a dense refresh (a_j/c_j as computed this visit).
+    fn seed(&mut self, ws: &WorkingSet, a: &[f64], c: &[f64], b_r: f64) {
+        let m = ws.len();
+        self.ids.clear();
+        self.c.clear();
+        self.r.clear();
+        self.ids.extend((0..m).map(|j| ws.id(j)));
+        self.c.extend_from_slice(c);
+        self.r.extend(a.iter().zip(c.iter()).map(|(a, c)| a - c));
+        self.b_r = b_r;
+        self.valid = true;
+        self.visits_since_refresh = 0;
+        self.zero_step_streak = 0;
+    }
+
+    /// Persist the post-visit scalars of a committed warm visit: `c_j`
+    /// was maintained by the loop, `r_j` is invariant under the block's
+    /// own movement (the loop adds the *same* increment to a_j and c_j).
+    fn store_after_warm(&mut self, c: &[f64], b_r: f64) {
+        debug_assert_eq!(self.c.len(), c.len());
+        self.c.clear();
+        self.c.extend_from_slice(c);
+        self.b_r = b_r;
+        self.zero_step_streak = 0;
+    }
+
+    /// Fold one exact-pass Frank-Wolfe step on this block into the
+    /// persisted rows: φ^i ← (1−γ)φ^i + γp̂ moves φ by the same delta,
+    /// so every `r_j` (and the rest-product part of new rows) is
+    /// untouched while `c_j ← (1−γ)c_j + γ⟨p_j, p̂⟩` — one Gram-row
+    /// pass, Θ(|W_i|·nnz) on cold Gram cells, Θ(|W_i|) scalars warm.
+    /// The freshly inserted plane's row seeds from the step's own
+    /// products (`StepInfo`), costing nothing dense. Call *after*
+    /// `insert_with_evicted` + `forget(cap victim)` + the step itself,
+    /// with `ws_idx` the stepped plane's entry index.
+    pub fn note_exact_step(
+        &mut self,
+        ws: &WorkingSet,
+        gram: &mut GramCache,
+        ws_idx: usize,
+        info: &StepInfo,
+    ) {
+        if !self.valid {
+            return;
+        }
+        // Rows must cover exactly the pre-insert survivors, which sit at
+        // entry indices 0..m in unchanged order (insertion appends; cap
+        // eviction was already reconciled via `forget`). Anything else
+        // means the bookkeeping contract broke — fail safe by refreshing.
+        let m = self.ids.len();
+        let covered = (m == ws.len() || m + 1 == ws.len())
+            && (0..m).all(|j| self.ids[j] == ws.id(j));
+        if !covered {
+            self.invalidate();
+            return;
+        }
+        let gamma = info.gamma;
+        let om = 1.0 - gamma;
+        let r_hat = info.dot_hat_phi - info.dot_phii_hat;
+        if gamma != 0.0 {
+            // γ = 0 means the step applied nothing: every update below
+            // would be a no-op (c ← 1·c + 0·g), so skip the Gram-row
+            // pass — near convergence this is the common case on every
+            // exact oracle call. The new-plane row (if any) still seeds.
+            for j in 0..m {
+                let g = gram.get(ws, j, ws_idx);
+                self.c[j] = om * self.c[j] + gamma * g;
+            }
+            self.b_r = om * self.b_r + gamma * r_hat;
+        }
+        if m < ws.len() {
+            debug_assert_eq!(ws_idx, ws.len() - 1, "new plane must be the appended entry");
+            self.ids.push(ws.id(ws_idx));
+            self.c.push(om * info.dot_phii_hat + gamma * info.nrm_hat);
+            self.r.push(r_hat);
+        }
     }
 }
 
@@ -80,7 +479,8 @@ impl GramCache {
 pub struct BlockOutcome {
     /// Approximate steps that actually moved (γ > 0).
     pub steps: usize,
-    /// Dual improvement achieved by the loop.
+    /// Dual improvement achieved by the loop (exact on warm visits —
+    /// the monotone guard computes the true change).
     pub f_delta: f64,
     /// Working-set duality gap of the block at the first selection,
     /// max_j ⟨p_j − φ^i, (w, 1)⟩, clamped at 0 — a lower bound on the
@@ -89,18 +489,19 @@ pub struct BlockOutcome {
     /// scalars. Feeds `BlockGaps::observe_floor`. 0 when the set is
     /// empty.
     pub first_gap: f64,
+    /// True when the visit started from persisted (possibly drifted)
+    /// scalars rather than a dense product pass. Callers must not feed
+    /// `first_gap` into gap-proportional sampling floors when set — the
+    /// monotone guard protects the dual, not the gap estimates.
+    pub warm: bool,
 }
 
-/// Run up to `repeats` approximate updates on block `i` using only scalar
-/// bookkeeping, then materialize the block once. Marks selected planes
-/// active at `now`. Requires `state.w` to be anything (w is derived from
-/// the product state, not the buffer).
-///
-/// `coef` is a caller-owned scratch for the coefficient tracking (same
-/// arena pattern as the oracle scratches: the approximate pass visits
-/// every block every pass, so a per-call `vec![0.0; m]` here allocates
-/// n times per pass). It is fully reinitialized on entry; its contents
-/// after the call are meaningless to the caller.
+/// Run up to `repeats` approximate updates on block `i` using only
+/// scalar bookkeeping, then materialize the block once — the
+/// `--products recompute` path (dense products on every visit),
+/// bitwise identical to the pre-maintenance implementation. Kept as the
+/// plain entry point for tests and benches; the trainer calls
+/// [`cached_block_updates_with`].
 pub fn cached_block_updates(
     state: &mut DualState,
     ws: &mut WorkingSet,
@@ -110,23 +511,104 @@ pub fn cached_block_updates(
     now: u64,
     coef: &mut Vec<f64>,
 ) -> BlockOutcome {
+    let mut prod = BlockProducts::new();
+    let mut stats = ProductStats::default();
+    cached_block_updates_with(
+        state,
+        ws,
+        gram,
+        i,
+        repeats,
+        now,
+        coef,
+        ProductMode::Recompute,
+        0,
+        &mut prod,
+        &mut stats,
+    )
+}
+
+/// As [`cached_block_updates`], gated by the product-maintenance mode.
+///
+/// `Recompute` pays the fused dense product pass on every visit (the
+/// §3.5 baseline; the fusion reads each payload once but each dot's
+/// arithmetic is unchanged, so trajectories are bitwise identical to
+/// the pre-slab code). `Incremental` starts warm visits from the
+/// persisted `prod` rows — zero dense dots — refreshing densely on the
+/// first visit, every `refresh_every` warm visits (0 = no periodic
+/// schedule), after [`WARM_STALL_REFRESH`] consecutive zero-step warm
+/// visits (the stall escape), whenever the rows fell out of alignment,
+/// and after a monotone-guard rejection. Marks selected planes active at `now`.
+///
+/// `coef` is a caller-owned scratch for the coefficient tracking (same
+/// arena pattern as the oracle scratches: the approximate pass visits
+/// every block every pass, so a per-call `vec![0.0; m]` here allocates
+/// n times per pass). It is fully reinitialized on entry; its contents
+/// after the call are meaningless to the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn cached_block_updates_with(
+    state: &mut DualState,
+    ws: &mut WorkingSet,
+    gram: &mut GramCache,
+    i: usize,
+    repeats: usize,
+    now: u64,
+    coef: &mut Vec<f64>,
+    mode: ProductMode,
+    refresh_every: u64,
+    prod: &mut BlockProducts,
+    stats: &mut ProductStats,
+) -> BlockOutcome {
     let m = ws.len();
     if m == 0 || repeats == 0 {
         return BlockOutcome::default();
     }
+    stats.cached_visits += 1;
     let lambda = state.lambda;
-    let phi = &state.phi;
-    let block = &state.blocks[i];
+    let dim = state.dim();
 
-    // First step of §3.5: the O(|W_i|·d) product computation.
-    let mut a_j: Vec<f64> = (0..m).map(|j| ws.plane(j).star.dot_dense(&phi.star)).collect();
-    let mut c_j: Vec<f64> = (0..m).map(|j| ws.plane(j).star.dot_dense(&block.star)).collect();
-    let mut b = math::dot(&block.star, &phi.star);
-    let mut d = math::nrm2sq(&block.star);
-    let mut e = math::nrm2sq(&phi.star);
-    let mut off_i = block.off;
-    let mut off_phi = phi.off;
-    let off_j: Vec<f64> = (0..m).map(|j| ws.plane(j).off).collect();
+    let incremental = mode == ProductMode::Incremental;
+    let warm = incremental
+        && prod.aligned(ws)
+        && (refresh_every == 0 || prod.visits_since_refresh < refresh_every);
+
+    let mut off_i = state.blocks[i].off;
+    let mut off_phi = state.phi.off;
+    let off_j: Vec<f64> = (0..m).map(|j| ws.off(j)).collect();
+
+    let mut a_j: Vec<f64>;
+    let mut c_j: Vec<f64>;
+    let mut b: f64;
+    let mut d: f64;
+    let mut e: f64;
+    if warm {
+        stats.warm_visits += 1;
+        prod.visits_since_refresh += 1;
+        // Θ(|W_i|) scalar warm start: a_j = c_j + r_j, b = ‖φ^i‖² + b_r.
+        // The copies are deliberate — the guard-rejection path relies on
+        // `prod` staying pristine until commit. (Hoisting a_j/c_j/off_j
+        // into a caller-owned scratch like `coef` is a known follow-up;
+        // the per-visit Vec churn here matches the pre-existing dense
+        // path, it does not add to it.)
+        d = state.block_norm_sq(i);
+        c_j = prod.c.clone();
+        a_j = prod.c.iter().zip(prod.r.iter()).map(|(c, r)| c + r).collect();
+        b = d + prod.b_r;
+        e = 0.0; // never read on the warm path (f_delta comes from the guard)
+    } else {
+        stats.dense_refreshes += 1;
+        if incremental {
+            prod.visits_since_refresh = 0;
+        }
+        // First step of §3.5: the Θ(|W_i|·d) product computation — one
+        // fused slab traversal per plane.
+        let (aa, cc) = ws.fused_products(&state.phi.star, &state.blocks[i].star);
+        a_j = aa;
+        c_j = cc;
+        b = math::dot(&state.blocks[i].star, &state.phi.star);
+        d = math::nrm2sq(&state.blocks[i].star);
+        e = math::nrm2sq(&state.phi.star);
+    }
 
     let f_start = -e / (2.0 * lambda) + off_phi;
 
@@ -137,6 +619,8 @@ pub fn cached_block_updates(
     coef.resize(m, 0.0);
     let mut steps = 0usize;
     let mut first_gap = 0.0f64;
+    // Warm visits buffer their TTL touches until the guard commits.
+    let mut touched: Vec<usize> = Vec::new();
 
     for r in 0..repeats {
         // Select ĵ = argmax ⟨p_j,(w,1)⟩ with w = −φ_*/λ ⇒ −A_j/λ + off_j.
@@ -163,10 +647,19 @@ pub fn cached_block_updates(
             break;
         }
         steps += 1;
-        ws.touch(jh, now);
+        if warm {
+            // Defer TTL touches until the monotone guard accepts the
+            // materialization: a rejected visit must leave *no* trace,
+            // activity stamps included.
+            touched.push(jh);
+        } else {
+            ws.touch(jh, now);
+        }
 
         // Gram row for ĵ (on demand, cached persistently).
-        // Scalar state updates (all with pre-update values).
+        // Scalar state updates (all with pre-update values). Note the
+        // a_j and c_j increments are mathematically identical, which is
+        // what keeps r_j = a_j − c_j invariant under the visit.
         for j in 0..m {
             let g_jjh = if j == jh { gg } else { gram.get(ws, j, jh) };
             a_j[j] += gamma * (g_jjh - c_j[j]);
@@ -189,23 +682,76 @@ pub fn cached_block_updates(
     }
 
     if steps == 0 {
-        return BlockOutcome { first_gap, ..BlockOutcome::default() };
+        if incremental && !warm {
+            // A 0-step refresh still seeds the rows (a/c are untouched
+            // by the loop), so the next visit can start warm.
+            prod.seed(ws, &a_j, &c_j, b - d);
+        } else if warm {
+            // A warm "converged" verdict can also be a drift artifact,
+            // and with no materialization the monotone guard never runs
+            // to catch it — after a few such visits in a row force a
+            // dense pass to tell convergence from stall (this is the
+            // stall escape for `--product-refresh 0`).
+            prod.zero_step_streak += 1;
+            if prod.zero_step_streak >= WARM_STALL_REFRESH {
+                prod.invalidate();
+            }
+        }
+        return BlockOutcome { first_gap, warm, ..BlockOutcome::default() };
     }
 
     // Materialize block' once and restore the φ = Σφ^i invariant.
-    let dim = state.dim();
     let mut new_block = DensePlane::zeros(dim);
     math::axpy(c0, &state.blocks[i].star, &mut new_block.star);
     for (j, &x) in coef.iter().enumerate() {
         if x != 0.0 {
-            ws.plane(j).star.axpy_into(x, &mut new_block.star);
+            ws.axpy_entry_into(j, x, &mut new_block.star);
         }
     }
     new_block.off = off_i;
-    state.replace_block(i, new_block);
 
-    let f_end = -e / (2.0 * lambda) + off_phi;
-    BlockOutcome { steps, f_delta: f_end - f_start, first_gap }
+    let f_delta;
+    if warm {
+        // Monotone guard: the warm scalars carry the r-drift of other
+        // blocks' movement, so before committing compute the *true*
+        // dual change of this materialization — exactly, in O(d):
+        // F(φ+Δ) − F(φ) = −(2⟨φ_*,Δ_*⟩ + ‖Δ_*‖²)/(2λ) + Δ∘.
+        let (mut dot_phi_delta, mut nrm_delta) = (0.0f64, 0.0f64);
+        {
+            let old = &state.blocks[i].star;
+            let phi = &state.phi.star;
+            for k in 0..dim {
+                let dl = new_block.star[k] - old[k];
+                dot_phi_delta += phi[k] * dl;
+                nrm_delta += dl * dl;
+            }
+        }
+        let true_delta = -(2.0 * dot_phi_delta + nrm_delta) / (2.0 * lambda)
+            + (new_block.off - state.blocks[i].off);
+        if true_delta.is_nan() || true_delta < 0.0 {
+            // Drift picked a non-improving move (or numerics collapsed):
+            // reject the whole materialization (the dual state is
+            // untouched) and force a dense refresh on the next visit.
+            stats.guard_rejects += 1;
+            prod.invalidate();
+            return BlockOutcome { steps: 0, f_delta: 0.0, first_gap, warm };
+        }
+        f_delta = true_delta;
+        state.replace_block(i, new_block);
+        for &j in &touched {
+            ws.touch(j, now);
+        }
+        prod.store_after_warm(&c_j, b - d);
+    } else {
+        state.replace_block(i, new_block);
+        let f_end = -e / (2.0 * lambda) + off_phi;
+        f_delta = f_end - f_start;
+        if incremental {
+            prod.seed(ws, &a_j, &c_j, b - d);
+        }
+    }
+
+    BlockOutcome { steps, f_delta, first_gap, warm }
 }
 
 #[cfg(test)]
@@ -258,7 +804,7 @@ mod tests {
             for _ in 0..repeats {
                 st2.refresh_w();
                 let Some((jh, _)) = ws.best_at(&st2.w) else { break };
-                let gamma = st2.block_step(0, ws.plane(jh));
+                let gamma = st2.block_step_ref(0, ws.plane_ref(jh));
                 if gamma <= 1e-12 {
                     break;
                 }
@@ -354,7 +900,7 @@ mod tests {
             // Reference: evaluate every plane densely at w.
             st.refresh_w();
             let best = (0..ws.len())
-                .map(|j| ws.plane(j).value_at(&st.w))
+                .map(|j| ws.plane_ref(j).value_at(&st.w))
                 .fold(f64::NEG_INFINITY, f64::max);
             let block_val = st.blocks[0].star.iter().zip(&st.w).map(|(a, b)| a * b).sum::<f64>()
                 + st.blocks[0].off;
@@ -366,5 +912,346 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // ---- Gram backends ----------------------------------------------
+
+    #[test]
+    fn triangular_and_hashmap_serve_bitwise_identical_products() {
+        prop_check("tri == hashmap grams", 60, |g| {
+            let dim = g.usize(2, 20);
+            let mut ws = rand_ws(g, dim, g.usize(2, 7));
+            let mut tri = GramCache::new();
+            let mut map = GramCache::hashmap();
+            for t in 0..40u64 {
+                if ws.is_empty() {
+                    break;
+                }
+                let a = g.rng.below(ws.len());
+                let b = g.rng.below(ws.len());
+                let x = tri.get(&ws, a, b);
+                let y = map.get(&ws, a, b);
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("gram ({a},{b}) {x} vs {y}"));
+                }
+                // Interleave churn so slot recycling is exercised.
+                if g.bool() {
+                    let k = g.usize(1, dim);
+                    let pairs: Vec<(u32, f64)> =
+                        (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+                    let dead =
+                        ws.insert_with_evicted(
+                            Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), 1000 + t),
+                            t,
+                        )
+                        .1;
+                    if let Some(id) = dead {
+                        map.forget_ids(&[id]);
+                    }
+                }
+                if g.bool() {
+                    let dead = ws.evict_stale_ids(t, 2);
+                    map.forget_ids(&dead);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn triangular_arena_memory_is_bounded_under_churn() {
+        // The leak the hashmap backend had: insert/evict churn used to
+        // accumulate stale keys forever. The triangular arena is sized
+        // by the slot high-water mark, which slot reuse pins.
+        let mut g = crate::utils::prop::Gen { rng: crate::utils::rng::Pcg::seeded(9), size: 1.0 };
+        let dim = 10;
+        let mut ws = WorkingSet::new(4);
+        let mut tri = GramCache::new();
+        let mut map = GramCache::hashmap();
+        let mut tri_high = 0usize;
+        for t in 0..200u64 {
+            let k = g.usize(1, dim);
+            let pairs: Vec<(u32, f64)> =
+                (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+            let (_, dead) = ws
+                .insert_with_evicted(Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), t), t);
+            if let Some(id) = dead {
+                map.forget_ids(&[id]);
+            }
+            for a in 0..ws.len() {
+                for b in 0..ws.len() {
+                    assert_eq!(
+                        tri.get(&ws, a, b).to_bits(),
+                        map.get(&ws, a, b).to_bits(),
+                        "backends disagree at t={t}"
+                    );
+                }
+            }
+            if t == 20 {
+                tri_high = tri.mem_bytes();
+            }
+            if t > 20 {
+                assert_eq!(tri.mem_bytes(), tri_high, "triangular arena grew after warm-up");
+            }
+        }
+        // With eviction wiring the hashmap stays bounded too: at most
+        // pairs over the live set survive each eviction.
+        assert!(map.len() <= 5 * 6 / 2 + 5, "hashmap retained stale pairs: {}", map.len());
+        assert!(tri.hits > 0 && tri.misses > 0);
+        assert!(tri.hit_rate() > 0.0 && tri.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn recycled_slot_invalidates_its_products() {
+        // A recycled slot must never serve the previous tenant's value.
+        let dim = 6;
+        let p = |tag: u64, v: f64| {
+            Plane::new(PlaneVec::sparse(dim, vec![(0, v), (2, 1.0)]), 0.0, tag)
+        };
+        let mut ws = WorkingSet::new(2);
+        ws.insert(p(1, 2.0), 0); // slot 0
+        ws.insert(p(2, 3.0), 1); // slot 1
+        let mut gram = GramCache::new();
+        let v12 = gram.get(&ws, 0, 1); // writes cell (slot 1, slot 0)
+        assert_eq!(v12, 2.0 * 3.0 + 1.0);
+        // Churn until fresh tags occupy slots 0 and 1 again: each insert
+        // below cap-evicts the oldest entry, so after three inserts the
+        // live planes are tags {4, 5} in recycled slots {0, 1} — the
+        // exact cell pair the stale ⟨p1, p2⟩ product was written under.
+        ws.insert(p(3, 5.0), 2); // mints slot 2, evicts tag 1 (frees slot 0)
+        ws.insert(p(4, 7.0), 3); // reuses slot 0, evicts tag 2 (frees slot 1)
+        ws.insert(p(5, 11.0), 4); // reuses slot 1, evicts tag 3 (frees slot 2)
+        let slots: Vec<u32> = (0..ws.len()).map(|j| ws.slot(j)).collect();
+        assert_eq!(slots, vec![0, 1], "churn must land on the recycled slot pair");
+        let fresh = gram.get(&ws, 0, 1); // same cell, bumped generations
+        assert_eq!(fresh, 7.0 * 11.0 + 1.0, "stale product served after slot recycle");
+    }
+
+    // ---- incremental maintenance ------------------------------------
+
+    #[test]
+    fn incremental_rows_match_dense_products_after_exact_step() {
+        prop_check("note_exact_step exact", 50, |g| {
+            let dim = g.usize(3, 12);
+            let lambda = 0.4 + g.f64(0.0, 1.0);
+            let mut st = DualState::new(2, dim, lambda);
+            let mut ws = rand_ws(g, dim, g.usize(2, 5));
+            // Move the *other* block first so φ ≠ φ^0 and the persisted
+            // rest-products r_j are genuinely nonzero.
+            let other = Plane::new(
+                PlaneVec::sparse(dim, vec![(0, g.normal()), (2, g.normal())]),
+                g.normal(),
+                888,
+            );
+            st.block_step(1, &other);
+            let mut gram = GramCache::new();
+            let mut prod = BlockProducts::new();
+            let mut stats = ProductStats::default();
+            // Seed rows with a cold incremental visit.
+            cached_block_updates_with(
+                &mut st,
+                &mut ws,
+                &mut gram,
+                0,
+                3,
+                1,
+                &mut Vec::new(),
+                ProductMode::Incremental,
+                8,
+                &mut prod,
+                &mut stats,
+            );
+            if !prod.is_valid() {
+                return Err("cold visit must seed rows".into());
+            }
+            // One exact-pass step: insert a fresh plane, step, fold in.
+            let k = g.usize(1, dim);
+            let pairs: Vec<(u32, f64)> =
+                (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+            let hat = Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), 777);
+            let (ws_idx, dead) = ws.insert_with_evicted(hat.clone(), 2);
+            if let Some(id) = dead {
+                prod.forget(&[id]);
+                gram.forget_ids(&[id]);
+            }
+            let info = st.block_step_info(0, &hat);
+            prod.note_exact_step(&ws, &mut gram, ws_idx, &info);
+            if !prod.is_valid() {
+                return Err("rows invalidated by a clean exact step".into());
+            }
+            // The persisted c/r must now match dense recomputation.
+            for j in 0..ws.len() {
+                let c_true = ws.plane_ref(j).star.dot_dense(&st.blocks[0].star);
+                let a_true = ws.plane_ref(j).star.dot_dense(&st.phi.star);
+                let tol = 1e-8 * (1.0 + c_true.abs() + a_true.abs());
+                if (prod.c[j] - c_true).abs() > tol {
+                    return Err(format!("c[{j}] {} vs dense {c_true}", prod.c[j]));
+                }
+                if (prod.c[j] + prod.r[j] - a_true).abs() > tol {
+                    return Err(format!(
+                        "a[{j}] {} vs dense {a_true}",
+                        prod.c[j] + prod.r[j]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn warm_visits_skip_dense_work_and_keep_dual_monotone() {
+        let mut g = crate::utils::prop::Gen { rng: crate::utils::rng::Pcg::seeded(6), size: 1.0 };
+        let dim = 8;
+        let mut st = DualState::new(2, dim, 0.7);
+        let mut ws = rand_ws(&mut g, dim, 5);
+        // Give φ some mass so the visits have work to do.
+        let hat = Plane::new(PlaneVec::sparse(dim, vec![(0, 1.5), (3, -0.5)]), 0.8, 500);
+        st.block_step(1, &hat);
+        let mut gram = GramCache::new();
+        let mut prod = BlockProducts::new();
+        let mut stats = ProductStats::default();
+        let mut f = st.dual_value();
+        for visit in 1..=6u64 {
+            cached_block_updates_with(
+                &mut st,
+                &mut ws,
+                &mut gram,
+                0,
+                4,
+                visit,
+                &mut Vec::new(),
+                ProductMode::Incremental,
+                0, // never refresh periodically: visits 2.. are all warm
+                &mut prod,
+                &mut stats,
+            );
+            let f2 = st.dual_value();
+            assert!(f2 >= f - 1e-10, "dual decreased on visit {visit}: {f} -> {f2}");
+            f = f2;
+            assert!(st.consistency_error() < 1e-8);
+        }
+        assert_eq!(stats.cached_visits, 6);
+        // The first visit is the only *scheduled* dense pass; once the
+        // block converges, zero-step warm visits may trigger at most one
+        // stall-refresh (WARM_STALL_REFRESH) within this budget.
+        assert!(
+            (1..=2).contains(&stats.dense_refreshes),
+            "dense refreshes {} outside the stall-refresh budget",
+            stats.dense_refreshes
+        );
+        assert!(stats.warm_visits >= 4);
+        assert_eq!(stats.warm_visits + stats.dense_refreshes, 6);
+    }
+
+    #[test]
+    fn refresh_every_k_paces_dense_refreshes() {
+        let mut g = crate::utils::prop::Gen { rng: crate::utils::rng::Pcg::seeded(8), size: 1.0 };
+        let dim = 6;
+        let mut st = DualState::new(1, dim, 1.0);
+        let mut ws = rand_ws(&mut g, dim, 4);
+        let mut gram = GramCache::new();
+        let mut prod = BlockProducts::new();
+        let mut stats = ProductStats::default();
+        for visit in 1..=9u64 {
+            cached_block_updates_with(
+                &mut st,
+                &mut ws,
+                &mut gram,
+                0,
+                2,
+                visit,
+                &mut Vec::new(),
+                ProductMode::Incremental,
+                2, // cold, warm, warm, cold, warm, warm, ...
+                &mut prod,
+                &mut stats,
+            );
+        }
+        assert_eq!(stats.cached_visits, 9);
+        assert_eq!(stats.dense_refreshes, 3, "refresh every 2 warm visits");
+        assert_eq!(stats.warm_visits, 6);
+    }
+
+    #[test]
+    fn forget_drops_rows_and_misalignment_forces_refresh() {
+        let mut g = crate::utils::prop::Gen { rng: crate::utils::rng::Pcg::seeded(3), size: 1.0 };
+        let dim = 6;
+        let mut st = DualState::new(1, dim, 1.0);
+        let mut ws = rand_ws(&mut g, dim, 4);
+        let mut gram = GramCache::new();
+        let mut prod = BlockProducts::new();
+        let mut stats = ProductStats::default();
+        cached_block_updates_with(
+            &mut st,
+            &mut ws,
+            &mut gram,
+            0,
+            2,
+            1,
+            &mut Vec::new(),
+            ProductMode::Incremental,
+            0,
+            &mut prod,
+            &mut stats,
+        );
+        assert!(prod.is_valid());
+        // TTL-evict everything stale; rows reconcile and the next visit
+        // (misaligned only if we *don't* forget) refreshes densely when
+        // the id lists no longer line up.
+        let dead = ws.evict_stale_ids(10, 3);
+        prod.forget(&dead);
+        gram.forget_ids(&dead);
+        let before = stats.dense_refreshes;
+        cached_block_updates_with(
+            &mut st,
+            &mut ws,
+            &mut gram,
+            0,
+            2,
+            11,
+            &mut Vec::new(),
+            ProductMode::Incremental,
+            0,
+            &mut prod,
+            &mut stats,
+        );
+        // All planes were inserted at now=0 with last touches ≤ 2, so the
+        // sweep emptied the set → visit is a no-op; re-stock and check a
+        // fresh aligned visit is warm again after one refresh.
+        if ws.is_empty() {
+            for t in 0..3u64 {
+                let pairs: Vec<(u32, f64)> = vec![(t as u32 % dim as u32, 1.0 + t as f64)];
+                ws.insert(Plane::new(PlaneVec::sparse(dim, pairs), 0.1, 900 + t), 11);
+            }
+        }
+        cached_block_updates_with(
+            &mut st,
+            &mut ws,
+            &mut gram,
+            0,
+            2,
+            12,
+            &mut Vec::new(),
+            ProductMode::Incremental,
+            0,
+            &mut prod,
+            &mut stats,
+        );
+        assert!(stats.dense_refreshes > before, "misaligned rows must refresh");
+        let dense_now = stats.dense_refreshes;
+        cached_block_updates_with(
+            &mut st,
+            &mut ws,
+            &mut gram,
+            0,
+            2,
+            13,
+            &mut Vec::new(),
+            ProductMode::Incremental,
+            0,
+            &mut prod,
+            &mut stats,
+        );
+        assert_eq!(stats.dense_refreshes, dense_now, "aligned revisit must be warm");
     }
 }

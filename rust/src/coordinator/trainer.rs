@@ -7,6 +7,7 @@ use super::checkpoint::ModelCheckpoint;
 use super::fw;
 use super::metrics::Series;
 use super::mp_bcfw::{self, MpBcfwConfig};
+use super::products::{GramBackend, ProductMode};
 use super::sampling::{SamplingStrategy, StepRule};
 use crate::data::synth::{horseseg_like, ocr_like, usps_like};
 use crate::data::types::Scale;
@@ -179,6 +180,23 @@ pub struct TrainSpec {
     /// automatic compaction. Trajectories are bitwise identical either
     /// way; only memory and speed change.
     pub dense_planes: bool,
+    /// §3.5 product maintenance for the cached approximate passes (CLI
+    /// `--products {recompute,incremental}`, default incremental;
+    /// meaningful for the mp-bcfw variants only — `recompute` is the
+    /// dense-every-visit bitwise regression anchor, `incremental`
+    /// persists products so warm visits run zero dense dots, with a
+    /// monotone guard + periodic refresh bounding the drift).
+    pub products: ProductMode,
+    /// Gram-cache backend (CLI `--gram {hashmap,triangular}`, default
+    /// triangular; mp-bcfw variants only). Served products are bitwise
+    /// identical on both backends — pure speed/memory knob, A/B'd by
+    /// `bench --table products`.
+    pub gram: GramBackend,
+    /// `--product-refresh K`: under incremental products, refresh a
+    /// block densely every K warm visits (0 disables the periodic
+    /// schedule; the monotone guard and the zero-step stall-refresh
+    /// still apply).
+    pub product_refresh_every: u64,
     /// Warm-start the exact oracles from persistent per-worker scratch
     /// arenas (CLI `--oracle-reuse {on,off}`, default on; disabling is
     /// meaningful for the bcfw/mp-bcfw family only — the baselines
@@ -220,6 +238,9 @@ impl Default for TrainSpec {
             sampling: SamplingStrategy::Uniform,
             steps: StepRule::Fw,
             dense_planes: false,
+            products: ProductMode::Incremental,
+            gram: GramBackend::Triangular,
+            product_refresh_every: 8,
             oracle_reuse: true,
             engine: EngineKind::Native,
             with_train_loss: false,
@@ -304,6 +325,26 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
         spec.oracle_reuse
             || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
         "--oracle-reuse off applies to the bcfw/mp-bcfw family only; {} always runs cold oracles",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.products == ProductMode::Incremental
+            || matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--products recompute tunes the cached approximate passes (mp-bcfw variants); \
+         {} has none",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.gram == GramBackend::Triangular
+            || matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--gram hashmap tunes the §3.5 Gram cache (mp-bcfw variants); {} has none",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.product_refresh_every == 8
+            || matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--product-refresh tunes the cached approximate passes (mp-bcfw variants); \
+         {} has none",
         spec.algo.name()
     );
     let problem = build_problem(spec);
@@ -398,6 +439,9 @@ pub fn train_on_full(
                 sampling: spec.sampling,
                 steps: if multi { spec.steps } else { StepRule::Fw },
                 dense_planes: spec.dense_planes,
+                products: spec.products,
+                gram: spec.gram,
+                product_refresh_every: spec.product_refresh_every,
                 oracle_reuse: spec.oracle_reuse,
                 max_iters: spec.max_iters,
                 max_oracle_calls: spec.max_oracle_calls,
@@ -592,6 +636,54 @@ mod tests {
         // Baselines always run cold; an explicit `off` would be silently
         // ignored there — reject instead.
         let bad = TrainSpec { algo: Algo::Ssg, oracle_reuse: false, ..spec };
+        assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn products_and_gram_train_and_reject_on_baselines() {
+        // Every products × gram combination trains on the mp variants
+        // and records the product-layer metrics.
+        for products in [ProductMode::Recompute, ProductMode::Incremental] {
+            for gram in [GramBackend::Hashmap, GramBackend::Triangular] {
+                let spec = TrainSpec {
+                    scale: Scale::Tiny,
+                    algo: Algo::MpBcfw,
+                    max_iters: 3,
+                    products,
+                    gram,
+                    ..Default::default()
+                };
+                let series = train(&spec).unwrap();
+                let last = series.points.last().unwrap();
+                assert!(last.primal >= last.dual - 1e-9, "{products:?}/{gram:?}");
+                assert!(last.cached_visits > 0, "{products:?}/{gram:?}: no cached visits");
+                if products == ProductMode::Recompute {
+                    assert_eq!(last.product_refreshes, last.cached_visits);
+                }
+            }
+        }
+        // Non-mp algorithms have no cached passes; the non-default
+        // knobs would be silently ignored — reject instead.
+        let bad = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::Bcfw,
+            products: ProductMode::Recompute,
+            ..Default::default()
+        };
+        assert!(train(&bad).is_err());
+        let bad = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::Ssg,
+            gram: GramBackend::Hashmap,
+            ..Default::default()
+        };
+        assert!(train(&bad).is_err());
+        let bad = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::CuttingPlane,
+            product_refresh_every: 2,
+            ..Default::default()
+        };
         assert!(train(&bad).is_err());
     }
 

@@ -9,33 +9,247 @@
 //!    iterations are dropped (this is the rule that actually governs;
 //!    N is set large so it never binds).
 //!
-//! Entries carry stable ids so the §3.5 Gram cache can key inner products
-//! across evictions.
+//! Entries carry stable ids so per-plane state elsewhere (pairwise
+//! coefficient ledgers, the legacy id-keyed Gram map) can key across
+//! evictions.
 //!
-//! Planes are stored with their oracle-produced
-//! [`crate::model::plane::PlaneVec`] representation (sparse for the
-//! block-structured feature maps, auto-densified above the density
-//! threshold, or forced dense under `--dense-planes`); `mem_bytes` /
-//! `nnz_total` expose the storage cost for the sparsity metrics.
+//! ## Slab storage
+//!
+//! Plane payloads do **not** live in per-plane heap `Vec`s. They are
+//! copied into a per-working-set [`PlaneSlab`]: a CSR-style
+//! structure-of-arrays arena with one flat `indices`/`values` pool for
+//! sparse payloads, one flat pool for dense payloads, and per-*slot*
+//! bookkeeping. The §3.5 product computation is the non-oracle hot path,
+//! and it walks every cached plane of a block back to back — with slab
+//! storage those walks are contiguous pool traversals instead of
+//! pointer-chasing n small allocations, and the fused kernel
+//! ([`WorkingSet::fused_products`]) reads each payload once while
+//! producing both ⟨p_j, φ⟩ and ⟨p_j, φ^i⟩.
+//!
+//! Slots are reused: eviction frees a slot (and bumps its *generation*),
+//! insertion pops the free list. The slot index is therefore bounded by
+//! the high-water number of concurrently cached planes, which is what
+//! lets the §3.5 Gram arena key products by `(slot, slot)` in a bounded
+//! triangular matrix; the generation stamp is how a recycled slot
+//! invalidates every cached product of its previous tenant (see
+//! `coordinator::products::GramCache`).
+//!
+//! Representation is preserved verbatim: a sparse-built plane
+//! (`PlaneVec::Sparse`, post auto-compaction) lands in the sparse pool,
+//! a dense one (auto-densified or `--dense-planes`) in the dense pool,
+//! and every kernel on the slab goes through
+//! [`crate::model::plane::PlaneVecView`] — the same code the owned
+//! `PlaneVec` delegates to — so moving payloads into the slab is
+//! bitwise-neutral for every trajectory (the PR-3 invariance contract).
 
 use std::collections::HashMap;
 
-use crate::model::plane::Plane;
+use crate::model::plane::{Plane, PlaneRef, PlaneVec, PlaneVecView};
+use crate::utils::math;
 
-/// One cached plane with its activity bookkeeping.
+/// CSR-style structure-of-arrays arena for plane payloads (see the
+/// module docs). One per working set; payloads are keyed by *slot*.
+///
+/// Sparse payloads append to the `idx`/`val` pools; freed ranges become
+/// garbage that a deterministic compaction sweep reclaims once dead
+/// entries outnumber live ones. Dense payloads (always exactly `dim`
+/// long) recycle freed regions through a free list, so the dense pool
+/// never exceeds its high-water mark.
+pub struct PlaneSlab {
+    /// Logical dimension d of every payload (0 until the first insert).
+    dim: usize,
+    /// Sparse pool: indices.
+    idx: Vec<u32>,
+    /// Sparse pool: values (parallel to `idx`).
+    val: Vec<f64>,
+    /// Dense pool: concatenated `dim`-length regions.
+    dense: Vec<f64>,
+    slots: Vec<Slot>,
+    /// Freed slot ids, reused LIFO (deterministic).
+    free_slots: Vec<u32>,
+    /// Freed dense-region offsets, reused LIFO.
+    free_dense: Vec<usize>,
+    /// Total live entries in the sparse pool (compaction trigger).
+    live_sparse: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Payload {
+    Free,
+    Sparse { off: usize, len: usize },
+    Dense { off: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    /// Bumped every time the slot is freed; pairs of generations stamp
+    /// Gram-arena entries so a recycled slot can never serve a stale
+    /// product.
+    gen: u32,
+    payload: Payload,
+}
+
+/// Compact the sparse pool only once the garbage is both dominant and
+/// big enough to matter (avoids rescanning tiny pools every eviction).
+const COMPACT_MIN_DEAD: usize = 1024;
+
+impl PlaneSlab {
+    fn new() -> PlaneSlab {
+        PlaneSlab {
+            dim: 0,
+            idx: Vec::new(),
+            val: Vec::new(),
+            dense: Vec::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            free_dense: Vec::new(),
+            live_sparse: 0,
+        }
+    }
+
+    /// Copy a payload into the slab; returns its slot.
+    fn insert(&mut self, star: &PlaneVec) -> u32 {
+        if self.dim == 0 {
+            self.dim = star.dim();
+        }
+        debug_assert_eq!(star.dim(), self.dim, "mixed dimensions in one slab");
+        let payload = match star.view() {
+            PlaneVecView::Sparse { idx, val, .. } => {
+                let off = self.idx.len();
+                self.idx.extend_from_slice(idx);
+                self.val.extend_from_slice(val);
+                self.live_sparse += idx.len();
+                Payload::Sparse { off, len: idx.len() }
+            }
+            PlaneVecView::Dense(v) => {
+                let off = self.free_dense.pop().unwrap_or_else(|| {
+                    let o = self.dense.len();
+                    self.dense.resize(o + self.dim, 0.0);
+                    o
+                });
+                self.dense[off..off + self.dim].copy_from_slice(v);
+                Payload::Dense { off }
+            }
+        };
+        let slot = self.free_slots.pop().unwrap_or_else(|| {
+            self.slots.push(Slot { gen: 0, payload: Payload::Free });
+            (self.slots.len() - 1) as u32
+        });
+        self.slots[slot as usize].payload = payload;
+        slot
+    }
+
+    /// Free a slot: its payload becomes garbage (sparse) or a reusable
+    /// region (dense), its generation is bumped, and the slot id goes
+    /// back on the free list.
+    fn remove(&mut self, slot: u32) {
+        match self.slots[slot as usize].payload {
+            Payload::Sparse { len, .. } => self.live_sparse -= len,
+            Payload::Dense { off } => self.free_dense.push(off),
+            Payload::Free => debug_assert!(false, "double free of slab slot {slot}"),
+        }
+        let s = &mut self.slots[slot as usize];
+        s.payload = Payload::Free;
+        s.gen = s.gen.wrapping_add(1);
+        self.free_slots.push(slot);
+        let dead = self.idx.len() - self.live_sparse;
+        if dead > COMPACT_MIN_DEAD && dead > self.live_sparse {
+            self.compact();
+        }
+    }
+
+    /// Slide all live sparse ranges down over the garbage (stable, in
+    /// pool order) and truncate. Values and per-payload entry order are
+    /// untouched, so every view stays bitwise identical.
+    fn compact(&mut self) {
+        let mut live: Vec<u32> = (0..self.slots.len() as u32)
+            .filter(|&s| matches!(self.slots[s as usize].payload, Payload::Sparse { .. }))
+            .collect();
+        live.sort_by_key(|&s| match self.slots[s as usize].payload {
+            Payload::Sparse { off, .. } => off,
+            _ => unreachable!(),
+        });
+        let mut w = 0usize;
+        for s in live {
+            if let Payload::Sparse { off, len } = self.slots[s as usize].payload {
+                self.idx.copy_within(off..off + len, w);
+                self.val.copy_within(off..off + len, w);
+                self.slots[s as usize].payload = Payload::Sparse { off: w, len };
+                w += len;
+            }
+        }
+        self.idx.truncate(w);
+        self.val.truncate(w);
+    }
+
+    /// Borrowed payload view of a live slot.
+    pub fn view(&self, slot: u32) -> PlaneVecView<'_> {
+        match self.slots[slot as usize].payload {
+            Payload::Sparse { off, len } => PlaneVecView::Sparse {
+                dim: self.dim,
+                idx: &self.idx[off..off + len],
+                val: &self.val[off..off + len],
+            },
+            Payload::Dense { off } => PlaneVecView::Dense(&self.dense[off..off + self.dim]),
+            Payload::Free => panic!("view of freed slab slot {slot}"),
+        }
+    }
+
+    /// Current generation of a slot (bumped on every free).
+    pub fn generation(&self, slot: u32) -> u32 {
+        self.slots[slot as usize].gen
+    }
+
+    /// One past the largest slot id ever minted (the Gram arena's
+    /// triangular dimension; bounded by the concurrent-plane high-water
+    /// mark thanks to slot reuse).
+    pub fn slot_bound(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Stored entries of a live slot (nnz for sparse, d for dense) —
+    /// same accounting as `PlaneVec::nnz`.
+    fn payload_nnz(&self, slot: u32) -> usize {
+        match self.slots[slot as usize].payload {
+            Payload::Sparse { len, .. } => len,
+            Payload::Dense { .. } => self.dim,
+            Payload::Free => 0,
+        }
+    }
+
+    /// Heap bytes attributed to a live slot's payload (12 per sparse
+    /// entry, 8 per dense lane) — same accounting as
+    /// `PlaneVec::mem_bytes`.
+    fn payload_bytes(&self, slot: u32) -> usize {
+        match self.slots[slot as usize].payload {
+            Payload::Sparse { len, .. } => len * 12,
+            Payload::Dense { .. } => self.dim * 8,
+            Payload::Free => 0,
+        }
+    }
+}
+
+/// One cached plane's bookkeeping; the payload lives in the slab under
+/// `slot` (see the module docs — there is no per-entry `Vec`).
 #[derive(Debug)]
 pub struct WsEntry {
-    /// The cached cutting plane.
-    pub plane: Plane,
+    /// Plane offset φ∘.
+    pub off: f64,
+    /// Hash of the labeling that produced the plane (dedup key).
+    pub tag: u64,
     /// Outer iteration at which the plane was last returned as maximizer.
     pub last_active: u64,
-    /// Stable id for Gram-cache keys.
+    /// Stable id (never reused) for id-keyed per-plane state.
     pub id: u64,
+    /// Slab slot holding the payload (reused across evictions; the
+    /// slot's generation disambiguates tenants).
+    pub slot: u32,
 }
 
 /// A per-example working set W_i of cached planes (see module docs).
 pub struct WorkingSet {
     entries: Vec<WsEntry>,
+    slab: PlaneSlab,
     next_id: u64,
     /// Hard cap on |W_i| (paper's N).
     pub cap: usize,
@@ -46,7 +260,13 @@ pub struct WorkingSet {
 impl WorkingSet {
     /// Empty working set with hard cap `cap` (0 disables caching).
     pub fn new(cap: usize) -> WorkingSet {
-        WorkingSet { entries: Vec::new(), next_id: 0, cap, norms: Vec::new() }
+        WorkingSet {
+            entries: Vec::new(),
+            slab: PlaneSlab::new(),
+            next_id: 0,
+            cap,
+            norms: Vec::new(),
+        }
     }
 
     /// Number of cached planes |W_i|.
@@ -64,9 +284,20 @@ impl WorkingSet {
         &self.entries
     }
 
-    /// The plane at entry `idx`.
-    pub fn plane(&self, idx: usize) -> &Plane {
-        &self.entries[idx].plane
+    /// Borrowed plane at entry `idx` (payload viewed out of the slab).
+    pub fn plane_ref(&self, idx: usize) -> PlaneRef<'_> {
+        let e = &self.entries[idx];
+        PlaneRef { star: self.slab.view(e.slot), off: e.off, tag: e.tag }
+    }
+
+    /// Offset φ∘ of entry `idx`.
+    pub fn off(&self, idx: usize) -> f64 {
+        self.entries[idx].off
+    }
+
+    /// Dedup tag of entry `idx`.
+    pub fn tag(&self, idx: usize) -> u64 {
+        self.entries[idx].tag
     }
 
     /// Cached ‖p_*‖² of entry `idx` (Gram diagonal).
@@ -79,6 +310,21 @@ impl WorkingSet {
         self.entries[idx].id
     }
 
+    /// Slab slot of entry `idx` (the Gram arena's key).
+    pub fn slot(&self, idx: usize) -> u32 {
+        self.entries[idx].slot
+    }
+
+    /// Current generation of a slab slot (the Gram arena's stamp).
+    pub fn slot_gen(&self, slot: u32) -> u32 {
+        self.slab.generation(slot)
+    }
+
+    /// One past the largest slot id ever minted (Gram-arena sizing).
+    pub fn slot_bound(&self) -> usize {
+        self.slab.slot_bound()
+    }
+
     /// Insert a plane returned by the exact oracle (or refresh its
     /// activity if a plane with the same tag is already cached). Applies
     /// the cap-N eviction. Returns the index of the entry.
@@ -88,18 +334,26 @@ impl WorkingSet {
 
     /// As `insert`, additionally returning the stable id of the entry
     /// the cap-N rule evicted (if any), so callers holding per-plane
-    /// state — the pairwise coefficient ledger — can reconcile exactly
-    /// like they do for TTL eviction (`evict_stale_ids`).
+    /// state — the pairwise coefficient ledger, the Gram cache, the
+    /// §3.5 product rows — can reconcile exactly like they do for TTL
+    /// eviction (`evict_stale_ids`).
     pub fn insert_with_evicted(&mut self, plane: Plane, now: u64) -> (usize, Option<u64>) {
         if self.cap == 0 {
             return (usize::MAX, None); // working sets disabled (plain BCFW)
         }
-        if let Some(idx) = self.entries.iter().position(|e| e.plane.tag == plane.tag) {
+        if let Some(idx) = self.entries.iter().position(|e| e.tag == plane.tag) {
             self.entries[idx].last_active = now;
             return (idx, None);
         }
         let nrm = plane.star.norm_sq();
-        self.entries.push(WsEntry { plane, last_active: now, id: self.next_id });
+        let slot = self.slab.insert(&plane.star);
+        self.entries.push(WsEntry {
+            off: plane.off,
+            tag: plane.tag,
+            last_active: now,
+            id: self.next_id,
+            slot,
+        });
         self.norms.push(nrm);
         self.next_id += 1;
         let mut evicted = None;
@@ -113,6 +367,7 @@ impl WorkingSet {
                 .map(|(i, _)| i)
                 .unwrap();
             evicted = Some(self.entries[victim].id);
+            self.slab.remove(self.entries[victim].slot);
             self.entries.remove(victim);
             self.norms.remove(victim);
         }
@@ -134,23 +389,28 @@ impl WorkingSet {
 
     /// As `evict_stale`, but returns the stable ids of the evicted
     /// entries so callers holding per-plane state (convex-coefficient
-    /// ledgers, Gram caches) can reconcile.
+    /// ledgers, Gram caches, product rows) can reconcile.
     pub fn evict_stale_ids(&mut self, now: u64, ttl: u64) -> Vec<u64> {
         let cutoff = now.saturating_sub(ttl);
         let before = self.entries.len();
         let mut keep = Vec::with_capacity(before);
         let mut keep_norms = Vec::with_capacity(before);
         let mut dead = Vec::new();
+        let mut dead_slots = Vec::new();
         for (e, n) in self.entries.drain(..).zip(self.norms.drain(..)) {
             if e.last_active >= cutoff {
                 keep.push(e);
                 keep_norms.push(n);
             } else {
                 dead.push(e.id);
+                dead_slots.push(e.slot);
             }
         }
         self.entries = keep;
         self.norms = keep_norms;
+        for slot in dead_slots {
+            self.slab.remove(slot);
+        }
         dead
     }
 
@@ -158,7 +418,7 @@ impl WorkingSet {
     pub fn best_at(&self, w: &[f64]) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         for (idx, e) in self.entries.iter().enumerate() {
-            let v = e.plane.value_at(w);
+            let v = self.slab.view(e.slot).dot_dense(w) + e.off;
             if best.map_or(true, |(_, bv)| v > bv) {
                 best = Some((idx, v));
             }
@@ -166,17 +426,53 @@ impl WorkingSet {
         best
     }
 
-    /// Total heap use of the cached planes (the `plane_bytes` metric:
-    /// this working-set storage is the memory ceiling of the multi-plane
-    /// scheme, §3.3/§3.4).
-    pub fn mem_bytes(&self) -> usize {
-        self.entries.iter().map(|e| e.plane.mem_bytes()).sum()
+    /// Fused §3.5 product pass: one traversal of every cached payload
+    /// computes both ⟨p_j, u⟩ and ⟨p_j, v⟩ (u = φ_*, v = φ^i_* on the
+    /// hot path). Each dot accumulates in index order with its own
+    /// accumulator — exactly the arithmetic of two separate
+    /// `dot_dense` calls, so the fusion is bitwise-neutral while halving
+    /// the payload reads.
+    pub fn fused_products(&self, u: &[f64], v: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let mut a = Vec::with_capacity(self.entries.len());
+        let mut c = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            let (sa, sc) = match self.slab.view(e.slot) {
+                PlaneVecView::Sparse { idx, val, .. } => {
+                    let (mut sa, mut sc) = (0.0f64, 0.0f64);
+                    for (i, x) in idx.iter().zip(val.iter()) {
+                        let k = *i as usize;
+                        sa += u[k] * x;
+                        sc += v[k] * x;
+                    }
+                    (sa, sc)
+                }
+                PlaneVecView::Dense(p) => math::dot2_seq(p, u, v),
+            };
+            a.push(sa);
+            c.push(sc);
+        }
+        (a, c)
     }
 
-    /// Total stored entries across the cached planes' `PlaneVec`s
-    /// (feeds the `plane_nnz_mean` metric; dense-stored planes count d).
+    /// out += alpha · p_idx (slab payload; same per-index operations as
+    /// `PlaneVec::axpy_into`).
+    pub fn axpy_entry_into(&self, idx: usize, alpha: f64, out: &mut [f64]) {
+        self.slab.view(self.entries[idx].slot).axpy_into(alpha, out)
+    }
+
+    /// Total heap use of the cached planes (the `plane_bytes` metric:
+    /// this working-set storage is the memory ceiling of the multi-plane
+    /// scheme, §3.3/§3.4). Counts live payloads at the same rate as the
+    /// old per-plane accounting (12 B/sparse entry, 8 B/dense lane,
+    /// +16 B of offset/tag per plane).
+    pub fn mem_bytes(&self) -> usize {
+        self.entries.iter().map(|e| self.slab.payload_bytes(e.slot) + 16).sum()
+    }
+
+    /// Total stored entries across the cached payloads (feeds the
+    /// `plane_nnz_mean` metric; dense-stored planes count d).
     pub fn nnz_total(&self) -> usize {
-        self.entries.iter().map(|e| e.plane.star.nnz()).sum()
+        self.entries.iter().map(|e| self.slab.payload_nnz(e.slot)).sum()
     }
 }
 
@@ -301,6 +597,10 @@ mod tests {
         Plane::new(PlaneVec::sparse(3, vec![(0, val)]), 0.0, tag)
     }
 
+    fn tags(ws: &WorkingSet) -> Vec<u64> {
+        ws.entries().iter().map(|e| e.tag).collect()
+    }
+
     #[test]
     fn insert_dedups_by_tag() {
         let mut ws = WorkingSet::new(10);
@@ -318,8 +618,8 @@ mod tests {
         ws.touch(0, 5); // tag 1 recently active
         ws.insert(plane(3, 3.0), 6); // evicts tag 2 (last_active 1)
         assert_eq!(ws.len(), 2);
-        let tags: Vec<u64> = ws.entries().iter().map(|e| e.plane.tag).collect();
-        assert!(tags.contains(&1) && tags.contains(&3), "tags={tags:?}");
+        let t = tags(&ws);
+        assert!(t.contains(&1) && t.contains(&3), "tags={t:?}");
     }
 
     #[test]
@@ -330,7 +630,7 @@ mod tests {
         ws.insert(plane(3, 3.0), 9);
         let evicted = ws.evict_stale(10, 3);
         assert_eq!(evicted, 2);
-        assert_eq!(ws.entries()[0].plane.tag, 3);
+        assert_eq!(ws.entries()[0].tag, 3);
     }
 
     #[test]
@@ -341,7 +641,7 @@ mod tests {
         ws.insert(plane(3, 2.0), 0);
         let w = vec![1.0, 0.0, 0.0];
         let (idx, v) = ws.best_at(&w).unwrap();
-        assert_eq!(ws.plane(idx).tag, 2);
+        assert_eq!(ws.tag(idx), 2);
         assert_eq!(v, 5.0);
     }
 
@@ -380,7 +680,7 @@ mod tests {
         ws.touch(1, 5); // keep tag 2 fresh
         let (idx, evicted) = ws.insert_with_evicted(plane(3, 3.0), 6);
         assert_eq!(evicted, Some(victim_id));
-        assert_eq!(ws.plane(idx).tag, 3);
+        assert_eq!(ws.tag(idx), 3);
         // Dedup path evicts nothing.
         let (_, evicted) = ws.insert_with_evicted(plane(3, 3.0), 7);
         assert_eq!(evicted, None);
@@ -398,7 +698,100 @@ mod tests {
         let dead = ws.evict_stale_ids(10, 3);
         assert_eq!(dead, vec![id0, id1]);
         assert_eq!(ws.len(), 1);
-        assert_eq!(ws.entries()[0].plane.tag, 3);
+        assert_eq!(ws.entries()[0].tag, 3);
+    }
+
+    // ---- slab storage ------------------------------------------------
+
+    #[test]
+    fn slots_are_reused_and_generations_bump() {
+        let mut ws = WorkingSet::new(2);
+        ws.insert(plane(1, 1.0), 0);
+        ws.insert(plane(2, 2.0), 1);
+        let slot0 = ws.slot(0);
+        let gen0 = ws.slot_gen(slot0);
+        // Inserting tag 3 cap-evicts tag 1, freeing its slot (gen bump);
+        // the *next* insert pops that slot off the free list.
+        ws.insert(plane(3, 3.0), 2);
+        assert_eq!(ws.slot_gen(slot0), gen0 + 1, "freeing bumps the generation");
+        ws.insert(plane(4, 4.0), 3); // evicts tag 2, lands in slot0
+        let reused = ws.slot(ws.len() - 1);
+        assert_eq!(reused, slot0, "freed slot must be recycled");
+        // Slot ids stay bounded by the high-water mark (cap + 1 here).
+        assert!(ws.slot_bound() <= 3, "slot_bound {}", ws.slot_bound());
+    }
+
+    #[test]
+    fn slab_views_survive_churn_and_compaction() {
+        // Heavy insert/evict churn (with payloads above the compaction
+        // floor) must never corrupt surviving payloads.
+        let dim = 600usize;
+        let mk = |tag: u64| {
+            let pairs: Vec<(u32, f64)> =
+                (0..200).map(|k| (k * 3, tag as f64 + k as f64 * 0.5)).collect();
+            Plane::new(PlaneVec::sparse(dim, pairs), 0.25, tag)
+        };
+        let mut ws = WorkingSet::new(4);
+        for t in 0..64u64 {
+            ws.insert(mk(t + 1), t);
+            // Every surviving payload must read back exactly.
+            for idx in 0..ws.len() {
+                let tag = ws.tag(idx);
+                let expect = mk(tag);
+                let got = ws.plane_ref(idx).star.to_dense();
+                assert_eq!(got, expect.star.to_dense(), "payload corrupted at tag {tag}");
+            }
+        }
+        assert!(ws.slot_bound() <= 5, "slots leaked: {}", ws.slot_bound());
+    }
+
+    #[test]
+    fn dense_payloads_recycle_pool_regions() {
+        let dim = 4usize;
+        let mk = |tag: u64| {
+            Plane::new(
+                PlaneVec::dense((0..dim).map(|k| tag as f64 + k as f64).collect()),
+                0.0,
+                tag,
+            )
+        };
+        let mut ws = WorkingSet::new(2);
+        for t in 0..20u64 {
+            ws.insert(mk(t + 1), t);
+        }
+        for idx in 0..ws.len() {
+            let tag = ws.tag(idx);
+            assert_eq!(ws.plane_ref(idx).star.to_dense(), mk(tag).star.to_dense());
+        }
+        // mem accounting matches the per-plane rate (dim·8 + 16 each).
+        assert_eq!(ws.mem_bytes(), ws.len() * (dim * 8 + 16));
+        assert_eq!(ws.nnz_total(), ws.len() * dim);
+    }
+
+    #[test]
+    fn fused_products_bitwise_match_separate_dots() {
+        prop_check("fused == two dot_dense", 60, |g| {
+            let dim = g.usize(2, 30);
+            let mut ws = WorkingSet::new(100);
+            for t in 0..g.usize(1, 8) {
+                let k = g.usize(0, dim);
+                let pairs: Vec<(u32, f64)> =
+                    (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+                ws.insert(Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), t as u64 + 1), 0);
+            }
+            let u = g.vec_normal(dim);
+            let v = g.vec_normal(dim);
+            let (a, c) = ws.fused_products(&u, &v);
+            for j in 0..ws.len() {
+                if a[j] != ws.plane_ref(j).star.dot_dense(&u) {
+                    return Err(format!("a[{j}] differs"));
+                }
+                if c[j] != ws.plane_ref(j).star.dot_dense(&v) {
+                    return Err(format!("c[{j}] differs"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -462,7 +855,7 @@ mod tests {
                 ws.insert(plane(g.rng.below(10) as u64, g.normal()), t);
                 ws.evict_stale(t, 3);
                 for idx in 0..ws.len() {
-                    let expect = ws.plane(idx).star.norm_sq();
+                    let expect = ws.plane_ref(idx).star.norm_sq();
                     if (ws.norm_sq(idx) - expect).abs() > 1e-12 {
                         return Err("norm cache out of sync".into());
                     }

@@ -79,10 +79,153 @@ pub enum PlaneVec {
     Sparse { dim: usize, idx: Vec<u32>, val: Vec<f64> },
 }
 
+/// Borrowed form of [`PlaneVec`]: the same two representations over
+/// borrowed storage. This is what the slab-backed working set hands out
+/// (`coordinator::working_set::PlaneSlab` stores payloads in flat pools,
+/// not per-plane `Vec`s), and every arithmetic kernel is implemented
+/// *once*, here on the view — `PlaneVec` delegates — so slab-stored and
+/// heap-stored payloads of the same values are bitwise interchangeable
+/// by construction, extending the representation-invariance contract to
+/// the storage arena.
+#[derive(Clone, Copy, Debug)]
+pub enum PlaneVecView<'a> {
+    Dense(&'a [f64]),
+    /// Sorted unique indices + values, plus the logical dimension.
+    Sparse { dim: usize, idx: &'a [u32], val: &'a [f64] },
+}
+
+impl<'a> PlaneVecView<'a> {
+    /// Logical dimension d.
+    pub fn dim(&self) -> usize {
+        match self {
+            PlaneVecView::Dense(v) => v.len(),
+            PlaneVecView::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// Stored entries: nnz for sparse storage, d for dense.
+    pub fn nnz(&self) -> usize {
+        match self {
+            PlaneVecView::Dense(v) => v.len(),
+            PlaneVecView::Sparse { idx, .. } => idx.len(),
+        }
+    }
+
+    /// ⟨self, dense⟩, accumulated in index order (see [`PlaneVec`] docs).
+    pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        debug_assert_eq!(self.dim(), w.len());
+        match self {
+            PlaneVecView::Dense(v) => math::dot_seq(v, w),
+            PlaneVecView::Sparse { idx, val, .. } => {
+                let mut s = 0.0;
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    s += w[*i as usize] * v;
+                }
+                s
+            }
+        }
+    }
+
+    /// ⟨self, self⟩, accumulated in index order.
+    pub fn norm_sq(&self) -> f64 {
+        match self {
+            PlaneVecView::Dense(v) => math::dot_seq(v, v),
+            PlaneVecView::Sparse { val, .. } => {
+                let mut s = 0.0;
+                for v in val.iter() {
+                    s += v * v;
+                }
+                s
+            }
+        }
+    }
+
+    /// ⟨self, other⟩ for any representation mix, accumulated in index
+    /// order (sparse·sparse is a merge-join over the sorted indices).
+    pub fn dot(&self, other: PlaneVecView<'_>) -> f64 {
+        debug_assert_eq!(self.dim(), other.dim());
+        match (*self, other) {
+            (PlaneVecView::Dense(a), PlaneVecView::Dense(b)) => math::dot_seq(a, b),
+            (PlaneVecView::Dense(a), s @ PlaneVecView::Sparse { .. }) => s.dot_dense(a),
+            (s @ PlaneVecView::Sparse { .. }, PlaneVecView::Dense(b)) => s.dot_dense(b),
+            (
+                PlaneVecView::Sparse { idx: ia, val: va, .. },
+                PlaneVecView::Sparse { idx: ib, val: vb, .. },
+            ) => {
+                let (mut p, mut q, mut s) = (0usize, 0usize, 0.0f64);
+                while p < ia.len() && q < ib.len() {
+                    match ia[p].cmp(&ib[q]) {
+                        std::cmp::Ordering::Less => p += 1,
+                        std::cmp::Ordering::Greater => q += 1,
+                        std::cmp::Ordering::Equal => {
+                            s += va[p] * vb[q];
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                s
+            }
+        }
+    }
+
+    /// out += alpha·self (elementwise on the stored entries).
+    pub fn axpy_into(&self, alpha: f64, out: &mut [f64]) {
+        debug_assert_eq!(self.dim(), out.len());
+        match self {
+            PlaneVecView::Dense(v) => math::axpy(alpha, v, out),
+            PlaneVecView::Sparse { idx, val, .. } => {
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    out[*i as usize] += alpha * v;
+                }
+            }
+        }
+    }
+
+    /// acc = (1−γ)·acc + γ·self (see [`PlaneVec::interp_into`]).
+    pub fn interp_into(&self, gamma: f64, acc: &mut [f64]) {
+        debug_assert_eq!(self.dim(), acc.len());
+        match self {
+            PlaneVecView::Dense(v) => math::scale_add(1.0 - gamma, gamma, v, acc),
+            PlaneVecView::Sparse { idx, val, .. } => {
+                math::scal(1.0 - gamma, acc);
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    acc[*i as usize] += gamma * v;
+                }
+            }
+        }
+    }
+
+    /// Materialize as a dense `Vec` (copy).
+    pub fn to_dense(&self) -> Vec<f64> {
+        match self {
+            PlaneVecView::Dense(v) => v.to_vec(),
+            PlaneVecView::Sparse { dim, idx, val } => {
+                let mut out = vec![0.0; *dim];
+                for (i, v) in idx.iter().zip(val.iter()) {
+                    out[*i as usize] = *v;
+                }
+                out
+            }
+        }
+    }
+}
+
 impl PlaneVec {
     /// The all-zero vector (stored sparse with no entries).
     pub fn zeros(dim: usize) -> PlaneVec {
         PlaneVec::Sparse { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Borrowed view of the stored payload (the shared kernel carrier —
+    /// see [`PlaneVecView`]).
+    pub fn view(&self) -> PlaneVecView<'_> {
+        match self {
+            PlaneVec::Dense(v) => PlaneVecView::Dense(v),
+            PlaneVec::Sparse { dim, idx, val } => {
+                PlaneVecView::Sparse { dim: *dim, idx, val }
+            }
+        }
     }
 
     /// Explicitly dense storage (no auto-compaction; use [`compact`]
@@ -159,32 +302,15 @@ impl PlaneVec {
     }
 
     /// ⟨self, dense⟩, accumulated in index order (see module docs).
+    /// Delegates to [`PlaneVecView::dot_dense`] — one kernel for owned
+    /// and slab-borrowed payloads.
     pub fn dot_dense(&self, w: &[f64]) -> f64 {
-        debug_assert_eq!(self.dim(), w.len());
-        match self {
-            PlaneVec::Dense(v) => math::dot_seq(v, w),
-            PlaneVec::Sparse { idx, val, .. } => {
-                let mut s = 0.0;
-                for (i, v) in idx.iter().zip(val.iter()) {
-                    s += w[*i as usize] * v;
-                }
-                s
-            }
-        }
+        self.view().dot_dense(w)
     }
 
     /// ⟨self, self⟩, accumulated in index order.
     pub fn norm_sq(&self) -> f64 {
-        match self {
-            PlaneVec::Dense(v) => math::dot_seq(v, v),
-            PlaneVec::Sparse { val, .. } => {
-                let mut s = 0.0;
-                for v in val.iter() {
-                    s += v * v;
-                }
-                s
-            }
-        }
+        self.view().norm_sq()
     }
 
     /// ⟨self, other⟩ for any representation mix, accumulated in index
@@ -192,44 +318,13 @@ impl PlaneVec {
     /// the skipped non-common indices are exactly the zero-product
     /// terms, so all four variant combinations agree bitwise).
     pub fn dot(&self, other: &PlaneVec) -> f64 {
-        debug_assert_eq!(self.dim(), other.dim());
-        match (self, other) {
-            (PlaneVec::Dense(a), PlaneVec::Dense(b)) => math::dot_seq(a, b),
-            (PlaneVec::Dense(a), s @ PlaneVec::Sparse { .. }) => s.dot_dense(a),
-            (s @ PlaneVec::Sparse { .. }, PlaneVec::Dense(b)) => s.dot_dense(b),
-            (
-                PlaneVec::Sparse { idx: ia, val: va, .. },
-                PlaneVec::Sparse { idx: ib, val: vb, .. },
-            ) => {
-                let (mut p, mut q, mut s) = (0usize, 0usize, 0.0f64);
-                while p < ia.len() && q < ib.len() {
-                    match ia[p].cmp(&ib[q]) {
-                        std::cmp::Ordering::Less => p += 1,
-                        std::cmp::Ordering::Greater => q += 1,
-                        std::cmp::Ordering::Equal => {
-                            s += va[p] * vb[q];
-                            p += 1;
-                            q += 1;
-                        }
-                    }
-                }
-                s
-            }
-        }
+        self.view().dot(other.view())
     }
 
     /// out += alpha·self (elementwise on the stored entries; see the
     /// order-deterministic contract on `utils::math::axpy`).
     pub fn axpy_into(&self, alpha: f64, out: &mut [f64]) {
-        debug_assert_eq!(self.dim(), out.len());
-        match self {
-            PlaneVec::Dense(v) => math::axpy(alpha, v, out),
-            PlaneVec::Sparse { idx, val, .. } => {
-                for (i, v) in idx.iter().zip(val.iter()) {
-                    out[*i as usize] += alpha * v;
-                }
-            }
-        }
+        self.view().axpy_into(alpha, out)
     }
 
     /// Convex interpolation into a dense accumulator:
@@ -237,31 +332,13 @@ impl PlaneVec {
     /// per-index operations as `math::scale_add(1−γ, γ, ..)` on the
     /// densified vector.
     pub fn interp_into(&self, gamma: f64, acc: &mut [f64]) {
-        debug_assert_eq!(self.dim(), acc.len());
-        match self {
-            PlaneVec::Dense(v) => math::scale_add(1.0 - gamma, gamma, v, acc),
-            PlaneVec::Sparse { idx, val, .. } => {
-                math::scal(1.0 - gamma, acc);
-                for (i, v) in idx.iter().zip(val.iter()) {
-                    acc[*i as usize] += gamma * v;
-                }
-            }
-        }
+        self.view().interp_into(gamma, acc)
     }
 
     /// Materialize as a dense `Vec` (copy; the representation of `self`
     /// is unchanged).
     pub fn to_dense(&self) -> Vec<f64> {
-        match self {
-            PlaneVec::Dense(v) => v.clone(),
-            PlaneVec::Sparse { dim, idx, val } => {
-                let mut out = vec![0.0; *dim];
-                for (i, v) in idx.iter().zip(val.iter()) {
-                    out[*i as usize] = *v;
-                }
-                out
-            }
-        }
+        self.view().to_dense()
     }
 
     /// Force dense storage (the `--dense-planes` escape hatch; a no-op
@@ -331,9 +408,39 @@ pub struct Plane {
     pub tag: u64,
 }
 
+/// Borrowed form of [`Plane`]: a [`PlaneVecView`] payload plus the
+/// offset and tag, copied by value. This is what the slab-backed working
+/// set hands out and what the `DualState` step kernels consume — an
+/// owned `Plane` converts losslessly via [`Plane::view`].
+#[derive(Clone, Copy, Debug)]
+pub struct PlaneRef<'a> {
+    pub star: PlaneVecView<'a>,
+    pub off: f64,
+    pub tag: u64,
+}
+
+impl<'a> PlaneRef<'a> {
+    /// ⟨φ, [w 1]⟩ — the plane's value at weight vector w.
+    #[inline]
+    pub fn value_at(&self, w: &[f64]) -> f64 {
+        self.star.dot_dense(w) + self.off
+    }
+
+    pub fn dim(&self) -> usize {
+        self.star.dim()
+    }
+}
+
 impl Plane {
     pub fn new(star: PlaneVec, off: f64, tag: u64) -> Plane {
         Plane { star, off, tag }
+    }
+
+    /// Borrowed view (for the `DualState` step kernels, which take
+    /// [`PlaneRef`] so slab-resident working-set planes need no copy).
+    #[inline]
+    pub fn view(&self) -> PlaneRef<'_> {
+        PlaneRef { star: self.star.view(), off: self.off, tag: self.tag }
     }
 
     pub fn zero(dim: usize) -> Plane {
@@ -388,6 +495,11 @@ impl DensePlane {
 
     /// self = (1-γ)·self + γ·p
     pub fn interp_plane(&mut self, gamma: f64, p: &Plane) {
+        self.interp_ref(gamma, p.view())
+    }
+
+    /// self = (1-γ)·self + γ·p, from a borrowed plane (slab entries).
+    pub fn interp_ref(&mut self, gamma: f64, p: PlaneRef<'_>) {
         p.star.interp_into(gamma, &mut self.star);
         self.off = (1.0 - gamma) * self.off + gamma * p.off;
     }
@@ -701,6 +813,46 @@ mod tests {
         assert_eq!(d.value_at(&w), v);
         assert_eq!(d.off, 0.25);
         assert_eq!(d.tag, 9);
+    }
+
+    #[test]
+    fn views_mirror_owned_kernels_bitwise() {
+        // The borrowed view is the single kernel implementation the
+        // owned PlaneVec delegates to; pin that a view constructed from
+        // foreign storage (as the working-set slab does) agrees bitwise
+        // with the owned vector holding the same values.
+        let dim = 24usize;
+        let pairs: Vec<(u32, f64)> =
+            vec![(2, 0.5), (7, -1.25), (11, 3.0), (23, 0.125)];
+        let owned = PlaneVec::sparse(dim, pairs.clone());
+        let (idx, val): (Vec<u32>, Vec<f64>) = pairs.iter().copied().unzip();
+        let view = PlaneVecView::Sparse { dim, idx: &idx, val: &val };
+        let w: Vec<f64> = (0..dim).map(|i| (i as f64 * 0.21).cos()).collect();
+        assert_eq!(view.dot_dense(&w), owned.dot_dense(&w));
+        assert_eq!(view.norm_sq(), owned.norm_sq());
+        let other = PlaneVec::sparse(dim, vec![(7, 2.0), (9, 1.0)]);
+        assert_eq!(view.dot(other.view()), owned.dot(&other));
+        let mut acc1 = w.clone();
+        let mut acc2 = w.clone();
+        view.axpy_into(-0.3, &mut acc1);
+        owned.axpy_into(-0.3, &mut acc2);
+        assert_eq!(acc1, acc2);
+        let p = Plane::new(owned.clone(), 0.75, 9);
+        assert_eq!(p.view().value_at(&w), p.value_at(&w));
+        assert_eq!(p.view().dim(), p.dim());
+        assert_eq!(view.nnz(), owned.nnz());
+        assert_eq!(view.to_dense(), owned.to_dense());
+    }
+
+    #[test]
+    fn interp_ref_matches_interp_plane() {
+        let p = Plane::new(PlaneVec::sparse(3, vec![(1, 2.0)]), 1.0, 3);
+        let mut a = DensePlane { star: vec![1.0, 1.0, 1.0], off: 0.0 };
+        let mut b = a.clone();
+        a.interp_plane(0.25, &p);
+        b.interp_ref(0.25, p.view());
+        assert_eq!(a.star, b.star);
+        assert_eq!(a.off, b.off);
     }
 
     #[test]

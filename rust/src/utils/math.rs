@@ -64,6 +64,25 @@ pub fn dot_seq(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Fused pair of index-order dot products: returns
+/// `(⟨p, u⟩, ⟨p, v⟩)` accumulated exactly as two separate [`dot_seq`]
+/// calls would — the two sums use independent accumulators, so fusing
+/// the traversals (one pass over `p` instead of two) cannot change
+/// either result bitwise. This is the dense arm of the slab kernel the
+/// §3.5 product computation uses to read each cached plane once while
+/// producing both ⟨p_j, φ⟩ and ⟨p_j, φ^i⟩.
+#[inline]
+pub fn dot2_seq(p: &[f64], u: &[f64], v: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(p.len(), u.len());
+    debug_assert_eq!(p.len(), v.len());
+    let (mut a, mut c) = (0.0f64, 0.0f64);
+    for ((x, y), z) in p.iter().zip(u.iter()).zip(v.iter()) {
+        a += x * y;
+        c += x * z;
+    }
+    (a, c)
+}
+
 /// y += alpha * x
 ///
 /// Order-deterministic contract: each element is updated independently
@@ -216,6 +235,16 @@ mod tests {
             *yi += 0.25 * xi;
         }
         assert_eq!(y1, y3);
+    }
+
+    #[test]
+    fn dot2_seq_bitwise_matches_two_dot_seqs() {
+        let p: Vec<f64> = (0..83).map(|i| (i as f64 * 0.31).sin()).collect();
+        let u: Vec<f64> = (0..83).map(|i| (i as f64 * 0.17).cos()).collect();
+        let v: Vec<f64> = (0..83).map(|i| (i as f64 * 0.53).tan()).collect();
+        let (a, c) = dot2_seq(&p, &u, &v);
+        assert_eq!(a, dot_seq(&p, &u));
+        assert_eq!(c, dot_seq(&p, &v));
     }
 
     #[test]

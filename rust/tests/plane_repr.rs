@@ -184,7 +184,8 @@ fn gram_cache_ids_stable_across_mixed_representation_eviction() {
     for (t, stride) in [(1u64, 8usize), (2, 1), (3, 4), (4, 2)] {
         ws.insert(sparse_plane(t, dim, stride), t);
     }
-    let reference = |ws: &WorkingSet, a: usize, b: usize| ws.plane(a).star.dot(&ws.plane(b).star);
+    let reference =
+        |ws: &WorkingSet, a: usize, b: usize| ws.plane_ref(a).star.dot(ws.plane_ref(b).star);
     // Warm every pair and validate against direct dots.
     for a in 0..ws.len() {
         for b in 0..ws.len() {

@@ -1,0 +1,229 @@
+#!/usr/bin/env python3
+"""Static desk checks for the Rust tree (no toolchain required).
+
+Two checks, both string/comment-aware:
+
+1. **Balance**: every `.rs` file must have balanced `{}`, `()`, `[]`
+   outside of strings, char literals, and comments. Catches truncated
+   files, mismatched edits, and macro bodies cut mid-way.
+
+2. **Struct-literal exhaustiveness**: every literal of the structs
+   listed in ``CHECKED_STRUCTS`` must either initialize all declared
+   fields or use functional-update syntax (``..``). Catches the classic
+   "added a field to EvalPoint, missed one constructor" compile error
+   before a compiler ever sees the code.
+
+Exit status is non-zero on any finding. Run from anywhere:
+
+    python3 tools/desk_check.py [repo_root]
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# (struct name, file that declares it). Extend as structs grow fields.
+CHECKED_STRUCTS = [
+    ("EvalPoint", "rust/src/coordinator/metrics.rs"),
+    ("TrainSpec", "rust/src/coordinator/trainer.rs"),
+    ("MpBcfwConfig", "rust/src/coordinator/mp_bcfw.rs"),
+]
+
+OPEN = {"{": "}", "(": ")", "[": "]"}
+CLOSE = {v: k for k, v in OPEN.items()}
+
+
+def strip_code(text):
+    """Return `text` with comments/strings/chars blanked (newlines kept),
+    so bracket scanning and struct-literal parsing see only real code."""
+    out = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            while i < n and text[i] != "\n":
+                i += 1
+            continue
+        if c == "/" and nxt == "*":
+            depth = 1
+            i += 2
+            while i < n and depth:
+                if text[i] == "/" and i + 1 < n and text[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif text[i] == "*" and i + 1 < n and text[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if text[i] == "\n":
+                        out.append("\n")
+                    i += 1
+            continue
+        if c == "r" and nxt in "\"#":
+            # Raw string r"..." / r#"..."#
+            j = i + 1
+            hashes = 0
+            while j < n and text[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and text[j] == '"':
+                end = text.find('"' + "#" * hashes, j + 1)
+                if end == -1:
+                    break
+                segment = text[i : end + 1 + hashes]
+                out.append("\n" * segment.count("\n"))
+                i = end + 1 + hashes
+                continue
+        if c == '"':
+            i += 1
+            while i < n:
+                if text[i] == "\\":
+                    i += 2
+                    continue
+                if text[i] == '"':
+                    i += 1
+                    break
+                if text[i] == "\n":
+                    out.append("\n")
+                i += 1
+            continue
+        if c == "'":
+            # Char literal vs lifetime: a char literal closes within a
+            # couple of characters ('x', '\n', '\u{1F600}').
+            m = re.match(r"'(\\u\{[0-9a-fA-F]{1,6}\}|\\.|[^\\'])'", text[i:])
+            if m:
+                i += m.end()
+                continue
+            i += 1  # lifetime tick: skip the quote only
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def check_balance(path, code):
+    stack = []
+    line = 1
+    for ch in code:
+        if ch == "\n":
+            line += 1
+        elif ch in OPEN:
+            stack.append((ch, line))
+        elif ch in CLOSE:
+            if not stack or stack[-1][0] != CLOSE[ch]:
+                return [f"{path}:{line}: unmatched '{ch}'"]
+            stack.pop()
+    return [f"{path}:{l}: unclosed '{c}'" for c, l in stack]
+
+
+def struct_fields(code, name):
+    """Field names of `pub struct <name> { ... }` in stripped code."""
+    m = re.search(r"pub struct %s\s*\{" % re.escape(name), code)
+    if not m:
+        return None
+    i = m.end()
+    depth = 1
+    body = []
+    while i < len(code) and depth:
+        if code[i] == "{":
+            depth += 1
+        elif code[i] == "}":
+            depth -= 1
+        if depth:
+            body.append(code[i])
+        i += 1
+    fields = []
+    for fm in re.finditer(r"(?:pub\s+)?([a-z_][a-z0-9_]*)\s*:", "".join(body)):
+        fields.append(fm.group(1))
+    return fields
+
+
+def check_literals(path, code, name, fields):
+    """Every `Name { ... }` literal must set all fields or use `..`."""
+    findings = []
+    for m in re.finditer(r"\b%s\s*\{" % re.escape(name), code):
+        # Skip the declaration itself, impl blocks, and return types
+        # (`fn f(...) -> Name {` opens a body, not a literal).
+        prefix = code[max(0, m.start() - 80) : m.start()].rstrip()
+        if re.search(r"(struct|impl|for|trait)$", prefix):
+            continue
+        if prefix.endswith("->"):
+            continue
+        i = m.end()
+        depth = 1
+        body = []
+        while i < len(code) and depth:
+            if code[i] == "{":
+                depth += 1
+            elif code[i] == "}":
+                depth -= 1
+            if depth:
+                body.append(code[i])
+            i += 1
+        body = "".join(body)
+        line = code[: m.start()].count("\n") + 1
+        if ".." in body:
+            continue  # functional update / rest pattern
+        # Split the body on top-level commas; each segment starts with a
+        # field name (`name: expr` or shorthand `name`).
+        segments, seg, d = [], [], 0
+        for ch in body:
+            if ch in "{([":
+                d += 1
+            elif ch in "})]":
+                d -= 1
+            if ch == "," and d == 0:
+                segments.append("".join(seg))
+                seg = []
+            else:
+                seg.append(ch)
+        segments.append("".join(seg))
+        present = set()
+        for s in segments:
+            fm = re.match(r"\s*([a-z_][a-z0-9_]*)\s*(?::|$)", s)
+            if fm:
+                present.add(fm.group(1))
+        missing = [f for f in fields if f not in present]
+        if missing:
+            findings.append(
+                f"{path}:{line}: {name} literal missing fields: {', '.join(missing)}"
+            )
+    return findings
+
+
+def main():
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parents[1]
+    rs_files = sorted((root / "rust").rglob("*.rs")) + sorted(
+        (root / "examples").glob("*.rs")
+    )
+    findings = []
+    stripped = {}
+    for p in rs_files:
+        code = strip_code(p.read_text())
+        stripped[p] = code
+        findings += check_balance(p.relative_to(root), code)
+
+    for name, decl in CHECKED_STRUCTS:
+        decl_path = root / decl
+        fields = struct_fields(stripped[decl_path], name)
+        if not fields:
+            findings.append(f"{decl}: could not parse struct {name}")
+            continue
+        for p, code in stripped.items():
+            findings += check_literals(p.relative_to(root), code, name, fields)
+
+    if findings:
+        print(f"desk_check: {len(findings)} finding(s)")
+        for f in findings:
+            print("  " + f)
+        return 1
+    print(
+        f"desk_check: OK ({len(rs_files)} files balanced; "
+        f"{', '.join(n for n, _ in CHECKED_STRUCTS)} literals exhaustive)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
