@@ -1,0 +1,800 @@
+//! Perf-regression gates: committed `BENCH_*.json` baselines, a
+//! comparator (`bench --regress`), and an intentional re-baseliner
+//! (`bench --rebaseline`).
+//!
+//! The paper's own evaluation metric — exact oracle calls (and passes)
+//! to reach a target duality gap — is exactly what a regression gate
+//! should track, so each per-scenario baseline file pins those counters
+//! plus the step/visit counters and the peak memory columns of the eval
+//! series. Two classes of metric, gated differently:
+//!
+//! * **Deterministic counters gate exactly.** At a fixed seed, the
+//!   trajectory is bit-reproducible (the baseline provenance pins
+//!   `auto_approx: false`, since the §3.4 slope rule is wall-clock
+//!   driven), so oracle calls/passes to target, step and visit counts,
+//!   peak plane/Gram bytes and the hex-encoded final dual must match the
+//!   baseline bit for bit. Any difference is either a real regression or
+//!   an intentional change — in which case `bench --rebaseline`
+//!   regenerates the files and the diff is reviewed like code.
+//! * **Wall-time fields are advisory** and gate on a relative band
+//!   (`time_band`, default ±50%), skipped entirely under `--smoke`
+//!   (shared CI runners) and for baselines too fast to time reliably
+//!   (< [`MIN_GATED_WALL_SECS`]).
+//!
+//! Floats are stored as hex-encoded IEEE-754 bit patterns
+//! ([`hex_of`]/[`f64_of_hex`]) so JSON round-trips cannot lose a bit.
+//!
+//! **Bootstrap baselines.** A committed baseline with `"pinned": false`
+//! carries provenance but no trusted counters (the authoring environment
+//! had no toolchain to produce them). `--regress` then gates what is
+//! checkable without history — a twin run must reproduce every counter
+//! bitwise — and reports that `--rebaseline` should be run (on a machine
+//! with a toolchain) to pin real values. `--rebaseline` always writes
+//! `"pinned": true`.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::trainer::{self, Algo, DatasetKind, TrainSpec};
+use crate::data::types::Scale;
+use crate::utils::json::Json;
+
+/// Version of the baseline file schema; bumped on incompatible changes.
+/// A mismatch is a gate failure naming `schema_version`, not a parse
+/// guess — re-running `--rebaseline` upgrades the files.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default advisory band for wall-time fields: measured wall time may
+/// exceed the baseline by up to this fraction before the gate trips.
+pub const DEFAULT_TIME_BAND: f64 = 0.5;
+
+/// Wall-time gates only engage when the baseline run took at least this
+/// long — below it, scheduler noise swamps the signal (tiny CI runs are
+/// counter-gated only).
+pub const MIN_GATED_WALL_SECS: f64 = 0.5;
+
+/// Fraction of the initial duality gap used as the convergence target:
+/// the gate counters measure oracle calls / passes until
+/// `primal − dual ≤ target_frac × (initial primal − initial dual)`.
+pub const DEFAULT_TARGET_FRAC: f64 = 0.5;
+
+/// Hex-encode an f64's IEEE-754 bits (bitwise-lossless JSON storage; the
+/// plain JSON number path formats through decimal and cannot guarantee
+/// round-tripping the last ulp).
+pub fn hex_of(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`hex_of`].
+pub fn f64_of_hex(s: &str) -> Result<f64, String> {
+    if s.len() != 16 {
+        return Err(format!("bad f64 hex '{s}': want 16 hex digits"));
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("bad f64 hex '{s}': {e}"))
+}
+
+/// Scenario name of a dataset in baseline/fixture files. The multiclass
+/// scenario is named after the *oracle family* (the dataset field keeps
+/// the synthetic dataset's own name).
+pub fn scenario_name(ds: DatasetKind) -> &'static str {
+    match ds {
+        DatasetKind::UspsLike => "multiclass_like",
+        DatasetKind::OcrLike => "ocr_like",
+        DatasetKind::HorsesegLike => "horseseg_like",
+    }
+}
+
+/// `BENCH_<scenario>.json` under the baseline directory (repo root for
+/// the committed files; CI passes `--baselines ..` from `rust/`).
+pub fn baseline_path(dir: &Path, ds: DatasetKind) -> PathBuf {
+    dir.join(format!("BENCH_{}.json", scenario_name(ds)))
+}
+
+/// Everything needed to re-run the exact configuration a baseline was
+/// measured under. `--regress` builds its [`TrainSpec`] from these
+/// fields — never from the invoking CLI options — so a gate run always
+/// measures what the baseline pinned.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineProvenance {
+    /// Algorithm CLI token (`mp-bcfw` for the shipped baselines).
+    pub algo: String,
+    /// Dataset scale token (`tiny` for the shipped baselines — CI-fast).
+    pub scale: String,
+    /// Optimizer RNG seed.
+    pub seed: u64,
+    /// Dataset generator seed.
+    pub data_seed: u64,
+    /// Outer iterations of the gate run.
+    pub max_iters: u64,
+    /// Fixed approximate-pass budget (`auto_approx` is always false in
+    /// gate runs — the §3.4 rule is wall-clock-driven and would fork the
+    /// trajectory on a faster machine).
+    pub max_approx_passes: u64,
+    /// Worker threads (counters are thread-count-invariant for ≥ 1 by
+    /// the parallel-dispatch merge discipline; 0 = classic sequential).
+    pub threads: u64,
+    /// Convergence target as a fraction of the initial duality gap.
+    pub target_frac: f64,
+}
+
+impl Default for BaselineProvenance {
+    /// The canonical provenance `--rebaseline` stamps when no baseline
+    /// file exists yet: tiny scale, fixed seeds, 6 outer iterations,
+    /// pinned pass schedule — small enough to gate on every CI push.
+    fn default() -> Self {
+        BaselineProvenance {
+            algo: "mp-bcfw".into(),
+            scale: "tiny".into(),
+            seed: 0,
+            data_seed: 0,
+            max_iters: 6,
+            max_approx_passes: 3,
+            threads: 0,
+            target_frac: DEFAULT_TARGET_FRAC,
+        }
+    }
+}
+
+/// The deterministic counters a baseline pins (gate: exact equality).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineCounters {
+    /// Exact oracle calls until the target gap was first met (the
+    /// paper's §4 evaluation measure); total calls if never met.
+    pub oracle_calls_to_target: u64,
+    /// Outer passes until the target gap was first met.
+    pub passes_to_target: u64,
+    /// Whether the target gap was reached within the budget.
+    pub reached: bool,
+    /// Total exact oracle calls over the run (= exact steps taken).
+    pub exact_oracle_calls: u64,
+    /// Cumulative approximate (cached) steps with γ > 0.
+    pub approx_steps: u64,
+    /// Cumulative pairwise transfers with γ > 0.
+    pub pairwise_steps: u64,
+    /// Cached §3.5 block visits.
+    pub cached_visits: u64,
+    /// Cached visits that paid the dense product pass.
+    pub product_refreshes: u64,
+    /// Peak cached-plane bytes over the eval series.
+    pub peak_plane_bytes: u64,
+    /// Peak Gram-cache bytes over the eval series.
+    pub peak_gram_bytes: u64,
+    /// Final dual value, hex-encoded f64 bits.
+    pub final_dual_hex: String,
+    /// The absolute target gap the counters measured against,
+    /// hex-encoded f64 bits (derived: initial gap × `target_frac`).
+    pub target_gap_hex: String,
+}
+
+/// One committed `BENCH_*.json` baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Baseline {
+    /// File format version ([`SCHEMA_VERSION`]).
+    pub schema_version: u64,
+    /// Scenario name ([`scenario_name`]); doubles as the file stem.
+    pub scenario: String,
+    /// Canonical dataset name (`DatasetKind::name`).
+    pub dataset: String,
+    /// False for bootstrap baselines whose counters were never measured
+    /// (see the module docs); `--rebaseline` writes true.
+    pub pinned: bool,
+    /// Exact configuration the counters were measured under.
+    pub provenance: BaselineProvenance,
+    /// The gated counters.
+    pub counters: BaselineCounters,
+    /// Advisory: wall seconds of the baseline run.
+    pub wall_secs: f64,
+    /// Advisory: cumulative oracle seconds of the baseline run.
+    pub oracle_secs: f64,
+    /// Relative band for the advisory wall-time gate.
+    pub time_band: f64,
+}
+
+/// A fresh gate run's results, in baseline shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Measured {
+    /// The deterministic counters of the fresh run.
+    pub counters: BaselineCounters,
+    /// Wall seconds of the fresh run.
+    pub wall_secs: f64,
+    /// Cumulative oracle seconds of the fresh run.
+    pub oracle_secs: f64,
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).as_f64().ok_or_else(|| format!("missing/non-numeric field '{key}'"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    req_f64(j, key).map(|x| x as u64)
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .as_str()
+        .map(String::from)
+        .ok_or_else(|| format!("missing/non-string field '{key}'"))
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool, String> {
+    match j.get(key) {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(format!("missing/non-bool field '{key}'")),
+    }
+}
+
+impl Baseline {
+    pub fn to_json(&self) -> Json {
+        let p = &self.provenance;
+        let c = &self.counters;
+        Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("scenario", Json::s(&self.scenario)),
+            ("dataset", Json::s(&self.dataset)),
+            ("pinned", Json::Bool(self.pinned)),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("algo", Json::s(&p.algo)),
+                    ("scale", Json::s(&p.scale)),
+                    ("seed", Json::Num(p.seed as f64)),
+                    ("data_seed", Json::Num(p.data_seed as f64)),
+                    ("max_iters", Json::Num(p.max_iters as f64)),
+                    ("max_approx_passes", Json::Num(p.max_approx_passes as f64)),
+                    ("threads", Json::Num(p.threads as f64)),
+                    ("target_frac", Json::Num(p.target_frac)),
+                ]),
+            ),
+            (
+                "counters",
+                Json::obj(vec![
+                    (
+                        "oracle_calls_to_target",
+                        Json::Num(c.oracle_calls_to_target as f64),
+                    ),
+                    ("passes_to_target", Json::Num(c.passes_to_target as f64)),
+                    ("reached", Json::Bool(c.reached)),
+                    ("exact_oracle_calls", Json::Num(c.exact_oracle_calls as f64)),
+                    ("approx_steps", Json::Num(c.approx_steps as f64)),
+                    ("pairwise_steps", Json::Num(c.pairwise_steps as f64)),
+                    ("cached_visits", Json::Num(c.cached_visits as f64)),
+                    ("product_refreshes", Json::Num(c.product_refreshes as f64)),
+                    ("peak_plane_bytes", Json::Num(c.peak_plane_bytes as f64)),
+                    ("peak_gram_bytes", Json::Num(c.peak_gram_bytes as f64)),
+                    ("final_dual_hex", Json::s(&c.final_dual_hex)),
+                    ("target_gap_hex", Json::s(&c.target_gap_hex)),
+                ]),
+            ),
+            (
+                "advisory",
+                Json::obj(vec![
+                    ("wall_secs", Json::Num(self.wall_secs)),
+                    ("oracle_secs", Json::Num(self.oracle_secs)),
+                    ("time_band", Json::Num(self.time_band)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a baseline document; errors name the offending field. A
+    /// schema-version mismatch is reported as such (and gates nonzero)
+    /// rather than mis-parsing a future format.
+    pub fn from_json(j: &Json) -> Result<Baseline, String> {
+        let ver = req_u64(j, "schema_version")?;
+        if ver != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version mismatch: baseline file has {ver}, this binary expects \
+                 {SCHEMA_VERSION} — re-run `bench --rebaseline`"
+            ));
+        }
+        let p = j.get("provenance");
+        let c = j.get("counters");
+        let a = j.get("advisory");
+        Ok(Baseline {
+            schema_version: ver,
+            scenario: req_str(j, "scenario")?,
+            dataset: req_str(j, "dataset")?,
+            pinned: req_bool(j, "pinned")?,
+            provenance: BaselineProvenance {
+                algo: req_str(p, "algo")?,
+                scale: req_str(p, "scale")?,
+                seed: req_u64(p, "seed")?,
+                data_seed: req_u64(p, "data_seed")?,
+                max_iters: req_u64(p, "max_iters")?,
+                max_approx_passes: req_u64(p, "max_approx_passes")?,
+                threads: req_u64(p, "threads")?,
+                target_frac: req_f64(p, "target_frac")?,
+            },
+            counters: BaselineCounters {
+                oracle_calls_to_target: req_u64(c, "oracle_calls_to_target")?,
+                passes_to_target: req_u64(c, "passes_to_target")?,
+                reached: req_bool(c, "reached")?,
+                exact_oracle_calls: req_u64(c, "exact_oracle_calls")?,
+                approx_steps: req_u64(c, "approx_steps")?,
+                pairwise_steps: req_u64(c, "pairwise_steps")?,
+                cached_visits: req_u64(c, "cached_visits")?,
+                product_refreshes: req_u64(c, "product_refreshes")?,
+                peak_plane_bytes: req_u64(c, "peak_plane_bytes")?,
+                peak_gram_bytes: req_u64(c, "peak_gram_bytes")?,
+                final_dual_hex: req_str(c, "final_dual_hex")?,
+                target_gap_hex: req_str(c, "target_gap_hex")?,
+            },
+            wall_secs: req_f64(a, "wall_secs")?,
+            oracle_secs: req_f64(a, "oracle_secs")?,
+            time_band: req_f64(a, "time_band")?,
+        })
+    }
+
+    /// Load and validate a baseline file.
+    pub fn load(path: &Path) -> anyhow::Result<Baseline> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!(
+                "no baseline at {} ({e}); run `bench --rebaseline` to create it",
+                path.display()
+            )
+        })?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: malformed JSON: {e}", path.display()))?;
+        Baseline::from_json(&json).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Write the baseline file (compact JSON + trailing newline).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        Ok(())
+    }
+}
+
+/// Build the gate-run spec from a baseline's provenance. Everything not
+/// pinned by the provenance is the crate default (so a default-changing
+/// PR that alters the trajectory *does* trip the gate — that is the
+/// point; rebaseline intentionally if the change is wanted).
+fn spec_of(ds: DatasetKind, prov: &BaselineProvenance) -> anyhow::Result<TrainSpec> {
+    let scale = Scale::parse(&prov.scale)
+        .ok_or_else(|| anyhow::anyhow!("baseline provenance: bad scale '{}'", prov.scale))?;
+    let algo = Algo::parse(&prov.algo)
+        .ok_or_else(|| anyhow::anyhow!("baseline provenance: bad algo '{}'", prov.algo))?;
+    Ok(TrainSpec {
+        dataset: ds,
+        scale,
+        data_seed: prov.data_seed,
+        algo,
+        seed: prov.seed,
+        max_iters: prov.max_iters,
+        max_approx_passes: prov.max_approx_passes,
+        auto_approx: false,
+        threads: prov.threads as usize,
+        eval_every: 1,
+        ..Default::default()
+    })
+}
+
+/// Run the gate configuration once and collect its counters.
+pub fn measure(ds: DatasetKind, prov: &BaselineProvenance) -> anyhow::Result<Measured> {
+    let spec = spec_of(ds, prov)?;
+    let s = trainer::train(&spec)?;
+    anyhow::ensure!(!s.points.is_empty(), "gate run produced no eval points");
+    let first = s.points.first().unwrap();
+    let last = s.points.last().unwrap();
+    let target = (first.primal - first.dual) * prov.target_frac;
+    let hit = s.points.iter().find(|p| p.primal - p.dual <= target);
+    let (calls_to, passes_to, reached) = match hit {
+        Some(p) => (p.oracle_calls, p.outer, true),
+        None => (last.oracle_calls, last.outer, false),
+    };
+    Ok(Measured {
+        counters: BaselineCounters {
+            oracle_calls_to_target: calls_to,
+            passes_to_target: passes_to,
+            reached,
+            exact_oracle_calls: last.oracle_calls,
+            approx_steps: last.approx_steps,
+            pairwise_steps: last.pairwise_steps,
+            cached_visits: last.cached_visits,
+            product_refreshes: last.product_refreshes,
+            peak_plane_bytes: s.peak_plane_bytes(),
+            peak_gram_bytes: s.peak_gram_bytes(),
+            final_dual_hex: hex_of(last.dual),
+            target_gap_hex: hex_of(target),
+        },
+        wall_secs: s.wall_secs,
+        oracle_secs: last.oracle_secs,
+    })
+}
+
+/// Field-by-field exact comparison of two counter sets; returns one
+/// failure string per differing metric, naming it.
+pub fn counters_diff(
+    scenario: &str,
+    base: &BaselineCounters,
+    meas: &BaselineCounters,
+) -> Vec<String> {
+    let mut fails = Vec::new();
+    let mut ck = |metric: &str, b: String, m: String| {
+        if b != m {
+            fails.push(format!("{scenario}/{metric}: baseline {b}, measured {m}"));
+        }
+    };
+    ck(
+        "oracle_calls_to_target",
+        base.oracle_calls_to_target.to_string(),
+        meas.oracle_calls_to_target.to_string(),
+    );
+    ck(
+        "passes_to_target",
+        base.passes_to_target.to_string(),
+        meas.passes_to_target.to_string(),
+    );
+    ck("reached", base.reached.to_string(), meas.reached.to_string());
+    ck(
+        "exact_oracle_calls",
+        base.exact_oracle_calls.to_string(),
+        meas.exact_oracle_calls.to_string(),
+    );
+    ck("approx_steps", base.approx_steps.to_string(), meas.approx_steps.to_string());
+    ck(
+        "pairwise_steps",
+        base.pairwise_steps.to_string(),
+        meas.pairwise_steps.to_string(),
+    );
+    ck("cached_visits", base.cached_visits.to_string(), meas.cached_visits.to_string());
+    ck(
+        "product_refreshes",
+        base.product_refreshes.to_string(),
+        meas.product_refreshes.to_string(),
+    );
+    ck(
+        "peak_plane_bytes",
+        base.peak_plane_bytes.to_string(),
+        meas.peak_plane_bytes.to_string(),
+    );
+    ck(
+        "peak_gram_bytes",
+        base.peak_gram_bytes.to_string(),
+        meas.peak_gram_bytes.to_string(),
+    );
+    ck("final_dual", base.final_dual_hex.clone(), meas.final_dual_hex.clone());
+    ck("target_gap", base.target_gap_hex.clone(), meas.target_gap_hex.clone());
+    fails
+}
+
+/// Compare a fresh run against a pinned baseline. Counters gate
+/// exactly; the wall-time band is advisory, skipped under `smoke` and
+/// for baselines below [`MIN_GATED_WALL_SECS`].
+pub fn compare(b: &Baseline, m: &Measured, smoke: bool) -> Vec<String> {
+    let mut fails = counters_diff(&b.scenario, &b.counters, &m.counters);
+    if !smoke && b.wall_secs >= MIN_GATED_WALL_SECS {
+        let limit = b.wall_secs * (1.0 + b.time_band);
+        if m.wall_secs > limit {
+            fails.push(format!(
+                "{}/wall_secs: measured {:.3}s exceeds the advisory +{:.0}% band over \
+                 baseline {:.3}s (limit {:.3}s)",
+                b.scenario,
+                m.wall_secs,
+                100.0 * b.time_band,
+                b.wall_secs,
+                limit
+            ));
+        }
+    }
+    fails
+}
+
+/// `bench --regress`: re-run each scenario's baseline configuration and
+/// gate against the committed file. Returns an error (→ nonzero exit)
+/// naming every offending metric.
+pub fn run_regress(
+    datasets: &[DatasetKind],
+    baseline_dir: &Path,
+    smoke: bool,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    log("== REGRESS: fresh gate runs vs committed BENCH baselines".into());
+    let mut failures: Vec<String> = Vec::new();
+    let mut unpinned = 0usize;
+    for &ds in datasets {
+        let path = baseline_path(baseline_dir, ds);
+        let b = Baseline::load(&path)?;
+        anyhow::ensure!(
+            b.scenario == scenario_name(ds) && b.dataset == ds.name(),
+            "{}: scenario/dataset fields ({}, {}) do not match the file's scenario ({}, {})",
+            path.display(),
+            b.scenario,
+            b.dataset,
+            scenario_name(ds),
+            ds.name()
+        );
+        let m = measure(ds, &b.provenance)?;
+        if b.pinned {
+            let fails = compare(&b, &m, smoke);
+            if fails.is_empty() {
+                log(format!(
+                    "   {:16} OK  calls-to-target {:>5}  passes {:>3}  final dual {}",
+                    b.scenario,
+                    m.counters.oracle_calls_to_target,
+                    m.counters.passes_to_target,
+                    m.counters.final_dual_hex
+                ));
+            } else {
+                for f in &fails {
+                    log(format!("   {:16} FAIL  {f}", b.scenario));
+                }
+                failures.extend(fails);
+            }
+        } else {
+            // Bootstrap baseline: no trusted counters yet. Gate the one
+            // thing checkable without history — a twin run must
+            // reproduce every counter bitwise — and ask for a pin.
+            unpinned += 1;
+            let twin = measure(ds, &b.provenance)?;
+            let fails = counters_diff(&b.scenario, &m.counters, &twin.counters);
+            if fails.is_empty() {
+                log(format!(
+                    "   {:16} unpinned: twin-run determinism OK (calls-to-target {}); \
+                     run `bench --rebaseline` to pin",
+                    b.scenario, m.counters.oracle_calls_to_target
+                ));
+            } else {
+                for f in &fails {
+                    log(format!("   {:16} FAIL (twin determinism)  {f}", b.scenario));
+                }
+                failures.extend(fails);
+            }
+        }
+    }
+    if !failures.is_empty() {
+        anyhow::bail!(
+            "bench --regress: {} metric gate(s) failed:\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        );
+    }
+    if unpinned > 0 {
+        log(format!(
+            "   note: {unpinned} baseline(s) are unpinned bootstraps — run \
+             `bench --rebaseline` and commit the result to enable exact gating"
+        ));
+    }
+    Ok(())
+}
+
+/// `bench --rebaseline`: regenerate the baseline files intentionally.
+/// An existing file's provenance is kept (re-pinning measures the same
+/// configuration the repo has been gating); a missing file gets the
+/// canonical default provenance. Always writes `"pinned": true`.
+pub fn run_rebaseline(
+    datasets: &[DatasetKind],
+    baseline_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(baseline_dir)?;
+    log("== REBASELINE: regenerating BENCH baselines (intentional)".into());
+    for &ds in datasets {
+        let path = baseline_path(baseline_dir, ds);
+        let prov = match Baseline::load(&path) {
+            Ok(prior) => prior.provenance,
+            Err(_) => BaselineProvenance::default(),
+        };
+        let m = measure(ds, &prov)?;
+        let b = Baseline {
+            schema_version: SCHEMA_VERSION,
+            scenario: scenario_name(ds).to_string(),
+            dataset: ds.name().to_string(),
+            pinned: true,
+            provenance: prov,
+            counters: m.counters,
+            wall_secs: m.wall_secs,
+            oracle_secs: m.oracle_secs,
+            time_band: DEFAULT_TIME_BAND,
+        };
+        b.save(&path)?;
+        log(format!(
+            "   {:16} pinned  calls-to-target {:>5}  final dual {}  -> {}",
+            b.scenario,
+            b.counters.oracle_calls_to_target,
+            b.counters.final_dual_hex,
+            path.display()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_counters() -> BaselineCounters {
+        BaselineCounters {
+            oracle_calls_to_target: 120,
+            passes_to_target: 2,
+            reached: true,
+            exact_oracle_calls: 360,
+            approx_steps: 500,
+            pairwise_steps: 0,
+            cached_visits: 180,
+            product_refreshes: 60,
+            peak_plane_bytes: 4096,
+            peak_gram_bytes: 2048,
+            final_dual_hex: hex_of(0.4321),
+            target_gap_hex: hex_of(0.1234),
+        }
+    }
+
+    fn sample_baseline() -> Baseline {
+        Baseline {
+            schema_version: SCHEMA_VERSION,
+            scenario: "multiclass_like".into(),
+            dataset: "usps_like".into(),
+            pinned: true,
+            provenance: BaselineProvenance::default(),
+            counters: sample_counters(),
+            wall_secs: 10.0,
+            oracle_secs: 6.0,
+            time_band: DEFAULT_TIME_BAND,
+        }
+    }
+
+    fn measured_matching(b: &Baseline) -> Measured {
+        Measured {
+            counters: b.counters.clone(),
+            wall_secs: b.wall_secs,
+            oracle_secs: b.oracle_secs,
+        }
+    }
+
+    #[test]
+    fn hex_roundtrips_bitwise() {
+        for x in [0.0, -0.0, 1.5, -3.25e-8, f64::MAX, f64::MIN_POSITIVE, 0.1 + 0.2] {
+            let h = hex_of(x);
+            assert_eq!(h.len(), 16);
+            assert_eq!(f64_of_hex(&h).unwrap().to_bits(), x.to_bits(), "hex {h}");
+        }
+        assert!(f64_of_hex("xyz").is_err());
+        assert!(f64_of_hex("00").is_err());
+    }
+
+    #[test]
+    fn baseline_json_roundtrips() {
+        let b = sample_baseline();
+        let text = b.to_json().to_string();
+        let back = Baseline::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(b, back);
+    }
+
+    #[test]
+    fn schema_version_mismatch_names_the_field() {
+        let mut b = sample_baseline();
+        b.schema_version = SCHEMA_VERSION + 41;
+        let err = Baseline::from_json(&Json::parse(&b.to_json().to_string()).unwrap())
+            .unwrap_err();
+        assert!(err.contains("schema_version"), "error must name the field: {err}");
+    }
+
+    #[test]
+    fn injected_counter_regression_names_the_metric() {
+        let b = sample_baseline();
+        let mut m = measured_matching(&b);
+        m.counters.oracle_calls_to_target += 7;
+        let fails = compare(&b, &m, false);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("oracle_calls_to_target"), "{fails:?}");
+        assert!(fails[0].contains("multiclass_like"), "gate names the scenario: {fails:?}");
+
+        let mut m = measured_matching(&b);
+        m.counters.final_dual_hex = hex_of(0.43210000001);
+        let fails = compare(&b, &m, false);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("final_dual"), "{fails:?}");
+
+        let mut m = measured_matching(&b);
+        m.counters.peak_gram_bytes += 1;
+        m.counters.reached = false;
+        let fails = compare(&b, &m, false);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("peak_gram_bytes")), "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("reached")), "{fails:?}");
+    }
+
+    #[test]
+    fn wall_time_band_is_advisory_and_skipped_under_smoke() {
+        let b = sample_baseline(); // wall 10s, band ±50% → limit 15s
+        let mut m = measured_matching(&b);
+        m.wall_secs = 14.9;
+        assert!(compare(&b, &m, false).is_empty(), "inside the band");
+        m.wall_secs = 16.0;
+        let fails = compare(&b, &m, false);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("wall_secs"), "{fails:?}");
+        assert!(compare(&b, &m, true).is_empty(), "smoke skips the time band");
+        // Too-fast baselines are never time-gated (scheduler noise).
+        let mut fast = sample_baseline();
+        fast.wall_secs = 0.01;
+        let mut m = measured_matching(&fast);
+        m.wall_secs = 0.4;
+        assert!(compare(&fast, &m, false).is_empty());
+    }
+
+    #[test]
+    fn matching_run_passes_cleanly() {
+        let b = sample_baseline();
+        assert!(compare(&b, &measured_matching(&b), false).is_empty());
+    }
+
+    #[test]
+    fn rebaseline_roundtrips_and_injected_regression_gates() {
+        let dir =
+            std::env::temp_dir().join(format!("mpbcfw_regress_rt_{}", std::process::id()));
+        run_rebaseline(&[DatasetKind::UspsLike], &dir, |_| {}).unwrap();
+        let path = baseline_path(&dir, DatasetKind::UspsLike);
+        let b = Baseline::load(&path).unwrap();
+        assert!(b.pinned);
+        assert_eq!(b.scenario, "multiclass_like");
+        assert_eq!(b.dataset, "usps_like");
+        // Freshly pinned → a regress run reproduces every counter.
+        run_regress(&[DatasetKind::UspsLike], &dir, true, |_| {}).unwrap();
+        // Inject a regression: pretend the baseline needed fewer calls.
+        let mut tampered = b.clone();
+        tampered.counters.oracle_calls_to_target =
+            b.counters.oracle_calls_to_target.saturating_sub(1);
+        tampered.save(&path).unwrap();
+        let err = run_regress(&[DatasetKind::UspsLike], &dir, true, |_| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("oracle_calls_to_target"), "gate must name the metric: {err}");
+        // A schema bump in the file gates nonzero naming schema_version.
+        let mut wrong = b.to_json().to_string();
+        wrong = wrong.replacen("\"schema_version\":1", "\"schema_version\":99", 1);
+        std::fs::write(&path, wrong).unwrap();
+        let err = run_regress(&[DatasetKind::UspsLike], &dir, true, |_| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("schema_version"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unpinned_bootstrap_passes_determinism_and_points_at_rebaseline() {
+        let dir =
+            std::env::temp_dir().join(format!("mpbcfw_regress_boot_{}", std::process::id()));
+        let mut b = sample_baseline(); // junk counters — must be ignored
+        b.pinned = false;
+        b.save(&baseline_path(&dir, DatasetKind::UspsLike)).unwrap();
+        let mut lines = Vec::new();
+        run_regress(&[DatasetKind::UspsLike], &dir, true, |m| lines.push(m)).unwrap();
+        assert!(
+            lines.iter().any(|l| l.contains("rebaseline")),
+            "bootstrap pass must point at --rebaseline: {lines:?}"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_baseline_is_an_error_naming_the_path() {
+        let dir =
+            std::env::temp_dir().join(format!("mpbcfw_regress_miss_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = run_regress(&[DatasetKind::OcrLike], &dir, true, |_| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("BENCH_ocr_like.json"), "{err}");
+        assert!(err.contains("rebaseline"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn scenario_names_follow_the_oracle_family() {
+        assert_eq!(scenario_name(DatasetKind::UspsLike), "multiclass_like");
+        assert_eq!(scenario_name(DatasetKind::OcrLike), "ocr_like");
+        assert_eq!(scenario_name(DatasetKind::HorsesegLike), "horseseg_like");
+        assert_eq!(
+            baseline_path(Path::new("x"), DatasetKind::HorsesegLike),
+            PathBuf::from("x/BENCH_horseseg_like.json")
+        );
+    }
+}

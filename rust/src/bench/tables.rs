@@ -13,6 +13,27 @@ use crate::utils::json::Json;
 
 use super::figures::FigureOpts;
 
+/// The shared pinned-trajectory base spec of the A/B sweeps (and the
+/// same pinning discipline `bench --regress` gates under): MP-BCFW with
+/// `auto_approx` off and a fixed approximate-pass budget, because the
+/// §3.4 slope rule is wall-clock-driven and would fork the step
+/// sequence between variants — with it pinned, the bitwise trajectory
+/// columns below are meaningful.
+pub(crate) fn pinned_base(ds: DatasetKind, opts: &FigureOpts) -> TrainSpec {
+    TrainSpec {
+        dataset: ds,
+        scale: opts.scale,
+        data_seed: opts.data_seed,
+        algo: Algo::MpBcfw,
+        max_iters: opts.max_iters,
+        oracle_delay: opts.oracle_delay,
+        engine: opts.engine.clone(),
+        auto_approx: false,
+        max_approx_passes: 3,
+        ..Default::default()
+    }
+}
+
 /// TAB1 — §4.1 statistics: per-oracle-call cost and the fraction of
 /// training time spent in the oracle, for BCFW vs MP-BCFW on each dataset
 /// (paper: USPS ≈15%, OCR ≈60%, HorseSeg ≈99% → ≈25%).
@@ -382,21 +403,7 @@ pub fn sparsity_sweep(
     let mut entries: Vec<Json> = Vec::new();
     log("== SPARSITY: sparse vs dense plane storage (PlaneVec layer)".into());
     for ds in DatasetKind::all() {
-        // auto_approx is timing-based; pin the pass schedule so the two
-        // storage modes run the exact same step sequence and the
-        // bitwise-trajectory check below is meaningful.
-        let base = TrainSpec {
-            dataset: ds,
-            scale: opts.scale,
-            data_seed: opts.data_seed,
-            algo: Algo::MpBcfw,
-            max_iters: opts.max_iters,
-            oracle_delay: opts.oracle_delay,
-            engine: opts.engine.clone(),
-            auto_approx: false,
-            max_approx_passes: 3,
-            ..Default::default()
-        };
+        let base = pinned_base(ds, opts);
         let mut sparse_duals: Vec<f64> = Vec::new();
         for dense in [false, true] {
             let spec = TrainSpec { dense_planes: dense, ..base.clone() };
@@ -490,21 +497,7 @@ pub fn oracle_reuse_sweep(
     let mut entries: Vec<Json> = Vec::new();
     log("== ORACLE: warm-start dynamic max-oracle (persistent arenas) vs cold".into());
     for ds in DatasetKind::all() {
-        // auto_approx is timing-based; pin the pass schedule so the two
-        // reuse modes run the exact same step sequence and the bitwise
-        // trajectory check below is meaningful.
-        let base = TrainSpec {
-            dataset: ds,
-            scale: opts.scale,
-            data_seed: opts.data_seed,
-            algo: Algo::MpBcfw,
-            max_iters: opts.max_iters,
-            oracle_delay: opts.oracle_delay,
-            engine: opts.engine.clone(),
-            auto_approx: false,
-            max_approx_passes: 3,
-            ..Default::default()
-        };
+        let base = pinned_base(ds, opts);
         let mut cold_duals: Vec<f64> = Vec::new();
         for reuse in [false, true] {
             let spec = TrainSpec { oracle_reuse: reuse, ..base.clone() };
@@ -613,21 +606,7 @@ pub fn products_sweep(
     let mut entries: Vec<Json> = Vec::new();
     log("== PRODUCTS: Gram arena + incremental product maintenance (§3.5)".into());
     for ds in DatasetKind::all() {
-        // auto_approx is timing-based; pin the pass schedule so every
-        // variant runs the identical visit sequence and the bitwise
-        // baseline check below is meaningful.
-        let base = TrainSpec {
-            dataset: ds,
-            scale: opts.scale,
-            data_seed: opts.data_seed,
-            algo: Algo::MpBcfw,
-            max_iters: opts.max_iters,
-            oracle_delay: opts.oracle_delay,
-            engine: opts.engine.clone(),
-            auto_approx: false,
-            max_approx_passes: 3,
-            ..Default::default()
-        };
+        let base = pinned_base(ds, opts);
         let mut baseline_duals: Vec<f64> = Vec::new();
         for (gram, products) in [
             (GramBackend::Hashmap, ProductMode::Recompute),

@@ -3,7 +3,7 @@
 use std::path::Path;
 
 use super::args::Args;
-use crate::bench::{figures, tables};
+use crate::bench::{figures, regress, tables};
 use crate::coordinator::products::{GramBackend, ProductMode};
 use crate::coordinator::sampling::{SamplingStrategy, StepRule};
 use crate::coordinator::trainer::{self, Algo, DatasetKind, EngineKind, TrainSpec};
@@ -27,6 +27,8 @@ USAGE:
   mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR] [--smoke]
+  mpbcfw bench    --regress [--smoke] | --rebaseline
+                  [--baselines DIR] [--dataset usps|ocr|horseseg|all]
   mpbcfw gen-data --dataset usps|ocr|horseseg --out FILE [--scale ...] [--seed S]
   mpbcfw evaluate --model FILE [--dataset ...] [--scale ...] [--data-seed S] [--engine ...]
   mpbcfw inspect  [--artifacts DIR]
@@ -85,7 +87,17 @@ schedule (--no-auto-approx; the automatic rule is wall-clock-driven) the
 whole trajectory matches bit for bit. --oracle-reuse off restores the
 cold build-every-call baseline, and `bench --table oracle` quantifies
 the difference (wall time plus the oracle_build_s/oracle_solve_s
-split).";
+split).
+
+`bench --regress` is the perf-regression gate: it replays each
+committed BENCH_<scenario>.json baseline's pinned configuration (the
+file's provenance, not the CLI options) and exits nonzero naming any
+counter that differs — oracle calls/passes to the target gap, step and
+visit counts, peak plane/Gram bytes, and the hex-encoded final dual all
+gate bitwise; wall-time fields gate on a relative band and are skipped
+under --smoke. `bench --rebaseline` regenerates the files intentionally
+(review the diff like code). See docs/ALGORITHMS.md,
+'Perf-regression gates and re-baselining'.";
 
 fn parse_engine(args: &Args) -> anyhow::Result<EngineKind> {
     match args.get_or("engine", "native") {
@@ -261,6 +273,25 @@ pub fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let out_dir = Path::new(args.get_or("out", "results")).to_path_buf();
     let datasets = parse_datasets(args)?;
     let log = |m: String| println!("{m}");
+    if args.has("regress") || args.has("rebaseline") {
+        anyhow::ensure!(
+            !(args.has("regress") && args.has("rebaseline")),
+            "pass either --regress or --rebaseline, not both"
+        );
+        anyhow::ensure!(
+            args.get("figure").is_none() && args.get("table").is_none(),
+            "--regress/--rebaseline do not combine with --figure/--table"
+        );
+        // Baseline files live at the repo root by convention; the gate
+        // configuration comes from each file's provenance, not from the
+        // CLI options above (--smoke only relaxes the wall-time band).
+        let dir = Path::new(args.get_or("baselines", ".")).to_path_buf();
+        return if args.has("rebaseline") {
+            regress::run_rebaseline(&datasets, &dir, log)
+        } else {
+            regress::run_regress(&datasets, &dir, args.has("smoke"), log)
+        };
+    }
     match (args.get("figure"), args.get("table")) {
         (Some(fig), None) => figures::run_figures(fig, &datasets, &opts, &out_dir, log),
         (None, Some(tab)) => tables::run_table(tab, &datasets, &opts, &out_dir, log),
@@ -324,7 +355,8 @@ pub fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 
 /// Entry point used by main.rs; returns the process exit code.
 pub fn dispatch(argv: Vec<String>) -> i32 {
-    let bool_flags = ["no-auto-approx", "train-loss", "help", "dense-planes", "smoke"];
+    let bool_flags =
+        ["no-auto-approx", "train-loss", "help", "dense-planes", "smoke", "regress", "rebaseline"];
     let args = match Args::parse(argv, &bool_flags) {
         Ok(a) => a,
         Err(e) => {
@@ -515,5 +547,33 @@ mod tests {
     #[test]
     fn bench_requires_figure_or_table() {
         assert_eq!(dispatch(toks("bench --scale tiny")), 1);
+    }
+
+    #[test]
+    fn bench_rebaseline_then_regress_roundtrips() {
+        let dir =
+            std::env::temp_dir().join(format!("mpbcfw_cli_regress_{}", std::process::id()));
+        let cmd = format!("bench --rebaseline --dataset usps --baselines {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(dir.join("BENCH_multiclass_like.json").exists());
+        let cmd =
+            format!("bench --regress --smoke --dataset usps --baselines {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0, "freshly pinned baseline must gate clean");
+        let cmd = format!("bench --regress --rebaseline --baselines {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 1, "--regress and --rebaseline are exclusive");
+        let cmd = format!("bench --regress --table products --baselines {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 1, "--regress does not combine with --table");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bench_regress_without_baselines_gates_nonzero() {
+        let dir = std::env::temp_dir()
+            .join(format!("mpbcfw_cli_regress_missing_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cmd =
+            format!("bench --regress --smoke --dataset ocr --baselines {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 1, "missing baseline file must gate nonzero");
+        std::fs::remove_dir_all(dir).ok();
     }
 }

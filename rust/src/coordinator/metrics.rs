@@ -174,6 +174,19 @@ impl Series {
         self.points.last().map(|p| p.primal - p.dual).unwrap_or(f64::INFINITY)
     }
 
+    /// Peak cached-plane bytes over the eval series (the working-set
+    /// memory high-water mark; 0 for planeless algorithms or an empty
+    /// series). Gated exactly by `bench --regress`.
+    pub fn peak_plane_bytes(&self) -> u64 {
+        self.points.iter().map(|p| p.plane_bytes).max().unwrap_or(0)
+    }
+
+    /// Peak Gram-cache bytes over the eval series (0 when product
+    /// caching is off or the series is empty).
+    pub fn peak_gram_bytes(&self) -> u64 {
+        self.points.iter().map(|p| p.gram_bytes).max().unwrap_or(0)
+    }
+
     /// Accumulate the timing report of one parallel exact pass
     /// (per-shard oracle seconds + pass wall time).
     pub fn note_parallel_pass(&mut self, shard_secs: &[f64], wall_secs: f64) {
@@ -306,6 +319,45 @@ mod tests {
         };
         assert_eq!(s.best_dual(), 0.55);
         assert!((s.final_gap() - (0.7 - 0.52)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_peak_bytes_are_maxima_not_finals() {
+        let mk = |plane_bytes: u64, gram_bytes: u64| EvalPoint {
+            outer: 0,
+            oracle_calls: 0,
+            time: 0.0,
+            primal: 1.0,
+            dual: 0.0,
+            primal_avg: None,
+            dual_avg: None,
+            ws_mean: 0.0,
+            plane_bytes,
+            plane_nnz_mean: 0.0,
+            approx_passes: 0,
+            approx_steps: 0,
+            pairwise_steps: 0,
+            gap_est: f64::NAN,
+            oracle_secs: 0.0,
+            oracle_build_s: 0.0,
+            oracle_solve_s: 0.0,
+            gram_bytes,
+            gram_hit_rate: f64::NAN,
+            cached_visits: 0,
+            product_refreshes: 0,
+            train_loss: f64::NAN,
+        };
+        let empty = Series::default();
+        assert_eq!(empty.peak_plane_bytes(), 0);
+        assert_eq!(empty.peak_gram_bytes(), 0);
+        // Eviction can shrink the working set after its high-water mark,
+        // so the peak must not be read off the final point.
+        let s = Series {
+            points: vec![mk(100, 8), mk(700, 64), mk(300, 16)],
+            ..Default::default()
+        };
+        assert_eq!(s.peak_plane_bytes(), 700);
+        assert_eq!(s.peak_gram_bytes(), 64);
     }
 
     #[test]

@@ -1027,6 +1027,61 @@ mod tests {
         assert_eq!(fresh, 7.0 * 11.0 + 1.0, "stale product served after slot recycle");
     }
 
+    /// Generalizes the deterministic recycle test above: under an
+    /// adversarial interleaving of cap-evicting inserts and TTL
+    /// evictions — slots recycled many times over, cells written under
+    /// several generations — every lookup on both backends must equal
+    /// the freshly computed product bitwise. A single stale stamped
+    /// entry served breaks the §3.5 pairwise-step arithmetic silently,
+    /// which is exactly what the generation-stamp invariant (and the
+    /// hashmap's `forget_ids` contract) exists to prevent.
+    #[test]
+    fn no_stale_gram_under_adversarial_slot_churn() {
+        prop_check("gram fresh under churn", 60, |g| {
+            let dim = g.usize(2, 10);
+            let cap = g.usize(2, 5);
+            let ops = g.usize(10, 50);
+            let mut ws = WorkingSet::new(cap);
+            let mut tri = GramCache::new();
+            let mut map = GramCache::hashmap();
+            let mut next_tag = 1u64;
+            for t in 0..ops as u64 {
+                if ws.is_empty() || g.bool() {
+                    let k = g.usize(1, dim);
+                    let pairs: Vec<(u32, f64)> =
+                        (0..k).map(|_| (g.rng.below(dim) as u32, g.normal())).collect();
+                    let plane = Plane::new(PlaneVec::sparse(dim, pairs), g.normal(), next_tag);
+                    next_tag += 1;
+                    let (_, evicted) = ws.insert_with_evicted(plane, t);
+                    if let Some(id) = evicted {
+                        map.forget_ids(&[id]);
+                    }
+                } else {
+                    let ttl = g.usize(1, 3) as u64;
+                    let dead = ws.evict_stale_ids(t, ttl);
+                    map.forget_ids(&dead);
+                }
+                for a in 0..ws.len() {
+                    for b in 0..ws.len() {
+                        let truth = ws.plane_ref(a).star.dot(ws.plane_ref(b).star);
+                        for (name, cache) in
+                            [("triangular", &mut tri), ("hashmap", &mut map)]
+                        {
+                            let served = cache.get(&ws, a, b);
+                            if served.to_bits() != truth.to_bits() {
+                                return Err(format!(
+                                    "{name} served stale ⟨{a},{b}⟩ at op {t}: \
+                                     {served} (cached) vs {truth} (fresh)"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     // ---- incremental maintenance ------------------------------------
 
     #[test]

@@ -1,0 +1,153 @@
+//! Pairwise-covering configuration matrix: a tiny-scale sweep over
+//! threads × sampling × steps × products × gram × oracle-reuse. Full
+//! factorial is 2·3·2·2·2·2 = 96 runs; the 8 rows below cover every
+//! *pair* of factor levels (verified by `rows_are_pairwise_covering`),
+//! which is where config-interaction bugs live. Every row must train
+//! without panic with a monotone dual and weak duality, and every
+//! threads=4 row must bitwise-match its threads=1 twin (snapshot
+//! scoring + deterministic merge order make the trajectory invariant
+//! across worker counts ≥ 1; threads=0 is the freshest-w sequential
+//! path with a legitimately different trajectory, so the twin is 1).
+
+use mpbcfw::coordinator::products::{GramBackend, ProductMode};
+use mpbcfw::coordinator::sampling::{SamplingStrategy, StepRule};
+use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
+use mpbcfw::data::types::Scale;
+
+struct Row {
+    threads: usize,
+    sampling: SamplingStrategy,
+    steps: StepRule,
+    products: ProductMode,
+    gram: GramBackend,
+    oracle_reuse: bool,
+}
+
+fn rows() -> Vec<Row> {
+    use GramBackend::{Hashmap, Triangular};
+    use ProductMode::{Incremental, Recompute};
+    use SamplingStrategy::{Cyclic, GapProportional, Uniform};
+    use StepRule::{Fw, Pairwise};
+    let mk = |threads, sampling, steps, products, gram, oracle_reuse| Row {
+        threads,
+        sampling,
+        steps,
+        products,
+        gram,
+        oracle_reuse,
+    };
+    vec![
+        mk(1, Uniform, Fw, Recompute, Hashmap, true),
+        mk(4, Uniform, Pairwise, Incremental, Triangular, false),
+        mk(1, GapProportional, Pairwise, Recompute, Triangular, true),
+        mk(4, GapProportional, Fw, Incremental, Hashmap, false),
+        mk(1, Cyclic, Fw, Incremental, Triangular, true),
+        mk(4, Cyclic, Pairwise, Recompute, Hashmap, false),
+        mk(1, Uniform, Fw, Incremental, Hashmap, false),
+        mk(4, GapProportional, Pairwise, Recompute, Triangular, true),
+    ]
+}
+
+fn spec_for(row: &Row, threads: usize) -> TrainSpec {
+    TrainSpec {
+        dataset: DatasetKind::UspsLike,
+        scale: Scale::Tiny,
+        algo: Algo::MpBcfw,
+        seed: 7,
+        max_iters: 3,
+        // Pin the pass schedule: the §3.4 rule is wall-clock-driven and
+        // would fork the twin trajectories under load.
+        auto_approx: false,
+        max_approx_passes: 2,
+        threads,
+        sampling: row.sampling,
+        steps: row.steps,
+        products: row.products,
+        gram: row.gram,
+        oracle_reuse: row.oracle_reuse,
+        eval_every: 1,
+        ..Default::default()
+    }
+}
+
+fn level_indices(r: &Row) -> [usize; 6] {
+    [
+        match r.threads {
+            1 => 0,
+            _ => 1,
+        },
+        match r.sampling {
+            SamplingStrategy::Uniform => 0,
+            SamplingStrategy::GapProportional => 1,
+            SamplingStrategy::Cyclic => 2,
+        },
+        match r.steps {
+            StepRule::Fw => 0,
+            StepRule::Pairwise => 1,
+        },
+        match r.products {
+            ProductMode::Recompute => 0,
+            ProductMode::Incremental => 1,
+        },
+        match r.gram {
+            GramBackend::Hashmap => 0,
+            GramBackend::Triangular => 1,
+        },
+        usize::from(!r.oracle_reuse),
+    ]
+}
+
+#[test]
+fn rows_are_pairwise_covering() {
+    let levels = [2usize, 3, 2, 2, 2, 2];
+    let idx: Vec<[usize; 6]> = rows().iter().map(level_indices).collect();
+    for i in 0..6 {
+        for j in (i + 1)..6 {
+            let mut seen = std::collections::HashSet::new();
+            for row in &idx {
+                seen.insert((row[i], row[j]));
+            }
+            assert_eq!(
+                seen.len(),
+                levels[i] * levels[j],
+                "factor pair ({i},{j}) not fully covered by the matrix"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_row_trains_and_parallel_rows_match_their_sequential_twin() {
+    for (k, row) in rows().iter().enumerate() {
+        let s = train(&spec_for(row, row.threads))
+            .unwrap_or_else(|e| panic!("row {k}: training failed: {e}"));
+        assert!(!s.points.is_empty(), "row {k}: no eval points");
+        for p in &s.points {
+            assert!(p.primal >= p.dual - 1e-9, "row {k}: weak duality violated");
+        }
+        for w in s.points.windows(2) {
+            assert!(
+                w[1].dual >= w[0].dual - 1e-10,
+                "row {k}: dual decreased {} -> {}",
+                w[0].dual,
+                w[1].dual
+            );
+        }
+        if row.threads > 1 {
+            let twin = train(&spec_for(row, 1))
+                .unwrap_or_else(|e| panic!("row {k}: twin failed: {e}"));
+            let bits =
+                |pts: &[mpbcfw::coordinator::metrics::EvalPoint]| -> Vec<(u64, u64, u64)> {
+                    pts.iter()
+                        .map(|p| (p.dual.to_bits(), p.primal.to_bits(), p.oracle_calls))
+                        .collect()
+                };
+            assert_eq!(
+                bits(&s.points),
+                bits(&twin.points),
+                "row {k}: threads={} trajectory diverged from its threads=1 twin",
+                row.threads
+            );
+        }
+    }
+}

@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Bench-table gate: parse a bench CSV and fail if any row's value in
+the named column is `false`, printing the offending rows.
+
+Replaces the fragile `! grep -q false table.csv` CI checks, which (a)
+could trip on `false` anywhere in the file — a dataset name, a float's
+digits after a format change — and (b) could not say which row broke.
+An empty or header-only table also fails (subsumes `test -s`): a sweep
+that silently produced nothing must not read as green.
+
+    python3 tools/check_tables.py results/table_products.csv matches_baseline
+
+Empty cells are allowed — some tables leave the bitwise column blank on
+rows that make no claim (e.g. the reference row itself).
+"""
+
+import csv
+import sys
+
+
+def main():
+    if len(sys.argv) != 3:
+        print("usage: check_tables.py <table.csv> <column>")
+        return 2
+    path, column = sys.argv[1], sys.argv[2]
+    try:
+        with open(path, newline="") as fh:
+            rows = list(csv.reader(fh))
+    except OSError as e:
+        print(f"check_tables: {path}: {e}")
+        return 1
+    if not rows:
+        print(f"check_tables: {path}: empty file")
+        return 1
+    header, data = rows[0], rows[1:]
+    if column not in header:
+        print(f"check_tables: {path}: no column '{column}' (have: {', '.join(header)})")
+        return 1
+    col = header.index(column)
+    if not data:
+        print(f"check_tables: {path}: header only, no data rows")
+        return 1
+    bad = [
+        (line_no, row)
+        for line_no, row in enumerate(data, start=2)
+        if len(row) > col and row[col].strip() == "false"
+    ]
+    if bad:
+        print(f"check_tables: {path}: {len(bad)} row(s) failed the '{column}' check")
+        for line_no, row in bad:
+            cells = ", ".join(f"{h}={v}" for h, v in zip(header, row))
+            print(f"  line {line_no}: {cells}")
+        return 1
+    print(f"check_tables: OK ({path}: {len(data)} rows, column '{column}' clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,11 @@ CHECKED_STRUCTS = [
     ("EvalPoint", "rust/src/coordinator/metrics.rs"),
     ("TrainSpec", "rust/src/coordinator/trainer.rs"),
     ("MpBcfwConfig", "rust/src/coordinator/mp_bcfw.rs"),
+    ("BaselineProvenance", "rust/src/bench/regress.rs"),
+    ("BaselineCounters", "rust/src/bench/regress.rs"),
+    ("Baseline", "rust/src/bench/regress.rs"),
+    ("Measured", "rust/src/bench/regress.rs"),
+    ("GoldenFixture", "rust/tests/golden_trajectory.rs"),
 ]
 
 OPEN = {"{": "}", "(": ")", "[": "]"}
