@@ -4,6 +4,7 @@ use std::path::Path;
 
 use super::args::Args;
 use crate::bench::{figures, regress, tables};
+use crate::coordinator::async_overlap::AsyncMode;
 use crate::coordinator::products::{GramBackend, ProductMode};
 use crate::coordinator::sampling::{SamplingStrategy, StepRule};
 use crate::coordinator::trainer::{self, Algo, DatasetKind, EngineKind, TrainSpec};
@@ -22,9 +23,10 @@ USAGE:
                   [--sampling uniform|gap|cyclic] [--steps fw|pairwise] [--dense-planes]
                   [--products recompute|incremental] [--gram hashmap|triangular]
                   [--product-refresh K] [--oracle-reuse on|off] [--threads N]
+                  [--async off|on] [--max-stale-epochs K]
                   [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
                   [--train-loss] [--max-oracle-calls N] [--target-gap F]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|all
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|async|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR] [--smoke]
   mpbcfw bench    --regress [--smoke] | --rebaseline
@@ -88,6 +90,21 @@ whole trajectory matches bit for bit. --oracle-reuse off restores the
 cold build-every-call baseline, and `bench --table oracle` quantifies
 the difference (wall time plus the oracle_build_s/oracle_solve_s
 split).
+
+--async on overlaps the costly exact oracle with the cheap cached
+passes: a persistent worker pool (sized by --threads) solves max-oracle
+calls against epoch-stamped snapshots of w while the main thread keeps
+running approximate passes, and finished planes fold back in dispatch
+order under a monotone guard — a plane whose snapshot went stale is
+line-search-replayed against the current w and rejected (block requeued)
+if it no longer improves the dual, so the dual stays monotone.
+--max-stale-epochs K bounds how far dispatched work may trail the
+current epoch before the driver blocks and drains; K=0 degenerates to
+synchronous dispatch and is bitwise-identical to --async off at equal
+threads, while K>=1 trades bitwise replay for overlap under a bounded
+dual-drift contract. --async off (the default) is bit-identical to
+previous releases and stays anchored by the golden-trajectory fixtures.
+`bench --table async` sweeps the modes.
 
 `bench --regress` is the perf-regression gate: it replays each
 committed BENCH_<scenario>.json baseline's pinned configuration (the
@@ -163,6 +180,9 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad --gram (hashmap|triangular)"))?,
         product_refresh_every: args.u64_or("product-refresh", 8).map_err(err)?,
         oracle_reuse,
+        async_mode: AsyncMode::parse(args.get_or("async", "off"))
+            .ok_or_else(|| anyhow::anyhow!("bad --async (off|on)"))?,
+        max_stale_epochs: args.u64_or("max-stale-epochs", 1).map_err(err)?,
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
@@ -495,6 +515,47 @@ mod tests {
             1,
             "--products recompute without cached passes must be rejected"
         );
+    }
+
+    #[test]
+    fn train_with_async_flags() {
+        assert_eq!(
+            dispatch(toks(
+                "train --scale tiny --iters 2 --dataset usps --threads 2 \
+                 --no-auto-approx --async on --max-stale-epochs 2"
+            )),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --async maybe")),
+            1,
+            "unknown --async value must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --async on")),
+            1,
+            "--async on without a worker pool (--threads 0) must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --algo ssg --threads 0 --async on")),
+            1,
+            "--async on on a baseline must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --max-stale-epochs 3")),
+            1,
+            "--max-stale-epochs without --async on must be rejected"
+        );
+    }
+
+    #[test]
+    fn bench_async_smoke_runs() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_cli_async_{}", std::process::id()));
+        let cmd = format!("bench --table async --smoke --out {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(dir.join("table_async.csv").exists());
+        assert!(dir.join("bench_async.json").exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

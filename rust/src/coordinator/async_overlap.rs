@@ -1,0 +1,868 @@
+//! Asynchronous exact-oracle overlap (`--async on`).
+//!
+//! The paper's premise is a *costly* max-oracle: the exact pass
+//! dominates wall-clock (§4.1: ≈99% for HorseSeg graph cuts before
+//! multi-plane caching). The synchronous loop — even the sharded one in
+//! `coordinator::parallel` — still *waits* for the whole exact pass
+//! before the cheap approximate passes may run. This module removes the
+//! wait: a persistent pool of oracle workers solves max-oracle calls
+//! against an epoch-stamped snapshot of w while the main thread keeps
+//! making cached/pairwise progress, and finished planes fold back into
+//! the dual state as they land.
+//!
+//! # Scheduling policy
+//!
+//! Per outer epoch the driver:
+//!
+//!  1. absorbs completed planes and folds them **in dispatch order**
+//!     (a FIFO fold queue — arrival timing decides *when* a plane
+//!     folds, never the relative order of folds, which keeps every
+//!     executor's fold sequence deterministic);
+//!  2. dispatches this epoch's sampled block order to the pool against
+//!     a fresh `Arc` snapshot of w (one oracle call per distinct block,
+//!     same dedup as the synchronous sharded pass; blocks pin to
+//!     workers by `id % workers`, as in `coordinator::parallel`, so
+//!     warm per-example solver graphs stay on one arena);
+//!  3. enforces the staleness bound: while the fold queue's front entry
+//!     is ≥ `max_stale_epochs` epochs old, the driver *blocks* on the
+//!     pool until that plane can fold — this is the dispatch throttle;
+//!  4. runs the approximate passes, absorbing and folding completions
+//!     between passes (the overlap).
+//!
+//! # Determinism contract
+//!
+//! * `--async off` is the bulk-synchronous loop, bitwise-identical to
+//!   the pre-async code at a fixed seed (anchored by the golden
+//!   fixtures in `tests/golden_trajectory.rs`).
+//! * `--async on --max-stale-epochs 0` drains the pool inside every
+//!   epoch, which replays the synchronous trajectory **bit for bit**
+//!   (pinned in `tests/async_overlap.rs`): the fold order equals the
+//!   dispatch order, every plane depends only on (block, snapshot-w),
+//!   and the budget ledger below truncates identically.
+//! * `--async on` with K ≥ 1 follows a **bounded-drift** contract
+//!   instead: planes may fold up to K epochs late, so the trajectory is
+//!   not bitwise comparable to the synchronous one — but every fold
+//!   passes a monotone guard (`DualState::peek_step_info`): a stale
+//!   plane whose exact line search would not improve the dual is
+//!   rejected, counted in `stale_rejects`, and its block is requeued
+//!   for a fresh oracle call. The dual therefore **never decreases**,
+//!   and weak duality is preserved, under *any* completion order
+//!   (adversarial orderings are driven through [`VirtualExecutor`]).
+//!
+//! # Budget ledger and a metrics caveat
+//!
+//! The oracle budget (`max_oracle_calls`) runs on the driver's own
+//! `dispatched_total` ledger, not on `CountingOracle::stats().calls`:
+//! under the threaded pool the shared counter can lag behind (workers
+//! mid-call), while the ledger is deterministic and equals the counter
+//! at every synchronization point. Relatedly, evaluation sweeps toggle
+//! `set_counting(false)` globally; with the threaded pool and K ≥ 1 a
+//! worker may complete a counted training call inside that window, so
+//! the *reported* `oracle_calls` column can undercount slightly under
+//! `--async on`. The virtual executor is single-threaded, so tests see
+//! exact counts.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+
+use super::auto::SlopeRule;
+use super::metrics::Series;
+use super::mp_bcfw::{self, MpBcfwConfig, MpBcfwRun};
+use super::sampling::{build_sampler, BlockSampler as _, StepRule};
+use crate::model::plane::Plane;
+use crate::model::problem::StructuredProblem;
+use crate::model::scratch::OracleScratch;
+use crate::oracle::wrappers::{atomic_add_f64, CountingOracle};
+use crate::runtime::engine::{NativeEngine, ScoringEngine};
+use crate::utils::timer::{Clock, Stopwatch};
+
+/// Exact-pass dispatch mode (CLI `--async {off,on}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AsyncMode {
+    /// Bulk-synchronous exact pass (the default; bitwise anchor).
+    Off,
+    /// Overlapped worker-pool dispatch with the bounded-drift contract.
+    On,
+}
+
+impl AsyncMode {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Option<AsyncMode> {
+        match s {
+            "off" => Some(AsyncMode::Off),
+            "on" => Some(AsyncMode::On),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI/metrics token.
+    pub fn name(self) -> &'static str {
+        match self {
+            AsyncMode::Off => "off",
+            AsyncMode::On => "on",
+        }
+    }
+}
+
+/// Counters of the async fold path, reported in the evaluation columns
+/// `planes_folded_async` / `stale_rejects` / `mean_snapshot_staleness`
+/// / `worker_idle_s`. All zero when `async_mode` is `Off`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AsyncStats {
+    /// Planes folded back through the async path (fresh and stale).
+    pub planes_folded_async: u64,
+    /// Stale planes rejected by the monotone guard (block requeued).
+    pub stale_rejects: u64,
+    /// Sum over folded planes of their snapshot staleness in epochs
+    /// (rejected folds excluded).
+    pub staleness_sum: u64,
+    /// Cumulative seconds pool workers spent waiting for work (0 for
+    /// the virtual executor).
+    pub worker_idle_s: f64,
+}
+
+impl AsyncStats {
+    /// Mean snapshot staleness over folded planes (0 when none folded).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.planes_folded_async == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.planes_folded_async as f64
+        }
+    }
+}
+
+/// A completed oracle call coming back from an executor.
+#[derive(Debug)]
+pub struct OracleDone {
+    /// Block the oracle was called on.
+    pub block: usize,
+    /// Outer epoch of the w snapshot the call was solved against.
+    pub epoch: u64,
+    /// The loss-augmented argmax plane.
+    pub plane: Plane,
+    /// Worker that served the call (timing splits fold onto the
+    /// matching arena slot of `MpBcfwRun::oracle_scratches`).
+    pub worker: usize,
+    /// Solver-graph build seconds of this call.
+    pub build_s: f64,
+    /// Solve/decode seconds of this call.
+    pub solve_s: f64,
+}
+
+/// The driver's view of an oracle pool. Implementations: the real
+/// [`ThreadedExecutor`] (scoped worker threads, wall-clock completion
+/// order) and the deterministic [`VirtualExecutor`] (virtual clock,
+/// scripted adversarial completion orders — what the tests drive).
+pub trait OracleExecutor {
+    /// Enqueue one oracle call on block `block` against snapshot `w`
+    /// taken at epoch `epoch`.
+    fn submit(&mut self, block: usize, epoch: u64, w: &Arc<Vec<f64>>);
+    /// A completed call if one is available *now*, without blocking.
+    fn try_recv(&mut self) -> Option<OracleDone>;
+    /// Block until some call completes. `None` only when nothing is in
+    /// flight (or the pool died) — the driver treats that as "this
+    /// plane will never arrive" and requeues, so it can never hang.
+    fn recv(&mut self) -> Option<OracleDone>;
+    /// Calls submitted but not yet received.
+    fn outstanding(&self) -> usize;
+    /// Worker count (the `id % workers` pinning modulus, and the
+    /// critical-path divisor for virtual oracle latency).
+    fn workers(&self) -> usize;
+    /// Cumulative worker idle seconds (waiting for work).
+    fn idle_secs(&self) -> f64;
+    /// Advance the executor's notion of time by one step. No-op for
+    /// real pools; the virtual executor releases completions on ticks.
+    fn tick(&mut self) {}
+}
+
+struct Task {
+    block: usize,
+    epoch: u64,
+    w: Arc<Vec<f64>>,
+}
+
+/// Real worker pool on scoped threads: worker k owns a `NativeEngine`
+/// plus a persistent `OracleScratch` arena and serves the blocks with
+/// `block % workers == k` (the same residue-class pinning as
+/// `coordinator::parallel`, so every revisit is a warm hit). Completion
+/// order is wall-clock — nondeterministic, which is exactly what the
+/// monotone fold guard is for.
+pub struct ThreadedExecutor {
+    task_txs: Vec<Sender<Task>>,
+    done_rx: Receiver<OracleDone>,
+    outstanding: usize,
+    workers: usize,
+    idle_bits: Arc<AtomicU64>,
+}
+
+impl ThreadedExecutor {
+    /// Spawn `workers` pool threads on scope `s`. Threads exit when the
+    /// executor (its task senders) is dropped.
+    pub fn start<'scope, 'env>(
+        s: &'scope std::thread::Scope<'scope, 'env>,
+        problem: &'env CountingOracle,
+        workers: usize,
+        reuse: bool,
+    ) -> ThreadedExecutor {
+        let workers = workers.max(1);
+        let (done_tx, done_rx) = mpsc::channel::<OracleDone>();
+        let idle_bits = Arc::new(AtomicU64::new(0f64.to_bits()));
+        let mut task_txs = Vec::with_capacity(workers);
+        for k in 0..workers {
+            let (tx, rx) = mpsc::channel::<Task>();
+            task_txs.push(tx);
+            let done_tx = done_tx.clone();
+            let idle_bits = Arc::clone(&idle_bits);
+            s.spawn(move || {
+                let mut eng = NativeEngine;
+                let mut scratch = OracleScratch::new(reuse);
+                loop {
+                    let sw = Stopwatch::start();
+                    let Ok(task) = rx.recv() else { break };
+                    atomic_add_f64(&idle_bits, sw.secs());
+                    let b0 = scratch.build_secs;
+                    let s0 = scratch.solve_secs;
+                    let plane =
+                        problem.oracle_scratch(task.block, &task.w, &mut eng, &mut scratch);
+                    let done = OracleDone {
+                        block: task.block,
+                        epoch: task.epoch,
+                        plane,
+                        worker: k,
+                        build_s: scratch.build_secs - b0,
+                        solve_s: scratch.solve_secs - s0,
+                    };
+                    if done_tx.send(done).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        ThreadedExecutor { task_txs, done_rx, outstanding: 0, workers, idle_bits }
+    }
+}
+
+impl OracleExecutor for ThreadedExecutor {
+    fn submit(&mut self, block: usize, epoch: u64, w: &Arc<Vec<f64>>) {
+        let k = block % self.workers;
+        if self.task_txs[k].send(Task { block, epoch, w: Arc::clone(w) }).is_ok() {
+            self.outstanding += 1;
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<OracleDone> {
+        match self.done_rx.try_recv() {
+            Ok(d) => {
+                self.outstanding -= 1;
+                Some(d)
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn recv(&mut self) -> Option<OracleDone> {
+        if self.outstanding == 0 {
+            return None;
+        }
+        match self.done_rx.recv() {
+            Ok(d) => {
+                self.outstanding -= 1;
+                Some(d)
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn idle_secs(&self) -> f64 {
+        f64::from_bits(self.idle_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Scripted completion order for the [`VirtualExecutor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionOrder {
+    /// Each dispatch batch completes in submission order.
+    Fifo,
+    /// Each dispatch batch completes in reverse submission order.
+    Reversed,
+    /// Odd-position submissions lag behind the even ones.
+    Interleaved,
+    /// Worker k never volunteers a completion — its planes surface only
+    /// when the staleness throttle *forces* a blocking `recv`. Models a
+    /// straggler core.
+    Starve(usize),
+}
+
+struct VirtualSlot {
+    /// Virtual time at which this completion becomes visible to
+    /// `try_recv` (`u64::MAX` = starved: only a forced `recv` sees it).
+    ready: u64,
+    seq: u64,
+    done: OracleDone,
+}
+
+/// Deterministic executor on a virtual clock: `submit` computes the
+/// plane eagerly (valid — a plane depends only on (block, snapshot-w),
+/// never on scheduling) and the scripted [`CompletionOrder`] decides
+/// when each completion becomes *visible*. Single-threaded, so async
+/// tests are bit-reproducible and independent of wall clock, core
+/// count and scheduler behaviour.
+pub struct VirtualExecutor<'a> {
+    problem: &'a CountingOracle,
+    eng: NativeEngine,
+    scratches: Vec<OracleScratch>,
+    order: CompletionOrder,
+    workers: usize,
+    now: u64,
+    seq: u64,
+    fresh: Vec<OracleDone>,
+    pending: Vec<VirtualSlot>,
+}
+
+impl<'a> VirtualExecutor<'a> {
+    /// A pool of `workers` virtual workers completing per `order`.
+    pub fn new(
+        problem: &'a CountingOracle,
+        workers: usize,
+        reuse: bool,
+        order: CompletionOrder,
+    ) -> VirtualExecutor<'a> {
+        let workers = workers.max(1);
+        VirtualExecutor {
+            problem,
+            eng: NativeEngine,
+            scratches: (0..workers).map(|_| OracleScratch::new(reuse)).collect(),
+            order,
+            workers,
+            now: 0,
+            seq: 0,
+            fresh: Vec::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Assign ready-times to the latest dispatch batch. Lazy — run at
+    /// the top of every drain entry point, so a batch submitted and
+    /// immediately force-received (the K = 0 path) is complete.
+    fn finalize_fresh(&mut self) {
+        if self.fresh.is_empty() {
+            return;
+        }
+        let batch: Vec<OracleDone> = std::mem::take(&mut self.fresh);
+        let b = batch.len() as u64;
+        let base = self.now + 1;
+        for (p, done) in batch.into_iter().enumerate() {
+            let p = p as u64;
+            let ready = match self.order {
+                CompletionOrder::Fifo => base + p,
+                CompletionOrder::Reversed => base + (b - 1 - p),
+                CompletionOrder::Interleaved => {
+                    if p % 2 == 0 {
+                        base + p / 2
+                    } else {
+                        base + (b + 1) / 2 + p / 2
+                    }
+                }
+                CompletionOrder::Starve(k) => {
+                    if done.worker == k {
+                        u64::MAX
+                    } else {
+                        base + p
+                    }
+                }
+            };
+            let seq = self.seq;
+            self.seq += 1;
+            self.pending.push(VirtualSlot { ready, seq, done });
+        }
+    }
+}
+
+impl OracleExecutor for VirtualExecutor<'_> {
+    fn submit(&mut self, block: usize, epoch: u64, w: &Arc<Vec<f64>>) {
+        let k = block % self.workers;
+        let scratch = &mut self.scratches[k];
+        let b0 = scratch.build_secs;
+        let s0 = scratch.solve_secs;
+        let plane = self.problem.oracle_scratch(block, w, &mut self.eng, scratch);
+        self.fresh.push(OracleDone {
+            block,
+            epoch,
+            plane,
+            worker: k,
+            build_s: scratch.build_secs - b0,
+            solve_s: scratch.solve_secs - s0,
+        });
+    }
+
+    fn try_recv(&mut self) -> Option<OracleDone> {
+        self.finalize_fresh();
+        let now = self.now;
+        let best = self
+            .pending
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.ready <= now)
+            .min_by_key(|(_, s)| (s.ready, s.seq))
+            .map(|(i, _)| i)?;
+        Some(self.pending.swap_remove(best).done)
+    }
+
+    fn recv(&mut self) -> Option<OracleDone> {
+        self.finalize_fresh();
+        if self.pending.is_empty() {
+            return None;
+        }
+        // Forced wait: earliest completion first; starved planes are
+        // surfaced last but *are* surfaced — the throttle cannot hang.
+        let best = self
+            .pending
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| (s.ready == u64::MAX, s.ready, s.seq))
+            .map(|(i, _)| i)
+            .expect("pending non-empty");
+        Some(self.pending.swap_remove(best).done)
+    }
+
+    fn outstanding(&self) -> usize {
+        self.pending.len() + self.fresh.len()
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn idle_secs(&self) -> f64 {
+        0.0
+    }
+
+    fn tick(&mut self) {
+        self.finalize_fresh();
+        self.now += 1;
+    }
+}
+
+/// Fold one completed plane into the dual state. Fresh planes
+/// (staleness 0) replay the synchronous step verbatim. Stale planes
+/// first pass the monotone guard: a non-mutating replay of the exact
+/// line search (`DualState::peek_step_info`); γ ≤ 0 means the plane
+/// arrived too late to improve the dual, so it is rejected (no
+/// working-set insert, no gap record) and its block requeued for a
+/// fresh oracle call. Returns whether the plane was applied.
+pub(crate) fn fold_plane(
+    run: &mut MpBcfwRun,
+    i: usize,
+    plane: &Plane,
+    staleness: u64,
+    outer: u64,
+    pairwise: bool,
+    cfg: &MpBcfwConfig,
+    requeued: &mut Vec<usize>,
+) -> bool {
+    if staleness > 0 {
+        let info = run.state.peek_step_info(i, plane.view());
+        if info.gamma <= 0.0 {
+            run.async_stats.stale_rejects += 1;
+            requeued.push(i);
+            return false;
+        }
+    }
+    mp_bcfw::apply_exact_step(run, i, plane, outer, pairwise, cfg);
+    run.async_stats.planes_folded_async += 1;
+    run.async_stats.staleness_sum += staleness;
+    true
+}
+
+/// Merge a completed call into the arrival map (and its timing splits
+/// onto the matching scratch arena, same worker-order convention as the
+/// sharded pass).
+fn absorb_done(
+    run: &mut MpBcfwRun,
+    arrived: &mut HashMap<(u64, usize), Plane>,
+    cfg: &MpBcfwConfig,
+    done: OracleDone,
+) {
+    let k = done.worker % run.oracle_scratches.len();
+    run.oracle_scratches[k].build_secs += done.build_s;
+    run.oracle_scratches[k].solve_secs += done.solve_s;
+    let plane = if cfg.dense_planes { done.plane.into_dense() } else { done.plane };
+    arrived.insert((done.epoch, done.block), plane);
+}
+
+/// Fold, strictly in dispatch (FIFO) order, every queue-front entry
+/// whose plane has arrived; stop at the first entry still in flight.
+#[allow(clippy::too_many_arguments)]
+fn fold_ready(
+    run: &mut MpBcfwRun,
+    queue: &mut VecDeque<(u64, usize)>,
+    uses: &mut HashMap<(u64, usize), usize>,
+    arrived: &mut HashMap<(u64, usize), Plane>,
+    requeued: &mut Vec<usize>,
+    outer: u64,
+    pairwise: bool,
+    cfg: &MpBcfwConfig,
+) {
+    while let Some(&key) = queue.front() {
+        let Some(plane) = arrived.get(&key) else { break };
+        let staleness = outer - key.0;
+        fold_plane(run, key.1, plane, staleness, outer, pairwise, cfg, requeued);
+        queue.pop_front();
+        let left = uses.get_mut(&key).expect("fold-queue entry without a uses count");
+        *left -= 1;
+        if *left == 0 {
+            uses.remove(&key);
+            arrived.remove(&key);
+        }
+    }
+}
+
+/// The staleness throttle: while the fold queue's front entry is
+/// `k_eff` or more epochs old, block on the pool until it can fold
+/// (`k_eff = 0` drains everything — the final-iteration / budget /
+/// bitwise-equivalence path).
+#[allow(clippy::too_many_arguments)]
+fn force_folds<E: OracleExecutor>(
+    exec: &mut E,
+    run: &mut MpBcfwRun,
+    queue: &mut VecDeque<(u64, usize)>,
+    uses: &mut HashMap<(u64, usize), usize>,
+    arrived: &mut HashMap<(u64, usize), Plane>,
+    requeued: &mut Vec<usize>,
+    outer: u64,
+    k_eff: u64,
+    pairwise: bool,
+    cfg: &MpBcfwConfig,
+) {
+    loop {
+        fold_ready(run, queue, uses, arrived, requeued, outer, pairwise, cfg);
+        let Some(&key) = queue.front() else { return };
+        if outer - key.0 < k_eff {
+            return;
+        }
+        match exec.recv() {
+            Some(done) => absorb_done(run, arrived, cfg, done),
+            None => {
+                // Nothing in flight can satisfy this entry (a worker
+                // died mid-call). Drop it and requeue the block so no
+                // oracle result is silently lost.
+                queue.pop_front();
+                if let Some(left) = uses.get_mut(&key) {
+                    *left -= 1;
+                    if *left == 0 {
+                        uses.remove(&key);
+                    }
+                }
+                requeued.push(key.1);
+            }
+        }
+    }
+}
+
+/// Run `--async on` against the real scoped-thread pool: one worker
+/// per configured thread, each with a persistent warm-oracle arena.
+/// Planes still in flight when the run stops early (target gap / time
+/// limit) are discarded; the pool exits when the executor drops.
+pub fn run_async(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+) -> (Series, MpBcfwRun) {
+    std::thread::scope(|s| {
+        let mut exec = ThreadedExecutor::start(s, problem, cfg.threads.max(1), cfg.oracle_reuse);
+        run_async_with(problem, eng, cfg, &mut exec)
+    })
+}
+
+/// The async drive loop against any executor (the tests inject a
+/// [`VirtualExecutor`] with adversarial completion orders). See the
+/// module docs for the scheduling policy and determinism contract.
+pub fn run_async_with<E: OracleExecutor>(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    exec: &mut E,
+) -> (Series, MpBcfwRun) {
+    problem.reset_stats();
+    let mut clock = Clock::new();
+    let mut run = mp_bcfw::new_run(problem, cfg);
+    let mut series = mp_bcfw::new_series(problem, cfg);
+    // Initial evaluation point (w = 0).
+    mp_bcfw::record_point(problem, eng, &mut clock, cfg, &mut run, 0, 0, &mut series);
+
+    let n = problem.n();
+    let pairwise = cfg.steps == StepRule::Pairwise && cfg.cap_n > 0;
+    let mut sampler = build_sampler(cfg.sampling, n);
+    let mut last_approx_passes = 0u64;
+    // Deterministic budget ledger (see module docs).
+    let mut dispatched_total: u64 = 0;
+    // (epoch, block) fold entries in dispatch order, their owed fold
+    // counts (sampling with replacement folds one plane repeatedly),
+    // and the planes that have arrived but not yet fully folded.
+    let mut queue: VecDeque<(u64, usize)> = VecDeque::new();
+    let mut uses: HashMap<(u64, usize), usize> = HashMap::new();
+    let mut arrived: HashMap<(u64, usize), Plane> = HashMap::new();
+    let mut requeued: Vec<usize> = Vec::new();
+
+    'outer: for outer in 1..=cfg.max_iters {
+        let f_now = run.state.dual_value();
+        let mut slope = SlopeRule::start_iteration(f_now, mp_bcfw::measured(&clock, problem));
+        run.gaps.begin_pass();
+
+        // Absorb whatever completed since the last epoch.
+        exec.tick();
+        while let Some(done) = exec.try_recv() {
+            absorb_done(&mut run, &mut arrived, cfg, done);
+        }
+        fold_ready(&mut run, &mut queue, &mut uses, &mut arrived, &mut requeued, outer, pairwise, cfg);
+
+        // ---- Dispatch this epoch's exact-oracle work ------------------
+        run.state.refresh_w();
+        let mut order: Vec<usize> = std::mem::take(&mut requeued);
+        order.extend(sampler.pass_order(&mut run.rng, &run.gaps));
+        if cfg.max_oracle_calls > 0 {
+            let remaining = cfg.max_oracle_calls.saturating_sub(dispatched_total) as usize;
+            order.truncate(remaining);
+        }
+        // One oracle call per distinct block per epoch (same dedup as
+        // the synchronous sharded pass); duplicate draws fold the same
+        // arrived plane again.
+        let mut uniq: Vec<usize> = Vec::with_capacity(order.len());
+        for &i in &order {
+            let owed = uses.entry((outer, i)).or_insert(0);
+            if *owed == 0 {
+                uniq.push(i);
+            }
+            *owed += 1;
+        }
+        let snapshot = Arc::new(run.state.w.clone());
+        for &i in &uniq {
+            exec.submit(i, outer, &snapshot);
+        }
+        dispatched_total += uniq.len() as u64;
+        for &i in &order {
+            queue.push_back((outer, i));
+        }
+        // Virtual latency: the pool's critical path is its largest
+        // residue class, as in the synchronous sharded pass.
+        if problem.delay > 0.0 && !uniq.is_empty() {
+            let m = exec.workers().max(1);
+            let mut loads = vec![0usize; m];
+            for &i in &uniq {
+                loads[i % m] += 1;
+            }
+            clock.charge(problem.delay * loads.iter().copied().max().unwrap_or(0) as f64);
+        }
+
+        // ---- Staleness throttle (and final/budget full drain) ---------
+        let budget_hit = cfg.max_oracle_calls > 0 && dispatched_total >= cfg.max_oracle_calls;
+        let k_eff = if budget_hit || outer == cfg.max_iters { 0 } else { cfg.max_stale_epochs };
+        force_folds(
+            exec, &mut run, &mut queue, &mut uses, &mut arrived, &mut requeued, outer, k_eff,
+            pairwise, cfg,
+        );
+        if budget_hit {
+            run.async_stats.worker_idle_s = exec.idle_secs();
+            mp_bcfw::record_point(
+                problem, eng, &mut clock, cfg, &mut run, outer, last_approx_passes, &mut series,
+            );
+            break 'outer;
+        }
+
+        // ---- Overlapped approximate passes ----------------------------
+        let mut passes = 0u64;
+        if cfg.cap_n > 0 {
+            while passes < cfg.max_approx_passes {
+                // The overlap: between passes, absorb any planes that
+                // have landed and fold them within the staleness bound.
+                exec.tick();
+                while let Some(done) = exec.try_recv() {
+                    absorb_done(&mut run, &mut arrived, cfg, done);
+                }
+                fold_ready(
+                    &mut run, &mut queue, &mut uses, &mut arrived, &mut requeued, outer,
+                    pairwise, cfg,
+                );
+                slope.begin_pass(run.state.dual_value(), mp_bcfw::measured(&clock, problem));
+                let perm = run.rng.permutation(n);
+                for &i in perm.iter() {
+                    mp_bcfw::approx_block_visit(&mut run, i, outer, pairwise, cfg);
+                }
+                passes += 1;
+                if cfg.auto_approx
+                    && !slope
+                        .continue_approx(run.state.dual_value(), mp_bcfw::measured(&clock, problem))
+                {
+                    break;
+                }
+            }
+        }
+        if cfg.cap_n > 0 && passes == 0 {
+            for i in 0..n {
+                mp_bcfw::ttl_evict(&mut run, i, outer, cfg, pairwise);
+            }
+        }
+        last_approx_passes = passes;
+
+        if cfg.renorm_every > 0 && outer % cfg.renorm_every == 0 {
+            run.state.renormalize();
+        }
+        run.outers_done = outer;
+
+        // ---- Evaluation / stopping ------------------------------------
+        if outer % cfg.eval_every == 0 || outer == cfg.max_iters {
+            run.async_stats.worker_idle_s = exec.idle_secs();
+            let pt = mp_bcfw::record_point(
+                problem, eng, &mut clock, cfg, &mut run, outer, last_approx_passes, &mut series,
+            );
+            if cfg.target_gap > 0.0 && pt.primal - pt.dual <= cfg.target_gap {
+                break;
+            }
+        }
+        if cfg.max_time > 0.0 && mp_bcfw::measured(&clock, problem) >= cfg.max_time {
+            break;
+        }
+    }
+
+    series.wall_secs = clock.wall();
+    run.state.refresh_w();
+    (series, run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::oracle::multiclass::MulticlassProblem;
+
+    fn tiny_problem(seed: u64) -> CountingOracle {
+        CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+            UspsLikeConfig::at_scale(Scale::Tiny),
+            seed,
+        ))))
+    }
+
+    #[test]
+    fn async_mode_parse_roundtrip() {
+        for m in [AsyncMode::Off, AsyncMode::On] {
+            assert_eq!(AsyncMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(AsyncMode::parse("sideways"), None);
+        assert_eq!(AsyncMode::parse(""), None);
+    }
+
+    #[test]
+    fn mean_staleness_is_zero_safe() {
+        assert_eq!(AsyncStats::default().mean_staleness(), 0.0);
+        let s = AsyncStats { planes_folded_async: 4, staleness_sum: 6, ..Default::default() };
+        assert!((s.mean_staleness() - 1.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn virtual_executor_orderings_release_as_specified() {
+        let problem = tiny_problem(1);
+        let w = Arc::new(vec![0.0; problem.dim()]);
+        let collect = |order: CompletionOrder| {
+            let mut ex = VirtualExecutor::new(&problem, 2, true, order);
+            for b in 0..4 {
+                ex.submit(b, 1, &w);
+            }
+            for _ in 0..8 {
+                ex.tick();
+            }
+            let mut got = Vec::new();
+            while let Some(d) = ex.try_recv() {
+                got.push(d.block);
+            }
+            got
+        };
+        assert_eq!(collect(CompletionOrder::Fifo), vec![0, 1, 2, 3]);
+        assert_eq!(collect(CompletionOrder::Reversed), vec![3, 2, 1, 0]);
+        assert_eq!(collect(CompletionOrder::Interleaved), vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn virtual_executor_starves_one_worker_until_forced() {
+        let problem = tiny_problem(1);
+        let w = Arc::new(vec![0.0; problem.dim()]);
+        let mut ex = VirtualExecutor::new(&problem, 2, true, CompletionOrder::Starve(0));
+        for b in 0..4 {
+            ex.submit(b, 1, &w);
+        }
+        for _ in 0..8 {
+            ex.tick();
+        }
+        let mut free = Vec::new();
+        while let Some(d) = ex.try_recv() {
+            free.push(d.block);
+        }
+        assert_eq!(free, vec![1, 3], "starved worker's planes never volunteer");
+        // A forced recv surfaces them anyway — the throttle cannot hang.
+        let forced: Vec<usize> = std::iter::from_fn(|| ex.recv()).map(|d| d.block).collect();
+        assert_eq!(forced, vec![0, 2]);
+        assert_eq!(ex.outstanding(), 0);
+        assert!(ex.recv().is_none());
+    }
+
+    #[test]
+    fn stale_fold_guard_rejects_non_improving_planes() {
+        let problem = tiny_problem(1);
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig::mp_paper(1.0 / problem.n() as f64);
+        let mut run = mp_bcfw::new_run(&problem, &cfg);
+        let mut requeued = Vec::new();
+        run.state.refresh_w();
+        let hat = problem.oracle(0, &run.state.w, &mut eng);
+        // Fresh fold (staleness 0): applied unconditionally.
+        assert!(fold_plane(&mut run, 0, &hat, 0, 1, false, &cfg, &mut requeued));
+        assert_eq!(run.async_stats.planes_folded_async, 1);
+        assert!(requeued.is_empty());
+        // Refolding the very same plane as a stale arrival cannot
+        // improve the dual — the line search already landed at its
+        // optimum along this direction — so the guard must reject,
+        // count it, and requeue the block.
+        assert!(!fold_plane(&mut run, 0, &hat, 1, 2, false, &cfg, &mut requeued));
+        assert_eq!(run.async_stats.stale_rejects, 1);
+        assert_eq!(requeued, vec![0]);
+        assert_eq!(run.async_stats.planes_folded_async, 1, "rejected folds must not count");
+        assert_eq!(run.async_stats.staleness_sum, 0);
+    }
+
+    #[test]
+    fn threaded_executor_roundtrips_all_submissions() {
+        let problem = tiny_problem(2);
+        let w = Arc::new(vec![0.0; problem.dim()]);
+        std::thread::scope(|s| {
+            let mut ex = ThreadedExecutor::start(s, &problem, 3, true);
+            assert_eq!(ex.workers(), 3);
+            for b in 0..7 {
+                ex.submit(b, 1, &w);
+            }
+            assert_eq!(ex.outstanding(), 7);
+            let mut blocks: Vec<usize> = std::iter::from_fn(|| ex.recv())
+                .map(|d| {
+                    assert_eq!(d.epoch, 1);
+                    assert_eq!(d.worker, d.block % 3, "residue-class pinning");
+                    d.block
+                })
+                .collect();
+            blocks.sort_unstable();
+            assert_eq!(blocks, (0..7).collect::<Vec<_>>());
+            assert_eq!(ex.outstanding(), 0);
+            assert!(ex.try_recv().is_none());
+        });
+        assert_eq!(problem.stats().calls, 7);
+    }
+}

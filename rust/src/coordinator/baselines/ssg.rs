@@ -124,6 +124,10 @@ fn record(
         gram_hit_rate: f64::NAN,
         cached_visits: 0,
         product_refreshes: 0,
+        planes_folded_async: 0, // no async driver
+        stale_rejects: 0,
+        mean_snapshot_staleness: 0.0,
+        worker_idle_s: 0.0,
         train_loss,
     });
 }

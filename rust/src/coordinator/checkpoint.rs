@@ -1,18 +1,47 @@
 //! Model persistence: save a trained SSVM (weights + dual state summary)
-//! and load it back for evaluation or warm-started training.
+//! and load it back for evaluation or warm-started training — plus full
+//! mid-run training checkpoints (`save_run`/`load_run`) that serialize
+//! the optimizer state so `mp_bcfw::resume` continues the trajectory
+//! bitwise.
 //!
 //! Format: little-endian binary with a versioned magic header, mirroring
-//! `data::io`. The checkpoint stores the dual plane φ (from which
+//! `data::io`. The model checkpoint stores the dual plane φ (from which
 //! w = −φ_*/λ is re-derived), λ, and metadata identifying the problem it
 //! was trained on, so `mpbcfw evaluate` can refuse a mismatched dataset.
+//!
+//! The run checkpoint stores everything trajectory-bearing: the RNG raw
+//! state, the dual state (φ, per-block φ^i, the incrementally maintained
+//! ‖φ^i_*‖² caches — bit-for-bit, since recomputing them would drift),
+//! the working sets (payloads in their original sparse/dense
+//! representation — representation round-trips so slab reinsertion is
+//! bitwise), the §3.5 product rows, the pairwise coefficient ledgers,
+//! the gap estimates, the counters, and the oracle-call ledger (restored
+//! into the fresh `CountingOracle` via `charge_calls`). Deliberately NOT
+//! serialized, because they are value-neutral caches rebuilt cold:
+//! Gram caches, oracle scratch arenas, and the coefficient scratch
+//! buffer. Averagers are also not serialized — resuming an `--averaging`
+//! run is unsupported (`resume` rejects it). All floats are stored as
+//! raw IEEE-754 bits, so a save/load round trip is exact.
+//!
+//! Corrupt or truncated run checkpoints fail with an error naming the
+//! byte offset at which the read failed (`CountingReader`).
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Result, Write};
+use std::io::{BufReader, BufWriter, Error, ErrorKind, Read, Result, Write};
 use std::path::Path;
 
-use crate::model::plane::DensePlane;
+use super::mp_bcfw::{self, MpBcfwConfig, MpBcfwRun};
+use super::async_overlap::AsyncStats;
+use super::dual::DualState;
+use super::products::{BlockProducts, ProductStats};
+use super::sampling::BlockGaps;
+use super::working_set::{BlockCoeffs, WorkingSet};
+use crate::model::plane::{DensePlane, Plane, PlaneVec, PlaneVecView};
+use crate::oracle::wrappers::CountingOracle;
+use crate::utils::rng::Pcg;
 
 const MAGIC: &[u8; 8] = b"MPBCMD01";
+const RUN_MAGIC: &[u8; 8] = b"MPBCRN01";
 
 /// A trained model: everything needed to score new instances (and to
 /// bound how suboptimal the snapshot was).
@@ -111,6 +140,388 @@ impl ModelCheckpoint {
     }
 }
 
+// ---------------------------------------------------------------------
+// Mid-run training checkpoints
+// ---------------------------------------------------------------------
+
+fn wu64(f: &mut impl Write, v: u64) -> Result<()> {
+    f.write_all(&v.to_le_bytes())
+}
+
+fn wf64(f: &mut impl Write, v: f64) -> Result<()> {
+    f.write_all(&v.to_le_bytes())
+}
+
+/// Serialize a mid-run optimizer state. Pair with [`load_run`] and
+/// `mp_bcfw::resume`: the resumed trajectory is bitwise-identical to the
+/// uninterrupted run (timing-derived columns excepted — the clock
+/// restarts). The oracle-call count is taken from `problem`'s ledger at
+/// save time, so save at a clean outer-iteration boundary (which is
+/// where `run.outers_done` points anyway).
+pub fn save_run<P: AsRef<Path>>(
+    path: P,
+    run: &MpBcfwRun,
+    problem: &CountingOracle,
+) -> Result<()> {
+    let f = &mut BufWriter::new(File::create(path)?);
+    let n = run.state.n();
+    let dim = run.state.dim();
+    f.write_all(RUN_MAGIC)?;
+    wu64(f, dim as u64)?;
+    wu64(f, n as u64)?;
+    wf64(f, run.state.lambda)?;
+    wu64(f, run.outers_done)?;
+    let (rng_state, rng_inc) = run.rng.to_raw();
+    wu64(f, rng_state)?;
+    wu64(f, rng_inc)?;
+    wu64(f, problem.stats().calls)?;
+    wu64(f, run.approx_steps_total)?;
+    wu64(f, run.pairwise_steps_total)?;
+    wu64(f, run.async_stats.planes_folded_async)?;
+    wu64(f, run.async_stats.stale_rejects)?;
+    wu64(f, run.async_stats.staleness_sum)?;
+    wf64(f, run.async_stats.worker_idle_s)?;
+    wu64(f, run.product_stats.cached_visits)?;
+    wu64(f, run.product_stats.dense_refreshes)?;
+    wu64(f, run.product_stats.warm_visits)?;
+    wu64(f, run.product_stats.guard_rejects)?;
+    // Dual state: φ, then per block (φ^i, cached ‖φ^i_*‖²).
+    wf64(f, run.state.phi.off)?;
+    for &x in &run.state.phi.star {
+        wf64(f, x)?;
+    }
+    let norms = run.state.block_norms();
+    for (b, &nrm) in run.state.blocks.iter().zip(norms) {
+        wf64(f, b.off)?;
+        for &x in &b.star {
+            wf64(f, x)?;
+        }
+        wf64(f, nrm)?;
+    }
+    // Working sets, payloads repr-preserving (0 = dense, 1 = sparse).
+    for ws in &run.working_sets {
+        wu64(f, ws.cap as u64)?;
+        wu64(f, ws.next_id())?;
+        wu64(f, ws.len() as u64)?;
+        for idx in 0..ws.len() {
+            let e = &ws.entries()[idx];
+            wu64(f, e.id)?;
+            wu64(f, e.tag)?;
+            wu64(f, e.last_active)?;
+            wf64(f, e.off)?;
+            match ws.plane_ref(idx).star {
+                PlaneVecView::Dense(v) => {
+                    f.write_all(&[0u8])?;
+                    for &x in v {
+                        wf64(f, x)?;
+                    }
+                }
+                PlaneVecView::Sparse { idx: ids, val, .. } => {
+                    f.write_all(&[1u8])?;
+                    wu64(f, ids.len() as u64)?;
+                    for (&j, &x) in ids.iter().zip(val) {
+                        wu64(f, j as u64)?;
+                        wf64(f, x)?;
+                    }
+                }
+            }
+        }
+    }
+    // Pairwise coefficient ledgers (length 0 under StepRule::Fw).
+    wu64(f, run.coeffs.len() as u64)?;
+    for c in &run.coeffs {
+        let (pairs, residual) = c.to_parts();
+        wu64(f, pairs.len() as u64)?;
+        for (id, v) in pairs {
+            wu64(f, id)?;
+            wf64(f, v)?;
+        }
+        wf64(f, residual)?;
+    }
+    // §3.5 persisted product rows (always n rows; empty under recompute).
+    wu64(f, run.products.len() as u64)?;
+    for p in &run.products {
+        let (ids, c, r, b_r, valid, visits, streak) = p.to_parts();
+        wu64(f, ids.len() as u64)?;
+        for &id in ids {
+            wu64(f, id)?;
+        }
+        for &x in c {
+            wf64(f, x)?;
+        }
+        for &x in r {
+            wf64(f, x)?;
+        }
+        wf64(f, b_r)?;
+        f.write_all(&[valid as u8])?;
+        wu64(f, visits)?;
+        wu64(f, streak)?;
+    }
+    // Gap estimates.
+    let (gaps, last_update, pass) = run.gaps.to_parts();
+    for &g in &gaps {
+        wf64(f, g)?;
+    }
+    for &u in &last_update {
+        wu64(f, u)?;
+    }
+    wu64(f, pass)?;
+    f.flush()
+}
+
+/// A reader that tracks its byte position so failures can name the
+/// offset at which a corrupt or truncated checkpoint broke.
+struct CountingReader<R: Read> {
+    inner: R,
+    pos: u64,
+}
+
+impl<R: Read> CountingReader<R> {
+    fn new(inner: R) -> CountingReader<R> {
+        CountingReader { inner, pos: 0 }
+    }
+
+    fn fill(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.inner.read_exact(buf).map_err(|e| {
+            Error::new(
+                e.kind(),
+                format!(
+                    "run checkpoint: failed reading {} byte(s) at byte offset {}: {e}",
+                    buf.len(),
+                    self.pos
+                ),
+            )
+        })?;
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    fn bad(&self, msg: String) -> Error {
+        Error::new(
+            ErrorKind::InvalidData,
+            format!("run checkpoint: {msg} (at byte offset {})", self.pos),
+        )
+    }
+}
+
+/// Load a [`save_run`] checkpoint against a freshly built problem and
+/// the run's original config, ready for `mp_bcfw::resume`. Restores the
+/// oracle-call ledger into `problem` (after a `reset_stats`), so build
+/// the problem fresh — do not reuse one that already made calls.
+///
+/// Fails with an offset-naming error on foreign, corrupt, or truncated
+/// files, and on a problem/config that does not match the checkpoint
+/// (dimension, block count, λ).
+pub fn load_run<P: AsRef<Path>>(
+    path: P,
+    problem: &CountingOracle,
+    cfg: &MpBcfwConfig,
+) -> Result<MpBcfwRun> {
+    use crate::model::problem::StructuredProblem as _;
+    if cfg.averaging {
+        return Err(Error::new(
+            ErrorKind::InvalidInput,
+            "run checkpoints do not serialize averager state; \
+             resuming an averaged run is unsupported",
+        ));
+    }
+    let mut r = CountingReader::new(BufReader::new(File::open(path)?));
+    let mut magic = [0u8; 8];
+    r.fill(&mut magic)?;
+    if &magic != RUN_MAGIC {
+        return Err(r.bad("not an mpbcfw run checkpoint (bad magic)".into()));
+    }
+    let dim = r.u64()? as usize;
+    let n = r.u64()? as usize;
+    if dim != problem.dim() || n != problem.n() {
+        return Err(r.bad(format!(
+            "problem mismatch: checkpoint is {n} blocks × {dim}-d, \
+             problem is {} blocks × {}-d",
+            problem.n(),
+            problem.dim()
+        )));
+    }
+    let lambda = r.f64()?;
+    if lambda.to_bits() != cfg.lambda.to_bits() {
+        return Err(r.bad(format!(
+            "lambda mismatch: checkpoint {lambda}, config {}",
+            cfg.lambda
+        )));
+    }
+    let outers_done = r.u64()?;
+    let rng = Pcg::from_raw(r.u64()?, r.u64()?);
+    let oracle_calls = r.u64()?;
+    let approx_steps_total = r.u64()?;
+    let pairwise_steps_total = r.u64()?;
+    let async_stats = AsyncStats {
+        planes_folded_async: r.u64()?,
+        stale_rejects: r.u64()?,
+        staleness_sum: r.u64()?,
+        worker_idle_s: r.f64()?,
+    };
+    let product_stats = ProductStats {
+        cached_visits: r.u64()?,
+        dense_refreshes: r.u64()?,
+        warm_visits: r.u64()?,
+        guard_rejects: r.u64()?,
+    };
+    // Dual state.
+    let phi_off = r.f64()?;
+    let mut phi = DensePlane::zeros(dim);
+    phi.off = phi_off;
+    for x in phi.star.iter_mut() {
+        *x = r.f64()?;
+    }
+    let mut blocks = Vec::with_capacity(n);
+    let mut block_nrm2 = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut b = DensePlane::zeros(dim);
+        b.off = r.f64()?;
+        for x in b.star.iter_mut() {
+            *x = r.f64()?;
+        }
+        blocks.push(b);
+        block_nrm2.push(r.f64()?);
+    }
+    let state = DualState::from_parts(lambda, phi, blocks, block_nrm2);
+    // Working sets.
+    let mut working_sets = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cap = r.u64()? as usize;
+        let next_id = r.u64()?;
+        let len = r.u64()? as usize;
+        if len > cap {
+            return Err(r.bad(format!("working set of {len} planes exceeds cap {cap}")));
+        }
+        let mut planes = Vec::with_capacity(len);
+        for _ in 0..len {
+            let id = r.u64()?;
+            let tag = r.u64()?;
+            let last_active = r.u64()?;
+            let off = r.f64()?;
+            let star = match r.u8()? {
+                0 => {
+                    let mut v = vec![0.0f64; dim];
+                    for x in v.iter_mut() {
+                        *x = r.f64()?;
+                    }
+                    PlaneVec::Dense(v)
+                }
+                1 => {
+                    let nnz = r.u64()? as usize;
+                    if nnz > dim {
+                        return Err(r.bad(format!("sparse payload nnz {nnz} exceeds dim {dim}")));
+                    }
+                    let mut idx = Vec::with_capacity(nnz);
+                    let mut val = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        idx.push(r.u64()? as u32);
+                        val.push(r.f64()?);
+                    }
+                    PlaneVec::Sparse { dim, idx, val }
+                }
+                other => return Err(r.bad(format!("unknown plane payload tag {other}"))),
+            };
+            planes.push((Plane::new(star, off, tag), id, last_active));
+        }
+        working_sets.push(WorkingSet::restore(cap, planes, next_id));
+    }
+    // Coefficient ledgers.
+    let coeffs_len = r.u64()? as usize;
+    if coeffs_len != 0 && coeffs_len != n {
+        return Err(r.bad(format!("coefficient ledger count {coeffs_len} (want 0 or {n})")));
+    }
+    let mut coeffs = Vec::with_capacity(coeffs_len);
+    for _ in 0..coeffs_len {
+        let npairs = r.u64()? as usize;
+        let mut pairs = Vec::with_capacity(npairs);
+        for _ in 0..npairs {
+            let id = r.u64()?;
+            let v = r.f64()?;
+            pairs.push((id, v));
+        }
+        let residual = r.f64()?;
+        coeffs.push(BlockCoeffs::from_parts(pairs, residual));
+    }
+    // Product rows.
+    let products_len = r.u64()? as usize;
+    if products_len != n {
+        return Err(r.bad(format!("product row count {products_len} (want {n})")));
+    }
+    let mut products = Vec::with_capacity(n);
+    for _ in 0..n {
+        let nids = r.u64()? as usize;
+        let mut ids = Vec::with_capacity(nids);
+        for _ in 0..nids {
+            ids.push(r.u64()?);
+        }
+        let mut c = Vec::with_capacity(nids);
+        for _ in 0..nids {
+            c.push(r.f64()?);
+        }
+        let mut rr = Vec::with_capacity(nids);
+        for _ in 0..nids {
+            rr.push(r.f64()?);
+        }
+        let b_r = r.f64()?;
+        let valid = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(r.bad(format!("bad product validity byte {other}"))),
+        };
+        let visits = r.u64()?;
+        let streak = r.u64()?;
+        products.push(BlockProducts::from_parts(ids, c, rr, b_r, valid, visits, streak));
+    }
+    // Gap estimates.
+    let mut gaps = vec![0.0f64; n];
+    for g in gaps.iter_mut() {
+        *g = r.f64()?;
+    }
+    let mut last_update = vec![0u64; n];
+    for u in last_update.iter_mut() {
+        *u = r.u64()?;
+    }
+    let pass = r.u64()?;
+
+    // Assemble onto a fresh skeleton: Gram caches, oracle arenas,
+    // averagers and the coefficient scratch restart cold (value-neutral
+    // caches — see the module docs).
+    problem.reset_stats();
+    problem.charge_calls(oracle_calls);
+    let mut run = mp_bcfw::new_run(problem, cfg);
+    run.state = state;
+    run.working_sets = working_sets;
+    run.products = products;
+    run.product_stats = product_stats;
+    run.coeffs = coeffs;
+    run.gaps = BlockGaps::from_parts(gaps, last_update, pass);
+    run.approx_steps_total = approx_steps_total;
+    run.pairwise_steps_total = pairwise_steps_total;
+    run.rng = rng;
+    run.outers_done = outers_done;
+    run.async_stats = async_stats;
+    Ok(run)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +579,109 @@ mod tests {
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
         assert!(ModelCheckpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    // ---- run checkpoints -------------------------------------------
+
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::oracle::multiclass::MulticlassProblem;
+    use crate::runtime::engine::NativeEngine;
+
+    fn tiny_problem() -> CountingOracle {
+        CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+            UspsLikeConfig::at_scale(Scale::Tiny),
+            1,
+        ))))
+    }
+
+    fn run_cfg() -> MpBcfwConfig {
+        MpBcfwConfig {
+            lambda: 1.0 / 60.0,
+            max_iters: 3,
+            auto_approx: false,
+            max_approx_passes: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn run_checkpoint_roundtrips_optimizer_state_bitwise() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = run_cfg();
+        let (_, run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        let p = tmp("run_rt");
+        save_run(&p, &run, &problem).unwrap();
+        let problem2 = tiny_problem();
+        let back = load_run(&p, &problem2, &cfg).unwrap();
+        assert_eq!(back.outers_done, run.outers_done);
+        assert_eq!(back.rng.to_raw(), run.rng.to_raw());
+        assert_eq!(problem2.stats().calls, problem.stats().calls);
+        assert_eq!(back.state.phi.off.to_bits(), run.state.phi.off.to_bits());
+        assert_eq!(back.state.phi.star, run.state.phi.star);
+        assert_eq!(back.state.block_norms(), run.state.block_norms());
+        assert_eq!(back.working_sets.len(), run.working_sets.len());
+        for (a, b) in back.working_sets.iter().zip(&run.working_sets) {
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.next_id(), b.next_id());
+            for idx in 0..a.len() {
+                assert_eq!(a.id(idx), b.id(idx));
+                assert_eq!(a.tag(idx), b.tag(idx));
+                assert_eq!(a.norm_sq(idx).to_bits(), b.norm_sq(idx).to_bits());
+            }
+        }
+        assert_eq!(back.approx_steps_total, run.approx_steps_total);
+        assert_eq!(back.product_stats.cached_visits, run.product_stats.cached_visits);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn run_checkpoint_rejects_foreign_magic_naming_offset() {
+        let p = tmp("run_bad");
+        std::fs::write(&p, b"NOTARUNCHECKPOINTATALL__________").unwrap();
+        let problem = tiny_problem();
+        let err = load_run(&p, &problem, &run_cfg()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bad magic"), "unexpected error: {msg}");
+        assert!(msg.contains("byte offset 8"), "error must name the offset: {msg}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn run_checkpoint_rejects_truncation_naming_offset() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = run_cfg();
+        let (_, run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        let p = tmp("run_trunc");
+        save_run(&p, &run, &problem).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let cut = bytes.len() / 2;
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        let problem2 = tiny_problem();
+        let err = load_run(&p, &problem2, &cfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("byte offset"), "error must name the offset: {msg}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn run_checkpoint_rejects_mismatched_problem_and_averaging() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = run_cfg();
+        let (_, run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        let p = tmp("run_mismatch");
+        save_run(&p, &run, &problem).unwrap();
+        // λ mismatch.
+        let problem2 = tiny_problem();
+        let other = MpBcfwConfig { lambda: 0.5, ..run_cfg() };
+        assert!(load_run(&p, &problem2, &other).is_err());
+        // Averaged configs are refused outright.
+        let avg = MpBcfwConfig { averaging: true, ..run_cfg() };
+        assert!(load_run(&p, &problem2, &avg).is_err());
         std::fs::remove_file(p).ok();
     }
 }

@@ -160,6 +160,60 @@ impl DualState {
         StepInfo { gamma, gap, dot_phii_phi, dot_hat_phi, nrm_phii, nrm_hat, dot_phii_hat }
     }
 
+    /// As `block_step_info_ref`, but **without mutating any state**: the
+    /// same inner products, the same line search, the same γ and gap —
+    /// and no step applied. This is the async fold guard's probe
+    /// (`coordinator::async_overlap`): a plane solved against a stale w
+    /// snapshot is only merged if the line search against the *current*
+    /// state still yields γ > 0; otherwise the merge is rejected and the
+    /// block requeued for a fresh oracle call. The arithmetic is kept
+    /// textually identical to `block_step_info_ref` so accept decisions
+    /// match what the mutating path would have computed bitwise.
+    pub fn peek_step_info(&self, i: usize, hat: PlaneRef<'_>) -> StepInfo {
+        let dot_phii_phi = math::dot(&self.blocks[i].star, &self.phi.star);
+        let dot_hat_phi = hat.star.dot_dense(&self.phi.star);
+        let nrm_phii = self.block_nrm2[i];
+        let nrm_hat = hat.star.norm_sq();
+        let dot_phii_hat = hat.star.dot_dense(&self.blocks[i].star);
+        let num = (dot_phii_phi - dot_hat_phi) - self.lambda * (self.blocks[i].off - hat.off);
+        let gap = (num / self.lambda).max(0.0);
+        let gamma = crate::model::plane::line_search_from_products(
+            dot_phii_phi,
+            dot_hat_phi,
+            nrm_phii,
+            nrm_hat,
+            dot_phii_hat,
+            self.blocks[i].off,
+            hat.off,
+            self.lambda,
+        );
+        StepInfo { gamma, gap, dot_phii_phi, dot_hat_phi, nrm_phii, nrm_hat, dot_phii_hat }
+    }
+
+    /// The cached per-block squared norms (checkpoint serialization —
+    /// they are incrementally maintained, so a bitwise-resumable
+    /// checkpoint must carry them verbatim rather than recompute).
+    pub fn block_norms(&self) -> &[f64] {
+        &self.block_nrm2
+    }
+
+    /// Rebuild a state from checkpointed parts. `w` is derived (it is
+    /// always recomputable as −φ_*/λ); `block_nrm2` is **not** — it is
+    /// maintained incrementally during training, so the caller passes the
+    /// exact cached values back in to keep resumed trajectories bitwise.
+    pub fn from_parts(
+        lambda: f64,
+        phi: DensePlane,
+        blocks: Vec<DensePlane>,
+        block_nrm2: Vec<f64>,
+    ) -> DualState {
+        debug_assert_eq!(blocks.len(), block_nrm2.len());
+        let dim = phi.dim();
+        let mut st = DualState { lambda, phi, blocks, w: vec![0.0; dim], block_nrm2 };
+        st.refresh_w();
+        st
+    }
+
     /// Pairwise Frank-Wolfe step on block `i`: move up to `max_gamma` of
     /// convex mass from the `worst` cached plane onto the `best` one,
     /// i.e. φ^i ← φ^i + γ(best − worst) with the exact line search over
@@ -537,6 +591,57 @@ mod tests {
         let gamma = st.pairwise_step(0, &p2, &p1, dot, 0.05);
         assert_eq!(gamma, 0.05);
         assert!(st.consistency_error() < 1e-12);
+    }
+
+    #[test]
+    fn peek_step_info_matches_mutating_path_and_leaves_state_untouched() {
+        prop_check("peek == block_step_info, no mutation", 60, |g| {
+            let dim = g.usize(1, 8);
+            let mut st = DualState::new(2, dim, 0.8);
+            for t in 0..12u64 {
+                let hat = sparse_plane(g, dim, t);
+                let i = t as usize % 2;
+                let before_phi = st.phi.star.clone();
+                let before_nrm = st.block_norm_sq(i);
+                let peek = st.peek_step_info(i, hat.view());
+                // Peek must not have moved anything.
+                if st.phi.star != before_phi || st.block_norm_sq(i) != before_nrm {
+                    return Err("peek mutated the state".into());
+                }
+                // The mutating path must compute the identical scalars.
+                let info = st.block_step_info(i, &hat);
+                if peek.gamma != info.gamma || peek.gap != info.gap {
+                    return Err(format!(
+                        "peek diverged: gamma {} vs {}, gap {} vs {}",
+                        peek.gamma, info.gamma, peek.gap, info.gap
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_parts_roundtrips_bitwise() {
+        let mut st = DualState::new(3, 5, 0.4);
+        let mut g =
+            crate::utils::prop::Gen { rng: crate::utils::rng::Pcg::seeded(7), size: 1.0 };
+        for t in 0..20u64 {
+            let hat = sparse_plane(&mut g, 5, t);
+            st.block_step(t as usize % 3, &hat);
+        }
+        st.refresh_w();
+        let rebuilt = DualState::from_parts(
+            st.lambda,
+            st.phi.clone(),
+            st.blocks.clone(),
+            st.block_norms().to_vec(),
+        );
+        assert_eq!(rebuilt.phi.star, st.phi.star);
+        assert_eq!(rebuilt.w, st.w, "w must be re-derived bitwise");
+        for i in 0..3 {
+            assert_eq!(rebuilt.block_norm_sq(i), st.block_norm_sq(i));
+        }
     }
 
     #[test]

@@ -85,6 +85,19 @@ pub struct EvalPoint {
     /// the gap to `cached_visits` is the warm visits that ran with zero
     /// dense dots.
     pub product_refreshes: u64,
+    /// Oracle planes folded back through the `--async on` path so far
+    /// (fresh and stale; guard-rejected folds excluded). 0 under
+    /// `--async off` and for optimizers without the async driver.
+    pub planes_folded_async: u64,
+    /// Stale planes rejected by the async monotone fold guard so far
+    /// (their blocks were requeued for fresh oracle calls).
+    pub stale_rejects: u64,
+    /// Mean snapshot staleness, in epochs, over the folded planes (0
+    /// when none folded; 0 identically at `--max-stale-epochs 0`).
+    pub mean_snapshot_staleness: f64,
+    /// Cumulative seconds the async pool workers spent waiting for
+    /// work (0 under `--async off` and for the virtual test executor).
+    pub worker_idle_s: f64,
     /// Mean task loss of the predictor on the training set (optional
     /// diagnostic; NaN when not computed).
     pub train_loss: f64,
@@ -117,6 +130,10 @@ impl EvalPoint {
             ("gram_hit_rate", Json::Num(self.gram_hit_rate)),
             ("cached_visits", Json::Num(self.cached_visits as f64)),
             ("product_refreshes", Json::Num(self.product_refreshes as f64)),
+            ("planes_folded_async", Json::Num(self.planes_folded_async as f64)),
+            ("stale_rejects", Json::Num(self.stale_rejects as f64)),
+            ("mean_snapshot_staleness", Json::Num(self.mean_snapshot_staleness)),
+            ("worker_idle_s", Json::Num(self.worker_idle_s)),
             ("train_loss", Json::Num(self.train_loss)),
         ])
     }
@@ -145,6 +162,10 @@ pub struct Series {
     /// arenas, `off` = cold per-call construction); empty for
     /// optimizers without the scratch-threaded oracle path.
     pub oracle_reuse: String,
+    /// Exact-pass dispatch mode (`off` = bulk-synchronous, `on` =
+    /// overlapped worker pool with the bounded-drift contract); empty
+    /// for optimizers without the async driver.
+    pub async_mode: String,
     /// Evaluation snapshots, in order.
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
@@ -209,6 +230,7 @@ impl Series {
             ("steps", Json::s(&self.steps)),
             ("plane_repr", Json::s(&self.plane_repr)),
             ("oracle_reuse", Json::s(&self.oracle_reuse)),
+            ("async_mode", Json::s(&self.async_mode)),
             ("wall_secs", Json::Num(self.wall_secs)),
             (
                 "shard_secs",
@@ -309,6 +331,10 @@ mod tests {
             gram_hit_rate: f64::NAN,
             cached_visits: 0,
             product_refreshes: 0,
+            planes_folded_async: 0,
+            stale_rejects: 0,
+            mean_snapshot_staleness: 0.0,
+            worker_idle_s: 0.0,
             train_loss: f64::NAN,
         };
         let s = Series {
@@ -345,6 +371,10 @@ mod tests {
             gram_hit_rate: f64::NAN,
             cached_visits: 0,
             product_refreshes: 0,
+            planes_folded_async: 0,
+            stale_rejects: 0,
+            mean_snapshot_staleness: 0.0,
+            worker_idle_s: 0.0,
             train_loss: f64::NAN,
         };
         let empty = Series::default();
@@ -393,6 +423,10 @@ mod tests {
             gram_hit_rate: 0.75,
             cached_visits: 50,
             product_refreshes: 5,
+            planes_folded_async: 33,
+            stale_rejects: 2,
+            mean_snapshot_staleness: 0.5,
+            worker_idle_s: 1.25,
             train_loss: 0.1,
         };
         let j = p.to_json();
@@ -409,5 +443,9 @@ mod tests {
         assert_eq!(j.get("gram_hit_rate").as_f64(), Some(0.75));
         assert_eq!(j.get("cached_visits").as_f64(), Some(50.0));
         assert_eq!(j.get("product_refreshes").as_f64(), Some(5.0));
+        assert_eq!(j.get("planes_folded_async").as_f64(), Some(33.0));
+        assert_eq!(j.get("stale_rejects").as_f64(), Some(2.0));
+        assert_eq!(j.get("mean_snapshot_staleness").as_f64(), Some(0.5));
+        assert_eq!(j.get("worker_idle_s").as_f64(), Some(1.25));
     }
 }

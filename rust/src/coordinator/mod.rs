@@ -10,6 +10,7 @@ pub mod averaging;
 pub mod fw;
 pub mod bcfw;
 pub mod mp_bcfw;
+pub mod async_overlap;
 pub mod parallel;
 pub mod metrics;
 pub mod trainer;

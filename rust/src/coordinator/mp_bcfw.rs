@@ -26,6 +26,7 @@
 //! free (`DualState::block_step_info`) and drive both the
 //! gap-proportional sampler and the `gap_est` metrics column.
 
+use super::async_overlap::{AsyncMode, AsyncStats};
 use super::auto::SlopeRule;
 use super::averaging::{best_interpolation, Averager};
 use super::dual::DualState;
@@ -61,6 +62,10 @@ use crate::utils::timer::Clock;
 /// assert_eq!(mp.steps, StepRule::Fw);
 /// assert!(!mp.dense_planes); // sparse plane storage by default
 /// assert!(mp.oracle_reuse); // warm-started oracles by default
+///
+/// use mpbcfw::coordinator::async_overlap::AsyncMode;
+/// assert_eq!(mp.async_mode, AsyncMode::Off); // bulk-synchronous by default
+/// assert_eq!(mp.max_stale_epochs, 1); // async staleness bound K
 ///
 /// use mpbcfw::coordinator::products::{GramBackend, ProductMode};
 /// assert_eq!(mp.products, ProductMode::Incremental); // warm §3.5 visits
@@ -147,6 +152,28 @@ pub struct MpBcfwConfig {
     /// cold-construction baseline `bench --table oracle` measures
     /// against.
     pub oracle_reuse: bool,
+    /// Overlap the exact max-oracle with the approximate passes (CLI
+    /// `--async {off,on}`, default off). `Off` is the bulk-synchronous
+    /// loop above — bitwise-identical to the pre-async code at a fixed
+    /// seed (the golden fixtures anchor it). `On` hands each epoch's
+    /// oracle calls to a persistent worker pool solving against an
+    /// epoch-stamped snapshot of w while the main thread keeps making
+    /// cached/pairwise progress; finished planes fold back through a
+    /// monotone guard (`DualState::peek_step_info`), so the dual still
+    /// never decreases, but the trajectory follows a *bounded-drift*
+    /// contract rather than a bitwise one — except at
+    /// `max_stale_epochs: 0`, which drains the pool every epoch and
+    /// replays the synchronous trajectory bit for bit. Requires
+    /// `threads >= 1` and the native engine. See
+    /// `coordinator::async_overlap`.
+    pub async_mode: AsyncMode,
+    /// Staleness bound K for `--async on`: a dispatched oracle result
+    /// may fold back up to K outer epochs after the snapshot it was
+    /// solved against; anything older is *forced* in (the main thread
+    /// blocks on the pool) before new work is dispatched — that block
+    /// is the dispatch throttle. 0 = drain every epoch (bitwise equal
+    /// to `--async off`). Ignored when `async_mode` is `Off`.
+    pub max_stale_epochs: u64,
     /// Stop after this many outer iterations.
     pub max_iters: u64,
     /// Stop once this many exact oracle calls were made (0 = unlimited).
@@ -183,6 +210,8 @@ impl Default for MpBcfwConfig {
             gram: GramBackend::Triangular,
             product_refresh_every: 8,
             oracle_reuse: true,
+            async_mode: AsyncMode::Off,
+            max_stale_epochs: 1,
             max_iters: 50,
             max_oracle_calls: 0,
             max_time: 0.0,
@@ -252,6 +281,16 @@ pub struct MpBcfwRun {
     /// (`products::cached_block_updates` scratch — contents are
     /// per-call).
     pub coef_scratch: Vec<f64>,
+    /// Pass-permutation RNG. Owned by the run (rather than a `run`
+    /// local) so checkpoint/resume can continue the exact stream and
+    /// the async driver can share the sampling code verbatim.
+    pub rng: Pcg,
+    /// Completed outer iterations — checkpoint/resume bookkeeping. A
+    /// partial iteration cut short by the oracle budget is *not*
+    /// counted (resuming replays it from the top).
+    pub outers_done: u64,
+    /// Async-overlap counters (all zero when `async_mode` is `Off`).
+    pub async_stats: AsyncStats,
 }
 
 /// Train with MP-BCFW. Returns the convergence series and the final run
@@ -273,19 +312,70 @@ pub fn run(
          score on native kernels",
         eng.name()
     );
+    assert!(
+        cfg.async_mode == AsyncMode::Off || (cfg.threads >= 1 && eng.name() == "native"),
+        "async overlap requires threads >= 1 and the native engine (got threads {}, \
+         engine {}): the oracle worker pool scores on per-worker native kernels",
+        cfg.threads,
+        eng.name()
+    );
+    if cfg.async_mode == AsyncMode::On {
+        return super::async_overlap::run_async(problem, eng, cfg);
+    }
+    problem.reset_stats();
+    let mut clock = Clock::new();
+    let mut run = new_run(problem, cfg);
+    let mut series = new_series(problem, cfg);
+    // Initial evaluation point (w = 0).
+    record_point(problem, eng, &mut clock, cfg, &mut run, 0, 0, &mut series);
+    run_loop(problem, eng, cfg, &mut run, &mut series, &mut clock, 1);
+    (series, run)
+}
+
+/// Continue a checkpointed run from `run.outers_done + 1` up to
+/// `cfg.max_iters`, returning the evaluation series of the resumed
+/// stretch (no outer-0 point — the state is not at w = 0).
+///
+/// The caller restores the oracle-call ledger first
+/// (`CountingOracle::charge_calls`, done by `checkpoint::load_run`);
+/// the RNG, dual state, working sets, products, gap estimates and
+/// coefficient ledgers all continue from their checkpointed values, so
+/// the resumed trajectory is bitwise-identical to the uninterrupted
+/// one. Wall-clock state (the pausable clock, timing splits) and cache
+/// warmth (Gram caches, oracle arenas) restart cold — value-neutral by
+/// the crate's A/B contracts; only timing-derived columns differ. Not
+/// supported: resuming mid-iteration after an oracle-budget break
+/// (`outers_done` never counts partial iterations), averaged runs
+/// (averagers are not serialized), and async-mode runs.
+pub fn resume(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    run: &mut MpBcfwRun,
+) -> Series {
+    assert!(
+        cfg.async_mode == AsyncMode::Off,
+        "resume is defined for the synchronous mode only"
+    );
+    assert!(!cfg.averaging, "averager state is not checkpointed");
+    let mut clock = Clock::new();
+    let mut series = new_series(problem, cfg);
+    let start = run.outers_done + 1;
+    run_loop(problem, eng, cfg, run, &mut series, &mut clock, start);
+    series
+}
+
+/// Fresh run state for `cfg` (shared by `run`, the async driver and the
+/// checkpoint restore path).
+pub(crate) fn new_run(problem: &CountingOracle, cfg: &MpBcfwConfig) -> MpBcfwRun {
     let n = problem.n();
     let dim = problem.dim();
-    let mut rng = Pcg::new(cfg.seed, 7001);
-    let mut clock = Clock::new();
-    problem.reset_stats();
-
     let pairwise = cfg.steps == StepRule::Pairwise && cfg.cap_n > 0;
-    let mut sampler = build_sampler(cfg.sampling, n);
     // One oracle arena for the sequential pass, one per worker thread
     // under sharded dispatch — they persist across outer iterations,
     // which is what makes the oracles warm.
     let arena_count = cfg.threads.max(1);
-    let mut run = MpBcfwRun {
+    MpBcfwRun {
         state: DualState::new(n, dim, cfg.lambda),
         working_sets: (0..n).map(|_| WorkingSet::new(cfg.cap_n)).collect(),
         grams: (0..n).map(|_| GramCache::with_backend(cfg.gram)).collect(),
@@ -299,9 +389,16 @@ pub fn run(
         pairwise_steps_total: 0,
         oracle_scratches: (0..arena_count).map(|_| OracleScratch::new(cfg.oracle_reuse)).collect(),
         coef_scratch: Vec::new(),
-    };
+        rng: Pcg::new(cfg.seed, 7001),
+        outers_done: 0,
+        async_stats: AsyncStats::default(),
+    }
+}
 
-    let mut series = Series {
+/// Fresh series header for `cfg` (shared by `run`, `resume` and the
+/// async driver).
+pub(crate) fn new_series(problem: &CountingOracle, cfg: &MpBcfwConfig) -> Series {
+    Series {
         algo: algo_name(cfg).to_string(),
         dataset: problem.name().to_string(),
         seed: cfg.seed,
@@ -309,18 +406,31 @@ pub fn run(
         steps: cfg.steps.name().to_string(),
         plane_repr: if cfg.dense_planes { "dense" } else { "sparse" }.to_string(),
         oracle_reuse: if cfg.oracle_reuse { "on" } else { "off" }.to_string(),
+        async_mode: cfg.async_mode.name().to_string(),
         ..Default::default()
-    };
+    }
+}
 
-    // Initial evaluation point (w = 0).
+/// The bulk-synchronous outer loop, from `start_outer` to
+/// `cfg.max_iters` inclusive (`run` starts at 1; `resume` continues
+/// where the checkpoint left off).
+fn run_loop(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    run: &mut MpBcfwRun,
+    series: &mut Series,
+    clock: &mut Clock,
+    start_outer: u64,
+) {
+    let n = problem.n();
+    let pairwise = cfg.steps == StepRule::Pairwise && cfg.cap_n > 0;
+    let mut sampler = build_sampler(cfg.sampling, n);
     let mut last_approx_passes = 0u64;
-    record_point(
-        problem, eng, &mut clock, cfg, &mut run, 0, last_approx_passes, &mut series,
-    );
 
-    'outer: for outer in 1..=cfg.max_iters {
+    'outer: for outer in start_outer..=cfg.max_iters {
         let f_now = run.state.dual_value();
-        let mut slope = SlopeRule::start_iteration(f_now, measured(&clock, problem));
+        let mut slope = SlopeRule::start_iteration(f_now, measured(clock, problem));
 
         // ---- Exact pass (Alg. 3 line 3) -------------------------------
         // The block order comes from the configured sampling policy;
@@ -335,7 +445,7 @@ pub fn run(
             // Gap estimates are recorded during that sequential merge, so
             // the gap state is thread-count-invariant too.
             run.state.refresh_w();
-            let mut order = sampler.pass_order(&mut rng, &run.gaps);
+            let mut order = sampler.pass_order(&mut run.rng, &run.gaps);
             // Respect the oracle budget exactly, like the sequential
             // path's mid-pass break: dispatch only the calls that fit.
             if cfg.max_oracle_calls > 0 {
@@ -377,17 +487,16 @@ pub fn run(
             }
             series.note_parallel_pass(&report.shard_secs, report.wall_secs);
             for &i in order.iter() {
-                apply_exact_step(&mut run, i, &planes[plane_slot[i]], outer, pairwise, cfg);
+                apply_exact_step(run, i, &planes[plane_slot[i]], outer, pairwise, cfg);
             }
             if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
                 record_point(
-                    problem, eng, &mut clock, cfg, &mut run, outer, last_approx_passes,
-                    &mut series,
+                    problem, eng, clock, cfg, run, outer, last_approx_passes, series,
                 );
                 break 'outer;
             }
         } else {
-            for &i in sampler.pass_order(&mut rng, &run.gaps).iter() {
+            for &i in sampler.pass_order(&mut run.rng, &run.gaps).iter() {
                 run.state.refresh_w();
                 let hat =
                     problem.oracle_scratch(i, &run.state.w, eng, &mut run.oracle_scratches[0]);
@@ -396,11 +505,10 @@ pub fn run(
                 if problem.delay > 0.0 {
                     clock.charge(problem.delay);
                 }
-                apply_exact_step(&mut run, i, &hat, outer, pairwise, cfg);
+                apply_exact_step(run, i, &hat, outer, pairwise, cfg);
                 if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
                     record_point(
-                        problem, eng, &mut clock, cfg, &mut run, outer, last_approx_passes,
-                        &mut series,
+                        problem, eng, clock, cfg, run, outer, last_approx_passes, series,
                     );
                     break 'outer;
                 }
@@ -411,79 +519,14 @@ pub fn run(
         let mut passes = 0u64;
         if cfg.cap_n > 0 {
             while passes < cfg.max_approx_passes {
-                slope.begin_pass(run.state.dual_value(), measured(&clock, problem));
-                for &i in rng.permutation(n).iter() {
-                    if pairwise {
-                        let out = pairwise_block_updates(
-                            &mut run.state,
-                            &mut run.working_sets[i],
-                            &mut run.grams[i],
-                            &mut run.coeffs[i],
-                            i,
-                            cfg.inner_repeats.max(1),
-                            outer,
-                        );
-                        run.approx_steps_total += out.steps as u64;
-                        run.pairwise_steps_total += out.pairwise as u64;
-                        run.gaps.observe_floor(i, out.first_gap);
-                        if cfg.averaging && out.steps > 0 {
-                            run.avg_approx.update(&run.state.phi);
-                        }
-                    } else if cfg.inner_repeats > 1 {
-                        let out = cached_block_updates_with(
-                            &mut run.state,
-                            &mut run.working_sets[i],
-                            &mut run.grams[i],
-                            i,
-                            cfg.inner_repeats,
-                            outer,
-                            &mut run.coef_scratch,
-                            cfg.products,
-                            cfg.product_refresh_every,
-                            &mut run.products[i],
-                            &mut run.product_stats,
-                        );
-                        run.approx_steps_total += out.steps as u64;
-                        // Warm visits compute first_gap from persisted
-                        // (possibly drifted) scalars; keep those out of
-                        // the gap-sampling floors — only dense-fresh
-                        // estimates may raise them.
-                        if !out.warm {
-                            run.gaps.observe_floor(i, out.first_gap);
-                        }
-                        if cfg.averaging && out.steps > 0 {
-                            run.avg_approx.update(&run.state.phi);
-                        }
-                    } else {
-                        run.state.refresh_w();
-                        let best = run.working_sets[i].best_at(&run.state.w);
-                        if let Some((j, best_val)) = best {
-                            // Working-set gap floor, from quantities in
-                            // hand (read-only; trajectory unchanged).
-                            let block_val =
-                                math::dot(&run.state.blocks[i].star, &run.state.w)
-                                    + run.state.blocks[i].off;
-                            run.gaps.observe_floor(i, (best_val - block_val).max(0.0));
-                            let plane = run.working_sets[i].plane_ref(j);
-                            let gamma = run.state.block_step_ref(i, plane);
-                            run.working_sets[i].touch(j, outer);
-                            if gamma > 0.0 {
-                                run.approx_steps_total += 1;
-                                if cfg.averaging {
-                                    run.avg_approx.update(&run.state.phi);
-                                }
-                            }
-                        }
-                    }
-                    // TTL eviction runs with the approximate pass, as in
-                    // Alg. 3 line 4; the evicted ids reconcile every
-                    // piece of per-plane state (coefficient ledger,
-                    // Gram cache — the leak fix — and product rows).
-                    ttl_evict(&mut run, i, outer, cfg, pairwise);
+                slope.begin_pass(run.state.dual_value(), measured(clock, problem));
+                let perm = run.rng.permutation(n);
+                for &i in perm.iter() {
+                    approx_block_visit(run, i, outer, pairwise, cfg);
                 }
                 passes += 1;
                 if cfg.auto_approx
-                    && !slope.continue_approx(run.state.dual_value(), measured(&clock, problem))
+                    && !slope.continue_approx(run.state.dual_value(), measured(clock, problem))
                 {
                     break;
                 }
@@ -495,7 +538,7 @@ pub fn run(
         // applies (otherwise caps-only eviction would let sets go stale).
         if cfg.cap_n > 0 && passes == 0 {
             for i in 0..n {
-                ttl_evict(&mut run, i, outer, cfg, pairwise);
+                ttl_evict(run, i, outer, cfg, pairwise);
             }
         }
         last_approx_passes = passes;
@@ -503,24 +546,105 @@ pub fn run(
         if cfg.renorm_every > 0 && outer % cfg.renorm_every == 0 {
             run.state.renormalize();
         }
+        // A fully completed iteration — the resume anchor. Budget breaks
+        // above skip this on purpose: a truncated exact pass is replayed
+        // from the top on resume rather than continued mid-pass.
+        run.outers_done = outer;
 
         // ---- Evaluation / stopping ------------------------------------
         if outer % cfg.eval_every == 0 || outer == cfg.max_iters {
             let pt = record_point(
-                problem, eng, &mut clock, cfg, &mut run, outer, last_approx_passes, &mut series,
+                problem, eng, clock, cfg, run, outer, last_approx_passes, series,
             );
             if cfg.target_gap > 0.0 && pt.primal - pt.dual <= cfg.target_gap {
                 break;
             }
         }
-        if cfg.max_time > 0.0 && measured(&clock, problem) >= cfg.max_time {
+        if cfg.max_time > 0.0 && measured(clock, problem) >= cfg.max_time {
             break;
         }
     }
 
     series.wall_secs = clock.wall();
     run.state.refresh_w();
-    (series, run)
+}
+
+/// One block visit of an approximate pass (Alg. 3 line 4): the
+/// pairwise / §3.5-cached / single-step update plus the per-visit gap
+/// floor, averaging hook and TTL eviction. Extracted so the async
+/// driver's overlapped approximate passes run the identical code.
+pub(crate) fn approx_block_visit(
+    run: &mut MpBcfwRun,
+    i: usize,
+    outer: u64,
+    pairwise: bool,
+    cfg: &MpBcfwConfig,
+) {
+    if pairwise {
+        let out = pairwise_block_updates(
+            &mut run.state,
+            &mut run.working_sets[i],
+            &mut run.grams[i],
+            &mut run.coeffs[i],
+            i,
+            cfg.inner_repeats.max(1),
+            outer,
+        );
+        run.approx_steps_total += out.steps as u64;
+        run.pairwise_steps_total += out.pairwise as u64;
+        run.gaps.observe_floor(i, out.first_gap);
+        if cfg.averaging && out.steps > 0 {
+            run.avg_approx.update(&run.state.phi);
+        }
+    } else if cfg.inner_repeats > 1 {
+        let out = cached_block_updates_with(
+            &mut run.state,
+            &mut run.working_sets[i],
+            &mut run.grams[i],
+            i,
+            cfg.inner_repeats,
+            outer,
+            &mut run.coef_scratch,
+            cfg.products,
+            cfg.product_refresh_every,
+            &mut run.products[i],
+            &mut run.product_stats,
+        );
+        run.approx_steps_total += out.steps as u64;
+        // Warm visits compute first_gap from persisted (possibly
+        // drifted) scalars; keep those out of the gap-sampling floors —
+        // only dense-fresh estimates may raise them.
+        if !out.warm {
+            run.gaps.observe_floor(i, out.first_gap);
+        }
+        if cfg.averaging && out.steps > 0 {
+            run.avg_approx.update(&run.state.phi);
+        }
+    } else {
+        run.state.refresh_w();
+        let best = run.working_sets[i].best_at(&run.state.w);
+        if let Some((j, best_val)) = best {
+            // Working-set gap floor, from quantities in hand
+            // (read-only; trajectory unchanged).
+            let block_val = math::dot(&run.state.blocks[i].star, &run.state.w)
+                + run.state.blocks[i].off;
+            run.gaps.observe_floor(i, (best_val - block_val).max(0.0));
+            let plane = run.working_sets[i].plane_ref(j);
+            let gamma = run.state.block_step_ref(i, plane);
+            run.working_sets[i].touch(j, outer);
+            if gamma > 0.0 {
+                run.approx_steps_total += 1;
+                if cfg.averaging {
+                    run.avg_approx.update(&run.state.phi);
+                }
+            }
+        }
+    }
+    // TTL eviction runs with the approximate pass, as in Alg. 3 line 4;
+    // the evicted ids reconcile every piece of per-plane state
+    // (coefficient ledger, Gram cache — the leak fix — and product
+    // rows).
+    ttl_evict(run, i, outer, cfg, pairwise);
 }
 
 /// Shared exact-pass bookkeeping for one block step, used verbatim by
@@ -529,7 +653,7 @@ pub fn run(
 /// the oracle plane, take the line-searched step, record the block gap,
 /// and keep the pairwise coefficient ledger reconciled (including cap-N
 /// eviction victims).
-fn apply_exact_step(
+pub(crate) fn apply_exact_step(
     run: &mut MpBcfwRun,
     i: usize,
     hat: &crate::model::plane::Plane,
@@ -571,7 +695,13 @@ fn apply_exact_step(
 /// needs: the pairwise coefficient ledger, the Gram cache (hashmap
 /// backend pruning — the triangular arena self-invalidates via slot
 /// generations), and the persisted §3.5 product rows.
-fn ttl_evict(run: &mut MpBcfwRun, i: usize, outer: u64, cfg: &MpBcfwConfig, pairwise: bool) {
+pub(crate) fn ttl_evict(
+    run: &mut MpBcfwRun,
+    i: usize,
+    outer: u64,
+    cfg: &MpBcfwConfig,
+    pairwise: bool,
+) {
     let dead = run.working_sets[i].evict_stale_ids(outer, cfg.ttl);
     if dead.is_empty() {
         return;
@@ -677,7 +807,7 @@ pub fn pairwise_block_updates(
     out
 }
 
-fn algo_name(cfg: &MpBcfwConfig) -> &'static str {
+pub(crate) fn algo_name(cfg: &MpBcfwConfig) -> &'static str {
     match (cfg.cap_n == 0, cfg.averaging) {
         (true, false) => "bcfw",
         (true, true) => "bcfw-avg",
@@ -688,12 +818,12 @@ fn algo_name(cfg: &MpBcfwConfig) -> &'static str {
 
 /// Measured time = pausable clock (which already includes virtual oracle
 /// charges made by the trainer).
-fn measured(clock: &Clock, _problem: &CountingOracle) -> f64 {
+pub(crate) fn measured(clock: &Clock, _problem: &CountingOracle) -> f64 {
     clock.elapsed()
 }
 
 #[allow(clippy::too_many_arguments)]
-fn record_point(
+pub(crate) fn record_point(
     problem: &CountingOracle,
     eng: &mut dyn ScoringEngine,
     clock: &mut Clock,
@@ -791,6 +921,10 @@ fn record_point(
         gram_hit_rate,
         cached_visits: run.product_stats.cached_visits,
         product_refreshes: run.product_stats.dense_refreshes,
+        planes_folded_async: run.async_stats.planes_folded_async,
+        stale_rejects: run.async_stats.stale_rejects,
+        mean_snapshot_staleness: run.async_stats.mean_staleness(),
+        worker_idle_s: run.async_stats.worker_idle_s,
         train_loss,
     };
     series.points.push(pt.clone());

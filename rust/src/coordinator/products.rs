@@ -472,6 +472,39 @@ impl BlockProducts {
             self.r.push(r_hat);
         }
     }
+
+    /// Checkpoint view of the persisted rows. The incremental scalars
+    /// (c/r/b_r) are maintained across visits, so a bitwise-resumable
+    /// checkpoint must carry them verbatim — recomputing them on restore
+    /// would silently turn every first visit into a dense refresh and
+    /// fork the `--products incremental` trajectory.
+    #[allow(clippy::type_complexity)]
+    pub fn to_parts(&self) -> (&[u64], &[f64], &[f64], f64, bool, u64, u64) {
+        (
+            &self.ids,
+            &self.c,
+            &self.r,
+            self.b_r,
+            self.valid,
+            self.visits_since_refresh,
+            self.zero_step_streak,
+        )
+    }
+
+    /// Rebuild persisted rows from checkpointed parts (inverse of
+    /// `to_parts`).
+    pub fn from_parts(
+        ids: Vec<u64>,
+        c: Vec<f64>,
+        r: Vec<f64>,
+        b_r: f64,
+        valid: bool,
+        visits_since_refresh: u64,
+        zero_step_streak: u64,
+    ) -> BlockProducts {
+        debug_assert!(ids.len() == c.len() && ids.len() == r.len());
+        BlockProducts { ids, c, r, b_r, valid, visits_since_refresh, zero_step_streak }
+    }
 }
 
 /// Outcome of one cached inner loop over a block.

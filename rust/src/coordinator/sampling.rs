@@ -202,6 +202,19 @@ impl BlockGaps {
         self.last_update.iter().all(|&t| t > 0)
     }
 
+    /// Checkpoint view: `(gaps, last_update, pass)` — the gap state
+    /// feeds gap-proportional sampling and the `gap_est` column, so a
+    /// bitwise-resumable checkpoint carries it verbatim.
+    pub fn to_parts(&self) -> (Vec<f64>, Vec<u64>, u64) {
+        (self.gaps.clone(), self.last_update.clone(), self.pass)
+    }
+
+    /// Rebuild from checkpointed parts (inverse of `to_parts`).
+    pub fn from_parts(gaps: Vec<f64>, last_update: Vec<u64>, pass: u64) -> BlockGaps {
+        debug_assert_eq!(gaps.len(), last_update.len());
+        BlockGaps { gaps, last_update, pass }
+    }
+
     /// Staleness-corrected sampling priorities: measured gap, boosted by
     /// `STALENESS_BOOST` per pass since measurement, plus a
     /// `UNIFORM_MIX` fraction of the mean so no block's probability

@@ -2,6 +2,7 @@
 //! engine selection. This is what the CLI, the examples and the bench
 //! harness all call into.
 
+use super::async_overlap::AsyncMode;
 use super::baselines::{cutting_plane, ssg};
 use super::checkpoint::ModelCheckpoint;
 use super::fw;
@@ -207,6 +208,20 @@ pub struct TrainSpec {
     /// as with any speed-affecting knob — the §3.4 rule is
     /// timing-based).
     pub oracle_reuse: bool,
+    /// Overlap exact-oracle calls with the approximate passes (CLI
+    /// `--async {off,on}`, default off; mp-bcfw family only). `off` is
+    /// bit-identical to the synchronous driver — the golden-trajectory
+    /// fixtures anchor that contract. `on` dispatches oracle calls to a
+    /// persistent worker pool against epoch-stamped w snapshots and folds
+    /// the planes back under a monotone guard, so the trajectory follows
+    /// a documented bounded-drift contract instead of bitwise replay.
+    /// Requires the native engine and `threads ≥ 1`.
+    pub async_mode: AsyncMode,
+    /// `--max-stale-epochs K` (async on only): let dispatched oracle work
+    /// trail the current epoch by at most K epochs before the driver
+    /// blocks and drains. K = 0 degenerates to synchronous dispatch —
+    /// bitwise-identical to `--async off` at equal threads.
+    pub max_stale_epochs: u64,
     /// Scoring engine to run on.
     pub engine: EngineKind,
     /// Also record the mean train task loss at each evaluation (costly).
@@ -242,6 +257,8 @@ impl Default for TrainSpec {
             gram: GramBackend::Triangular,
             product_refresh_every: 8,
             oracle_reuse: true,
+            async_mode: AsyncMode::Off,
+            max_stale_epochs: 1,
             engine: EngineKind::Native,
             with_train_loss: false,
             eval_every: 1,
@@ -347,6 +364,25 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
          {} has none",
         spec.algo.name()
     );
+    anyhow::ensure!(
+        spec.async_mode == AsyncMode::Off
+            || matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--async on overlaps the oracle with cached passes (mp-bcfw variants); \
+         {} has no approximate passes to overlap with",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.async_mode == AsyncMode::Off || spec.engine == EngineKind::Native,
+        "--async on requires --engine native (oracle workers score on native kernels)"
+    );
+    anyhow::ensure!(
+        spec.async_mode == AsyncMode::Off || spec.threads >= 1,
+        "--async on needs a worker pool; pass --threads >= 1"
+    );
+    anyhow::ensure!(
+        spec.max_stale_epochs == 1 || spec.async_mode == AsyncMode::On,
+        "--max-stale-epochs throttles the async dispatcher; pass --async on"
+    );
     let problem = build_problem(spec);
     let mut eng = spec.engine.build()?;
     let (series, phi) = train_on_full(spec, &problem, eng.as_mut());
@@ -443,6 +479,8 @@ pub fn train_on_full(
                 gram: spec.gram,
                 product_refresh_every: spec.product_refresh_every,
                 oracle_reuse: spec.oracle_reuse,
+                async_mode: if multi { spec.async_mode } else { AsyncMode::Off },
+                max_stale_epochs: spec.max_stale_epochs,
                 max_iters: spec.max_iters,
                 max_oracle_calls: spec.max_oracle_calls,
                 max_time: spec.max_time,
@@ -683,6 +721,42 @@ mod tests {
             algo: Algo::CuttingPlane,
             product_refresh_every: 2,
             ..Default::default()
+        };
+        assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn async_trains_and_rejects_invalid_combinations() {
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 3,
+            threads: 2,
+            auto_approx: false,
+            async_mode: AsyncMode::On,
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        let last = series.points.last().unwrap();
+        assert!(last.primal >= last.dual - 1e-9);
+        assert_eq!(series.async_mode, "on");
+        // Async needs a worker pool.
+        let bad = TrainSpec { threads: 0, ..spec.clone() };
+        assert!(train(&bad).is_err());
+        // Workers score on native kernels only.
+        let bad = TrainSpec {
+            engine: EngineKind::Xla { artifacts_dir: "artifacts".into() },
+            ..spec.clone()
+        };
+        assert!(train(&bad).is_err());
+        // Baselines have no approximate passes to overlap with.
+        let bad = TrainSpec { algo: Algo::Ssg, ..spec.clone() };
+        assert!(train(&bad).is_err());
+        // The staleness throttle is meaningless without async dispatch.
+        let bad = TrainSpec {
+            async_mode: AsyncMode::Off,
+            max_stale_epochs: 3,
+            ..spec
         };
         assert!(train(&bad).is_err());
     }

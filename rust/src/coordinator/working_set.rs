@@ -325,6 +325,38 @@ impl WorkingSet {
         self.slab.slot_bound()
     }
 
+    /// Next stable id this set would mint (checkpoint serialization —
+    /// restoring must not re-issue ids that older per-plane state, e.g.
+    /// a coefficient ledger's forgotten planes, may still reference).
+    pub fn next_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Rebuild a working set from checkpointed parts: `(plane, id,
+    /// last_active)` triples in the original entry order plus the
+    /// preserved id counter. Payloads land in a fresh slab (slot numbers
+    /// may differ from the original run — slots are an in-memory detail
+    /// that only the Gram arena keys by, and Gram caches restart cold on
+    /// restore); norms are recomputed through the same `norm_sq()` path
+    /// the original insert used, so they match bitwise.
+    pub fn restore(cap: usize, planes: Vec<(Plane, u64, u64)>, next_id: u64) -> WorkingSet {
+        let mut ws = WorkingSet::new(cap);
+        for (plane, id, last_active) in planes {
+            let nrm = plane.star.norm_sq();
+            let slot = ws.slab.insert(&plane.star);
+            ws.entries.push(WsEntry {
+                off: plane.off,
+                tag: plane.tag,
+                last_active,
+                id,
+                slot,
+            });
+            ws.norms.push(nrm);
+        }
+        ws.next_id = next_id;
+        ws
+    }
+
     /// Insert a plane returned by the exact oracle (or refresh its
     /// activity if a plane with the same tag is already cached). Applies
     /// the cap-N eviction. Returns the index of the entry.
@@ -565,6 +597,20 @@ impl BlockCoeffs {
     /// Number of tracked planes with nonzero mass.
     pub fn tracked(&self) -> usize {
         self.coef.len()
+    }
+
+    /// Checkpoint view: `(id, coef)` pairs sorted by id (the map itself
+    /// iterates in hash order, which must not leak into a serialized
+    /// artifact) plus the residual mass.
+    pub fn to_parts(&self) -> (Vec<(u64, f64)>, f64) {
+        let mut pairs: Vec<(u64, f64)> = self.coef.iter().map(|(&k, &v)| (k, v)).collect();
+        pairs.sort_by_key(|&(k, _)| k);
+        (pairs, self.residual)
+    }
+
+    /// Rebuild a ledger from checkpointed parts (inverse of `to_parts`).
+    pub fn from_parts(pairs: Vec<(u64, f64)>, residual: f64) -> BlockCoeffs {
+        BlockCoeffs { coef: pairs.into_iter().collect(), residual }
     }
 
     fn prune(&mut self) {

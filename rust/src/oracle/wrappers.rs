@@ -38,8 +38,9 @@ pub struct OracleStats {
     pub virtual_secs: f64,
 }
 
-/// Lock-free `+=` on an f64 stored as bits in an `AtomicU64`.
-fn atomic_add_f64(cell: &AtomicU64, add: f64) {
+/// Lock-free `+=` on an f64 stored as bits in an `AtomicU64` (shared
+/// with the async executor's worker-idle accounting).
+pub(crate) fn atomic_add_f64(cell: &AtomicU64, add: f64) {
     let mut cur = cell.load(Ordering::Relaxed);
     loop {
         let next = (f64::from_bits(cur) + add).to_bits();
@@ -121,6 +122,16 @@ impl CountingOracle {
             real_secs: f64::from_bits(self.real_secs.load(Ordering::Relaxed)),
             virtual_secs: f64::from_bits(self.virtual_secs.load(Ordering::Relaxed)),
         }
+    }
+
+    /// Credit `n` pre-paid exact-oracle calls to the counters (both
+    /// `calls` and `calls_all`). Checkpoint restore uses this so a
+    /// resumed run's call counter — the paper's x-axis and the oracle
+    /// budget's ledger — continues exactly where the interrupted run
+    /// left off.
+    pub fn charge_calls(&self, n: u64) {
+        self.calls.fetch_add(n, Ordering::Relaxed);
+        self.calls_all.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Zero all counters (each training run starts fresh).

@@ -1,0 +1,195 @@
+//! Async-overlap conformance: the `--async off` ⇄ `--async on
+//! --max-stale-epochs 0` bitwise-equivalence contract, and the bounded
+//! drift + monotone-dual contract of genuinely overlapped runs under
+//! adversarial completion orderings (driven by the deterministic
+//! [`VirtualExecutor`] — no wall-clock dependence anywhere in here).
+//!
+//! The `--async off` anchor itself is pinned across PRs by
+//! `tests/golden_trajectory.rs`: its fixtures replay `TrainSpec`s built
+//! with `..Default::default()`, and the default `async_mode` is `Off`,
+//! so the golden duals transitively gate the synchronous driver this
+//! suite compares against.
+
+use mpbcfw::coordinator::async_overlap::{
+    run_async_with, AsyncMode, CompletionOrder, VirtualExecutor,
+};
+use mpbcfw::coordinator::metrics::Series;
+use mpbcfw::coordinator::mp_bcfw::{self, MpBcfwConfig};
+use mpbcfw::data::synth::usps_like::{generate, UspsLikeConfig};
+use mpbcfw::data::types::Scale;
+use mpbcfw::oracle::multiclass::MulticlassProblem;
+use mpbcfw::oracle::wrappers::CountingOracle;
+use mpbcfw::runtime::engine::NativeEngine;
+
+fn tiny_problem() -> CountingOracle {
+    CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+        UspsLikeConfig::at_scale(Scale::Tiny),
+        1,
+    ))))
+}
+
+/// The pinned base config of every run here: `auto_approx` off (the
+/// §3.4 rule is wall-clock-driven and would fork twin trajectories)
+/// and a fixed approximate-pass budget.
+fn cfg(async_mode: AsyncMode, max_stale_epochs: u64) -> MpBcfwConfig {
+    MpBcfwConfig {
+        max_iters: 5,
+        auto_approx: false,
+        max_approx_passes: 2,
+        threads: 2,
+        seed: 7,
+        async_mode,
+        max_stale_epochs,
+        ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+    }
+}
+
+fn sync_series() -> Series {
+    let problem = tiny_problem();
+    let mut eng = NativeEngine;
+    let (series, _) = mp_bcfw::run(&problem, &mut eng, &cfg(AsyncMode::Off, 1));
+    series
+}
+
+fn async_series(order: CompletionOrder, workers: usize, stale: u64) -> Series {
+    let problem = tiny_problem();
+    let mut eng = NativeEngine;
+    let c = MpBcfwConfig { threads: workers, ..cfg(AsyncMode::On, stale) };
+    let mut exec = VirtualExecutor::new(&problem, workers, c.oracle_reuse, order);
+    let (series, _) = run_async_with(&problem, &mut eng, &c, &mut exec);
+    series
+}
+
+/// The trajectory identity of a series: (dual bits, primal bits,
+/// exact-oracle calls) per evaluation point. Timing columns are
+/// excluded — they are wall-clock-derived and legitimately differ.
+fn bits(s: &Series) -> Vec<(u64, u64, u64)> {
+    s.points
+        .iter()
+        .map(|p| (p.dual.to_bits(), p.primal.to_bits(), p.oracle_calls))
+        .collect()
+}
+
+#[test]
+fn stale_zero_is_bitwise_identical_to_async_off() {
+    // K = 0 degenerates the async driver to synchronous dispatch:
+    // everything dispatched in an epoch folds inside that epoch, in
+    // dispatch order — exactly the sharded synchronous pass. The
+    // contract is bitwise, for any worker count.
+    let off = sync_series();
+    assert_eq!(off.async_mode, "off");
+    for workers in [1usize, 2] {
+        let on = async_series(CompletionOrder::Fifo, workers, 0);
+        assert_eq!(on.async_mode, "on");
+        assert_eq!(
+            bits(&off),
+            bits(&on),
+            "async on/K=0 with {workers} worker(s) diverged from async off"
+        );
+        let last = on.points.last().unwrap();
+        // Synchronous dispatch never folds a stale plane.
+        assert_eq!(last.mean_snapshot_staleness, 0.0);
+        assert_eq!(last.stale_rejects, 0);
+    }
+}
+
+#[test]
+fn stale_zero_is_invariant_under_completion_order() {
+    // At K = 0 the fold queue (strict dispatch order) decides the merge
+    // sequence; arrival timing decides nothing. Adversarial completion
+    // orders must therefore not move a single bit.
+    let fifo = async_series(CompletionOrder::Fifo, 2, 0);
+    for order in [
+        CompletionOrder::Reversed,
+        CompletionOrder::Interleaved,
+        CompletionOrder::Starve(0),
+    ] {
+        let adv = async_series(order, 2, 0);
+        assert_eq!(bits(&fifo), bits(&adv), "{order:?} moved the K=0 trajectory");
+    }
+}
+
+#[test]
+fn overlapped_runs_stay_monotone_and_weakly_dual_under_adversarial_orders() {
+    let sync_last = sync_series().points.last().unwrap().dual;
+    assert!(sync_last > 0.0, "sync reference made no progress");
+    for order in [
+        CompletionOrder::Fifo,
+        CompletionOrder::Reversed,
+        CompletionOrder::Interleaved,
+        CompletionOrder::Starve(0),
+    ] {
+        let s = async_series(order, 2, 2);
+        for p in &s.points {
+            assert!(p.primal >= p.dual - 1e-8, "{order:?}: weak duality violated at {p:?}");
+        }
+        for w in s.points.windows(2) {
+            assert!(
+                w[1].dual >= w[0].dual - 1e-10,
+                "{order:?}: dual decreased {} -> {} (monotone fold guard broken)",
+                w[0].dual,
+                w[1].dual
+            );
+        }
+        // Bounded drift: overlap may cost progress vs the synchronous
+        // trajectory, but not collapse it.
+        let last = s.points.last().unwrap().dual;
+        assert!(
+            last >= 0.25 * sync_last,
+            "{order:?}: async dual {last} lost the sync reference {sync_last}"
+        );
+    }
+}
+
+#[test]
+fn overlapped_runs_are_deterministic_twins() {
+    // Same config + same executor schedule ⇒ bitwise-identical series,
+    // even for genuinely overlapped (K ≥ 1) adversarial runs.
+    for order in [
+        CompletionOrder::Reversed,
+        CompletionOrder::Interleaved,
+        CompletionOrder::Starve(1),
+    ] {
+        let a = async_series(order, 2, 2);
+        let b = async_series(order, 2, 2);
+        assert_eq!(bits(&a), bits(&b), "{order:?}: twin overlapped runs diverged");
+    }
+}
+
+#[test]
+fn starved_worker_forces_stale_folds_onto_the_guard() {
+    // Starving worker 0 holds half the blocks' planes in flight until
+    // the K = 2 throttle (or the final epoch) forces a drain, so folds
+    // arrive against a moved w: the run must exercise the stale path —
+    // planes folded at staleness ≥ 1 (visible in the mean) and/or
+    // monotone-guard rejections — while the trajectory above stays
+    // monotone.
+    let s = async_series(CompletionOrder::Starve(0), 2, 2);
+    let last = s.points.last().unwrap();
+    assert!(
+        last.planes_folded_async > 0 || last.stale_rejects > 0,
+        "starvation never exercised the stale-fold path: {last:?}"
+    );
+    assert!(
+        last.mean_snapshot_staleness > 0.0 || last.stale_rejects > 0,
+        "every fold reported staleness 0 despite a starved worker: {last:?}"
+    );
+}
+
+#[test]
+fn forced_epoch_gap_triggers_stale_rejects() {
+    // Tighter variant of the guard check: one worker, everything
+    // starved, so nothing folds until the throttle forces it several
+    // epochs late. Folding the same block's stale planes repeatedly
+    // must eventually hit the non-improving case and requeue (the
+    // monotone guard) — and the dual still never decreases.
+    let s = async_series(CompletionOrder::Starve(0), 1, 3);
+    for w in s.points.windows(2) {
+        assert!(w[1].dual >= w[0].dual - 1e-10, "guard let the dual decrease");
+    }
+    let last = s.points.last().unwrap();
+    assert!(
+        last.planes_folded_async + last.stale_rejects > 0,
+        "fully starved run recorded no async fold activity: {last:?}"
+    );
+}

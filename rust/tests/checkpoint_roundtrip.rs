@@ -1,0 +1,142 @@
+//! Run-checkpoint contract: a training run serialized mid-run and
+//! reloaded into a fresh process resumes onto the *same* trajectory —
+//! bitwise, in both `--products` modes — and a damaged checkpoint is
+//! rejected with an error that names the failing byte offset.
+//!
+//! Scope guards (mirroring `checkpoint::load_run`): averaged runs are
+//! refused (averagers are not serialized), and the suite pins
+//! `StepRule::Fw` — the pairwise dust-prune walks a `HashMap`, so its
+//! trajectory is not replay-stable across processes.
+
+use std::io::Write as _;
+
+use mpbcfw::coordinator::checkpoint::{load_run, save_run};
+use mpbcfw::coordinator::metrics::Series;
+use mpbcfw::coordinator::mp_bcfw::{self, MpBcfwConfig};
+use mpbcfw::coordinator::products::ProductMode;
+use mpbcfw::data::synth::usps_like::{generate, UspsLikeConfig};
+use mpbcfw::data::types::Scale;
+use mpbcfw::oracle::multiclass::MulticlassProblem;
+use mpbcfw::oracle::wrappers::CountingOracle;
+use mpbcfw::runtime::engine::NativeEngine;
+
+fn tiny_problem() -> CountingOracle {
+    CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+        UspsLikeConfig::at_scale(Scale::Tiny),
+        1,
+    ))))
+}
+
+fn cfg(max_iters: u64, products: ProductMode) -> MpBcfwConfig {
+    MpBcfwConfig {
+        max_iters,
+        auto_approx: false,
+        max_approx_passes: 2,
+        seed: 7,
+        products,
+        ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mpbcfw_it_ckpt_{name}_{}", std::process::id()))
+}
+
+fn bits(s: &Series) -> Vec<(u64, u64, u64, u64)> {
+    s.points
+        .iter()
+        .map(|p| (p.outer, p.dual.to_bits(), p.primal.to_bits(), p.oracle_calls))
+        .collect()
+}
+
+#[test]
+fn resumed_run_bitwise_matches_uninterrupted_run_in_both_product_modes() {
+    for products in [ProductMode::Recompute, ProductMode::Incremental] {
+        // Reference: one uninterrupted 8-iteration run.
+        let full_cfg = cfg(8, products);
+        let reference = tiny_problem();
+        let mut eng = NativeEngine;
+        let (full, _) = mp_bcfw::run(&reference, &mut eng, &full_cfg);
+
+        // Interrupted: stop after 4, checkpoint, reload into a fresh
+        // problem (fresh caches, fresh oracle arenas), resume to 8.
+        let problem = tiny_problem();
+        let (_, run) = mp_bcfw::run(&problem, &mut eng, &cfg(4, products));
+        let path = tmp(&format!("resume_{products:?}"));
+        save_run(&path, &run, &problem).expect("save_run failed");
+
+        let fresh = tiny_problem();
+        let mut reloaded = load_run(&path, &fresh, &full_cfg).expect("load_run failed");
+        let resumed = mp_bcfw::resume(&fresh, &mut eng, &full_cfg, &mut reloaded);
+        std::fs::remove_file(&path).ok();
+
+        // The resumed series covers outers 5..=8; it must equal the
+        // tail of the uninterrupted series bit for bit (values and the
+        // oracle-call ledger; timing columns restart and are excluded).
+        let resumed_bits = bits(&resumed);
+        assert_eq!(
+            resumed_bits.len(),
+            4,
+            "{products:?}: expected points for outers 5..=8, got {resumed_bits:?}"
+        );
+        let full_tail: Vec<_> =
+            bits(&full).into_iter().filter(|&(outer, ..)| outer >= 5).collect();
+        assert_eq!(
+            resumed_bits, full_tail,
+            "{products:?}: resumed trajectory diverged from the uninterrupted run"
+        );
+    }
+}
+
+#[test]
+fn foreign_file_is_rejected_naming_the_magic_offset() {
+    let path = tmp("foreign");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(b"definitely not a run checkpoint, long enough to read").unwrap();
+    drop(f);
+    let problem = tiny_problem();
+    let err = load_run(&path, &problem, &cfg(8, ProductMode::Incremental))
+        .expect_err("foreign bytes must not load");
+    std::fs::remove_file(&path).ok();
+    let msg = err.to_string();
+    assert!(msg.contains("bad magic"), "unhelpful error: {msg}");
+    assert!(msg.contains("byte offset 8"), "error must name the offset: {msg}");
+}
+
+#[test]
+fn truncated_checkpoint_is_rejected_naming_the_failing_offset() {
+    let full_cfg = cfg(4, ProductMode::Incremental);
+    let problem = tiny_problem();
+    let mut eng = NativeEngine;
+    let (_, run) = mp_bcfw::run(&problem, &mut eng, &full_cfg);
+    let path = tmp("truncated");
+    save_run(&path, &run, &problem).expect("save_run failed");
+
+    let bytes = std::fs::read(&path).unwrap();
+    let cut = bytes.len() / 2;
+    std::fs::write(&path, &bytes[..cut]).unwrap();
+
+    let fresh = tiny_problem();
+    let err = load_run(&path, &fresh, &full_cfg).expect_err("truncated file must not load");
+    std::fs::remove_file(&path).ok();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("byte offset"),
+        "truncation error must name where the read failed: {msg}"
+    );
+}
+
+#[test]
+fn averaged_runs_refuse_to_load() {
+    let base = cfg(4, ProductMode::Incremental);
+    let problem = tiny_problem();
+    let mut eng = NativeEngine;
+    let (_, run) = mp_bcfw::run(&problem, &mut eng, &base);
+    let path = tmp("averaged");
+    save_run(&path, &run, &problem).expect("save_run failed");
+
+    let avg_cfg = MpBcfwConfig { averaging: true, ..base };
+    let err = load_run(&path, &problem, &avg_cfg).expect_err("averaging must be refused");
+    std::fs::remove_file(&path).ok();
+    assert!(err.to_string().contains("averager"), "unhelpful error: {err}");
+}

@@ -27,6 +27,7 @@ CHECKED_STRUCTS = [
     ("EvalPoint", "rust/src/coordinator/metrics.rs"),
     ("TrainSpec", "rust/src/coordinator/trainer.rs"),
     ("MpBcfwConfig", "rust/src/coordinator/mp_bcfw.rs"),
+    ("AsyncStats", "rust/src/coordinator/async_overlap.rs"),
     ("BaselineProvenance", "rust/src/bench/regress.rs"),
     ("BaselineCounters", "rust/src/bench/regress.rs"),
     ("Baseline", "rust/src/bench/regress.rs"),
