@@ -23,6 +23,7 @@ use mpbcfw::oracle::multiclass::MulticlassProblem;
 use mpbcfw::oracle::sequence::SequenceProblem;
 use mpbcfw::oracle::wrappers::CountingOracle;
 use mpbcfw::runtime::engine::{NativeEngine, ScoringEngine};
+use mpbcfw::utils::math::{self, KernelBackend};
 use mpbcfw::utils::rng::Pcg;
 
 /// Time `f` over enough iterations for stable numbers; returns ns/op.
@@ -56,11 +57,23 @@ fn main() {
     let mut eng = NativeEngine;
     let rng = &mut Pcg::seeded(7);
 
-    // -- dense math kernels ------------------------------------------
+    // -- dense math kernels (scalar vs simd A/B) -----------------------
     let a: Vec<f64> = (0..2561).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..2561).map(|_| rng.normal()).collect();
-    bench("dot 2561-d", || {
-        std::hint::black_box(mpbcfw::utils::math::dot(&a, &b));
+    bench("dot 2561-d (scalar)", || {
+        std::hint::black_box(math::dot_with(KernelBackend::Scalar, &a, &b));
+    });
+    bench("dot 2561-d (simd)", || {
+        std::hint::black_box(math::dot_with(KernelBackend::Simd, &a, &b));
+    });
+    let mut acc = vec![0.0f64; 2561];
+    bench("axpy 2561-d (scalar)", || {
+        math::axpy_with(KernelBackend::Scalar, 0.5, &a, &mut acc);
+        std::hint::black_box(&acc);
+    });
+    bench("axpy 2561-d (simd)", || {
+        math::axpy_with(KernelBackend::Simd, 0.5, &a, &mut acc);
+        std::hint::black_box(&acc);
     });
 
     // -- oracles -------------------------------------------------------
@@ -191,8 +204,57 @@ fn main() {
             0, // no periodic refresh: every visit after the first is warm
             &mut prod,
             &mut stats,
+            KernelBackend::Scalar,
         ));
     });
+
+    // -- kernel-backend A/B on the cached product pass ------------------
+    // Recompute mode pays the dense Θ(|W|·d) product pass every visit,
+    // so the dot/fused kernels dominate — the honest scalar-vs-simd
+    // comparison. One pair per scenario dimensionality; both backends
+    // see byte-identical working sets (fresh seeded RNG per scenario).
+    let scenarios: [(&str, usize); 3] =
+        [("usps_like", usps.dim()), ("ocr_like", ocr.dim()), ("horseseg_like", seg.dim())];
+    for (name, sdim) in scenarios {
+        for kernel in [KernelBackend::Scalar, KernelBackend::Simd] {
+            let mut srng = Pcg::seeded(11 + sdim as u64);
+            let mut wsk = WorkingSet::new(1000);
+            for t in 0..12 {
+                let nnz = (sdim / 4).clamp(32, 200);
+                let pairs: Vec<(u32, f64)> =
+                    (0..nnz).map(|_| (srng.below(sdim) as u32, srng.normal())).collect();
+                wsk.insert(
+                    Plane::new(PlaneVec::sparse(sdim, pairs), srng.normal(), t as u64),
+                    0,
+                );
+            }
+            let mut gramk = GramCache::new();
+            let mut stk = DualState::new(4, sdim, 0.01);
+            let mut prodk = BlockProducts::new();
+            let mut statsk = ProductStats::default();
+            let mut nowk = 0u64;
+            bench(
+                &format!("approx block recompute {name} ({})", kernel.name()),
+                || {
+                    nowk += 1;
+                    std::hint::black_box(cached_block_updates_with(
+                        &mut stk,
+                        &mut wsk,
+                        &mut gramk,
+                        0,
+                        10,
+                        nowk,
+                        &mut coef_scratch,
+                        ProductMode::Recompute,
+                        0,
+                        &mut prodk,
+                        &mut statsk,
+                        kernel,
+                    ));
+                },
+            );
+        }
+    }
 
     // -- parallel sharded exact-pass dispatch (threads sweep) -----------
     // The paper's costliest oracle (graph cut) is where sharding pays:
@@ -227,18 +289,4 @@ fn main() {
         eng.matvec(&mat, 64, 2561, &v, &mut out);
         std::hint::black_box(&out);
     });
-
-    #[cfg(feature = "xla-rt")]
-    {
-        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-        if std::path::Path::new(dir).join("manifest.json").exists() {
-            let mut xla = mpbcfw::runtime::xla::XlaEngine::load(dir).unwrap();
-            bench("xla matvec 64x2561 (PJRT, padded bucket)", || {
-                xla.matvec(&mat, 64, 2561, &v, &mut out);
-                std::hint::black_box(&out);
-            });
-        } else {
-            println!("(xla matvec skipped: artifacts/ not built)");
-        }
-    }
 }

@@ -86,6 +86,9 @@ impl RunGroup {
                 "gram_hit_rate",
                 "cached_visits",
                 "product_refreshes",
+                "kernel_backend",
+                "simd_lane_elems",
+                "simd_tail_elems",
             ],
         )?;
         for s in &self.series {
@@ -132,6 +135,9 @@ impl RunGroup {
                     format!("{}", p.gram_hit_rate),
                     p.cached_visits.to_string(),
                     p.product_refreshes.to_string(),
+                    s.kernel_backend.clone(),
+                    p.simd_lane_elems.to_string(),
+                    p.simd_tail_elems.to_string(),
                 ])?;
             }
         }

@@ -826,6 +826,377 @@ pub fn async_sweep(
     Ok(())
 }
 
+/// KERNELS — arithmetic-backend A/B (`--kernel scalar` vs `simd`), in
+/// two tiers sharing one table. Micro rows time each hot-path kernel on
+/// odd-length slices (the lane tail is exercised) and check the lane
+/// contract directly: elementwise kernels (axpy/scale_add/interp and the
+/// sparse scatter mirror) must match scalar **bitwise** — independent
+/// per-lane IEEE ops, no FMA — so their `matches_scalar` cell is a hard
+/// bool CI gates via `tools/check_tables.py`; reduction kernels
+/// (dot/dot2/merge-join) reassociate under the pinned fold order and
+/// report their absolute deviation in `dual_drift_vs_scalar` instead.
+/// E2e rows train MP-BCFW per scenario under both backends on a pinned
+/// pass schedule and report the max dual drift of the simd trajectory
+/// against the scalar anchor, plus the realized f64x4 lane utilization.
+/// Emits `table_kernels.csv` plus a machine-readable
+/// `bench_kernels.json`.
+pub fn kernels_sweep(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    use crate::utils::math::{self, KernelBackend};
+    use crate::utils::rng::Pcg;
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_kernels.csv"),
+        &[
+            "row",
+            "name",
+            "dataset",
+            "contract",
+            "ns_scalar",
+            "ns_simd",
+            "speedup",
+            "wall_s",
+            "final_gap",
+            "lane_utilization",
+            "matches_scalar",
+            "dual_drift_vs_scalar",
+        ],
+    )?;
+    let mut entries: Vec<Json> = Vec::new();
+    log("== KERNELS: scalar vs simd backend (strict-order lane contract)".into());
+
+    // Median-of-rounds ns/op for one kernel invocation.
+    fn time_ns<F: FnMut()>(mut f: F) -> f64 {
+        for _ in 0..2 {
+            f();
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let mut iters = 1u64;
+            loop {
+                let t = std::time::Instant::now();
+                for _ in 0..iters {
+                    f();
+                }
+                let dt = t.elapsed().as_secs_f64();
+                if dt > 0.004 {
+                    best = best.min(dt * 1e9 / iters as f64);
+                    break;
+                }
+                iters *= 4;
+            }
+        }
+        best
+    }
+
+    // -- micro tier: odd length so every kernel crosses the lane tail --
+    let n = 4097usize;
+    let mut rng = Pcg::seeded(42);
+    let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let y0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    // Sparse mirrors: sorted unique indices into an n-dim dense target.
+    let idx: Vec<u32> = (0..997u32).map(|k| k * 4 + 1).collect();
+    let val: Vec<f64> = idx.iter().map(|_| rng.normal()).collect();
+    let idx2: Vec<u32> = (0..997u32).map(|k| k * 3 + 2).collect();
+    let val2: Vec<f64> = idx2.iter().map(|_| rng.normal()).collect();
+
+    struct MicroRow {
+        name: &'static str,
+        contract: &'static str,
+        ns_scalar: f64,
+        ns_simd: f64,
+        matches: Option<bool>,
+        err: Option<f64>,
+    }
+    let mut micro: Vec<MicroRow> = Vec::new();
+
+    // Elementwise kernels: time both, then compare one application bitwise.
+    {
+        let mut ys = y0.clone();
+        let ns_s = time_ns(|| math::axpy_with(KernelBackend::Scalar, 0.5, &a, &mut ys));
+        let ns_v = time_ns(|| math::axpy_with(KernelBackend::Simd, 0.5, &a, &mut ys));
+        let mut out_s = y0.clone();
+        math::axpy_with(KernelBackend::Scalar, 0.5, &a, &mut out_s);
+        let mut out_v = y0.clone();
+        math::axpy_with(KernelBackend::Simd, 0.5, &a, &mut out_v);
+        let ok = out_s.iter().zip(&out_v).all(|(x, y)| x.to_bits() == y.to_bits());
+        micro.push(MicroRow {
+            name: "axpy",
+            contract: "elementwise",
+            ns_scalar: ns_s,
+            ns_simd: ns_v,
+            matches: Some(ok),
+            err: None,
+        });
+    }
+    {
+        let mut ys = y0.clone();
+        let ns_s =
+            time_ns(|| math::scale_add_with(KernelBackend::Scalar, 0.75, 0.5, &a, &mut ys));
+        let ns_v = time_ns(|| math::scale_add_with(KernelBackend::Simd, 0.75, 0.5, &a, &mut ys));
+        let mut out_s = y0.clone();
+        math::scale_add_with(KernelBackend::Scalar, 0.75, 0.5, &a, &mut out_s);
+        let mut out_v = y0.clone();
+        math::scale_add_with(KernelBackend::Simd, 0.75, 0.5, &a, &mut out_v);
+        let ok = out_s.iter().zip(&out_v).all(|(x, y)| x.to_bits() == y.to_bits());
+        micro.push(MicroRow {
+            name: "scale_add",
+            contract: "elementwise",
+            ns_scalar: ns_s,
+            ns_simd: ns_v,
+            matches: Some(ok),
+            err: None,
+        });
+    }
+    {
+        let mut ys = y0.clone();
+        let ns_s = time_ns(|| math::interp_with(KernelBackend::Scalar, 0.25, &a, &mut ys));
+        let ns_v = time_ns(|| math::interp_with(KernelBackend::Simd, 0.25, &a, &mut ys));
+        let mut out_s = y0.clone();
+        math::interp_with(KernelBackend::Scalar, 0.25, &a, &mut out_s);
+        let mut out_v = y0.clone();
+        math::interp_with(KernelBackend::Simd, 0.25, &a, &mut out_v);
+        let ok = out_s.iter().zip(&out_v).all(|(x, y)| x.to_bits() == y.to_bits());
+        micro.push(MicroRow {
+            name: "interp",
+            contract: "elementwise",
+            ns_scalar: ns_s,
+            ns_simd: ns_v,
+            matches: Some(ok),
+            err: None,
+        });
+    }
+    {
+        let mut ys = y0.clone();
+        let scatter_scalar = |out: &mut [f64]| {
+            for (&i, &v) in idx.iter().zip(&val) {
+                out[i as usize] += 0.5 * v;
+            }
+        };
+        let ns_s = time_ns(|| scatter_scalar(&mut ys));
+        let ns_v = time_ns(|| math::scatter_axpy_simd(0.5, &idx, &val, &mut ys));
+        let mut out_s = y0.clone();
+        scatter_scalar(&mut out_s);
+        let mut out_v = y0.clone();
+        math::scatter_axpy_simd(0.5, &idx, &val, &mut out_v);
+        let ok = out_s.iter().zip(&out_v).all(|(x, y)| x.to_bits() == y.to_bits());
+        micro.push(MicroRow {
+            name: "scatter_axpy",
+            contract: "elementwise",
+            ns_scalar: ns_s,
+            ns_simd: ns_v,
+            matches: Some(ok),
+            err: None,
+        });
+    }
+    // Reduction kernels: reassociated fold — report deviation, no
+    // bitwise claim.
+    {
+        let ns_s = time_ns(|| {
+            std::hint::black_box(math::dot_with(KernelBackend::Scalar, &a, &b));
+        });
+        let ns_v = time_ns(|| {
+            std::hint::black_box(math::dot_with(KernelBackend::Simd, &a, &b));
+        });
+        let err = (math::dot_with(KernelBackend::Scalar, &a, &b)
+            - math::dot_with(KernelBackend::Simd, &a, &b))
+        .abs();
+        micro.push(MicroRow {
+            name: "dot",
+            contract: "reduction",
+            ns_scalar: ns_s,
+            ns_simd: ns_v,
+            matches: None,
+            err: Some(err),
+        });
+    }
+    {
+        let ns_s = time_ns(|| {
+            std::hint::black_box(math::dot2_seq_with(KernelBackend::Scalar, &a, &b, &y0));
+        });
+        let ns_v = time_ns(|| {
+            std::hint::black_box(math::dot2_seq_with(KernelBackend::Simd, &a, &b, &y0));
+        });
+        let (u_s, v_s) = math::dot2_seq_with(KernelBackend::Scalar, &a, &b, &y0);
+        let (u_v, v_v) = math::dot2_seq_with(KernelBackend::Simd, &a, &b, &y0);
+        let err = (u_s - u_v).abs().max((v_s - v_v).abs());
+        micro.push(MicroRow {
+            name: "dot2_seq",
+            contract: "reduction",
+            ns_scalar: ns_s,
+            ns_simd: ns_v,
+            matches: None,
+            err: Some(err),
+        });
+    }
+    {
+        let merge_scalar = || {
+            let (mut p, mut q, mut acc) = (0usize, 0usize, 0.0f64);
+            while p < idx.len() && q < idx2.len() {
+                match idx[p].cmp(&idx2[q]) {
+                    std::cmp::Ordering::Less => p += 1,
+                    std::cmp::Ordering::Greater => q += 1,
+                    std::cmp::Ordering::Equal => {
+                        acc += val[p] * val2[q];
+                        p += 1;
+                        q += 1;
+                    }
+                }
+            }
+            acc
+        };
+        let ns_s = time_ns(|| {
+            std::hint::black_box(merge_scalar());
+        });
+        let ns_v = time_ns(|| {
+            std::hint::black_box(math::merge_dot_simd(&idx, &val, &idx2, &val2));
+        });
+        let err = (merge_scalar() - math::merge_dot_simd(&idx, &val, &idx2, &val2)).abs();
+        micro.push(MicroRow {
+            name: "merge_dot",
+            contract: "reduction",
+            ns_scalar: ns_s,
+            ns_simd: ns_v,
+            matches: None,
+            err: Some(err),
+        });
+    }
+
+    for m in &micro {
+        let speedup = if m.ns_simd > 0.0 { m.ns_scalar / m.ns_simd } else { f64::INFINITY };
+        log(format!(
+            "   micro {:12} {:11} {:>9.0} ns -> {:>9.0} ns ({:.2}x){}",
+            m.name,
+            m.contract,
+            m.ns_scalar,
+            m.ns_simd,
+            speedup,
+            match (m.matches, m.err) {
+                (Some(ok), _) => format!("  bitwise={ok}"),
+                (_, Some(e)) => format!("  |err|={e:.2e}"),
+                _ => String::new(),
+            }
+        ));
+        csv.row(&[
+            "micro".into(),
+            m.name.into(),
+            String::new(),
+            m.contract.into(),
+            format!("{}", m.ns_scalar),
+            format!("{}", m.ns_simd),
+            format!("{speedup}"),
+            String::new(),
+            String::new(),
+            String::new(),
+            m.matches.map(|b| b.to_string()).unwrap_or_default(),
+            m.err.map(|e| format!("{e}")).unwrap_or_default(),
+        ])?;
+        entries.push(Json::obj(vec![
+            ("row", Json::s("micro")),
+            ("name", Json::s(m.name)),
+            ("contract", Json::s(m.contract)),
+            ("ns_scalar", Json::Num(m.ns_scalar)),
+            ("ns_simd", Json::Num(m.ns_simd)),
+            ("speedup", Json::Num(speedup)),
+            (
+                "matches_scalar",
+                m.matches.map(Json::Bool).unwrap_or(Json::Null),
+            ),
+            (
+                "abs_err_vs_scalar",
+                m.err.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    // -- e2e tier: full MP-BCFW per scenario under both backends -------
+    for ds in DatasetKind::all() {
+        let base = pinned_base(ds, opts);
+        let mut scalar_duals: Vec<f64> = Vec::new();
+        for kernel in [KernelBackend::Scalar, KernelBackend::Simd] {
+            let spec = TrainSpec { kernel, ..base.clone() };
+            let s = trainer::train(&spec)?;
+            let last = s.points.last().unwrap();
+            let duals: Vec<f64> = s.points.iter().map(|p| p.dual).collect();
+            let is_anchor = kernel == KernelBackend::Scalar;
+            if is_anchor {
+                scalar_duals = duals.clone();
+            }
+            let matches = duals.len() == scalar_duals.len()
+                && duals.iter().zip(&scalar_duals).all(|(a, b)| a == b);
+            let drift = duals
+                .iter()
+                .zip(&scalar_duals)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            let lane_total = last.simd_lane_elems + last.simd_tail_elems;
+            let lane_util = if lane_total > 0 {
+                last.simd_lane_elems as f64 / lane_total as f64
+            } else {
+                0.0
+            };
+            // Reductions reassociate, so only the scalar anchor makes a
+            // bitwise claim about itself; the simd row reports drift.
+            let match_cell = if is_anchor { matches.to_string() } else { String::new() };
+            log(format!(
+                "   e2e   {:14} {:6}  wall={:7.2}s  gap={:.3e}  lanes={:.0}%  drift={:.2e}",
+                ds.name(),
+                kernel.name(),
+                s.wall_secs,
+                last.primal - last.dual,
+                100.0 * lane_util,
+                drift
+            ));
+            csv.row(&[
+                "e2e".into(),
+                kernel.name().into(),
+                ds.name().into(),
+                if is_anchor { "anchor".into() } else { "bounded-drift".into() },
+                String::new(),
+                String::new(),
+                String::new(),
+                format!("{}", s.wall_secs),
+                format!("{}", last.primal - last.dual),
+                format!("{lane_util}"),
+                match_cell,
+                format!("{drift}"),
+            ])?;
+            entries.push(Json::obj(vec![
+                ("row", Json::s("e2e")),
+                ("dataset", Json::s(ds.name())),
+                ("kernel", Json::s(kernel.name())),
+                ("wall_s", Json::Num(s.wall_secs)),
+                ("final_gap", Json::Num(last.primal - last.dual)),
+                ("simd_lane_elems", Json::Num(last.simd_lane_elems as f64)),
+                ("simd_tail_elems", Json::Num(last.simd_tail_elems as f64)),
+                ("lane_utilization", Json::Num(lane_util)),
+                (
+                    "matches_scalar",
+                    if is_anchor { Json::Bool(matches) } else { Json::Null },
+                ),
+                ("dual_drift_vs_scalar", Json::Num(drift)),
+            ]));
+        }
+    }
+    csv.flush()?;
+    let bench = Json::obj(vec![
+        ("bench", Json::s("kernels")),
+        ("scale", Json::s(opts.scale.name())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(out_dir.join("bench_kernels.json"), bench.to_string())?;
+    log(format!(
+        "   wrote {} and {}",
+        out_dir.join("table_kernels.csv").display(),
+        out_dir.join("bench_kernels.json").display()
+    ));
+    Ok(())
+}
+
 /// Valid `--table` tokens.
 pub const TABLES: &[&str] = &[
     "oracle-stats",
@@ -837,6 +1208,7 @@ pub const TABLES: &[&str] = &[
     "oracle",
     "products",
     "async",
+    "kernels",
     "all",
 ];
 
@@ -858,6 +1230,7 @@ pub fn run_table(
         "oracle" => oracle_reuse_sweep(opts, out_dir, log),
         "products" => products_sweep(opts, out_dir, log),
         "async" => async_sweep(opts, out_dir, log),
+        "kernels" => kernels_sweep(opts, out_dir, log),
         "all" => {
             oracle_stats(datasets, opts, out_dir, &mut log)?;
             crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, &mut log)?;
@@ -867,7 +1240,8 @@ pub fn run_table(
             sparsity_sweep(opts, out_dir, &mut log)?;
             oracle_reuse_sweep(opts, out_dir, &mut log)?;
             products_sweep(opts, out_dir, &mut log)?;
-            async_sweep(opts, out_dir, &mut log)
+            async_sweep(opts, out_dir, &mut log)?;
+            kernels_sweep(opts, out_dir, &mut log)
         }
         other => anyhow::bail!("unknown table {other} (expected one of {TABLES:?})"),
     }
@@ -1037,6 +1411,60 @@ mod tests {
                 assert!(e.get("dual_drift_vs_off").as_f64().unwrap().is_finite());
             } else {
                 assert_eq!(*e.get("matches_off"), Json::Bool(true));
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn kernels_sweep_writes_csv_and_json_with_bitwise_elementwise_rows() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_kernels_{}", std::process::id()));
+        let mut lines = Vec::new();
+        kernels_sweep(&tiny_opts(), &dir, |m| lines.push(m)).unwrap();
+        let text = std::fs::read_to_string(dir.join("table_kernels.csv")).unwrap();
+        assert!(text.starts_with("row,name,dataset,contract,ns_scalar"));
+        for kernel in ["axpy", "scale_add", "interp", "scatter_axpy", "dot", "dot2_seq", "merge_dot"]
+        {
+            assert!(text.contains(&format!("micro,{kernel}")), "missing micro row {kernel}");
+        }
+        for ds in ["usps_like", "ocr_like", "horseseg_like"] {
+            assert!(text.contains(&format!("e2e,scalar,{ds}")), "missing scalar row for {ds}");
+            assert!(text.contains(&format!("e2e,simd,{ds}")), "missing simd row for {ds}");
+        }
+        // Elementwise micro rows and the scalar anchors must all carry
+        // matches_scalar=true — this is the column CI gates.
+        assert!(!text.contains("false"), "an elementwise kernel broke bitwise:\n{text}");
+        let json = std::fs::read_to_string(dir.join("bench_kernels.json")).unwrap();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("kernels"));
+        let entries = parsed.get("entries").as_arr().unwrap();
+        assert_eq!(entries.len(), 7 + 6);
+        for e in entries {
+            match e.get("row").as_str() {
+                Some("micro") => {
+                    if e.get("contract").as_str() == Some("elementwise") {
+                        assert_eq!(*e.get("matches_scalar"), Json::Bool(true));
+                    } else {
+                        // Reductions make no bitwise claim but must stay
+                        // within reassociation territory.
+                        assert_eq!(*e.get("matches_scalar"), Json::Null);
+                        let err = e.get("abs_err_vs_scalar").as_f64().unwrap();
+                        assert!(err < 1e-9, "reduction deviation too large: {err}");
+                    }
+                }
+                Some("e2e") => {
+                    let drift = e.get("dual_drift_vs_scalar").as_f64().unwrap();
+                    assert!(drift.is_finite());
+                    if e.get("kernel").as_str() == Some("simd") {
+                        assert_eq!(*e.get("matches_scalar"), Json::Null);
+                        assert!(drift < 1e-6, "simd trajectory drifted too far: {drift}");
+                        // The counters must see actual lane traffic.
+                        assert!(e.get("simd_lane_elems").as_f64().unwrap() > 0.0);
+                    } else {
+                        assert_eq!(*e.get("matches_scalar"), Json::Bool(true));
+                    }
+                }
+                other => panic!("unexpected row kind {other:?}"),
             }
         }
         std::fs::remove_dir_all(dir).ok();

@@ -8,6 +8,7 @@ use crate::coordinator::async_overlap::AsyncMode;
 use crate::coordinator::products::{GramBackend, ProductMode};
 use crate::coordinator::sampling::{SamplingStrategy, StepRule};
 use crate::coordinator::trainer::{self, Algo, DatasetKind, EngineKind, TrainSpec};
+use crate::utils::math::KernelBackend;
 use crate::model::problem::StructuredProblem as _;
 use crate::data::synth::{horseseg_like, ocr_like, usps_like};
 use crate::data::types::Scale;
@@ -23,17 +24,16 @@ USAGE:
                   [--sampling uniform|gap|cyclic] [--steps fw|pairwise] [--dense-planes]
                   [--products recompute|incremental] [--gram hashmap|triangular]
                   [--product-refresh K] [--oracle-reuse on|off] [--threads N]
-                  [--async off|on] [--max-stale-epochs K]
-                  [--oracle-delay SECONDS] [--engine native|xla] [--artifacts DIR]
-                  [--train-loss] [--max-oracle-calls N] [--target-gap F]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|async|all
+                  [--async off|on] [--max-stale-epochs K] [--kernel scalar|simd]
+                  [--oracle-delay SECONDS] [--engine native] [--train-loss]
+                  [--max-oracle-calls N] [--target-gap F]
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|async|kernels|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR] [--smoke]
   mpbcfw bench    --regress [--smoke] | --rebaseline
                   [--baselines DIR] [--dataset usps|ocr|horseseg|all]
   mpbcfw gen-data --dataset usps|ocr|horseseg --out FILE [--scale ...] [--seed S]
   mpbcfw evaluate --model FILE [--dataset ...] [--scale ...] [--data-seed S] [--engine ...]
-  mpbcfw inspect  [--artifacts DIR]
 
 Add --save-model FILE to `train` to persist the learned model; `evaluate`
 reloads it and reports the structured train loss on a (re-generated)
@@ -90,6 +90,19 @@ whole trajectory matches bit for bit. --oracle-reuse off restores the
 cold build-every-call baseline, and `bench --table oracle` quantifies
 the difference (wall time plus the oracle_build_s/oracle_solve_s
 split).
+
+--kernel picks the arithmetic backend for the hot-path dots/axpys
+(bcfw/mp-bcfw family only). scalar (the default) is the strict-index-
+order bitwise anchor behind the golden-trajectory fixtures. simd runs
+the same kernels on the vendored portable f64x4 lanes: elementwise
+kernels (axpy/scale/interp and the sparse scatter/gather mirrors) are
+bitwise-identical to scalar — independent per-lane IEEE ops, no FMA —
+while reductions (dots/norms) reassociate under a pinned fold order, so
+a simd run is deterministic and twin-reproducible but tracks the scalar
+trajectory under a small bounded dual drift. `bench --table kernels`
+measures the speedup and pins both contracts. The retired --engine xla
+path fails with a clear error; scoring always runs on these native
+kernels now.
 
 --async on overlaps the costly exact oracle with the cheap cached
 passes: a persistent worker pool (sized by --threads) solves max-oracle
@@ -183,6 +196,8 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         async_mode: AsyncMode::parse(args.get_or("async", "off"))
             .ok_or_else(|| anyhow::anyhow!("bad --async (off|on)"))?,
         max_stale_epochs: args.u64_or("max-stale-epochs", 1).map_err(err)?,
+        kernel: KernelBackend::parse(args.get_or("kernel", "scalar"))
+            .ok_or_else(|| anyhow::anyhow!("bad --kernel (scalar|simd)"))?,
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
@@ -354,25 +369,6 @@ pub fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-pub fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
-    let dir = args.get_or("artifacts", "artifacts");
-    let manifest = crate::runtime::manifest::Manifest::load(dir)?;
-    println!("artifacts at {dir} (dtype {}):", manifest.dtype);
-    println!("  {} plane_scores buckets", manifest.matvec.len());
-    for e in &manifest.matvec {
-        println!("    [{} x {}] {}", e.rows, e.cols, e.file);
-    }
-    println!("  {} approx_select buckets", manifest.select.len());
-    for e in &manifest.select {
-        println!("    [{} x {}] {}", e.rows, e.cols, e.file);
-    }
-    println!("  {} matmul_bt buckets", manifest.matmul_bt.len());
-    for e in &manifest.matmul_bt {
-        println!("    [{} x {} x {}] {}", e.m, e.k, e.n, e.file);
-    }
-    Ok(())
-}
-
 /// Entry point used by main.rs; returns the process exit code.
 pub fn dispatch(argv: Vec<String>) -> i32 {
     let bool_flags =
@@ -393,7 +389,6 @@ pub fn dispatch(argv: Vec<String>) -> i32 {
         "bench" => cmd_bench(&args),
         "gen-data" => cmd_gen_data(&args),
         "evaluate" => cmd_evaluate(&args),
-        "inspect" => cmd_inspect(&args),
         other => {
             eprintln!("unknown command {other}\n\n{USAGE}");
             return 2;
@@ -546,6 +541,47 @@ mod tests {
             1,
             "--max-stale-epochs without --async on must be rejected"
         );
+    }
+
+    #[test]
+    fn train_with_kernel_flag() {
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --dataset usps --kernel simd")),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --kernel avx512")),
+            1,
+            "unknown --kernel value must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --algo ssg --kernel simd")),
+            1,
+            "--kernel simd on a baseline (no dispatch layer) must be rejected"
+        );
+    }
+
+    #[test]
+    fn engine_xla_is_a_retired_validated_error() {
+        // The selector still parses so the failure mode is a clear
+        // runtime error, not an unknown-flag parse error.
+        assert_eq!(dispatch(toks("train --scale tiny --iters 2 --engine xla")), 1);
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --engine tpu")),
+            1,
+            "unknown engines still rejected at parse time"
+        );
+    }
+
+    #[test]
+    fn bench_kernels_smoke_runs() {
+        let dir =
+            std::env::temp_dir().join(format!("mpbcfw_cli_kernels_{}", std::process::id()));
+        let cmd = format!("bench --table kernels --smoke --out {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(dir.join("table_kernels.csv").exists());
+        assert!(dir.join("bench_kernels.json").exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //!
 //! [`args`] is a tiny declarative flag parser (`--key value`,
 //! `--key=value`, boolean switches, positionals); [`commands`] implements
-//! the subcommands — `train`, `bench`, `gen-data`, `evaluate`, `inspect`
+//! the subcommands — `train`, `bench`, `gen-data`, `evaluate`
 //! — on top of `coordinator::trainer` and the bench harness. Run
 //! `mpbcfw --help` (or see `commands::USAGE`) for the full surface,
 //! including the `--threads` flag that shards the exact oracle pass over

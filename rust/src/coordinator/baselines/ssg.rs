@@ -124,6 +124,8 @@ fn record(
         gram_hit_rate: f64::NAN,
         cached_visits: 0,
         product_refreshes: 0,
+        simd_lane_elems: 0,
+        simd_tail_elems: 0,
         planes_folded_async: 0, // no async driver
         stale_rejects: 0,
         mean_snapshot_staleness: 0.0,

@@ -41,7 +41,7 @@ use crate::oracle::wrappers::CountingOracle;
 use crate::utils::rng::Pcg;
 
 const MAGIC: &[u8; 8] = b"MPBCMD01";
-const RUN_MAGIC: &[u8; 8] = b"MPBCRN01";
+const RUN_MAGIC: &[u8; 8] = b"MPBCRN02";
 
 /// A trained model: everything needed to score new instances (and to
 /// bound how suboptimal the snapshot was).
@@ -185,6 +185,8 @@ pub fn save_run<P: AsRef<Path>>(
     wu64(f, run.product_stats.dense_refreshes)?;
     wu64(f, run.product_stats.warm_visits)?;
     wu64(f, run.product_stats.guard_rejects)?;
+    wu64(f, run.product_stats.simd_lane_elems)?;
+    wu64(f, run.product_stats.simd_tail_elems)?;
     // Dual state: φ, then per block (φ^i, cached ‖φ^i_*‖²).
     wf64(f, run.state.phi.off)?;
     for &x in &run.state.phi.star {
@@ -382,6 +384,8 @@ pub fn load_run<P: AsRef<Path>>(
         dense_refreshes: r.u64()?,
         warm_visits: r.u64()?,
         guard_rejects: r.u64()?,
+        simd_lane_elems: r.u64()?,
+        simd_tail_elems: r.u64()?,
     };
     // Dual state.
     let phi_off = r.f64()?;

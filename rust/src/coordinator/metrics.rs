@@ -85,6 +85,15 @@ pub struct EvalPoint {
     /// the gap to `cached_visits` is the warm visits that ran with zero
     /// dense dots.
     pub product_refreshes: u64,
+    /// Payload elements processed in full 4-lane SIMD groups by dense
+    /// product refreshes so far (`--kernel simd`; 0 under scalar and for
+    /// optimizers without the cached inner loop). Together with
+    /// `simd_tail_elems` this reports realized lane utilization:
+    /// `lane / (lane + tail)`.
+    pub simd_lane_elems: u64,
+    /// Payload elements handled by the scalar remainder loops (`nnz mod
+    /// 4` tails) of dense product refreshes under `--kernel simd`.
+    pub simd_tail_elems: u64,
     /// Oracle planes folded back through the `--async on` path so far
     /// (fresh and stale; guard-rejected folds excluded). 0 under
     /// `--async off` and for optimizers without the async driver.
@@ -130,6 +139,8 @@ impl EvalPoint {
             ("gram_hit_rate", Json::Num(self.gram_hit_rate)),
             ("cached_visits", Json::Num(self.cached_visits as f64)),
             ("product_refreshes", Json::Num(self.product_refreshes as f64)),
+            ("simd_lane_elems", Json::Num(self.simd_lane_elems as f64)),
+            ("simd_tail_elems", Json::Num(self.simd_tail_elems as f64)),
             ("planes_folded_async", Json::Num(self.planes_folded_async as f64)),
             ("stale_rejects", Json::Num(self.stale_rejects as f64)),
             ("mean_snapshot_staleness", Json::Num(self.mean_snapshot_staleness)),
@@ -166,6 +177,11 @@ pub struct Series {
     /// overlapped worker pool with the bounded-drift contract); empty
     /// for optimizers without the async driver.
     pub async_mode: String,
+    /// Arithmetic kernel backend (`scalar` = strict-index-order bitwise
+    /// anchor, `simd` = explicit f64x4 lanes with the bounded-drift
+    /// reduction contract); empty for optimizers that don't route
+    /// through the kernel dispatch layer.
+    pub kernel_backend: String,
     /// Evaluation snapshots, in order.
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
@@ -231,6 +247,7 @@ impl Series {
             ("plane_repr", Json::s(&self.plane_repr)),
             ("oracle_reuse", Json::s(&self.oracle_reuse)),
             ("async_mode", Json::s(&self.async_mode)),
+            ("kernel_backend", Json::s(&self.kernel_backend)),
             ("wall_secs", Json::Num(self.wall_secs)),
             (
                 "shard_secs",
@@ -331,6 +348,8 @@ mod tests {
             gram_hit_rate: f64::NAN,
             cached_visits: 0,
             product_refreshes: 0,
+            simd_lane_elems: 0,
+            simd_tail_elems: 0,
             planes_folded_async: 0,
             stale_rejects: 0,
             mean_snapshot_staleness: 0.0,
@@ -371,6 +390,8 @@ mod tests {
             gram_hit_rate: f64::NAN,
             cached_visits: 0,
             product_refreshes: 0,
+            simd_lane_elems: 0,
+            simd_tail_elems: 0,
             planes_folded_async: 0,
             stale_rejects: 0,
             mean_snapshot_staleness: 0.0,
@@ -423,6 +444,8 @@ mod tests {
             gram_hit_rate: 0.75,
             cached_visits: 50,
             product_refreshes: 5,
+            simd_lane_elems: 800,
+            simd_tail_elems: 24,
             planes_folded_async: 33,
             stale_rejects: 2,
             mean_snapshot_staleness: 0.5,

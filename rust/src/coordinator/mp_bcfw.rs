@@ -42,6 +42,7 @@ use crate::model::scratch::OracleScratch;
 use crate::oracle::wrappers::CountingOracle;
 use crate::runtime::engine::ScoringEngine;
 use crate::utils::math;
+use crate::utils::math::KernelBackend;
 use crate::utils::rng::Pcg;
 use crate::utils::timer::Clock;
 
@@ -71,6 +72,9 @@ use crate::utils::timer::Clock;
 /// assert_eq!(mp.products, ProductMode::Incremental); // warm §3.5 visits
 /// assert_eq!(mp.gram, GramBackend::Triangular); // unhashed Gram lookups
 /// assert_eq!(mp.product_refresh_every, 8); // drift guard cadence
+///
+/// use mpbcfw::utils::math::KernelBackend;
+/// assert_eq!(mp.kernel, KernelBackend::Scalar); // bitwise golden anchor
 ///
 /// let plain = MpBcfwConfig::bcfw(0.01); // N = M = 0
 /// assert_eq!(plain.cap_n, 0);
@@ -190,6 +194,18 @@ pub struct MpBcfwConfig {
     pub renorm_every: u64,
     /// Also record mean train task loss at each evaluation (costly).
     pub with_train_loss: bool,
+    /// Arithmetic kernel backend (CLI `--kernel {scalar,simd}`, default
+    /// scalar). `Scalar` is the strict-index-order loop set every golden
+    /// fixture is anchored on — bitwise-reproducible. `Simd` runs the
+    /// hot-path products, Gram merge-joins and materialization axpys on
+    /// explicit `f64x4` lanes (vendored `wide` shim): elementwise
+    /// kernels stay bitwise-identical to scalar, reduction kernels
+    /// reassociate under a fixed fold order — deterministic and
+    /// twin-reproducible, but scalar-comparable only up to a bounded
+    /// dual drift (`tests/kernel_backends.rs` pins both contracts).
+    /// Exact-pass line searches, `DualState` internals and the warm
+    /// monotone guard stay scalar on both backends. See `utils::math`.
+    pub kernel: KernelBackend,
 }
 
 impl Default for MpBcfwConfig {
@@ -220,6 +236,7 @@ impl Default for MpBcfwConfig {
             eval_every: 1,
             renorm_every: 64,
             with_train_loss: false,
+            kernel: KernelBackend::Scalar,
         }
     }
 }
@@ -407,6 +424,7 @@ pub(crate) fn new_series(problem: &CountingOracle, cfg: &MpBcfwConfig) -> Series
         plane_repr: if cfg.dense_planes { "dense" } else { "sparse" }.to_string(),
         oracle_reuse: if cfg.oracle_reuse { "on" } else { "off" }.to_string(),
         async_mode: cfg.async_mode.name().to_string(),
+        kernel_backend: cfg.kernel.name().to_string(),
         ..Default::default()
     }
 }
@@ -589,6 +607,7 @@ pub(crate) fn approx_block_visit(
             i,
             cfg.inner_repeats.max(1),
             outer,
+            cfg.kernel,
         );
         run.approx_steps_total += out.steps as u64;
         run.pairwise_steps_total += out.pairwise as u64;
@@ -609,6 +628,7 @@ pub(crate) fn approx_block_visit(
             cfg.product_refresh_every,
             &mut run.products[i],
             &mut run.product_stats,
+            cfg.kernel,
         );
         run.approx_steps_total += out.steps as u64;
         // Warm visits compute first_gap from persisted (possibly
@@ -622,11 +642,11 @@ pub(crate) fn approx_block_visit(
         }
     } else {
         run.state.refresh_w();
-        let best = run.working_sets[i].best_at(&run.state.w);
+        let best = run.working_sets[i].best_at_with(cfg.kernel, &run.state.w);
         if let Some((j, best_val)) = best {
             // Working-set gap floor, from quantities in hand
             // (read-only; trajectory unchanged).
-            let block_val = math::dot(&run.state.blocks[i].star, &run.state.w)
+            let block_val = math::dot_with(cfg.kernel, &run.state.blocks[i].star, &run.state.w)
                 + run.state.blocks[i].off;
             run.gaps.observe_floor(i, (best_val - block_val).max(0.0));
             let plane = run.working_sets[i].plane_ref(j);
@@ -741,6 +761,7 @@ pub struct PairwiseOutcome {
 /// Gram cache. That keeps the away bookkeeping simple and obviously
 /// correct; porting the pairwise update into the §3.5 all-scalar inner
 /// loop is a known follow-up optimization.
+#[allow(clippy::too_many_arguments)]
 pub fn pairwise_block_updates(
     state: &mut DualState,
     ws: &mut WorkingSet,
@@ -749,14 +770,15 @@ pub fn pairwise_block_updates(
     i: usize,
     repeats: usize,
     now: u64,
+    kernel: KernelBackend,
 ) -> PairwiseOutcome {
     let mut out = PairwiseOutcome::default();
     for r in 0..repeats.max(1) {
         state.refresh_w();
-        let Some((jb, best_val)) = ws.best_at(&state.w) else { break };
+        let Some((jb, best_val)) = ws.best_at_with(kernel, &state.w) else { break };
         if r == 0 {
             let block_val =
-                math::dot(&state.blocks[i].star, &state.w) + state.blocks[i].off;
+                math::dot_with(kernel, &state.blocks[i].star, &state.w) + state.blocks[i].off;
             out.first_gap = (best_val - block_val).max(0.0);
         }
         // Away candidate: the worst-valued plane with ledger mass.
@@ -773,7 +795,7 @@ pub fn pairwise_block_updates(
         let mut gamma = 0.0;
         if let Some((jw, _)) = worst {
             if jw != jb {
-                let dot_bw = gram.get(ws, jb, jw);
+                let dot_bw = gram.get_with(ws, jb, jw, kernel);
                 let cap = co.coef(ws.id(jw));
                 gamma =
                     state.pairwise_step_ref(i, ws.plane_ref(jb), ws.plane_ref(jw), dot_bw, cap);
@@ -921,6 +943,8 @@ pub(crate) fn record_point(
         gram_hit_rate,
         cached_visits: run.product_stats.cached_visits,
         product_refreshes: run.product_stats.dense_refreshes,
+        simd_lane_elems: run.product_stats.simd_lane_elems,
+        simd_tail_elems: run.product_stats.simd_tail_elems,
         planes_folded_async: run.async_stats.planes_folded_async,
         stale_rejects: run.async_stats.stale_rejects,
         mean_snapshot_staleness: run.async_stats.mean_staleness(),

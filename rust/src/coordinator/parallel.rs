@@ -29,8 +29,8 @@
 //!    as thread-count-invariant as the steps themselves.
 //!
 //! Workers score on their own `NativeEngine` (stateless, zero-cost to
-//! construct). The PJRT engine is not shared across threads; the trainer
-//! rejects `--threads` together with `--engine xla`.
+//! construct; the retired `--engine xla` selector fails validation long
+//! before dispatch).
 //!
 //! Each worker additionally owns an [`OracleScratch`] arena
 //! (`exact_pass_with`): persistent per-example solver graphs and decode

@@ -63,6 +63,7 @@ use super::dual::{DualState, StepInfo};
 use super::working_set::WorkingSet;
 use crate::model::plane::{line_search_from_products, DensePlane};
 use crate::utils::math;
+use crate::utils::math::KernelBackend;
 
 /// Which `GramCache` backend serves pairwise plane products.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -235,6 +236,20 @@ impl GramCache {
 
     /// ⟨p_a, p_b⟩ with lazy computation.
     pub fn get(&mut self, ws: &WorkingSet, a: usize, b: usize) -> f64 {
+        self.get_with(ws, a, b, KernelBackend::Scalar)
+    }
+
+    /// [`get`](Self::get) on the selected kernel backend. Only the miss
+    /// path computes anything; a hit returns whatever backend filled the
+    /// cell (within one run the backend is fixed, so cells are
+    /// backend-homogeneous).
+    pub fn get_with(
+        &mut self,
+        ws: &WorkingSet,
+        a: usize,
+        b: usize,
+        kernel: KernelBackend,
+    ) -> f64 {
         match &mut self.store {
             Store::Map(map) => {
                 let (ia, ib) = (ws.id(a), ws.id(b));
@@ -244,7 +259,7 @@ impl GramCache {
                     return v;
                 }
                 self.misses += 1;
-                let v = ws.plane_ref(a).star.dot(ws.plane_ref(b).star);
+                let v = ws.plane_ref(a).star.dot_with(ws.plane_ref(b).star, kernel);
                 map.insert(key, v);
                 v
             }
@@ -266,7 +281,7 @@ impl GramCache {
                     return vals[k];
                 }
                 self.misses += 1;
-                let v = ws.plane_ref(a).star.dot(ws.plane_ref(b).star);
+                let v = ws.plane_ref(a).star.dot_with(ws.plane_ref(b).star, kernel);
                 vals[k] = v;
                 stamps[k] = stamp;
                 v
@@ -313,6 +328,14 @@ pub struct ProductStats {
     /// Warm materializations rejected by the monotone guard (the block
     /// is refreshed on its next visit).
     pub guard_rejects: u64,
+    /// Payload elements processed in full 4-lane SIMD groups during
+    /// dense product refreshes (zero under `--kernel scalar`). Together
+    /// with [`simd_tail_elems`](Self::simd_tail_elems) this gives the
+    /// lane-utilization ratio the eval stream reports.
+    pub simd_lane_elems: u64,
+    /// Payload elements left to the scalar remainder loop (the `nnz mod
+    /// 4` tails) during dense product refreshes under `--kernel simd`.
+    pub simd_tail_elems: u64,
 }
 
 /// Per-block persisted §3.5 products (`--products incremental`): the
@@ -558,6 +581,7 @@ pub fn cached_block_updates(
         0,
         &mut prod,
         &mut stats,
+        KernelBackend::Scalar,
     )
 }
 
@@ -578,6 +602,13 @@ pub fn cached_block_updates(
 /// every block every pass, so a per-call `vec![0.0; m]` here allocates
 /// n times per pass). It is fully reinitialized on entry; its contents
 /// after the call are meaningless to the caller.
+///
+/// `kernel` selects the arithmetic backend for the product pass, Gram
+/// misses, and the materialization axpys (`--kernel`; see
+/// `utils::math`). The warm-path monotone guard intentionally stays
+/// scalar on both backends: it is the safety net that certifies a warm
+/// materialization improves the dual, so its O(d) check uses the
+/// bitwise-anchored loop regardless of the backend under test.
 #[allow(clippy::too_many_arguments)]
 pub fn cached_block_updates_with(
     state: &mut DualState,
@@ -591,6 +622,7 @@ pub fn cached_block_updates_with(
     refresh_every: u64,
     prod: &mut BlockProducts,
     stats: &mut ProductStats,
+    kernel: KernelBackend,
 ) -> BlockOutcome {
     let m = ws.len();
     if m == 0 || repeats == 0 {
@@ -635,12 +667,17 @@ pub fn cached_block_updates_with(
         }
         // First step of §3.5: the Θ(|W_i|·d) product computation — one
         // fused slab traversal per plane.
-        let (aa, cc) = ws.fused_products(&state.phi.star, &state.blocks[i].star);
+        let (aa, cc) = ws.fused_products_with(kernel, &state.phi.star, &state.blocks[i].star);
         a_j = aa;
         c_j = cc;
-        b = math::dot(&state.blocks[i].star, &state.phi.star);
-        d = math::nrm2sq(&state.blocks[i].star);
-        e = math::nrm2sq(&state.phi.star);
+        b = math::dot_with(kernel, &state.blocks[i].star, &state.phi.star);
+        d = math::nrm2sq_with(kernel, &state.blocks[i].star);
+        e = math::nrm2sq_with(kernel, &state.phi.star);
+        if kernel == KernelBackend::Simd {
+            let (lanes, tail) = ws.lane_split();
+            stats.simd_lane_elems += lanes;
+            stats.simd_tail_elems += tail;
+        }
     }
 
     let f_start = -e / (2.0 * lambda) + off_phi;
@@ -694,7 +731,7 @@ pub fn cached_block_updates_with(
         // a_j and c_j increments are mathematically identical, which is
         // what keeps r_j = a_j − c_j invariant under the visit.
         for j in 0..m {
-            let g_jjh = if j == jh { gg } else { gram.get(ws, j, jh) };
+            let g_jjh = if j == jh { gg } else { gram.get_with(ws, j, jh, kernel) };
             a_j[j] += gamma * (g_jjh - c_j[j]);
             c_j[j] = (1.0 - gamma) * c_j[j] + gamma * g_jjh;
         }
@@ -735,10 +772,10 @@ pub fn cached_block_updates_with(
 
     // Materialize block' once and restore the φ = Σφ^i invariant.
     let mut new_block = DensePlane::zeros(dim);
-    math::axpy(c0, &state.blocks[i].star, &mut new_block.star);
+    math::axpy_with(kernel, c0, &state.blocks[i].star, &mut new_block.star);
     for (j, &x) in coef.iter().enumerate() {
         if x != 0.0 {
-            ws.axpy_entry_into(j, x, &mut new_block.star);
+            ws.axpy_entry_into_with(kernel, j, x, &mut new_block.star);
         }
     }
     new_block.off = off_i;
@@ -1148,6 +1185,7 @@ mod tests {
                 8,
                 &mut prod,
                 &mut stats,
+                KernelBackend::Scalar,
             );
             if !prod.is_valid() {
                 return Err("cold visit must seed rows".into());
@@ -1212,6 +1250,7 @@ mod tests {
                 0, // never refresh periodically: visits 2.. are all warm
                 &mut prod,
                 &mut stats,
+                KernelBackend::Scalar,
             );
             let f2 = st.dual_value();
             assert!(f2 >= f - 1e-10, "dual decreased on visit {visit}: {f} -> {f2}");
@@ -1253,6 +1292,7 @@ mod tests {
                 2, // cold, warm, warm, cold, warm, warm, ...
                 &mut prod,
                 &mut stats,
+                KernelBackend::Scalar,
             );
         }
         assert_eq!(stats.cached_visits, 9);
@@ -1281,6 +1321,7 @@ mod tests {
             0,
             &mut prod,
             &mut stats,
+            KernelBackend::Scalar,
         );
         assert!(prod.is_valid());
         // TTL-evict everything stale; rows reconcile and the next visit
@@ -1302,6 +1343,7 @@ mod tests {
             0,
             &mut prod,
             &mut stats,
+            KernelBackend::Scalar,
         );
         // All planes were inserted at now=0 with last touches ≤ 2, so the
         // sweep emptied the set → visit is a no-op; re-stock and check a
@@ -1324,6 +1366,7 @@ mod tests {
             0,
             &mut prod,
             &mut stats,
+            KernelBackend::Scalar,
         );
         assert!(stats.dense_refreshes > before, "misaligned rows must refresh");
         let dense_now = stats.dense_refreshes;
@@ -1339,6 +1382,7 @@ mod tests {
             0,
             &mut prod,
             &mut stats,
+            KernelBackend::Scalar,
         );
         assert_eq!(stats.dense_refreshes, dense_now, "aligned revisit must be warm");
     }

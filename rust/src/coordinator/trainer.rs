@@ -18,6 +18,7 @@ use crate::oracle::multiclass::MulticlassProblem;
 use crate::oracle::sequence::SequenceProblem;
 use crate::oracle::wrappers::CountingOracle;
 use crate::runtime::engine::{NativeEngine, ScoringEngine};
+use crate::utils::math::KernelBackend;
 
 /// Training algorithm selector (paper algorithms + related-work baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,23 +108,24 @@ impl DatasetKind {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     Native,
-    /// PJRT-backed engine over the AOT artifacts in the given directory.
+    /// Retired PJRT/XLA engine selector. The runtime behind it was
+    /// removed (see `docs/ALGORITHMS.md` §Kernel backends for the
+    /// rationale); the variant survives only so `--engine xla` fails
+    /// with a clear error instead of being silently unparseable.
     Xla { artifacts_dir: String },
 }
 
 impl EngineKind {
-    /// Construct the engine (fails for `Xla` without the `xla-rt`
-    /// feature or a readable artifacts directory).
+    /// Construct the engine (always fails for the retired `Xla` path).
     pub fn build(&self) -> anyhow::Result<Box<dyn ScoringEngine>> {
         match self {
             EngineKind::Native => Ok(Box::new(NativeEngine)),
-            #[cfg(feature = "xla-rt")]
-            EngineKind::Xla { artifacts_dir } => Ok(Box::new(
-                crate::runtime::xla::XlaEngine::load(artifacts_dir)?,
-            )),
-            #[cfg(not(feature = "xla-rt"))]
             EngineKind::Xla { .. } => {
-                anyhow::bail!("built without the xla-rt feature; use --engine native")
+                anyhow::bail!(
+                    "the XLA engine was retired (scoring runs on the native kernels, \
+                     with --kernel {{scalar,simd}} selecting the inner-kernel backend); \
+                     use --engine native"
+                )
             }
         }
     }
@@ -222,6 +224,16 @@ pub struct TrainSpec {
     /// blocks and drains. K = 0 degenerates to synchronous dispatch —
     /// bitwise-identical to `--async off` at equal threads.
     pub max_stale_epochs: u64,
+    /// Inner-kernel backend for the hot-path dots/axpys (CLI
+    /// `--kernel {scalar,simd}`, default scalar; bcfw/mp-bcfw family
+    /// only — the baselines never route through the dispatch layer).
+    /// `scalar` is the bitwise golden-trajectory anchor. `simd` runs
+    /// the same kernels on the vendored portable `f64x4` lanes:
+    /// elementwise kernels are bitwise-identical to scalar (strict-order
+    /// lane contract), reductions reassociate under a pinned fold order,
+    /// so simd runs are twin-deterministic with a bounded dual drift vs
+    /// scalar (A/B'd by `bench --table kernels`).
+    pub kernel: KernelBackend,
     /// Scoring engine to run on.
     pub engine: EngineKind,
     /// Also record the mean train task loss at each evaluation (costly).
@@ -259,6 +271,7 @@ impl Default for TrainSpec {
             oracle_reuse: true,
             async_mode: AsyncMode::Off,
             max_stale_epochs: 1,
+            kernel: KernelBackend::Scalar,
             engine: EngineKind::Native,
             with_train_loss: false,
             eval_every: 1,
@@ -383,6 +396,12 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
         spec.max_stale_epochs == 1 || spec.async_mode == AsyncMode::On,
         "--max-stale-epochs throttles the async dispatcher; pass --async on"
     );
+    anyhow::ensure!(
+        spec.kernel == KernelBackend::Scalar
+            || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--kernel simd dispatches the bcfw/mp-bcfw inner kernels; {} never routes through them",
+        spec.algo.name()
+    );
     let problem = build_problem(spec);
     let mut eng = spec.engine.build()?;
     let (series, phi) = train_on_full(spec, &problem, eng.as_mut());
@@ -481,6 +500,7 @@ pub fn train_on_full(
                 oracle_reuse: spec.oracle_reuse,
                 async_mode: if multi { spec.async_mode } else { AsyncMode::Off },
                 max_stale_epochs: spec.max_stale_epochs,
+                kernel: spec.kernel,
                 max_iters: spec.max_iters,
                 max_oracle_calls: spec.max_oracle_calls,
                 max_time: spec.max_time,
@@ -722,6 +742,36 @@ mod tests {
             product_refresh_every: 2,
             ..Default::default()
         };
+        assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn kernel_simd_trains_and_rejects_on_baselines() {
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 3,
+            kernel: KernelBackend::Simd,
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        assert_eq!(series.kernel_backend, "simd");
+        let last = series.points.last().unwrap();
+        // Reductions reassociate, so no bitwise claim here — but weak
+        // duality and the lane-utilization counters must hold.
+        assert!(last.primal >= last.dual - 1e-9);
+        assert!(
+            last.simd_lane_elems + last.simd_tail_elems > 0,
+            "simd runs record lane utilization"
+        );
+        // Scalar stays the default and records zero lane traffic.
+        let scalar = TrainSpec { kernel: KernelBackend::Scalar, ..spec.clone() };
+        let series_s = train(&scalar).unwrap();
+        assert_eq!(series_s.kernel_backend, "scalar");
+        assert_eq!(series_s.points.last().unwrap().simd_lane_elems, 0);
+        // Baselines never route through the dispatch layer; a simd
+        // request there would be silently ignored — reject instead.
+        let bad = TrainSpec { algo: Algo::Ssg, ..spec };
         assert!(train(&bad).is_err());
     }
 

@@ -46,6 +46,7 @@ use std::collections::HashMap;
 
 use crate::model::plane::{Plane, PlaneRef, PlaneVec, PlaneVecView};
 use crate::utils::math;
+use crate::utils::math::KernelBackend;
 
 /// CSR-style structure-of-arrays arena for plane payloads (see the
 /// module docs). One per working set; payloads are keyed by *slot*.
@@ -448,9 +449,16 @@ impl WorkingSet {
 
     /// Best plane at weights w: argmax ⟨p, [w 1]⟩. Returns (idx, value).
     pub fn best_at(&self, w: &[f64]) -> Option<(usize, f64)> {
+        self.best_at_with(KernelBackend::Scalar, w)
+    }
+
+    /// [`best_at`](Self::best_at) on the selected kernel backend. The
+    /// argmax scan itself is backend-independent; only the per-plane dot
+    /// products change (reassociating on simd — tolerance contract).
+    pub fn best_at_with(&self, k: KernelBackend, w: &[f64]) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         for (idx, e) in self.entries.iter().enumerate() {
-            let v = self.slab.view(e.slot).dot_dense(w) + e.off;
+            let v = self.slab.view(e.slot).dot_dense_with(k, w) + e.off;
             if best.map_or(true, |(_, bv)| v > bv) {
                 best = Some((idx, v));
             }
@@ -465,11 +473,25 @@ impl WorkingSet {
     /// `dot_dense` calls, so the fusion is bitwise-neutral while halving
     /// the payload reads.
     pub fn fused_products(&self, u: &[f64], v: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_products_with(KernelBackend::Scalar, u, v)
+    }
+
+    /// [`fused_products`](Self::fused_products) on the selected backend.
+    /// On simd, each payload is traversed once with two independent lane
+    /// accumulators (`gather_dot2_simd` / `dot2_seq_simd`), so the
+    /// product-neutrality of the fusion is preserved per backend; the
+    /// simd sums themselves reassociate (tolerance contract).
+    pub fn fused_products_with(
+        &self,
+        k: KernelBackend,
+        u: &[f64],
+        v: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
         let mut a = Vec::with_capacity(self.entries.len());
         let mut c = Vec::with_capacity(self.entries.len());
         for e in &self.entries {
-            let (sa, sc) = match self.slab.view(e.slot) {
-                PlaneVecView::Sparse { idx, val, .. } => {
+            let (sa, sc) = match (self.slab.view(e.slot), k) {
+                (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Scalar) => {
                     let (mut sa, mut sc) = (0.0f64, 0.0f64);
                     for (i, x) in idx.iter().zip(val.iter()) {
                         let k = *i as usize;
@@ -478,7 +500,15 @@ impl WorkingSet {
                     }
                     (sa, sc)
                 }
-                PlaneVecView::Dense(p) => math::dot2_seq(p, u, v),
+                (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Simd) => {
+                    math::gather_dot2_simd(idx, val, u, v)
+                }
+                (PlaneVecView::Dense(p), KernelBackend::Scalar) => {
+                    math::dot2_seq(p, u, v)
+                }
+                (PlaneVecView::Dense(p), KernelBackend::Simd) => {
+                    math::dot2_seq_simd(p, u, v)
+                }
             };
             a.push(sa);
             c.push(sc);
@@ -490,6 +520,18 @@ impl WorkingSet {
     /// `PlaneVec::axpy_into`).
     pub fn axpy_entry_into(&self, idx: usize, alpha: f64, out: &mut [f64]) {
         self.slab.view(self.entries[idx].slot).axpy_into(alpha, out)
+    }
+
+    /// [`axpy_entry_into`](Self::axpy_entry_into) on the selected
+    /// backend (elementwise — bitwise identical either way).
+    pub fn axpy_entry_into_with(
+        &self,
+        k: KernelBackend,
+        idx: usize,
+        alpha: f64,
+        out: &mut [f64],
+    ) {
+        self.slab.view(self.entries[idx].slot).axpy_into_with(k, alpha, out)
     }
 
     /// Total heap use of the cached planes (the `plane_bytes` metric:
@@ -505,6 +547,22 @@ impl WorkingSet {
     /// `plane_nnz_mean` metric; dense-stored planes count d).
     pub fn nnz_total(&self) -> usize {
         self.entries.iter().map(|e| self.slab.payload_nnz(e.slot)).sum()
+    }
+
+    /// SIMD lane accounting for one traversal of every cached payload:
+    /// `(lane_elems, tail_elems)` where `lane_elems` is the entries
+    /// processed in full 4-lane groups (`⌊nnz/4⌋·4` per payload) and
+    /// `tail_elems` the scalar remainders (`nnz mod 4`). Feeds the
+    /// `simd_lane_elems`/`simd_tail_elems` eval counters; O(|W_i|) from
+    /// the slab's stored lengths, no payload reads.
+    pub fn lane_split(&self) -> (u64, u64) {
+        let (mut lanes, mut tail) = (0u64, 0u64);
+        for e in &self.entries {
+            let nnz = self.slab.payload_nnz(e.slot) as u64;
+            lanes += nnz / 4 * 4;
+            tail += nnz % 4;
+        }
+        (lanes, tail)
     }
 }
 

@@ -1,24 +1,23 @@
 //! # mpbcfw — Multi-Plane Block-Coordinate Frank-Wolfe for Structural SVMs
 //!
-//! A Rust + JAX + Pallas reproduction of Shah, Kolmogorov & Lampert,
+//! A pure-Rust reproduction of Shah, Kolmogorov & Lampert,
 //! *"A Multi-Plane Block-Coordinate Frank-Wolfe Algorithm for Training
 //! Structural SVMs with a Costly max-Oracle"* (2014).
 //!
 //! ## Architecture
 //!
-//! The system is three layers. Layer 3 (this crate) implements the
-//! training coordinator — FW / BCFW / MP-BCFW optimizers with working
-//! sets, automatic parameter selection, inner-product caching, iterate
-//! averaging, and a sharded parallel dispatch of the exact oracle pass —
-//! plus every substrate the paper depends on: three max-oracles
-//! (multiclass, Viterbi, graph-cut on our own Boykov–Kolmogorov
-//! max-flow), synthetic counterparts of the paper's three datasets, and a
-//! figure-regeneration bench harness.
-//!
-//! Layers 2/1 (build-time Python under `python/`) AOT-lower the dense
-//! scoring hot spots (JAX + Pallas kernels) to HLO text; [`runtime`]
-//! loads and executes those artifacts through PJRT (feature `xla-rt`) so
-//! the request path never touches Python.
+//! This crate implements the training coordinator — FW / BCFW / MP-BCFW
+//! optimizers with working sets, automatic parameter selection,
+//! inner-product caching, iterate averaging, and a sharded parallel
+//! dispatch of the exact oracle pass — plus every substrate the paper
+//! depends on: three max-oracles (multiclass, Viterbi, graph-cut on our
+//! own Boykov–Kolmogorov max-flow), synthetic counterparts of the
+//! paper's three datasets, and a figure-regeneration bench harness. The
+//! arithmetic hot path runs on a dual-backend kernel layer
+//! (`--kernel {scalar,simd}`, `utils::math::KernelBackend`): explicit
+//! portable `f64x4` lanes from the vendored `wide` shim, dispatched once
+//! per kernel call. An earlier build-time Python/XLA lowering pipeline
+//! was retired in its favor (`docs/ALGORITHMS.md`, 'Kernel backends').
 //!
 //! ## Module graph
 //!
@@ -60,11 +59,12 @@
 //!   `std::thread::scope` workers), classic `baselines`, and the
 //!   `trainer` façade.
 //! * [`runtime`] — the `ScoringEngine` abstraction with the native Rust
-//!   backend and the PJRT/XLA backend behind `xla-rt`.
+//!   backend (the retired XLA backend's selector survives only as a
+//!   validated `--engine xla` error).
 //! * [`bench`] — multi-seed run groups, CSV/SVG emission for the paper's
 //!   figures and tables.
 //! * [`cli`] — the `mpbcfw` launcher (`train`, `bench`, `gen-data`,
-//!   `evaluate`, `inspect`).
+//!   `evaluate`).
 //!
 //! See the repository `README.md` for CLI quickstarts and
 //! `docs/ALGORITHMS.md` for the full paper-section ↔ module

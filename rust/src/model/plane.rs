@@ -40,6 +40,7 @@
 //! representation and keep using the faster unrolled kernels.
 
 use crate::utils::math;
+use crate::utils::math::KernelBackend;
 
 /// A sparse vector whose density exceeds this is stored `Dense` by
 /// [`PlaneVec::sparse`] / [`PlaneVec::compact`]. Above half full, the
@@ -113,29 +114,50 @@ impl<'a> PlaneVecView<'a> {
 
     /// ⟨self, dense⟩, accumulated in index order (see [`PlaneVec`] docs).
     pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        self.dot_dense_with(KernelBackend::Scalar, w)
+    }
+
+    /// [`dot_dense`](Self::dot_dense) on the selected backend. The
+    /// scalar arms are the bitwise-anchored originals; the simd arms use
+    /// the reassociating lane kernels (tolerance contract — see
+    /// `utils::math`).
+    pub fn dot_dense_with(&self, k: KernelBackend, w: &[f64]) -> f64 {
         debug_assert_eq!(self.dim(), w.len());
-        match self {
-            PlaneVecView::Dense(v) => math::dot_seq(v, w),
-            PlaneVecView::Sparse { idx, val, .. } => {
+        match (self, k) {
+            (PlaneVecView::Dense(v), KernelBackend::Scalar) => math::dot_seq(v, w),
+            (PlaneVecView::Dense(v), KernelBackend::Simd) => math::dot_seq_simd(v, w),
+            (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Scalar) => {
                 let mut s = 0.0;
                 for (i, v) in idx.iter().zip(val.iter()) {
                     s += w[*i as usize] * v;
                 }
                 s
             }
+            (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Simd) => {
+                math::gather_dot_simd(idx, val, w)
+            }
         }
     }
 
     /// ⟨self, self⟩, accumulated in index order.
     pub fn norm_sq(&self) -> f64 {
-        match self {
-            PlaneVecView::Dense(v) => math::dot_seq(v, v),
-            PlaneVecView::Sparse { val, .. } => {
+        self.norm_sq_with(KernelBackend::Scalar)
+    }
+
+    /// [`norm_sq`](Self::norm_sq) on the selected backend.
+    pub fn norm_sq_with(&self, k: KernelBackend) -> f64 {
+        match (self, k) {
+            (PlaneVecView::Dense(v), KernelBackend::Scalar) => math::dot_seq(v, v),
+            (PlaneVecView::Dense(v), KernelBackend::Simd) => math::dot_seq_simd(v, v),
+            (PlaneVecView::Sparse { val, .. }, KernelBackend::Scalar) => {
                 let mut s = 0.0;
                 for v in val.iter() {
                     s += v * v;
                 }
                 s
+            }
+            (PlaneVecView::Sparse { val, .. }, KernelBackend::Simd) => {
+                math::dot_seq_simd(val, val)
             }
         }
     }
@@ -143,55 +165,99 @@ impl<'a> PlaneVecView<'a> {
     /// ⟨self, other⟩ for any representation mix, accumulated in index
     /// order (sparse·sparse is a merge-join over the sorted indices).
     pub fn dot(&self, other: PlaneVecView<'_>) -> f64 {
+        self.dot_with(other, KernelBackend::Scalar)
+    }
+
+    /// [`dot`](Self::dot) on the selected backend. The simd sparse·sparse
+    /// arm sees exactly the same match stream as the scalar merge-join;
+    /// only the accumulation order differs.
+    pub fn dot_with(&self, other: PlaneVecView<'_>, k: KernelBackend) -> f64 {
         debug_assert_eq!(self.dim(), other.dim());
         match (*self, other) {
-            (PlaneVecView::Dense(a), PlaneVecView::Dense(b)) => math::dot_seq(a, b),
-            (PlaneVecView::Dense(a), s @ PlaneVecView::Sparse { .. }) => s.dot_dense(a),
-            (s @ PlaneVecView::Sparse { .. }, PlaneVecView::Dense(b)) => s.dot_dense(b),
+            (PlaneVecView::Dense(a), PlaneVecView::Dense(b)) => {
+                math::dot_seq_with(k, a, b)
+            }
+            (PlaneVecView::Dense(a), s @ PlaneVecView::Sparse { .. }) => {
+                s.dot_dense_with(k, a)
+            }
+            (s @ PlaneVecView::Sparse { .. }, PlaneVecView::Dense(b)) => {
+                s.dot_dense_with(k, b)
+            }
             (
                 PlaneVecView::Sparse { idx: ia, val: va, .. },
                 PlaneVecView::Sparse { idx: ib, val: vb, .. },
-            ) => {
-                let (mut p, mut q, mut s) = (0usize, 0usize, 0.0f64);
-                while p < ia.len() && q < ib.len() {
-                    match ia[p].cmp(&ib[q]) {
-                        std::cmp::Ordering::Less => p += 1,
-                        std::cmp::Ordering::Greater => q += 1,
-                        std::cmp::Ordering::Equal => {
-                            s += va[p] * vb[q];
-                            p += 1;
-                            q += 1;
+            ) => match k {
+                KernelBackend::Scalar => {
+                    let (mut p, mut q, mut s) = (0usize, 0usize, 0.0f64);
+                    while p < ia.len() && q < ib.len() {
+                        match ia[p].cmp(&ib[q]) {
+                            std::cmp::Ordering::Less => p += 1,
+                            std::cmp::Ordering::Greater => q += 1,
+                            std::cmp::Ordering::Equal => {
+                                s += va[p] * vb[q];
+                                p += 1;
+                                q += 1;
+                            }
                         }
                     }
+                    s
                 }
-                s
-            }
+                KernelBackend::Simd => math::merge_dot_simd(ia, va, ib, vb),
+            },
         }
     }
 
     /// out += alpha·self (elementwise on the stored entries).
     pub fn axpy_into(&self, alpha: f64, out: &mut [f64]) {
+        self.axpy_into_with(KernelBackend::Scalar, alpha, out)
+    }
+
+    /// [`axpy_into`](Self::axpy_into) on the selected backend. Both arms
+    /// of every representation are elementwise, so scalar and simd are
+    /// **bitwise identical** here (strict-order contract).
+    pub fn axpy_into_with(&self, k: KernelBackend, alpha: f64, out: &mut [f64]) {
         debug_assert_eq!(self.dim(), out.len());
-        match self {
-            PlaneVecView::Dense(v) => math::axpy(alpha, v, out),
-            PlaneVecView::Sparse { idx, val, .. } => {
+        match (self, k) {
+            (PlaneVecView::Dense(v), KernelBackend::Scalar) => math::axpy(alpha, v, out),
+            (PlaneVecView::Dense(v), KernelBackend::Simd) => {
+                math::axpy_simd(alpha, v, out)
+            }
+            (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Scalar) => {
                 for (i, v) in idx.iter().zip(val.iter()) {
                     out[*i as usize] += alpha * v;
                 }
+            }
+            (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Simd) => {
+                math::scatter_axpy_simd(alpha, idx, val, out)
             }
         }
     }
 
     /// acc = (1−γ)·acc + γ·self (see [`PlaneVec::interp_into`]).
     pub fn interp_into(&self, gamma: f64, acc: &mut [f64]) {
+        self.interp_into_with(KernelBackend::Scalar, gamma, acc)
+    }
+
+    /// [`interp_into`](Self::interp_into) on the selected backend —
+    /// elementwise on both arms, bitwise identical across backends.
+    pub fn interp_into_with(&self, k: KernelBackend, gamma: f64, acc: &mut [f64]) {
         debug_assert_eq!(self.dim(), acc.len());
-        match self {
-            PlaneVecView::Dense(v) => math::scale_add(1.0 - gamma, gamma, v, acc),
-            PlaneVecView::Sparse { idx, val, .. } => {
+        match (self, k) {
+            (PlaneVecView::Dense(v), KernelBackend::Scalar) => {
+                math::scale_add(1.0 - gamma, gamma, v, acc)
+            }
+            (PlaneVecView::Dense(v), KernelBackend::Simd) => {
+                math::scale_add_simd(1.0 - gamma, gamma, v, acc)
+            }
+            (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Scalar) => {
                 math::scal(1.0 - gamma, acc);
                 for (i, v) in idx.iter().zip(val.iter()) {
                     acc[*i as usize] += gamma * v;
                 }
+            }
+            (PlaneVecView::Sparse { idx, val, .. }, KernelBackend::Simd) => {
+                math::scal_simd(1.0 - gamma, acc);
+                math::scatter_axpy_simd(gamma, idx, val, acc)
             }
         }
     }
@@ -308,9 +374,19 @@ impl PlaneVec {
         self.view().dot_dense(w)
     }
 
+    /// [`dot_dense`](Self::dot_dense) on the selected backend.
+    pub fn dot_dense_with(&self, k: KernelBackend, w: &[f64]) -> f64 {
+        self.view().dot_dense_with(k, w)
+    }
+
     /// ⟨self, self⟩, accumulated in index order.
     pub fn norm_sq(&self) -> f64 {
         self.view().norm_sq()
+    }
+
+    /// [`norm_sq`](Self::norm_sq) on the selected backend.
+    pub fn norm_sq_with(&self, k: KernelBackend) -> f64 {
+        self.view().norm_sq_with(k)
     }
 
     /// ⟨self, other⟩ for any representation mix, accumulated in index
@@ -321,10 +397,21 @@ impl PlaneVec {
         self.view().dot(other.view())
     }
 
+    /// [`dot`](Self::dot) on the selected backend.
+    pub fn dot_with(&self, other: &PlaneVec, k: KernelBackend) -> f64 {
+        self.view().dot_with(other.view(), k)
+    }
+
     /// out += alpha·self (elementwise on the stored entries; see the
     /// order-deterministic contract on `utils::math::axpy`).
     pub fn axpy_into(&self, alpha: f64, out: &mut [f64]) {
         self.view().axpy_into(alpha, out)
+    }
+
+    /// [`axpy_into`](Self::axpy_into) on the selected backend (bitwise
+    /// identical either way — elementwise contract).
+    pub fn axpy_into_with(&self, k: KernelBackend, alpha: f64, out: &mut [f64]) {
+        self.view().axpy_into_with(k, alpha, out)
     }
 
     /// Convex interpolation into a dense accumulator:
@@ -333,6 +420,12 @@ impl PlaneVec {
     /// densified vector.
     pub fn interp_into(&self, gamma: f64, acc: &mut [f64]) {
         self.view().interp_into(gamma, acc)
+    }
+
+    /// [`interp_into`](Self::interp_into) on the selected backend
+    /// (bitwise identical either way — elementwise contract).
+    pub fn interp_into_with(&self, k: KernelBackend, gamma: f64, acc: &mut [f64]) {
+        self.view().interp_into_with(k, gamma, acc)
     }
 
     /// Materialize as a dense `Vec` (copy; the representation of `self`
@@ -563,7 +656,7 @@ pub fn line_search(phi: &DensePlane, phi_i: &DensePlane, hat: &Plane, lambda: f6
 }
 
 /// Same line search, but from precomputed inner products (used by the
-/// §3.5 product cache and the XLA engine which returns these scalars).
+/// §3.5 product cache, which serves exactly these scalars).
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub fn line_search_from_products(

@@ -6,8 +6,8 @@
 //!                                        constant in y).
 //!
 //! The class-scoring mat-vec `W[K×F]·ψ` is the dense hot spot; it runs
-//! through the `ScoringEngine` so the XLA/PJRT backend can serve it from
-//! the AOT artifact.
+//! through the `ScoringEngine` abstraction so every caller shares one
+//! scoring implementation.
 
 use crate::data::types::MulticlassData;
 use crate::model::loss::{class_hash, zero_one};

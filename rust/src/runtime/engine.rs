@@ -1,15 +1,15 @@
 //! Scoring engine abstraction: the dense-algebra hot spots behind the
-//! oracles and the approximate pass, with two interchangeable backends.
+//! oracles and the approximate pass.
 //!
-//! * `NativeEngine` — pure-Rust f64 kernels (default; fastest for the
-//!   small matrices these tasks produce on CPU).
-//! * `runtime::xla::XlaEngine` — executes the AOT-compiled HLO artifacts
-//!   produced by `python/compile/aot.py` through PJRT (feature `xla-rt`).
-//!   This is the path that exercises the three-layer stack; a parity test
-//!   pins both engines to the same numbers (f32 tolerance).
+//! * `NativeEngine` — pure-Rust f64 kernels (fastest for the small
+//!   matrices these tasks produce on CPU). A PJRT/XLA backend once sat
+//!   beside it; it was retired (`docs/ALGORITHMS.md`, 'Kernel backends')
+//!   and `--engine xla` now fails with a clear error. Accelerated
+//!   arithmetic lives in the `--kernel {scalar,simd}` dispatch layer of
+//!   `utils::math` instead.
 //!
-//! Both backends implement `ScoringEngine`, which is deliberately tiny:
-//! row-major mat·vec and mat·mat. Callers own all shape bookkeeping.
+//! `ScoringEngine` is deliberately tiny: row-major mat·vec and mat·mat.
+//! Callers own all shape bookkeeping.
 //!
 //! Scope note: the engines score *data* features (ψ matrices), which are
 //! genuinely dense. Cutting-plane storage and plane inner products live

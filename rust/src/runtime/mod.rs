@@ -1,15 +1,12 @@
-//! Runtime layer: dense-scoring backends behind one tiny trait.
+//! Runtime layer: the dense-scoring backend behind one tiny trait.
 //!
 //! [`engine`] defines `ScoringEngine` (row-major mat·vec / mat·matᵀ) with
-//! the pure-Rust `NativeEngine`; behind the `xla-rt` feature, `xla`
-//! executes the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` through PJRT, with [`manifest`] describing the
-//! shipped shape buckets (`artifacts/*.hlo.txt`). The parity test suite
-//! pins both backends to the same numbers. Oracle workers in the parallel
-//! exact pass construct their own stateless `NativeEngine` per thread.
+//! the pure-Rust `NativeEngine`. A PJRT/XLA backend once lived here too;
+//! it was retired (see `docs/ALGORITHMS.md`, 'Kernel backends') — the
+//! `--kernel {scalar,simd}` dispatch layer in `utils::math` now covers
+//! the accelerated-arithmetic role in-process. Oracle workers in the
+//! parallel exact pass construct their own stateless `NativeEngine` per
+//! thread.
 pub mod engine;
-pub mod manifest;
-#[cfg(feature = "xla-rt")]
-pub mod xla;
 
 pub use engine::{NativeEngine, ScoringEngine};

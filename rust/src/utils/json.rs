@@ -1,10 +1,9 @@
 //! Minimal JSON value type, writer and parser.
 //!
-//! The offline build has no `serde`; the only JSON we need is (a) the
-//! artifact manifest written by `python/compile/aot.py` and (b) result
-//! series emitted by the bench harness. This module implements exactly
-//! that subset: objects, arrays, strings, f64 numbers, bools, null, with
-//! standard escape handling.
+//! The offline build has no `serde`; the only JSON we need is the result
+//! series and tables emitted by the bench harness. This module implements
+//! exactly that subset: objects, arrays, strings, f64 numbers, bools,
+//! null, with standard escape handling.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -247,7 +246,7 @@ impl<'a> Parser<'a> {
                                 .map_err(|e| e.to_string())?;
                             let cp = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
                             self.i += 4;
-                            // Surrogate pairs are not needed for our manifests;
+                            // Surrogate pairs are not needed for our outputs;
                             // map unpaired surrogates to the replacement char.
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }

@@ -1,8 +1,64 @@
-//! Dense f64 vector kernels used on the coordinator hot path.
+//! Dense f64 vector kernels used on the coordinator hot path, in two
+//! backends selected by [`KernelBackend`].
 //!
-//! These are written as straightforward 4-way unrolled loops; rustc/LLVM
-//! auto-vectorizes them to AVX on the release profile. All reductions
-//! accumulate in f64.
+//! The **scalar** backend is the original code: straightforward loops
+//! whose reductions accumulate in strict index order (`dot_seq` and
+//! friends — the order-determinism contract `model::plane` builds on)
+//! plus the unrolled [`dot`] for the representation-independent dense
+//! accumulators. Strict index order largely defeats LLVM's
+//! auto-vectorization of the reductions, which is the point: bitwise
+//! reproducibility anchors the golden-trajectory fixtures.
+//!
+//! The **simd** backend (`--kernel simd`) routes the same operations
+//! through explicit `wide::f64x4` lanes (a vendored, offline shim — see
+//! `vendor/wide`). Two variants with two contracts:
+//!
+//! * *Elementwise* kernels (`axpy`/`scale_add`/`axpy_diff`/`interp`/
+//!   `scal` and the sparse scatter mirrors) perform the identical
+//!   per-index IEEE operations as scalar — lanes never interact — so
+//!   their simd forms are **bitwise identical** to scalar and are pinned
+//!   that way in `tests/kernel_backends.rs`.
+//! * *Reduction* kernels (`dot`/`dot_seq`/`dot2_seq`, the sparse gather
+//!   dots, the sparse·sparse merge-join) accumulate into four lanes and
+//!   fold once at the end (`f64x4::reduce_add`, fixed pairwise order).
+//!   That **reassociates** the sum: results are deterministic (fixed
+//!   lane assignment and fold order ⇒ twin runs match bitwise) but not
+//!   scalar-bitwise; `--kernel simd` trajectories therefore carry a
+//!   tolerance/drift contract vs scalar, measured by
+//!   `bench --table kernels`.
+
+use wide::f64x4;
+
+/// Which kernel backend serves the hot-path vector operations
+/// (CLI `--kernel {scalar,simd}`; scalar is the default and the bitwise
+/// golden-fixture anchor — see the module docs for the two contracts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Strict-index-order scalar loops (the bitwise anchor).
+    Scalar,
+    /// Explicit `f64x4` lanes: elementwise kernels stay bitwise equal to
+    /// scalar, reduction kernels reassociate (bounded drift).
+    Simd,
+}
+
+impl KernelBackend {
+    /// Parse a CLI token (`scalar` | `simd`).
+    pub fn parse(s: &str) -> Option<KernelBackend> {
+        match s {
+            "scalar" => Some(KernelBackend::Scalar),
+            "simd" => Some(KernelBackend::Simd),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+}
 
 /// Dot product of two equal-length slices.
 ///
@@ -166,6 +222,382 @@ pub fn rel_diff(a: f64, b: f64) -> f64 {
     (a - b).abs() / 1f64.max(a.abs()).max(b.abs())
 }
 
+// ---------------------------------------------------------------------
+// SIMD backend (`--kernel simd`): explicit f64x4 lanes. Reduction
+// kernels reassociate (tolerance contract); elementwise kernels are
+// bitwise-identical to their scalar twins (see the module docs).
+// ---------------------------------------------------------------------
+
+/// SIMD [`dot`]: two `f64x4` accumulators over 8-wide chunks, one
+/// fixed-order horizontal fold, sequential remainder. Reassociating —
+/// deterministic, but not bitwise equal to the scalar [`dot`] (which
+/// reassociates *differently* via its 8 scalar accumulators).
+#[inline]
+pub fn dot_simd(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = f64x4::ZERO;
+    let mut acc1 = f64x4::ZERO;
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        acc0 += f64x4::from_slice(&xa[0..4]) * f64x4::from_slice(&xb[0..4]);
+        acc1 += f64x4::from_slice(&xa[4..8]) * f64x4::from_slice(&xb[4..8]);
+    }
+    let mut s = (acc0 + acc1).reduce_add();
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// SIMD [`dot_seq`]: one `f64x4` accumulator over 4-wide chunks, one
+/// fixed-order fold, then the tail in index order. Reassociating — the
+/// 4-lane accumulation computes a different (equally valid) IEEE sum
+/// than the strict index-order scalar loop; `--kernel simd` pins this
+/// to a tolerance/drift bound rather than bitwise equality.
+#[inline]
+pub fn dot_seq_simd(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = f64x4::ZERO;
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        acc += f64x4::from_slice(xa) * f64x4::from_slice(xb);
+    }
+    let mut s = acc.reduce_add();
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// SIMD [`dot2_seq`]: the fused pair with one lane accumulator per
+/// output — each sum reassociates exactly like [`dot_seq_simd`] on its
+/// own inputs, so `dot2_seq_simd(p,u,v) == (dot_seq_simd(p,u),
+/// dot_seq_simd(p,v))` bitwise (the fusion stays product-neutral, as in
+/// the scalar pair).
+#[inline]
+pub fn dot2_seq_simd(p: &[f64], u: &[f64], v: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(p.len(), u.len());
+    debug_assert_eq!(p.len(), v.len());
+    let mut accu = f64x4::ZERO;
+    let mut accv = f64x4::ZERO;
+    let cp = p.chunks_exact(4);
+    let cu = u.chunks_exact(4);
+    let cv = v.chunks_exact(4);
+    let (rp, ru, rv) = (cp.remainder(), cu.remainder(), cv.remainder());
+    for ((xp, xu), xv) in cp.zip(cu).zip(cv) {
+        let lp = f64x4::from_slice(xp);
+        accu += lp * f64x4::from_slice(xu);
+        accv += lp * f64x4::from_slice(xv);
+    }
+    let (mut su, mut sv) = (accu.reduce_add(), accv.reduce_add());
+    for ((x, y), z) in rp.iter().zip(ru).zip(rv) {
+        su += x * y;
+        sv += x * z;
+    }
+    (su, sv)
+}
+
+/// SIMD [`axpy`]: `y[i] += alpha·x[i]` on 4 independent lanes at a time.
+/// Elementwise — per index this is the same multiply-then-add as the
+/// scalar loop, lanes never interact — so the result is **bitwise
+/// identical** to scalar for finite inputs (the strict-order contract).
+#[inline]
+pub fn axpy_simd(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let al = f64x4::splat(alpha);
+    let cx = x.chunks_exact(4);
+    let rx = cx.remainder();
+    let mut cy = y.chunks_exact_mut(4);
+    for (yc, xc) in (&mut cy).zip(cx) {
+        let r = f64x4::from_slice(yc) + al * f64x4::from_slice(xc);
+        r.write_to_slice(yc);
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(rx) {
+        *yi += alpha * xi;
+    }
+}
+
+/// SIMD [`scale_add`]: `y[i] = alpha·y[i] + beta·x[i]`, elementwise on
+/// lanes — bitwise identical to scalar (same two products, same add,
+/// per index).
+#[inline]
+pub fn scale_add_simd(alpha: f64, beta: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let al = f64x4::splat(alpha);
+    let be = f64x4::splat(beta);
+    let cx = x.chunks_exact(4);
+    let rx = cx.remainder();
+    let mut cy = y.chunks_exact_mut(4);
+    for (yc, xc) in (&mut cy).zip(cx) {
+        let r = al * f64x4::from_slice(yc) + be * f64x4::from_slice(xc);
+        r.write_to_slice(yc);
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(rx) {
+        *yi = alpha * *yi + beta * xi;
+    }
+}
+
+/// SIMD [`axpy_diff`]: `y[i] += alpha·(a[i] − b[i])`, elementwise on
+/// lanes — bitwise identical to scalar.
+#[inline]
+pub fn axpy_diff_simd(alpha: f64, a: &[f64], b: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(a.len(), y.len());
+    debug_assert_eq!(b.len(), y.len());
+    let al = f64x4::splat(alpha);
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let mut cy = y.chunks_exact_mut(4);
+    for ((yc, ac), bc) in (&mut cy).zip(ca).zip(cb) {
+        let r = f64x4::from_slice(yc)
+            + al * (f64x4::from_slice(ac) - f64x4::from_slice(bc));
+        r.write_to_slice(yc);
+    }
+    for ((yi, ai), bi) in cy.into_remainder().iter_mut().zip(ra).zip(rb) {
+        *yi += alpha * (ai - bi);
+    }
+}
+
+/// SIMD [`interp`]: convex interpolation via [`scale_add_simd`] —
+/// bitwise identical to the scalar [`interp`] (same `1 − γ`, same
+/// per-index ops).
+#[inline]
+pub fn interp_simd(gamma: f64, x: &[f64], y: &mut [f64]) {
+    scale_add_simd(1.0 - gamma, gamma, x, y);
+}
+
+/// SIMD [`scal`]: `y[i] *= alpha`, elementwise on lanes — bitwise
+/// identical to scalar.
+#[inline]
+pub fn scal_simd(alpha: f64, y: &mut [f64]) {
+    let al = f64x4::splat(alpha);
+    let mut cy = y.chunks_exact_mut(4);
+    for yc in &mut cy {
+        let r = f64x4::from_slice(yc) * al;
+        r.write_to_slice(yc);
+    }
+    for yi in cy.into_remainder().iter_mut() {
+        *yi *= alpha;
+    }
+}
+
+/// SIMD sparse gather dot: `Σ_k w[idx[k]]·val[k]` with 4 gathered lanes
+/// per step and one fixed-order fold. Reassociating (same contract as
+/// [`dot_seq_simd`]); the sparse mirror of `PlaneVecView::dot_dense`.
+#[inline]
+pub fn gather_dot_simd(idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    let mut acc = f64x4::ZERO;
+    let ci = idx.chunks_exact(4);
+    let cv = val.chunks_exact(4);
+    let (ri, rv) = (ci.remainder(), cv.remainder());
+    for (ic, vc) in ci.zip(cv) {
+        let g = f64x4::new([
+            w[ic[0] as usize],
+            w[ic[1] as usize],
+            w[ic[2] as usize],
+            w[ic[3] as usize],
+        ]);
+        acc += g * f64x4::from_slice(vc);
+    }
+    let mut s = acc.reduce_add();
+    for (i, v) in ri.iter().zip(rv) {
+        s += w[*i as usize] * v;
+    }
+    s
+}
+
+/// SIMD fused sparse gather pair: `(Σ u[idx[k]]·val[k],
+/// Σ v[idx[k]]·val[k])` reading the payload once — each sum
+/// reassociates exactly like [`gather_dot_simd`] on its own inputs
+/// (independent accumulators), mirroring the scalar fused kernel's
+/// product-neutrality. The sparse arm of `WorkingSet::fused_products`.
+#[inline]
+pub fn gather_dot2_simd(idx: &[u32], val: &[f64], u: &[f64], v: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(idx.len(), val.len());
+    let mut accu = f64x4::ZERO;
+    let mut accv = f64x4::ZERO;
+    let ci = idx.chunks_exact(4);
+    let cv = val.chunks_exact(4);
+    let (ri, rv) = (ci.remainder(), cv.remainder());
+    for (ic, vc) in ci.zip(cv) {
+        let lv = f64x4::from_slice(vc);
+        let gu = f64x4::new([
+            u[ic[0] as usize],
+            u[ic[1] as usize],
+            u[ic[2] as usize],
+            u[ic[3] as usize],
+        ]);
+        let gv = f64x4::new([
+            v[ic[0] as usize],
+            v[ic[1] as usize],
+            v[ic[2] as usize],
+            v[ic[3] as usize],
+        ]);
+        accu += gu * lv;
+        accv += gv * lv;
+    }
+    let (mut su, mut sv) = (accu.reduce_add(), accv.reduce_add());
+    for (i, x) in ri.iter().zip(rv) {
+        su += u[*i as usize] * x;
+        sv += v[*i as usize] * x;
+    }
+    (su, sv)
+}
+
+/// SIMD sparse scatter axpy: `out[idx[k]] += alpha·val[k]` with 4 lanes
+/// gathered, updated, and scattered per step. The indices are sorted
+/// and unique (the `PlaneVec` invariant), so lanes never alias and each
+/// index receives the identical multiply-then-add as the scalar loop —
+/// **bitwise identical** to scalar (elementwise contract).
+#[inline]
+pub fn scatter_axpy_simd(alpha: f64, idx: &[u32], val: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(idx.len(), val.len());
+    let al = f64x4::splat(alpha);
+    let ci = idx.chunks_exact(4);
+    let cv = val.chunks_exact(4);
+    let (ri, rv) = (ci.remainder(), cv.remainder());
+    for (ic, vc) in ci.zip(cv) {
+        let (i0, i1, i2, i3) =
+            (ic[0] as usize, ic[1] as usize, ic[2] as usize, ic[3] as usize);
+        let g = f64x4::new([out[i0], out[i1], out[i2], out[i3]]);
+        let r = (g + al * f64x4::from_slice(vc)).to_array();
+        out[i0] = r[0];
+        out[i1] = r[1];
+        out[i2] = r[2];
+        out[i3] = r[3];
+    }
+    for (i, v) in ri.iter().zip(rv) {
+        out[*i as usize] += alpha * v;
+    }
+}
+
+/// SIMD sparse·sparse dot: the Θ(nnz) merge-join over sorted indices
+/// with matched products batched into 4-lane groups and folded once.
+/// The match stream (which products contribute) is identical to the
+/// scalar merge-join; only the accumulation order differs —
+/// reassociating (same contract as [`dot_seq_simd`]). The Gram
+/// merge-join of `PlaneVecView::dot`.
+#[inline]
+pub fn merge_dot_simd(ia: &[u32], va: &[f64], ib: &[u32], vb: &[f64]) -> f64 {
+    debug_assert_eq!(ia.len(), va.len());
+    debug_assert_eq!(ib.len(), vb.len());
+    let (mut p, mut q) = (0usize, 0usize);
+    let mut bufa = [0.0f64; 4];
+    let mut bufb = [0.0f64; 4];
+    let mut fill = 0usize;
+    let mut acc = f64x4::ZERO;
+    while p < ia.len() && q < ib.len() {
+        match ia[p].cmp(&ib[q]) {
+            std::cmp::Ordering::Less => p += 1,
+            std::cmp::Ordering::Greater => q += 1,
+            std::cmp::Ordering::Equal => {
+                bufa[fill] = va[p];
+                bufb[fill] = vb[q];
+                fill += 1;
+                if fill == 4 {
+                    acc += f64x4::new(bufa) * f64x4::new(bufb);
+                    fill = 0;
+                }
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    let mut s = acc.reduce_add();
+    for k in 0..fill {
+        s += bufa[k] * bufb[k];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Backend dispatch: one match per kernel *call*, never per element —
+// the selected loop is monomorphic and branch-free inside.
+// ---------------------------------------------------------------------
+
+/// [`dot`] on the selected backend.
+#[inline]
+pub fn dot_with(k: KernelBackend, a: &[f64], b: &[f64]) -> f64 {
+    match k {
+        KernelBackend::Scalar => dot(a, b),
+        KernelBackend::Simd => dot_simd(a, b),
+    }
+}
+
+/// [`nrm2sq`] on the selected backend.
+#[inline]
+pub fn nrm2sq_with(k: KernelBackend, a: &[f64]) -> f64 {
+    dot_with(k, a, a)
+}
+
+/// [`dot_seq`] on the selected backend.
+#[inline]
+pub fn dot_seq_with(k: KernelBackend, a: &[f64], b: &[f64]) -> f64 {
+    match k {
+        KernelBackend::Scalar => dot_seq(a, b),
+        KernelBackend::Simd => dot_seq_simd(a, b),
+    }
+}
+
+/// [`dot2_seq`] on the selected backend.
+#[inline]
+pub fn dot2_seq_with(k: KernelBackend, p: &[f64], u: &[f64], v: &[f64]) -> (f64, f64) {
+    match k {
+        KernelBackend::Scalar => dot2_seq(p, u, v),
+        KernelBackend::Simd => dot2_seq_simd(p, u, v),
+    }
+}
+
+/// [`axpy`] on the selected backend (bitwise-equal either way).
+#[inline]
+pub fn axpy_with(k: KernelBackend, alpha: f64, x: &[f64], y: &mut [f64]) {
+    match k {
+        KernelBackend::Scalar => axpy(alpha, x, y),
+        KernelBackend::Simd => axpy_simd(alpha, x, y),
+    }
+}
+
+/// [`scale_add`] on the selected backend (bitwise-equal either way).
+#[inline]
+pub fn scale_add_with(k: KernelBackend, alpha: f64, beta: f64, x: &[f64], y: &mut [f64]) {
+    match k {
+        KernelBackend::Scalar => scale_add(alpha, beta, x, y),
+        KernelBackend::Simd => scale_add_simd(alpha, beta, x, y),
+    }
+}
+
+/// [`axpy_diff`] on the selected backend (bitwise-equal either way).
+#[inline]
+pub fn axpy_diff_with(k: KernelBackend, alpha: f64, a: &[f64], b: &[f64], y: &mut [f64]) {
+    match k {
+        KernelBackend::Scalar => axpy_diff(alpha, a, b, y),
+        KernelBackend::Simd => axpy_diff_simd(alpha, a, b, y),
+    }
+}
+
+/// [`interp`] on the selected backend (bitwise-equal either way).
+#[inline]
+pub fn interp_with(k: KernelBackend, gamma: f64, x: &[f64], y: &mut [f64]) {
+    match k {
+        KernelBackend::Scalar => interp(gamma, x, y),
+        KernelBackend::Simd => interp_simd(gamma, x, y),
+    }
+}
+
+/// [`scal`] on the selected backend (bitwise-equal either way).
+#[inline]
+pub fn scal_with(k: KernelBackend, alpha: f64, y: &mut [f64]) {
+    match k {
+        KernelBackend::Scalar => scal(alpha, y),
+        KernelBackend::Simd => scal_simd(alpha, y),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,5 +699,174 @@ mod tests {
         assert_eq!(clip(2.0, 0.0, 1.0), 1.0);
         assert_eq!(clip(-2.0, 0.0, 1.0), 0.0);
         assert_eq!(clip(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn kernel_backend_parse_and_name_round_trip() {
+        assert_eq!(KernelBackend::parse("scalar"), Some(KernelBackend::Scalar));
+        assert_eq!(KernelBackend::parse("simd"), Some(KernelBackend::Simd));
+        assert_eq!(KernelBackend::parse("avx512"), None);
+        for k in [KernelBackend::Scalar, KernelBackend::Simd] {
+            assert_eq!(KernelBackend::parse(k.name()), Some(k));
+        }
+    }
+
+    /// Deterministic pseudo-random slice (splitmix-ish), no external deps.
+    fn pseudo(seed: u64, n: usize) -> Vec<f64> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 11) as f64 / (1u64 << 53) as f64) * 4.0 - 2.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn simd_elementwise_kernels_are_bitwise_equal_to_scalar() {
+        // Every axpy-family kernel must return bit-identical results on
+        // both backends, at lengths exercising full lanes and tails.
+        for n in [0usize, 1, 3, 4, 5, 8, 31, 64, 257] {
+            let x = pseudo(7 + n as u64, n);
+            let a = pseudo(11 + n as u64, n);
+            let b = pseudo(13 + n as u64, n);
+            let y0 = pseudo(17 + n as u64, n);
+
+            let (mut ys, mut yv) = (y0.clone(), y0.clone());
+            axpy(0.37, &x, &mut ys);
+            axpy_simd(0.37, &x, &mut yv);
+            assert_bits_eq(&ys, &yv, "axpy");
+
+            let (mut ys, mut yv) = (y0.clone(), y0.clone());
+            scale_add(0.81, -1.25, &x, &mut ys);
+            scale_add_simd(0.81, -1.25, &x, &mut yv);
+            assert_bits_eq(&ys, &yv, "scale_add");
+
+            let (mut ys, mut yv) = (y0.clone(), y0.clone());
+            axpy_diff(-0.6, &a, &b, &mut ys);
+            axpy_diff_simd(-0.6, &a, &b, &mut yv);
+            assert_bits_eq(&ys, &yv, "axpy_diff");
+
+            let (mut ys, mut yv) = (y0.clone(), y0.clone());
+            interp(0.21, &x, &mut ys);
+            interp_simd(0.21, &x, &mut yv);
+            assert_bits_eq(&ys, &yv, "interp");
+
+            let (mut ys, mut yv) = (y0.clone(), y0.clone());
+            scal(1.0 / 3.0, &mut ys);
+            scal_simd(1.0 / 3.0, &mut yv);
+            assert_bits_eq(&ys, &yv, "scal");
+        }
+    }
+
+    fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} lane {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn simd_reductions_match_scalar_within_tolerance() {
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 63, 64, 65, 500] {
+            let a = pseudo(101 + n as u64, n);
+            let b = pseudo(103 + n as u64, n);
+            let c = pseudo(107 + n as u64, n);
+            assert!((dot_simd(&a, &b) - dot(&a, &b)).abs() < 1e-9, "dot n={n}");
+            assert!(
+                (dot_seq_simd(&a, &b) - dot_seq(&a, &b)).abs() < 1e-9,
+                "dot_seq n={n}"
+            );
+            let (u1, v1) = dot2_seq_simd(&a, &b, &c);
+            let (u2, v2) = dot2_seq(&a, &b, &c);
+            assert!((u1 - u2).abs() < 1e-9 && (v1 - v2).abs() < 1e-9, "dot2 n={n}");
+            // Fused pair stays product-neutral on the simd backend too.
+            assert_eq!(u1.to_bits(), dot_seq_simd(&a, &b).to_bits());
+            assert_eq!(v1.to_bits(), dot_seq_simd(&a, &c).to_bits());
+        }
+    }
+
+    #[test]
+    fn simd_sparse_kernels_match_scalar_mirrors() {
+        // Sorted unique index pattern over a dim-50 dense space
+        // (7 generates Z/50, so the 30 draws are distinct).
+        let mut idx: Vec<u32> = (0u32..30).map(|k| (k * 7 + 3) % 50).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        idx.truncate(23); // odd nnz → exercises the lane tail
+        let val = pseudo(31, idx.len());
+        let w = pseudo(37, 50);
+        let u = pseudo(41, 50);
+
+        // gather_dot vs indexed scalar loop.
+        let scalar: f64 = idx.iter().zip(&val).map(|(i, v)| w[*i as usize] * v).sum();
+        assert!((gather_dot_simd(&idx, &val, &w) - scalar).abs() < 1e-12);
+
+        // gather_dot2 is product-neutral against gather_dot.
+        let (gu, gv) = gather_dot2_simd(&idx, &val, &w, &u);
+        assert_eq!(gu.to_bits(), gather_dot_simd(&idx, &val, &w).to_bits());
+        assert_eq!(gv.to_bits(), gather_dot_simd(&idx, &val, &u).to_bits());
+
+        // scatter_axpy is bitwise equal to the scalar scatter loop.
+        let mut out_s = pseudo(43, 50);
+        let mut out_v = out_s.clone();
+        for (i, v) in idx.iter().zip(&val) {
+            out_s[*i as usize] += 0.77 * v;
+        }
+        scatter_axpy_simd(0.77, &idx, &val, &mut out_v);
+        assert_bits_eq(&out_s, &out_v, "scatter_axpy");
+    }
+
+    #[test]
+    fn merge_dot_simd_matches_scalar_merge_join() {
+        // Two sorted sparse patterns with partial overlap; the simd
+        // merge-join must see exactly the same matches as the scalar one.
+        let ia: Vec<u32> = vec![0, 2, 3, 5, 8, 13, 21, 34, 35, 36, 40];
+        let ib: Vec<u32> = vec![1, 2, 3, 5, 7, 13, 20, 21, 34, 36, 41, 44];
+        let va = pseudo(51, ia.len());
+        let vb = pseudo(53, ib.len());
+        let mut scalar = 0.0;
+        let (mut p, mut q) = (0usize, 0usize);
+        while p < ia.len() && q < ib.len() {
+            match ia[p].cmp(&ib[q]) {
+                std::cmp::Ordering::Less => p += 1,
+                std::cmp::Ordering::Greater => q += 1,
+                std::cmp::Ordering::Equal => {
+                    scalar += va[p] * vb[q];
+                    p += 1;
+                    q += 1;
+                }
+            }
+        }
+        assert!((merge_dot_simd(&ia, &va, &ib, &vb) - scalar).abs() < 1e-12);
+        // Disjoint patterns dot to exactly zero on both backends.
+        assert_eq!(merge_dot_simd(&[0, 2, 4], &[1.0; 3], &[1, 3, 5], &[1.0; 3]), 0.0);
+    }
+
+    #[test]
+    fn dispatch_wrappers_route_to_the_selected_backend() {
+        let a = pseudo(61, 37);
+        let b = pseudo(67, 37);
+        assert_eq!(
+            dot_with(KernelBackend::Scalar, &a, &b).to_bits(),
+            dot(&a, &b).to_bits()
+        );
+        assert_eq!(
+            dot_with(KernelBackend::Simd, &a, &b).to_bits(),
+            dot_simd(&a, &b).to_bits()
+        );
+        assert_eq!(
+            dot_seq_with(KernelBackend::Simd, &a, &b).to_bits(),
+            dot_seq_simd(&a, &b).to_bits()
+        );
+        assert_eq!(
+            nrm2sq_with(KernelBackend::Scalar, &a).to_bits(),
+            nrm2sq(&a).to_bits()
+        );
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        axpy_with(KernelBackend::Simd, 0.5, &a, &mut y1);
+        axpy_simd(0.5, &a, &mut y2);
+        assert_bits_eq(&y1, &y2, "axpy_with");
     }
 }

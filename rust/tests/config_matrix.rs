@@ -1,23 +1,28 @@
 //! Pairwise-covering configuration matrix: a tiny-scale sweep over
 //! threads × sampling × steps × products × gram × oracle-reuse ×
-//! async. Full factorial is 2·3·2·2·2·2·2 = 192 runs; the 8 rows below
-//! cover every *pair* of factor levels (verified by
+//! async × kernel. Full factorial is 2·3·2·2·2·2·2·2 = 384 runs; the 8
+//! rows below cover every *pair* of factor levels (verified by
 //! `rows_are_pairwise_covering`), which is where config-interaction
 //! bugs live. Every row must train without panic with a monotone dual
-//! and weak duality, and every async-off threads=4 row must
+//! and weak duality, and every async-off threads=4 **scalar** row must
 //! bitwise-match its threads=1 twin (snapshot scoring + deterministic
 //! merge order make the trajectory invariant across worker counts ≥ 1;
 //! threads=0 is the freshest-w sequential path with a legitimately
 //! different trajectory, so the twin is 1). Async-on rows overlap the
 //! oracle with the real worker pool: fold timing is OS-scheduled, so
 //! they are checked against the documented bounded-drift contract
-//! (monotone dual + weak duality) rather than a bitwise twin.
+//! (monotone dual + weak duality) rather than a bitwise twin. Simd
+//! rows likewise make no bitwise claim — their reductions reassociate
+//! under the pinned fold order (see `tests/kernel_backends.rs` for the
+//! lane contracts) — so they, too, are held to monotone dual + weak
+//! duality only.
 
 use mpbcfw::coordinator::async_overlap::AsyncMode;
 use mpbcfw::coordinator::products::{GramBackend, ProductMode};
 use mpbcfw::coordinator::sampling::{SamplingStrategy, StepRule};
 use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
 use mpbcfw::data::types::Scale;
+use mpbcfw::utils::math::KernelBackend;
 
 struct Row {
     threads: usize,
@@ -27,15 +32,17 @@ struct Row {
     gram: GramBackend,
     oracle_reuse: bool,
     async_mode: AsyncMode,
+    kernel: KernelBackend,
 }
 
 fn rows() -> Vec<Row> {
     use AsyncMode::{Off, On};
     use GramBackend::{Hashmap, Triangular};
+    use KernelBackend::{Scalar, Simd};
     use ProductMode::{Incremental, Recompute};
     use SamplingStrategy::{Cyclic, GapProportional, Uniform};
     use StepRule::{Fw, Pairwise};
-    let mk = |threads, sampling, steps, products, gram, oracle_reuse, async_mode| Row {
+    let mk = |threads, sampling, steps, products, gram, oracle_reuse, async_mode, kernel| Row {
         threads,
         sampling,
         steps,
@@ -43,16 +50,17 @@ fn rows() -> Vec<Row> {
         gram,
         oracle_reuse,
         async_mode,
+        kernel,
     };
     vec![
-        mk(1, Uniform, Fw, Recompute, Hashmap, true, Off),
-        mk(4, Uniform, Pairwise, Incremental, Triangular, false, Off),
-        mk(1, GapProportional, Pairwise, Recompute, Triangular, true, On),
-        mk(4, GapProportional, Fw, Incremental, Hashmap, false, On),
-        mk(1, Cyclic, Fw, Incremental, Triangular, true, Off),
-        mk(4, Cyclic, Pairwise, Recompute, Hashmap, false, On),
-        mk(1, Uniform, Fw, Incremental, Hashmap, false, On),
-        mk(4, GapProportional, Pairwise, Recompute, Triangular, true, Off),
+        mk(1, Uniform, Fw, Recompute, Hashmap, true, Off, Scalar),
+        mk(4, Uniform, Pairwise, Incremental, Triangular, false, Off, Simd),
+        mk(1, GapProportional, Pairwise, Recompute, Triangular, true, On, Simd),
+        mk(4, GapProportional, Fw, Incremental, Hashmap, false, On, Scalar),
+        mk(1, Cyclic, Fw, Incremental, Triangular, true, Off, Scalar),
+        mk(4, Cyclic, Pairwise, Recompute, Hashmap, false, On, Simd),
+        mk(1, Uniform, Fw, Incremental, Hashmap, false, On, Simd),
+        mk(4, GapProportional, Pairwise, Recompute, Triangular, true, Off, Scalar),
     ]
 }
 
@@ -74,12 +82,13 @@ fn spec_for(row: &Row, threads: usize) -> TrainSpec {
         gram: row.gram,
         oracle_reuse: row.oracle_reuse,
         async_mode: row.async_mode,
+        kernel: row.kernel,
         eval_every: 1,
         ..Default::default()
     }
 }
 
-fn level_indices(r: &Row) -> [usize; 7] {
+fn level_indices(r: &Row) -> [usize; 8] {
     [
         match r.threads {
             1 => 0,
@@ -107,15 +116,19 @@ fn level_indices(r: &Row) -> [usize; 7] {
             AsyncMode::Off => 0,
             AsyncMode::On => 1,
         },
+        match r.kernel {
+            KernelBackend::Scalar => 0,
+            KernelBackend::Simd => 1,
+        },
     ]
 }
 
 #[test]
 fn rows_are_pairwise_covering() {
-    let levels = [2usize, 3, 2, 2, 2, 2, 2];
-    let idx: Vec<[usize; 7]> = rows().iter().map(level_indices).collect();
-    for i in 0..7 {
-        for j in (i + 1)..7 {
+    let levels = [2usize, 3, 2, 2, 2, 2, 2, 2];
+    let idx: Vec<[usize; 8]> = rows().iter().map(level_indices).collect();
+    for i in 0..8 {
+        for j in (i + 1)..8 {
             let mut seen = std::collections::HashSet::new();
             for row in &idx {
                 seen.insert((row[i], row[j]));
@@ -147,9 +160,13 @@ fn every_row_trains_and_parallel_rows_match_their_sequential_twin() {
             );
         }
         // The bitwise threads-twin contract holds for the synchronous
-        // driver only; async-on fold timing is OS-scheduled (the
-        // monotone/weak-duality checks above are its contract).
-        if row.threads > 1 && row.async_mode == AsyncMode::Off {
+        // scalar driver only; async-on fold timing is OS-scheduled and
+        // simd reductions reassociate (the monotone/weak-duality checks
+        // above are their contract).
+        if row.threads > 1
+            && row.async_mode == AsyncMode::Off
+            && row.kernel == KernelBackend::Scalar
+        {
             let twin = train(&spec_for(row, 1))
                 .unwrap_or_else(|e| panic!("row {k}: twin failed: {e}"));
             let bits =

@@ -1,0 +1,202 @@
+//! Minimal offline stand-in for a portable-SIMD crate (`wide`-style).
+//!
+//! The image this repo builds in has no crates.io access, so a real SIMD
+//! crate cannot be fetched. This shim provides exactly the surface the
+//! workspace's kernel layer uses: a 4-lane `f64` vector type with
+//! elementwise arithmetic and an explicitly ordered horizontal sum.
+//!
+//! ## Lane contract
+//!
+//! [`f64x4`] is a `#[repr(C, align(32))]` newtype over `[f64; 4]`. Every
+//! arithmetic op is written as four independent per-lane IEEE-754
+//! operations — no fused multiply-add, no reassociation *within* a lane,
+//! no architecture intrinsics. On x86-64 the fixed-width lane loops
+//! compile to packed SSE2/AVX instructions under `-O` (the alignment
+//! attribute plus the constant trip count make the vectorization
+//! trivial for LLVM); on any other target the same code runs as four
+//! scalar ops per call. Either way each lane performs the *identical*
+//! IEEE operation, so lane results are bitwise stable across targets —
+//! the portable "scalar fallback" is the same source code.
+//!
+//! Two consequences the kernel layer builds on:
+//!
+//! * **Elementwise use is bitwise-neutral.** A kernel that loads lanes,
+//!   combines them elementwise, and stores them back (axpy-style)
+//!   performs exactly the per-index arithmetic of the scalar loop, in
+//!   the same order per index — results are bitwise identical to scalar.
+//! * **Horizontal reduction reassociates.** [`f64x4::reduce_add`] folds
+//!   the four lane accumulators in the fixed order `((l0+l1)+(l2+l3))`.
+//!   A dot product that accumulates into four lanes and folds once at
+//!   the end computes a *different* (equally valid) floating-point sum
+//!   than the strict index-order scalar loop. Reduction kernels built on
+//!   this type therefore carry a tolerance/drift contract, never a
+//!   bitwise one. The fold order itself is fixed, so SIMD runs are
+//!   deterministic and twin-reproducible — just not scalar-bitwise.
+
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+/// Four f64 lanes with elementwise ops and a fixed-order horizontal sum.
+///
+/// See the crate docs for the lane contract (no FMA, no intra-lane
+/// reassociation, deterministic fold order).
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(C, align(32))]
+#[allow(non_camel_case_types)]
+pub struct f64x4([f64; 4]);
+
+impl f64x4 {
+    /// Number of lanes.
+    pub const LANES: usize = 4;
+
+    /// All-zero lanes.
+    pub const ZERO: f64x4 = f64x4([0.0; 4]);
+
+    /// Build from an explicit lane array.
+    #[inline(always)]
+    pub fn new(lanes: [f64; 4]) -> f64x4 {
+        f64x4(lanes)
+    }
+
+    /// Broadcast one value to all lanes.
+    #[inline(always)]
+    pub fn splat(v: f64) -> f64x4 {
+        f64x4([v; 4])
+    }
+
+    /// Load lanes from the first four elements of a slice.
+    ///
+    /// Panics (via the indexing) when `s.len() < 4`; the kernel layer
+    /// only calls this on `chunks_exact(4)` output.
+    #[inline(always)]
+    pub fn from_slice(s: &[f64]) -> f64x4 {
+        f64x4([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Store lanes into the first four elements of a slice.
+    #[inline(always)]
+    pub fn write_to_slice(self, out: &mut [f64]) {
+        out[0] = self.0[0];
+        out[1] = self.0[1];
+        out[2] = self.0[2];
+        out[3] = self.0[3];
+    }
+
+    /// The lane array by value.
+    #[inline(always)]
+    pub fn to_array(self) -> [f64; 4] {
+        self.0
+    }
+
+    /// Horizontal sum in the fixed order `(l0 + l1) + (l2 + l3)`.
+    ///
+    /// This is the *only* place the type combines values across lanes.
+    /// The pairwise order is pinned (not left-to-right) because it is
+    /// what a hardware `haddpd`/shuffle reduction produces and it keeps
+    /// the two halves symmetric; what matters for the determinism
+    /// contract is that the order is fixed, not which fixed order.
+    #[inline(always)]
+    pub fn reduce_add(self) -> f64 {
+        (self.0[0] + self.0[1]) + (self.0[2] + self.0[3])
+    }
+}
+
+impl Add for f64x4 {
+    type Output = f64x4;
+    #[inline(always)]
+    fn add(self, rhs: f64x4) -> f64x4 {
+        f64x4([
+            self.0[0] + rhs.0[0],
+            self.0[1] + rhs.0[1],
+            self.0[2] + rhs.0[2],
+            self.0[3] + rhs.0[3],
+        ])
+    }
+}
+
+impl AddAssign for f64x4 {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: f64x4) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for f64x4 {
+    type Output = f64x4;
+    #[inline(always)]
+    fn sub(self, rhs: f64x4) -> f64x4 {
+        f64x4([
+            self.0[0] - rhs.0[0],
+            self.0[1] - rhs.0[1],
+            self.0[2] - rhs.0[2],
+            self.0[3] - rhs.0[3],
+        ])
+    }
+}
+
+impl Mul for f64x4 {
+    type Output = f64x4;
+    #[inline(always)]
+    fn mul(self, rhs: f64x4) -> f64x4 {
+        f64x4([
+            self.0[0] * rhs.0[0],
+            self.0[1] * rhs.0[1],
+            self.0[2] * rhs.0[2],
+            self.0[3] * rhs.0[3],
+        ])
+    }
+}
+
+impl Mul<f64> for f64x4 {
+    type Output = f64x4;
+    #[inline(always)]
+    fn mul(self, rhs: f64) -> f64x4 {
+        self * f64x4::splat(rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_ops_are_per_lane_ieee() {
+        let a = f64x4::new([1.0, -2.0, 0.5, 1e300]);
+        let b = f64x4::new([3.0, 0.25, -0.5, 1e300]);
+        let s = (a + b).to_array();
+        let p = (a * b).to_array();
+        let d = (a - b).to_array();
+        for k in 0..4 {
+            assert_eq!(s[k].to_bits(), (a.to_array()[k] + b.to_array()[k]).to_bits());
+            assert_eq!(p[k].to_bits(), (a.to_array()[k] * b.to_array()[k]).to_bits());
+            assert_eq!(d[k].to_bits(), (a.to_array()[k] - b.to_array()[k]).to_bits());
+        }
+    }
+
+    #[test]
+    fn reduce_add_order_is_pinned() {
+        // Values chosen so every association order gives a different
+        // float: the pinned order must match the documented expression
+        // exactly, and (for these values) differ from left-to-right.
+        let v = [1e16, 1.0, -1e16, 1.0];
+        let x = f64x4::new(v);
+        let pinned = (v[0] + v[1]) + (v[2] + v[3]);
+        assert_eq!(x.reduce_add().to_bits(), pinned.to_bits());
+        let ltr = ((v[0] + v[1]) + v[2]) + v[3];
+        assert_ne!(pinned.to_bits(), ltr.to_bits(), "test values too tame");
+    }
+
+    #[test]
+    fn splat_slice_round_trip() {
+        assert_eq!(f64x4::splat(2.5).to_array(), [2.5; 4]);
+        let s = [9.0, 8.0, 7.0, 6.0, 5.0];
+        let x = f64x4::from_slice(&s);
+        assert_eq!(x.to_array(), [9.0, 8.0, 7.0, 6.0]);
+        let mut out = [0.0; 4];
+        x.write_to_slice(&mut out);
+        assert_eq!(out, [9.0, 8.0, 7.0, 6.0]);
+        let mut acc = f64x4::ZERO;
+        acc += x;
+        assert_eq!(acc, x);
+        assert_eq!((x * 2.0).to_array(), [18.0, 16.0, 14.0, 12.0]);
+    }
+}

@@ -28,6 +28,7 @@ CHECKED_STRUCTS = [
     ("TrainSpec", "rust/src/coordinator/trainer.rs"),
     ("MpBcfwConfig", "rust/src/coordinator/mp_bcfw.rs"),
     ("AsyncStats", "rust/src/coordinator/async_overlap.rs"),
+    ("ProductStats", "rust/src/coordinator/products.rs"),
     ("BaselineProvenance", "rust/src/bench/regress.rs"),
     ("BaselineCounters", "rust/src/bench/regress.rs"),
     ("Baseline", "rust/src/bench/regress.rs"),
