@@ -826,6 +826,145 @@ pub fn async_sweep(
     Ok(())
 }
 
+/// FAULTS — injected-fault recovery A/B: a clean `--faults off` anchor
+/// row next to three injection scenarios per dataset. `inject` is the
+/// moderate-rate recovery case and additionally runs a same-seed twin
+/// whose dual trajectory must match **bitwise** (the determinism
+/// contract of the pure `(seed, block, pass, attempt)` fault schedule);
+/// `heavy` drops the retry budget to zero under a high rate so the
+/// degradation threshold trips; `heal` confines the same faults to a
+/// pass window so the driver demonstrably recovers once the oracle
+/// heals. Every row reports the retry/timeout/degraded counters and a
+/// `recovered` verdict — run completed, dual monotone, weak duality
+/// held, and (where claimed) the twin matched — which
+/// `tools/check_tables.py` gates in CI. All rows share the pinned pass
+/// schedule and `--threads 2`.
+pub fn faults_sweep(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    use crate::coordinator::faults::{FaultMode, DEFAULT_FAULT_RATE};
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_faults.csv"),
+        &[
+            "scenario",
+            "dataset",
+            "faults",
+            "fault_seed",
+            "fault_rate",
+            "wall_s",
+            "final_gap",
+            "oracle_calls",
+            "oracle_retries",
+            "oracle_timeouts",
+            "degraded_passes",
+            "twin_bitwise",
+            "recovered",
+        ],
+    )?;
+    let mut entries: Vec<Json> = Vec::new();
+    log("== FAULTS: injected-fault recovery (retry/requeue/degrade)".into());
+    // Heal scenario: inject through the first half of the passes, then
+    // let the oracle recover (passes are 1-based, window is [start, end)).
+    let heal_end = opts.max_iters / 2 + 1;
+    for ds in DatasetKind::all() {
+        let base = TrainSpec { threads: 2, ..pinned_base(ds, opts) };
+        // (scenario, mode, seed, rate, retries, timeout_s, window, twin claim)
+        let scenarios: [(&str, FaultMode, u64, f64, u64, f64, Option<(u64, u64)>, bool); 4] = [
+            ("off", FaultMode::Off, 0, DEFAULT_FAULT_RATE, 2, 0.0, None, false),
+            ("inject", FaultMode::Inject, 42, 0.3, 1, 0.5, None, true),
+            ("heavy", FaultMode::Inject, 7, 0.9, 0, 0.25, None, false),
+            ("heal", FaultMode::Inject, 7, 0.9, 0, 0.25, Some((1, heal_end)), false),
+        ];
+        for (name, mode, seed, rate, retries, timeout, window, twin) in scenarios {
+            let spec = TrainSpec {
+                faults: mode,
+                fault_seed: seed,
+                fault_rate: rate,
+                oracle_retries: retries,
+                oracle_timeout: timeout,
+                fault_window: window,
+                ..base.clone()
+            };
+            let s = trainer::train(&spec)?;
+            let last = s.points.last().unwrap();
+            let duals: Vec<u64> = s.points.iter().map(|p| p.dual.to_bits()).collect();
+            let monotone = s.points.windows(2).all(|w| w[1].dual >= w[0].dual - 1e-12);
+            let weak = s.points.iter().all(|p| p.primal >= p.dual - 1e-9);
+            let twin_ok = if twin {
+                let s2 = trainer::train(&spec)?;
+                let duals2: Vec<u64> = s2.points.iter().map(|p| p.dual.to_bits()).collect();
+                Some(duals == duals2)
+            } else {
+                None
+            };
+            let recovered = monotone && weak && twin_ok.unwrap_or(true);
+            log(format!(
+                "   {:14} {:7} seed={:<3} rate={:.2}  retries={:>4} timeouts={:>4} \
+                 degraded={:>3} gap={:.2e} recovered={}",
+                ds.name(),
+                name,
+                seed,
+                rate,
+                last.oracle_retries,
+                last.oracle_timeouts,
+                last.degraded_passes,
+                last.primal - last.dual,
+                recovered
+            ));
+            csv.row(&[
+                name.into(),
+                ds.name().into(),
+                mode.name().into(),
+                seed.to_string(),
+                format!("{rate}"),
+                format!("{}", s.wall_secs),
+                format!("{}", last.primal - last.dual),
+                last.oracle_calls.to_string(),
+                last.oracle_retries.to_string(),
+                last.oracle_timeouts.to_string(),
+                last.degraded_passes.to_string(),
+                twin_ok.map(|t| t.to_string()).unwrap_or_default(),
+                recovered.to_string(),
+            ])?;
+            entries.push(Json::obj(vec![
+                ("scenario", Json::s(name)),
+                ("dataset", Json::s(ds.name())),
+                ("faults", Json::s(mode.name())),
+                ("fault_seed", Json::Num(seed as f64)),
+                ("fault_rate", Json::Num(rate)),
+                ("wall_s", Json::Num(s.wall_secs)),
+                ("final_gap", Json::Num(last.primal - last.dual)),
+                ("oracle_calls", Json::Num(last.oracle_calls as f64)),
+                ("oracle_retries", Json::Num(last.oracle_retries as f64)),
+                ("oracle_timeouts", Json::Num(last.oracle_timeouts as f64)),
+                ("degraded_passes", Json::Num(last.degraded_passes as f64)),
+                // Only the twin scenario makes a bitwise claim.
+                (
+                    "twin_bitwise",
+                    twin_ok.map(Json::Bool).unwrap_or(Json::Null),
+                ),
+                ("recovered", Json::Bool(recovered)),
+            ]));
+        }
+    }
+    csv.flush()?;
+    let bench = Json::obj(vec![
+        ("bench", Json::s("faults")),
+        ("scale", Json::s(opts.scale.name())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(out_dir.join("bench_faults.json"), bench.to_string())?;
+    log(format!(
+        "   wrote {} and {}",
+        out_dir.join("table_faults.csv").display(),
+        out_dir.join("bench_faults.json").display()
+    ));
+    Ok(())
+}
+
 /// KERNELS — arithmetic-backend A/B (`--kernel scalar` vs `simd`), in
 /// two tiers sharing one table. Micro rows time each hot-path kernel on
 /// odd-length slices (the lane tail is exercised) and check the lane
@@ -1209,6 +1348,7 @@ pub const TABLES: &[&str] = &[
     "products",
     "async",
     "kernels",
+    "faults",
     "all",
 ];
 
@@ -1231,6 +1371,7 @@ pub fn run_table(
         "products" => products_sweep(opts, out_dir, log),
         "async" => async_sweep(opts, out_dir, log),
         "kernels" => kernels_sweep(opts, out_dir, log),
+        "faults" => faults_sweep(opts, out_dir, log),
         "all" => {
             oracle_stats(datasets, opts, out_dir, &mut log)?;
             crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, &mut log)?;
@@ -1241,7 +1382,8 @@ pub fn run_table(
             oracle_reuse_sweep(opts, out_dir, &mut log)?;
             products_sweep(opts, out_dir, &mut log)?;
             async_sweep(opts, out_dir, &mut log)?;
-            kernels_sweep(opts, out_dir, &mut log)
+            kernels_sweep(opts, out_dir, &mut log)?;
+            faults_sweep(opts, out_dir, &mut log)
         }
         other => anyhow::bail!("unknown table {other} (expected one of {TABLES:?})"),
     }
@@ -1376,6 +1518,49 @@ mod tests {
                 assert_eq!(*e.get("matches_baseline"), Json::Null);
             } else {
                 assert_eq!(*e.get("matches_baseline"), Json::Bool(true));
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn faults_sweep_writes_csv_with_gated_recovered_column() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_faults_{}", std::process::id()));
+        let mut lines = Vec::new();
+        faults_sweep(&tiny_opts(), &dir, |m| lines.push(m)).unwrap();
+        let text = std::fs::read_to_string(dir.join("table_faults.csv")).unwrap();
+        assert!(text.starts_with("scenario,dataset,faults,fault_seed"));
+        for ds in ["usps_like", "ocr_like", "horseseg_like"] {
+            for scenario in ["off", "inject", "heavy", "heal"] {
+                assert!(
+                    text.contains(&format!("{scenario},{ds}")),
+                    "missing {scenario} row for {ds}:\n{text}"
+                );
+            }
+        }
+        // The CI contract: every recovery verdict true, every bitwise
+        // twin claim true (non-claiming rows leave the cell empty).
+        assert!(!text.contains("false"), "a fault scenario failed to recover:\n{text}");
+        let json = std::fs::read_to_string(dir.join("bench_faults.json")).unwrap();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("faults"));
+        let entries = parsed.get("entries").as_arr().unwrap();
+        assert_eq!(entries.len(), 12);
+        for e in entries {
+            assert_eq!(*e.get("recovered"), Json::Bool(true));
+            match e.get("scenario").as_str() {
+                Some("inject") => {
+                    assert_eq!(*e.get("twin_bitwise"), Json::Bool(true));
+                    // Moderate-rate injection must actually inject.
+                    let retries = e.get("oracle_retries").as_f64().unwrap();
+                    assert!(retries >= 0.0);
+                }
+                Some("off") => {
+                    assert_eq!(*e.get("twin_bitwise"), Json::Null);
+                    assert_eq!(e.get("oracle_retries").as_f64(), Some(0.0));
+                    assert_eq!(e.get("degraded_passes").as_f64(), Some(0.0));
+                }
+                _ => assert_eq!(*e.get("twin_bitwise"), Json::Null),
             }
         }
         std::fs::remove_dir_all(dir).ok();

@@ -5,6 +5,7 @@ use std::path::Path;
 use super::args::Args;
 use crate::bench::{figures, regress, tables};
 use crate::coordinator::async_overlap::AsyncMode;
+use crate::coordinator::faults::{FaultMode, DEFAULT_FAULT_RATE};
 use crate::coordinator::products::{GramBackend, ProductMode};
 use crate::coordinator::sampling::{SamplingStrategy, StepRule};
 use crate::coordinator::trainer::{self, Algo, DatasetKind, EngineKind, TrainSpec};
@@ -27,7 +28,10 @@ USAGE:
                   [--async off|on] [--max-stale-epochs K] [--kernel scalar|simd]
                   [--oracle-delay SECONDS] [--engine native] [--train-loss]
                   [--max-oracle-calls N] [--target-gap F]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|async|kernels|all
+                  [--faults off|inject] [--fault-seed S] [--fault-rate F]
+                  [--oracle-retries N] [--oracle-timeout SECONDS]
+                  [--checkpoint-every N] [--checkpoint-path FILE]
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|async|kernels|faults|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR] [--smoke]
   mpbcfw bench    --regress [--smoke] | --rebaseline
@@ -119,6 +123,28 @@ dual-drift contract. --async off (the default) is bit-identical to
 previous releases and stays anchored by the golden-trajectory fixtures.
 `bench --table async` sweeps the modes.
 
+--faults inject turns on deterministic fault injection at the
+oracle-executor boundary (bcfw/mp-bcfw family, --threads >= 1): a seeded
+schedule of worker panics, transient errors, simulated timeouts and
+slowdowns that is a pure function of (--fault-seed, block, pass,
+attempt), so twin runs with the same seed — and the threaded vs the
+virtual test executor — replay bit-identical fault sequences. Failed
+calls retry up to --oracle-retries times under deterministic backoff
+(--oracle-timeout bounds each simulated hang); a block that exhausts its
+budget is skipped for the pass, requeued at the head of the next one,
+and the dual stays monotone throughout because skipped blocks simply
+take no step. When at least half of a pass's dispatched blocks fail, the
+driver degrades to cached-pass-only mode for the next iteration
+(counted as degraded_passes) and probes the oracle again after it —
+recovering automatically once the fault window closes. --faults off
+(the default) draws no RNG and stays bitwise identical to the pre-fault
+binaries. Orthogonally, --checkpoint-every N auto-saves the full run
+state every N outer iterations via atomic tmp+rename writes to
+--checkpoint-path (sync non-averaging drivers — the save_run/load_run
+resume surface), giving a kill-and-resume path whose resumed eval tail
+matches the uninterrupted run bit for bit. `bench --table faults`
+sweeps the scenarios and gates the recovery contract.
+
 `bench --regress` is the perf-regression gate: it replays each
 committed BENCH_<scenario>.json baseline's pinned configuration (the
 file's provenance, not the CLI options) and exits nonzero naming any
@@ -198,6 +224,15 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         max_stale_epochs: args.u64_or("max-stale-epochs", 1).map_err(err)?,
         kernel: KernelBackend::parse(args.get_or("kernel", "scalar"))
             .ok_or_else(|| anyhow::anyhow!("bad --kernel (scalar|simd)"))?,
+        faults: FaultMode::parse(args.get_or("faults", "off"))
+            .ok_or_else(|| anyhow::anyhow!("bad --faults (off|inject)"))?,
+        fault_seed: args.u64_or("fault-seed", 0).map_err(err)?,
+        fault_rate: args.f64_or("fault-rate", DEFAULT_FAULT_RATE).map_err(err)?,
+        fault_window: None, // bench/test knob, not CLI-exposed
+        oracle_retries: args.u64_or("oracle-retries", 2).map_err(err)?,
+        oracle_timeout: args.f64_or("oracle-timeout", 0.0).map_err(err)?,
+        checkpoint_every: args.u64_or("checkpoint-every", 0).map_err(err)?,
+        checkpoint_path: args.get_or("checkpoint-path", "mpbcfw_run.ckpt").to_string(),
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
@@ -544,6 +579,57 @@ mod tests {
     }
 
     #[test]
+    fn train_with_faults_flags() {
+        assert_eq!(
+            dispatch(toks(
+                "train --scale tiny --iters 2 --dataset usps --threads 2 \
+                 --no-auto-approx --faults inject --fault-seed 9 --fault-rate 0.3 \
+                 --oracle-retries 1 --oracle-timeout 0.5"
+            )),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --faults sometimes")),
+            1,
+            "unknown --faults value must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --faults inject")),
+            1,
+            "--faults inject without an executor (--threads 0) must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --fault-seed 3")),
+            1,
+            "--fault-seed without --faults inject must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --oracle-retries 5")),
+            1,
+            "--oracle-retries without --faults inject must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --checkpoint-path x.ckpt")),
+            1,
+            "--checkpoint-path without --checkpoint-every must be rejected"
+        );
+    }
+
+    #[test]
+    fn train_with_auto_checkpoint_flag() {
+        let path =
+            std::env::temp_dir().join(format!("mpbcfw_cli_ckpt_{}.bin", std::process::id()));
+        let cmd = format!(
+            "train --scale tiny --iters 2 --dataset usps --checkpoint-every 1 \
+             --checkpoint-path {}",
+            path.display()
+        );
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(path.is_file(), "auto-checkpoint written");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn train_with_kernel_flag() {
         assert_eq!(
             dispatch(toks("train --scale tiny --iters 2 --dataset usps --kernel simd")),
@@ -591,6 +677,16 @@ mod tests {
         assert_eq!(dispatch(toks(&cmd)), 0);
         assert!(dir.join("table_async.csv").exists());
         assert!(dir.join("bench_async.json").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bench_faults_smoke_runs() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_cli_faults_{}", std::process::id()));
+        let cmd = format!("bench --table faults --smoke --out {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(dir.join("table_faults.csv").exists());
+        assert!(dir.join("bench_faults.json").exists());
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -68,6 +68,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 
 use super::auto::SlopeRule;
+use super::faults::{self, FaultPlan};
 use super::metrics::Series;
 use super::mp_bcfw::{self, MpBcfwConfig, MpBcfwRun};
 use super::sampling::{build_sampler, BlockSampler as _, StepRule};
@@ -141,8 +142,11 @@ pub struct OracleDone {
     pub block: usize,
     /// Outer epoch of the w snapshot the call was solved against.
     pub epoch: u64,
-    /// The loss-augmented argmax plane.
-    pub plane: Plane,
+    /// The loss-augmented argmax plane, or `None` when the call failed
+    /// after exhausting its fault-injection retry budget (the driver
+    /// skips the block this epoch and requeues it — never possible
+    /// under `--faults off`).
+    pub plane: Option<Plane>,
     /// Worker that served the call (timing splits fold onto the
     /// matching arena slot of `MpBcfwRun::oracle_scratches`).
     pub worker: usize,
@@ -168,6 +172,12 @@ pub trait OracleExecutor {
     fn recv(&mut self) -> Option<OracleDone>;
     /// Calls submitted but not yet received.
     fn outstanding(&self) -> usize;
+    /// The executor's fault plan, when it carries one. The driver
+    /// adopts it as the run's plan so injected-fault counters and
+    /// virtual-time penalties land in one place.
+    fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        None
+    }
     /// Worker count (the `id % workers` pinning modulus, and the
     /// critical-path divisor for virtual oracle latency).
     fn workers(&self) -> usize;
@@ -196,6 +206,7 @@ pub struct ThreadedExecutor {
     outstanding: usize,
     workers: usize,
     idle_bits: Arc<AtomicU64>,
+    plan: Arc<FaultPlan>,
 }
 
 impl ThreadedExecutor {
@@ -207,6 +218,22 @@ impl ThreadedExecutor {
         workers: usize,
         reuse: bool,
     ) -> ThreadedExecutor {
+        Self::start_faulty(s, problem, workers, reuse, Arc::new(FaultPlan::off()))
+    }
+
+    /// `start` with a fault plan. Injected faults fire inside the
+    /// workers (the `OracleExecutor` boundary): panics are isolated per
+    /// call by `catch_unwind` — a worker survives its own oracle's
+    /// panic, cold-resets its arena and keeps serving its residue
+    /// class. A call that still fails after the retry budget comes back
+    /// as `plane: None`.
+    pub fn start_faulty<'scope, 'env>(
+        s: &'scope std::thread::Scope<'scope, 'env>,
+        problem: &'env CountingOracle,
+        workers: usize,
+        reuse: bool,
+        plan: Arc<FaultPlan>,
+    ) -> ThreadedExecutor {
         let workers = workers.max(1);
         let (done_tx, done_rx) = mpsc::channel::<OracleDone>();
         let idle_bits = Arc::new(AtomicU64::new(0f64.to_bits()));
@@ -216,6 +243,7 @@ impl ThreadedExecutor {
             task_txs.push(tx);
             let done_tx = done_tx.clone();
             let idle_bits = Arc::clone(&idle_bits);
+            let plan = Arc::clone(&plan);
             s.spawn(move || {
                 let mut eng = NativeEngine;
                 let mut scratch = OracleScratch::new(reuse);
@@ -225,8 +253,15 @@ impl ThreadedExecutor {
                     atomic_add_f64(&idle_bits, sw.secs());
                     let b0 = scratch.build_secs;
                     let s0 = scratch.solve_secs;
-                    let plane =
-                        problem.oracle_scratch(task.block, &task.w, &mut eng, &mut scratch);
+                    let plane = if plan.is_inject() {
+                        faults::call_with_faults(
+                            &plan, problem, task.block, &task.w, &mut eng, &mut scratch,
+                            task.epoch,
+                        )
+                        .ok()
+                    } else {
+                        Some(problem.oracle_scratch(task.block, &task.w, &mut eng, &mut scratch))
+                    };
                     let done = OracleDone {
                         block: task.block,
                         epoch: task.epoch,
@@ -241,7 +276,7 @@ impl ThreadedExecutor {
                 }
             });
         }
-        ThreadedExecutor { task_txs, done_rx, outstanding: 0, workers, idle_bits }
+        ThreadedExecutor { task_txs, done_rx, outstanding: 0, workers, idle_bits, plan }
     }
 }
 
@@ -278,6 +313,10 @@ impl OracleExecutor for ThreadedExecutor {
 
     fn outstanding(&self) -> usize {
         self.outstanding
+    }
+
+    fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        Some(&self.plan)
     }
 
     fn workers(&self) -> usize {
@@ -328,6 +367,7 @@ pub struct VirtualExecutor<'a> {
     seq: u64,
     fresh: Vec<OracleDone>,
     pending: Vec<VirtualSlot>,
+    plan: Arc<FaultPlan>,
 }
 
 impl<'a> VirtualExecutor<'a> {
@@ -337,6 +377,20 @@ impl<'a> VirtualExecutor<'a> {
         workers: usize,
         reuse: bool,
         order: CompletionOrder,
+    ) -> VirtualExecutor<'a> {
+        Self::with_faults(problem, workers, reuse, order, Arc::new(FaultPlan::off()))
+    }
+
+    /// `new` with a fault plan. Decisions are pure in (seed, block,
+    /// epoch, attempt), so a virtual pool replays the *identical* fault
+    /// schedule a threaded pool would see — completion order and fault
+    /// schedule become independent test axes.
+    pub fn with_faults(
+        problem: &'a CountingOracle,
+        workers: usize,
+        reuse: bool,
+        order: CompletionOrder,
+        plan: Arc<FaultPlan>,
     ) -> VirtualExecutor<'a> {
         let workers = workers.max(1);
         VirtualExecutor {
@@ -349,6 +403,7 @@ impl<'a> VirtualExecutor<'a> {
             seq: 0,
             fresh: Vec::new(),
             pending: Vec::new(),
+            plan,
         }
     }
 
@@ -395,7 +450,12 @@ impl OracleExecutor for VirtualExecutor<'_> {
         let scratch = &mut self.scratches[k];
         let b0 = scratch.build_secs;
         let s0 = scratch.solve_secs;
-        let plane = self.problem.oracle_scratch(block, w, &mut self.eng, scratch);
+        let plane = if self.plan.is_inject() {
+            faults::call_with_faults(&self.plan, self.problem, block, w, &mut self.eng, scratch, epoch)
+                .ok()
+        } else {
+            Some(self.problem.oracle_scratch(block, w, &mut self.eng, scratch))
+        };
         self.fresh.push(OracleDone {
             block,
             epoch,
@@ -438,6 +498,10 @@ impl OracleExecutor for VirtualExecutor<'_> {
 
     fn outstanding(&self) -> usize {
         self.pending.len() + self.fresh.len()
+    }
+
+    fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        Some(&self.plan)
     }
 
     fn workers(&self) -> usize {
@@ -490,34 +554,48 @@ pub(crate) fn fold_plane(
 /// sharded pass).
 fn absorb_done(
     run: &mut MpBcfwRun,
-    arrived: &mut HashMap<(u64, usize), Plane>,
+    arrived: &mut HashMap<(u64, usize), Option<Plane>>,
     cfg: &MpBcfwConfig,
     done: OracleDone,
 ) {
     let k = done.worker % run.oracle_scratches.len();
     run.oracle_scratches[k].build_secs += done.build_s;
     run.oracle_scratches[k].solve_secs += done.solve_s;
-    let plane = if cfg.dense_planes { done.plane.into_dense() } else { done.plane };
+    let plane = if cfg.dense_planes { done.plane.map(Plane::into_dense) } else { done.plane };
     arrived.insert((done.epoch, done.block), plane);
 }
 
 /// Fold, strictly in dispatch (FIFO) order, every queue-front entry
-/// whose plane has arrived; stop at the first entry still in flight.
+/// whose plane has arrived; stop at the first entry still in flight. A
+/// `None` arrival (call lost to injected faults) skips the fold,
+/// requeues the block and counts into `fails` — the degradation
+/// trigger's per-epoch failure tally.
 #[allow(clippy::too_many_arguments)]
 fn fold_ready(
     run: &mut MpBcfwRun,
     queue: &mut VecDeque<(u64, usize)>,
     uses: &mut HashMap<(u64, usize), usize>,
-    arrived: &mut HashMap<(u64, usize), Plane>,
+    arrived: &mut HashMap<(u64, usize), Option<Plane>>,
     requeued: &mut Vec<usize>,
+    fails: &mut u64,
     outer: u64,
     pairwise: bool,
     cfg: &MpBcfwConfig,
 ) {
     while let Some(&key) = queue.front() {
-        let Some(plane) = arrived.get(&key) else { break };
-        let staleness = outer - key.0;
-        fold_plane(run, key.1, plane, staleness, outer, pairwise, cfg, requeued);
+        let Some(slot) = arrived.get(&key) else { break };
+        match slot {
+            Some(plane) => {
+                let staleness = outer - key.0;
+                fold_plane(run, key.1, plane, staleness, outer, pairwise, cfg, requeued);
+            }
+            None => {
+                if !requeued.contains(&key.1) {
+                    requeued.push(key.1);
+                }
+                *fails += 1;
+            }
+        }
         queue.pop_front();
         let left = uses.get_mut(&key).expect("fold-queue entry without a uses count");
         *left -= 1;
@@ -538,15 +616,16 @@ fn force_folds<E: OracleExecutor>(
     run: &mut MpBcfwRun,
     queue: &mut VecDeque<(u64, usize)>,
     uses: &mut HashMap<(u64, usize), usize>,
-    arrived: &mut HashMap<(u64, usize), Plane>,
+    arrived: &mut HashMap<(u64, usize), Option<Plane>>,
     requeued: &mut Vec<usize>,
+    fails: &mut u64,
     outer: u64,
     k_eff: u64,
     pairwise: bool,
     cfg: &MpBcfwConfig,
 ) {
     loop {
-        fold_ready(run, queue, uses, arrived, requeued, outer, pairwise, cfg);
+        fold_ready(run, queue, uses, arrived, requeued, fails, outer, pairwise, cfg);
         let Some(&key) = queue.front() else { return };
         if outer - key.0 < k_eff {
             return;
@@ -565,6 +644,7 @@ fn force_folds<E: OracleExecutor>(
                     }
                 }
                 requeued.push(key.1);
+                *fails += 1;
             }
         }
     }
@@ -580,7 +660,13 @@ pub fn run_async(
     cfg: &MpBcfwConfig,
 ) -> (Series, MpBcfwRun) {
     std::thread::scope(|s| {
-        let mut exec = ThreadedExecutor::start(s, problem, cfg.threads.max(1), cfg.oracle_reuse);
+        let mut exec = ThreadedExecutor::start_faulty(
+            s,
+            problem,
+            cfg.threads.max(1),
+            cfg.oracle_reuse,
+            Arc::new(FaultPlan::from_config(&cfg.faults)),
+        );
         run_async_with(problem, eng, cfg, &mut exec)
     })
 }
@@ -597,6 +683,11 @@ pub fn run_async_with<E: OracleExecutor>(
     problem.reset_stats();
     let mut clock = Clock::new();
     let mut run = mp_bcfw::new_run(problem, cfg);
+    // One plan instance: the executor injects through it, the run
+    // reports its counters and drains its virtual-time penalties.
+    if let Some(plan) = exec.fault_plan() {
+        run.faults = Arc::clone(plan);
+    }
     let mut series = mp_bcfw::new_series(problem, cfg);
     // Initial evaluation point (w = 0).
     mp_bcfw::record_point(problem, eng, &mut clock, cfg, &mut run, 0, 0, &mut series);
@@ -612,8 +703,11 @@ pub fn run_async_with<E: OracleExecutor>(
     // and the planes that have arrived but not yet fully folded.
     let mut queue: VecDeque<(u64, usize)> = VecDeque::new();
     let mut uses: HashMap<(u64, usize), usize> = HashMap::new();
-    let mut arrived: HashMap<(u64, usize), Plane> = HashMap::new();
+    let mut arrived: HashMap<(u64, usize), Option<Plane>> = HashMap::new();
     let mut requeued: Vec<usize> = Vec::new();
+    // Per-epoch tally of calls lost to injected faults (drives the
+    // degradation trigger; always 0 under `--faults off`).
+    let mut epoch_fails: u64 = 0;
 
     'outer: for outer in 1..=cfg.max_iters {
         let f_now = run.state.dual_value();
@@ -625,12 +719,27 @@ pub fn run_async_with<E: OracleExecutor>(
         while let Some(done) = exec.try_recv() {
             absorb_done(&mut run, &mut arrived, cfg, done);
         }
-        fold_ready(&mut run, &mut queue, &mut uses, &mut arrived, &mut requeued, outer, pairwise, cfg);
+        fold_ready(
+            &mut run, &mut queue, &mut uses, &mut arrived, &mut requeued, &mut epoch_fails,
+            outer, pairwise, cfg,
+        );
 
         // ---- Dispatch this epoch's exact-oracle work ------------------
+        // Graceful degradation: when the previous epoch lost at least
+        // half its calls to faults, dispatch nothing this epoch — live
+        // off cached planes and the approximate passes, then probe the
+        // oracle again. Requeued blocks stay queued meanwhile.
+        let degraded = run.degrade_next;
+        if degraded {
+            run.degrade_next = false;
+            run.degraded_passes += 1;
+        }
         run.state.refresh_w();
-        let mut order: Vec<usize> = std::mem::take(&mut requeued);
-        order.extend(sampler.pass_order(&mut run.rng, &run.gaps));
+        let mut order: Vec<usize> = Vec::new();
+        if !degraded {
+            order = std::mem::take(&mut requeued);
+            order.extend(sampler.pass_order(&mut run.rng, &run.gaps));
+        }
         if cfg.max_oracle_calls > 0 {
             let remaining = cfg.max_oracle_calls.saturating_sub(dispatched_total) as usize;
             order.truncate(remaining);
@@ -669,9 +778,14 @@ pub fn run_async_with<E: OracleExecutor>(
         let budget_hit = cfg.max_oracle_calls > 0 && dispatched_total >= cfg.max_oracle_calls;
         let k_eff = if budget_hit || outer == cfg.max_iters { 0 } else { cfg.max_stale_epochs };
         force_folds(
-            exec, &mut run, &mut queue, &mut uses, &mut arrived, &mut requeued, outer, k_eff,
-            pairwise, cfg,
+            exec, &mut run, &mut queue, &mut uses, &mut arrived, &mut requeued,
+            &mut epoch_fails, outer, k_eff, pairwise, cfg,
         );
+        // Drain injected virtual-time penalties (retry backoff,
+        // timeouts, slowdowns) onto the pausable clock.
+        if run.faults.is_inject() {
+            clock.charge(run.faults.take_penalty_secs());
+        }
         if budget_hit {
             run.async_stats.worker_idle_s = exec.idle_secs();
             mp_bcfw::record_point(
@@ -691,8 +805,8 @@ pub fn run_async_with<E: OracleExecutor>(
                     absorb_done(&mut run, &mut arrived, cfg, done);
                 }
                 fold_ready(
-                    &mut run, &mut queue, &mut uses, &mut arrived, &mut requeued, outer,
-                    pairwise, cfg,
+                    &mut run, &mut queue, &mut uses, &mut arrived, &mut requeued,
+                    &mut epoch_fails, outer, pairwise, cfg,
                 );
                 slope.begin_pass(run.state.dual_value(), mp_bcfw::measured(&clock, problem));
                 let perm = run.rng.permutation(n);
@@ -718,6 +832,16 @@ pub fn run_async_with<E: OracleExecutor>(
         if cfg.renorm_every > 0 && outer % cfg.renorm_every == 0 {
             run.state.renormalize();
         }
+        // Degradation trip (DEGRADE_FAIL_FRAC = 1/2): losing half or
+        // more of this epoch's fold entries to faults means the oracle
+        // is unhealthy — coast next epoch, then re-probe.
+        if run.faults.is_inject()
+            && epoch_fails > 0
+            && 2 * epoch_fails >= (uniq.len() as u64).max(1)
+        {
+            run.degrade_next = true;
+        }
+        epoch_fails = 0;
         run.outers_done = outer;
 
         // ---- Evaluation / stopping ------------------------------------
@@ -864,5 +988,64 @@ mod tests {
             assert!(ex.try_recv().is_none());
         });
         assert_eq!(problem.stats().calls, 7);
+    }
+
+    #[test]
+    fn injected_faults_surface_as_none_planes_matching_the_pure_schedule() {
+        use super::super::faults::{FaultConfig, FaultKind, FaultMode};
+        let problem = tiny_problem(1);
+        let plan = Arc::new(FaultPlan::from_config(&FaultConfig {
+            mode: FaultMode::Inject,
+            seed: 5,
+            rate: 1.0,
+            retries: 0,
+            ..FaultConfig::default()
+        }));
+        let w = Arc::new(vec![0.0; problem.dim()]);
+        let mut ex =
+            VirtualExecutor::with_faults(&problem, 2, true, CompletionOrder::Fifo, Arc::clone(&plan));
+        for b in 0..6 {
+            ex.submit(b, 1, &w);
+        }
+        for _ in 0..12 {
+            ex.tick();
+        }
+        let mut outcomes = Vec::new();
+        while let Some(d) = ex.try_recv() {
+            outcomes.push((d.block, d.plane.is_some()));
+        }
+        assert_eq!(outcomes.len(), 6);
+        // rate 1.0, retries 0: the single attempt survives iff the pure
+        // schedule drew a Slow (which runs the real call) — every other
+        // kind loses the call. Executor outcomes must match the
+        // schedule exactly; that equality is what lets a threaded pool
+        // and this virtual pool replay identical fault histories.
+        for (b, ok) in &outcomes {
+            let expect_ok = matches!(plan.decide(*b, 1, 0), None | Some(FaultKind::Slow));
+            assert_eq!(*ok, expect_ok, "block {b} diverged from the pure schedule");
+        }
+        assert!(outcomes.iter().any(|(_, ok)| !ok), "rate 1.0 produced no failures");
+        assert!(plan.stats().injected >= 6);
+        // A threaded pool over the same plan config sees the same
+        // schedule (decisions are pure in (seed, block, epoch, attempt)).
+        let plan2 = Arc::new(FaultPlan::from_config(&FaultConfig {
+            mode: FaultMode::Inject,
+            seed: 5,
+            rate: 1.0,
+            retries: 0,
+            ..FaultConfig::default()
+        }));
+        std::thread::scope(|s| {
+            let mut ex2 = ThreadedExecutor::start_faulty(s, &problem, 3, true, plan2);
+            for b in 0..6 {
+                ex2.submit(b, 1, &w);
+            }
+            let mut got: Vec<(usize, bool)> =
+                std::iter::from_fn(|| ex2.recv()).map(|d| (d.block, d.plane.is_some())).collect();
+            got.sort_unstable();
+            let mut want = outcomes.clone();
+            want.sort_unstable();
+            assert_eq!(got, want, "threaded and virtual fault schedules diverged");
+        });
     }
 }

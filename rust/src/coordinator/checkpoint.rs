@@ -41,7 +41,11 @@ use crate::oracle::wrappers::CountingOracle;
 use crate::utils::rng::Pcg;
 
 const MAGIC: &[u8; 8] = b"MPBCMD01";
-const RUN_MAGIC: &[u8; 8] = b"MPBCRN02";
+// RN03 appended the fault-recovery state (degraded_passes, degrade_next,
+// fault_requeue) to the payload tail: without it, a kill-and-resume under
+// `--faults inject` would re-enter the loop with an empty requeue and
+// diverge from the uninterrupted trajectory.
+const RUN_MAGIC: &[u8; 8] = b"MPBCRN03";
 
 /// A trained model: everything needed to score new instances (and to
 /// bound how suboptimal the snapshot was).
@@ -268,7 +272,34 @@ pub fn save_run<P: AsRef<Path>>(
         wu64(f, u)?;
     }
     wu64(f, pass)?;
+    // Fault-recovery state (RN03): trajectory-bearing under
+    // `--faults inject` — the uninterrupted run enters the next pass
+    // with this requeue and degrade decision. FaultPlan counters are
+    // observability only and restart at zero, like the timing splits.
+    wu64(f, run.degraded_passes)?;
+    f.write_all(&[run.degrade_next as u8])?;
+    wu64(f, run.fault_requeue.len() as u64)?;
+    for &b in &run.fault_requeue {
+        wu64(f, b as u64)?;
+    }
     f.flush()
+}
+
+/// [`save_run`] through a temp file + atomic rename, so a crash or kill
+/// mid-write can never destroy the previous checkpoint: readers see
+/// either the old complete file or the new complete file. This is the
+/// write path behind `--checkpoint-every`.
+pub fn save_run_atomic<P: AsRef<Path>>(
+    path: P,
+    run: &MpBcfwRun,
+    problem: &CountingOracle,
+) -> Result<()> {
+    let path = path.as_ref();
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    save_run(&tmp, run, problem)?;
+    std::fs::rename(&tmp, path)
 }
 
 /// A reader that tracks its byte position so failures can name the
@@ -276,11 +307,35 @@ pub fn save_run<P: AsRef<Path>>(
 struct CountingReader<R: Read> {
     inner: R,
     pos: u64,
+    /// Total file size when known — the allocation guard: an element
+    /// count claiming more payload than the file has left is rejected
+    /// *before* any `Vec::with_capacity`, so a bit-flipped length
+    /// prefix can produce an error but never an OOM.
+    limit: Option<u64>,
 }
 
 impl<R: Read> CountingReader<R> {
     fn new(inner: R) -> CountingReader<R> {
-        CountingReader { inner, pos: 0 }
+        CountingReader { inner, pos: 0, limit: None }
+    }
+
+    fn with_limit(inner: R, limit: u64) -> CountingReader<R> {
+        CountingReader { inner, pos: 0, limit: Some(limit) }
+    }
+
+    /// Validate a length prefix of `count` elements, each at least
+    /// `elem_bytes` on disk, against the bytes remaining in the file.
+    fn guard_count(&self, count: u64, elem_bytes: u64, what: &str) -> Result<usize> {
+        if let Some(limit) = self.limit {
+            let remaining = limit.saturating_sub(self.pos);
+            if count.saturating_mul(elem_bytes) > remaining {
+                return Err(self.bad(format!(
+                    "{what} count {count} needs more than the {remaining} byte(s) \
+                     left in the file"
+                )));
+            }
+        }
+        Ok(count as usize)
     }
 
     fn fill(&mut self, buf: &mut [u8]) -> Result<()> {
@@ -345,7 +400,9 @@ pub fn load_run<P: AsRef<Path>>(
              resuming an averaged run is unsupported",
         ));
     }
-    let mut r = CountingReader::new(BufReader::new(File::open(path)?));
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = CountingReader::with_limit(BufReader::new(file), file_len);
     let mut magic = [0u8; 8];
     r.fill(&mut magic)?;
     if &magic != RUN_MAGIC {
@@ -411,7 +468,10 @@ pub fn load_run<P: AsRef<Path>>(
     for _ in 0..n {
         let cap = r.u64()? as usize;
         let next_id = r.u64()?;
-        let len = r.u64()? as usize;
+        let len = r.u64()?;
+        // Each stored plane is at least id+tag+last_active+off+repr = 33
+        // bytes, so a corrupt length that outruns the file dies here.
+        let len = r.guard_count(len, 33, "working-set plane")?;
         if len > cap {
             return Err(r.bad(format!("working set of {len} planes exceeds cap {cap}")));
         }
@@ -437,7 +497,13 @@ pub fn load_run<P: AsRef<Path>>(
                     let mut idx = Vec::with_capacity(nnz);
                     let mut val = Vec::with_capacity(nnz);
                     for _ in 0..nnz {
-                        idx.push(r.u64()? as u32);
+                        let j = r.u64()?;
+                        if j >= dim as u64 {
+                            return Err(
+                                r.bad(format!("sparse index {j} out of range (dim = {dim})"))
+                            );
+                        }
+                        idx.push(j as u32);
                         val.push(r.f64()?);
                     }
                     PlaneVec::Sparse { dim, idx, val }
@@ -455,7 +521,9 @@ pub fn load_run<P: AsRef<Path>>(
     }
     let mut coeffs = Vec::with_capacity(coeffs_len);
     for _ in 0..coeffs_len {
-        let npairs = r.u64()? as usize;
+        let npairs = r.u64()?;
+        // Each pair is id+value = 16 bytes on disk.
+        let npairs = r.guard_count(npairs, 16, "coefficient pair")?;
         let mut pairs = Vec::with_capacity(npairs);
         for _ in 0..npairs {
             let id = r.u64()?;
@@ -472,7 +540,9 @@ pub fn load_run<P: AsRef<Path>>(
     }
     let mut products = Vec::with_capacity(n);
     for _ in 0..n {
-        let nids = r.u64()? as usize;
+        let nids = r.u64()?;
+        // Each id carries id+coeff+product = 24 bytes on disk.
+        let nids = r.guard_count(nids, 24, "product-row id")?;
         let mut ids = Vec::with_capacity(nids);
         for _ in 0..nids {
             ids.push(r.u64()?);
@@ -505,6 +575,23 @@ pub fn load_run<P: AsRef<Path>>(
         *u = r.u64()?;
     }
     let pass = r.u64()?;
+    // Fault-recovery state (RN03).
+    let degraded_passes = r.u64()?;
+    let degrade_next = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(r.bad(format!("bad degrade flag byte {other}"))),
+    };
+    let requeue_len = r.u64()?;
+    let requeue_len = r.guard_count(requeue_len, 8, "fault-requeue entry")?;
+    let mut fault_requeue = Vec::with_capacity(requeue_len);
+    for _ in 0..requeue_len {
+        let b = r.u64()? as usize;
+        if b >= n {
+            return Err(r.bad(format!("fault-requeue block {b} out of range (n = {n})")));
+        }
+        fault_requeue.push(b);
+    }
 
     // Assemble onto a fresh skeleton: Gram caches, oracle arenas,
     // averagers and the coefficient scratch restart cold (value-neutral
@@ -523,6 +610,9 @@ pub fn load_run<P: AsRef<Path>>(
     run.rng = rng;
     run.outers_done = outers_done;
     run.async_stats = async_stats;
+    run.degraded_passes = degraded_passes;
+    run.degrade_next = degrade_next;
+    run.fault_requeue = fault_requeue;
     Ok(run)
 }
 
@@ -686,6 +776,110 @@ mod tests {
         // Averaged configs are refused outright.
         let avg = MpBcfwConfig { averaging: true, ..run_cfg() };
         assert!(load_run(&p, &problem2, &avg).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn fault_recovery_state_roundtrips() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = run_cfg();
+        let (_, mut run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        use crate::model::problem::StructuredProblem as _;
+        let n = problem.n();
+        run.degraded_passes = 3;
+        run.degrade_next = true;
+        run.fault_requeue = vec![0, 2 % n, (n - 1).min(5)];
+        let p = tmp("run_faultstate");
+        save_run(&p, &run, &problem).unwrap();
+        let problem2 = tiny_problem();
+        let back = load_run(&p, &problem2, &cfg).unwrap();
+        assert_eq!(back.degraded_passes, 3);
+        assert!(back.degrade_next);
+        assert_eq!(back.fault_requeue, run.fault_requeue);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn atomic_save_replaces_the_file_and_leaves_no_tmp() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = run_cfg();
+        let (_, run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        let p = tmp("run_atomic");
+        save_run_atomic(&p, &run, &problem).unwrap();
+        // Overwrite in place: the second write goes through the same
+        // tmp+rename dance and must leave a loadable file behind.
+        save_run_atomic(&p, &run, &problem).unwrap();
+        let mut tmp_path = p.as_os_str().to_owned();
+        tmp_path.push(".tmp");
+        assert!(
+            !std::path::Path::new(&tmp_path).exists(),
+            "temp file must be renamed away"
+        );
+        let problem2 = tiny_problem();
+        let back = load_run(&p, &problem2, &cfg).unwrap();
+        assert_eq!(back.outers_done, run.outers_done);
+        assert_eq!(back.state.phi.star, run.state.phi.star);
+        std::fs::remove_file(p).ok();
+    }
+
+    /// Satellite hardening: no truncation and no single bit flip of a
+    /// valid run checkpoint may panic or OOM the loader. Truncations
+    /// must fail with an error naming a byte offset; bit flips must
+    /// either fail the same way or parse cleanly (a flipped payload
+    /// float is indistinguishable without checksums) — but every
+    /// length-prefix flip is caught by the allocation guard before any
+    /// `Vec::with_capacity`.
+    #[test]
+    fn corrupted_run_checkpoints_error_with_offsets_and_never_panic() {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = run_cfg();
+        let (_, run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        let p = tmp("run_fuzz");
+        save_run(&p, &run, &problem).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.len() > 64, "fixture too small to exercise truncation");
+        // Truncate at every 64-byte boundary (strict prefixes, so the
+        // loader must always fail — and must name where).
+        let mut cut = 0usize;
+        while cut < bytes.len() {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            let problem2 = tiny_problem();
+            let err = load_run(&p, &problem2, &cfg).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("byte offset"), "cut at {cut}: offset-less error: {msg}");
+            cut += 64;
+        }
+        // Bit-flip sweep: all 16 header bytes exhaustively, then a
+        // prime-strided sample of the payload. The loader must return
+        // (Ok or Err), never panic, and the allocation guards keep a
+        // flipped length prefix from requesting absurd memory.
+        let positions: Vec<usize> =
+            (0..16.min(bytes.len())).chain((16..bytes.len()).step_by(97)).collect();
+        for &pos in &positions {
+            for bit in [0u8, 3, 7] {
+                let mut mutated = bytes.clone();
+                mutated[pos] ^= 1 << bit;
+                std::fs::write(&p, &mutated).unwrap();
+                let problem2 = tiny_problem();
+                match load_run(&p, &problem2, &cfg) {
+                    Ok(back) => {
+                        // A silent pass may only differ in payload
+                        // values, never in structure.
+                        assert_eq!(back.working_sets.len(), run.working_sets.len());
+                    }
+                    Err(err) => {
+                        let msg = err.to_string();
+                        assert!(
+                            msg.contains("run checkpoint"),
+                            "flip at {pos} bit {bit}: foreign error: {msg}"
+                        );
+                    }
+                }
+            }
+        }
         std::fs::remove_file(p).ok();
     }
 }

@@ -1,0 +1,596 @@
+//! Deterministic fault injection + the recovery policy that survives it.
+//!
+//! The paper's premise is that the max-oracle is the expensive, fragile
+//! part of SSVM training. The moment oracle calls leave the happy path —
+//! a solver panics on a degenerate instance, a worker process dies, a
+//! call hangs or comes back late — the driver must keep the dual
+//! monotone and the run recoverable without losing hours of oracle
+//! work. BCFW's convergence guarantees hold under essentially arbitrary
+//! block visit orders (Lacoste-Julien et al., 2013), which makes
+//! *skip-the-failed-block-and-retry-later* a principled recovery policy
+//! rather than a heuristic: a failed block simply contributes no step
+//! this pass and is requeued, exactly as if the sampler had not drawn
+//! it.
+//!
+//! This module supplies both halves:
+//!
+//!  * **Injection** ([`FaultPlan`]): a seeded, deterministic fault
+//!    schedule. Whether a given oracle call faults — and how — is a
+//!    *pure function* of `(fault_seed, block, pass, attempt)`, computed
+//!    by seeding a throwaway [`Pcg`] per decision. No per-call ordinal
+//!    state means the schedule is identical no matter which executor
+//!    runs it (`ThreadedExecutor` vs `VirtualExecutor`), which thread
+//!    interleaving occurs, and whether the run was killed and resumed
+//!    mid-way (the pass number is restored from `outers_done`): twin
+//!    runs with the same fault seed are bitwise identical, and a
+//!    resumed run replays the uninterrupted schedule's tail.
+//!  * **Recovery** ([`call_with_faults`]): bounded retry with
+//!    deterministic virtual-seconds backoff, `catch_unwind` panic
+//!    isolation (both injected panics — which genuinely unwind — and
+//!    real oracle panics are caught; the worker's scratch arena is
+//!    reset to a cold, consistent state), policy-level timeouts (a
+//!    decided [`FaultKind::Timeout`] charges `--oracle-timeout` virtual
+//!    seconds and retries — single-process we cannot preempt a truly
+//!    hung call, so the timeout is modeled at the decision layer, the
+//!    same place a multi-process coordinator would enforce it for
+//!    real), and slowdowns (the call succeeds but is charged extra
+//!    latency).
+//!
+//! Fault taxonomy:
+//!
+//! | kind        | models                      | effect on the call        |
+//! |-------------|-----------------------------|---------------------------|
+//! | `Panic`     | solver crash / worker death | unwinds; caught, arena reset, retried |
+//! | `Transient` | flaky I/O, lost message     | no result; retried        |
+//! | `Timeout`   | hung call past the deadline | no result; charges `timeout_s`, retried |
+//! | `Slow`      | straggler                   | succeeds; charges a latency penalty |
+//!
+//! Exhausted retries surface as `Err(FaultKind)` — the *driver* then
+//! skips the block, requeues it, and (when a pass's failure rate trips
+//! the 50% threshold) degrades the next pass to cached-only work,
+//! probing the oracle again afterwards so the run recovers when the
+//! fault window closes. `--faults off` draws zero RNG and takes the
+//! exact pre-existing code paths, so it stays bitwise identical to a
+//! build without this module.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::model::plane::Plane;
+use crate::model::scratch::OracleScratch;
+use crate::oracle::wrappers::CountingOracle;
+use crate::runtime::engine::NativeEngine;
+use crate::utils::rng::Pcg;
+
+/// Probability that an *active* plan faults a given `(block, pass,
+/// attempt)` call, unless overridden per-config. Chosen so a default
+/// 2-retry budget recovers the large majority of visits (failure needs
+/// three consecutive faults: rate³ ≈ 0.8%) while still exercising every
+/// recovery path in a short run.
+pub const DEFAULT_FAULT_RATE: f64 = 0.2;
+
+/// Virtual-seconds base of the deterministic exponential retry backoff
+/// (attempt `k` charges `BACKOFF_BASE_S · 2^k`).
+const BACKOFF_BASE_S: f64 = 0.01;
+
+/// A decided slowdown charges this fraction of the timeout budget.
+const SLOW_PENALTY_FRAC: f64 = 0.25;
+
+/// Failure threshold for graceful degradation: when at least this
+/// fraction of a pass's dispatched oracle calls fail outright (retries
+/// exhausted), the driver skips the *next* exact pass entirely and runs
+/// cached passes only, then probes the oracle again.
+pub const DEGRADE_FAIL_FRAC: f64 = 0.5;
+
+/// Payload of an injected panic, so tests (and panic hooks) can tell a
+/// scheduled fault from a genuine oracle crash.
+pub struct InjectedPanic;
+
+/// Whether fault injection is enabled (`--faults {off,inject}`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultMode {
+    /// No injection, no RNG draws, pre-existing code paths — the
+    /// bitwise anchor.
+    #[default]
+    Off,
+    /// Replay the seeded fault schedule.
+    Inject,
+}
+
+impl FaultMode {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(FaultMode::Off),
+            "inject" => Some(FaultMode::Inject),
+            _ => None,
+        }
+    }
+
+    /// Stable name for tables/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultMode::Off => "off",
+            FaultMode::Inject => "inject",
+        }
+    }
+}
+
+/// What went wrong with one oracle call attempt (see the module-level
+/// taxonomy table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The call unwinds (genuinely — through `catch_unwind`).
+    Panic,
+    /// The call produces no result this attempt.
+    Transient,
+    /// The call exceeds the deadline; its (virtual) cost is charged.
+    Timeout,
+    /// The call succeeds but late.
+    Slow,
+}
+
+impl FaultKind {
+    /// Stable name for tables/errors.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Transient => "transient",
+            FaultKind::Timeout => "timeout",
+            FaultKind::Slow => "slow",
+        }
+    }
+}
+
+/// Fault-injection + recovery knobs, embedded in `MpBcfwConfig` as one
+/// field (`cfg.faults`) and filled from `TrainSpec`/CLI. `rate` and
+/// `window` are test/bench knobs without CLI flags of their own
+/// (`window` builds heal scenarios: injection active only for passes
+/// `lo..=hi`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// `--faults {off,inject}`.
+    pub mode: FaultMode,
+    /// `--fault-seed` — the schedule seed; same seed ⇒ same schedule.
+    pub seed: u64,
+    /// `--fault-rate` — per-attempt fault probability while active.
+    pub rate: f64,
+    /// Inclusive pass window where injection is active (`None` = all
+    /// passes). Not CLI-exposed; bench/tests use it for heal scenarios.
+    pub window: Option<(u64, u64)>,
+    /// `--oracle-retries` — retry attempts after the first failure.
+    pub retries: u64,
+    /// `--oracle-timeout` — virtual seconds charged per decided
+    /// timeout (and, scaled, per slowdown).
+    pub timeout_s: f64,
+    /// `--checkpoint-every N` — auto-checkpoint the run every N outer
+    /// iterations (0 = off). Atomic tmp+rename writes via
+    /// `checkpoint::save_run_atomic`.
+    pub checkpoint_every: u64,
+    /// `--checkpoint-path` — where auto-checkpoints land.
+    pub checkpoint_path: String,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            mode: FaultMode::Off,
+            seed: 0,
+            rate: DEFAULT_FAULT_RATE,
+            window: None,
+            retries: 2,
+            timeout_s: 0.0,
+            checkpoint_every: 0,
+            checkpoint_path: "mpbcfw_run.ckpt".into(),
+        }
+    }
+}
+
+/// Cumulative fault/recovery counters, snapshotted from a [`FaultPlan`]
+/// (`FaultPlan::stats`). Totals are deterministic under a fixed
+/// schedule; only the increment *order* varies across thread
+/// interleavings.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Faults injected (all kinds, all attempts).
+    pub injected: u64,
+    /// Injected or caught-real panics.
+    pub panics: u64,
+    /// Injected transient errors.
+    pub transients: u64,
+    /// Injected timeouts.
+    pub timeouts: u64,
+    /// Injected slowdowns.
+    pub slowdowns: u64,
+    /// Retry attempts made after a failed attempt.
+    pub retries: u64,
+    /// Calls that failed outright (retry budget exhausted).
+    pub failed_calls: u64,
+}
+
+/// A seeded, deterministic fault schedule plus its recovery counters.
+/// Decisions are pure in `(seed, block, pass, attempt)` — see the
+/// module docs for why that purity is the whole design. Shared across
+/// executor workers behind an `Arc`; the counters are atomics so
+/// observation never perturbs the schedule.
+#[derive(Debug)]
+pub struct FaultPlan {
+    mode: FaultMode,
+    seed: u64,
+    rate: f64,
+    window: Option<(u64, u64)>,
+    retries: u64,
+    timeout_s: f64,
+    injected: AtomicU64,
+    panics: AtomicU64,
+    transients: AtomicU64,
+    timeouts: AtomicU64,
+    slowdowns: AtomicU64,
+    retry_count: AtomicU64,
+    failed_calls: AtomicU64,
+    /// Accumulated virtual-seconds penalty (timeouts, slowdowns,
+    /// backoff), stored as f64 bits; the driver drains it into the
+    /// virtual clock once per pass via [`FaultPlan::take_penalty_secs`].
+    penalty_bits: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Build a plan from config. `FaultMode::Off` plans are inert: no
+    /// RNG, no counters, no penalties.
+    pub fn from_config(cfg: &FaultConfig) -> Self {
+        FaultPlan {
+            mode: cfg.mode,
+            seed: cfg.seed,
+            rate: cfg.rate,
+            window: cfg.window,
+            retries: cfg.retries,
+            timeout_s: cfg.timeout_s,
+            injected: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            transients: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            slowdowns: AtomicU64::new(0),
+            retry_count: AtomicU64::new(0),
+            failed_calls: AtomicU64::new(0),
+            penalty_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// The inert off-plan (the default-config plan).
+    pub fn off() -> Self {
+        Self::from_config(&FaultConfig::default())
+    }
+
+    /// Whether this plan injects at all (`--faults inject`).
+    pub fn is_inject(&self) -> bool {
+        self.mode == FaultMode::Inject
+    }
+
+    /// Retry budget after the first failed attempt.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Whether injection is active for `pass` (mode + window gate).
+    pub fn active(&self, pass: u64) -> bool {
+        self.mode == FaultMode::Inject
+            && self.window.map_or(true, |(lo, hi)| pass >= lo && pass <= hi)
+    }
+
+    /// The schedule: does attempt `attempt` of the oracle call on
+    /// `block` during `pass` fault, and how? Pure — no internal state,
+    /// no counter side effects — so executors, tests, and resumed runs
+    /// all read the identical schedule. Each decision seeds a throwaway
+    /// [`Pcg`] on a stream mixed from the three keys (splitmix-style
+    /// odd multipliers keep nearby keys on far-apart streams).
+    pub fn decide(&self, block: usize, pass: u64, attempt: u64) -> Option<FaultKind> {
+        if !self.active(pass) {
+            return None;
+        }
+        let stream = (block as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ pass.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ attempt.wrapping_mul(0x94D0_49BB_1331_11EB);
+        let mut rng = Pcg::new(self.seed, stream);
+        if rng.f64() >= self.rate {
+            return None;
+        }
+        Some(match rng.below(4) {
+            0 => FaultKind::Panic,
+            1 => FaultKind::Transient,
+            2 => FaultKind::Timeout,
+            _ => FaultKind::Slow,
+        })
+    }
+
+    fn note(&self, kind: FaultKind) {
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        let cell = match kind {
+            FaultKind::Panic => &self.panics,
+            FaultKind::Transient => &self.transients,
+            FaultKind::Timeout => &self.timeouts,
+            FaultKind::Slow => &self.slowdowns,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_retry(&self) {
+        self.retry_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_failure(&self) {
+        self.failed_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn charge_penalty(&self, secs: f64) {
+        if secs <= 0.0 {
+            return;
+        }
+        let mut cur = self.penalty_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + secs).to_bits();
+            match self.penalty_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Drain the accumulated virtual-seconds penalty (timeout charges,
+    /// slowdown charges, retry backoff) — the driver adds it to the
+    /// virtual clock once per pass. Deterministic: the schedule fixes
+    /// the total regardless of thread interleaving.
+    pub fn take_penalty_secs(&self) -> f64 {
+        f64::from_bits(self.penalty_bits.swap(0, Ordering::Relaxed))
+    }
+
+    /// Snapshot the cumulative counters.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected: self.injected.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            transients: self.transients.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            slowdowns: self.slowdowns.load(Ordering::Relaxed),
+            retries: self.retry_count.load(Ordering::Relaxed),
+            failed_calls: self.failed_calls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One fault-aware oracle call: walk the retry loop against the plan's
+/// schedule, isolate panics (injected ones genuinely unwind; real ones
+/// are caught the same way and reset the arena to a cold, consistent
+/// state), charge timeout/slowdown/backoff penalties, and return either
+/// the plane or the last [`FaultKind`] once the retry budget is
+/// exhausted. Callers on the `--faults off` path must not route through
+/// here — the off contract is *untouched code*, not a fast path.
+pub fn call_with_faults(
+    plan: &FaultPlan,
+    problem: &CountingOracle,
+    block: usize,
+    w: &[f64],
+    eng: &mut NativeEngine,
+    scratch: &mut OracleScratch,
+    pass: u64,
+) -> Result<Plane, FaultKind> {
+    let mut last = FaultKind::Transient;
+    for attempt in 0..=plan.retries {
+        if attempt > 0 {
+            plan.note_retry();
+            plan.charge_penalty(BACKOFF_BASE_S * (1u64 << attempt.min(10)) as f64);
+        }
+        let decision = plan.decide(block, pass, attempt);
+        match decision {
+            None | Some(FaultKind::Slow) => {
+                if decision == Some(FaultKind::Slow) {
+                    plan.note(FaultKind::Slow);
+                    plan.charge_penalty(plan.timeout_s * SLOW_PENALTY_FRAC);
+                }
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    problem.oracle_scratch(block, w, eng, scratch)
+                }));
+                match out {
+                    Ok(plane) => return Ok(plane),
+                    Err(_) => {
+                        // A *real* oracle panic: isolate it exactly like
+                        // an injected one. The arena may be mid-update;
+                        // replace it wholesale.
+                        *scratch = OracleScratch::cold();
+                        plan.note(FaultKind::Panic);
+                        last = FaultKind::Panic;
+                    }
+                }
+            }
+            Some(FaultKind::Panic) => {
+                // Genuinely unwind so the isolation path is exercised,
+                // not simulated.
+                let caught = catch_unwind(|| std::panic::panic_any(InjectedPanic));
+                debug_assert!(caught.is_err());
+                *scratch = OracleScratch::cold();
+                plan.note(FaultKind::Panic);
+                last = FaultKind::Panic;
+            }
+            Some(FaultKind::Transient) => {
+                plan.note(FaultKind::Transient);
+                last = FaultKind::Transient;
+            }
+            Some(FaultKind::Timeout) => {
+                plan.note(FaultKind::Timeout);
+                plan.charge_penalty(plan.timeout_s);
+                last = FaultKind::Timeout;
+            }
+        }
+    }
+    plan.note_failure();
+    Err(last)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::usps_like::{generate, UspsLikeConfig};
+    use crate::data::types::Scale;
+    use crate::oracle::multiclass::MulticlassProblem;
+
+    fn tiny_problem() -> CountingOracle {
+        CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+            UspsLikeConfig::at_scale(Scale::Tiny),
+            1,
+        ))))
+    }
+
+    fn inject_cfg(rate: f64) -> FaultConfig {
+        FaultConfig { mode: FaultMode::Inject, seed: 11, rate, ..FaultConfig::default() }
+    }
+
+    #[test]
+    fn off_plan_never_faults_and_draws_no_rng() {
+        let plan = FaultPlan::off();
+        for block in 0..200 {
+            for pass in 1..5 {
+                for attempt in 0..3 {
+                    assert_eq!(plan.decide(block, pass, attempt), None);
+                }
+            }
+        }
+        assert_eq!(plan.stats(), FaultStats::default());
+        assert_eq!(plan.take_penalty_secs(), 0.0);
+    }
+
+    #[test]
+    fn decisions_are_pure_and_seed_dependent() {
+        let a = FaultPlan::from_config(&inject_cfg(0.5));
+        let b = FaultPlan::from_config(&inject_cfg(0.5));
+        let c = FaultPlan::from_config(&FaultConfig { seed: 12, ..inject_cfg(0.5) });
+        let mut diverged = false;
+        for block in 0..100 {
+            for pass in 1..4 {
+                for attempt in 0..3 {
+                    // Pure: repeated queries and a twin plan agree.
+                    assert_eq!(
+                        a.decide(block, pass, attempt),
+                        a.decide(block, pass, attempt)
+                    );
+                    assert_eq!(
+                        a.decide(block, pass, attempt),
+                        b.decide(block, pass, attempt)
+                    );
+                    diverged |=
+                        a.decide(block, pass, attempt) != c.decide(block, pass, attempt);
+                }
+            }
+        }
+        assert!(diverged, "schedules must depend on the fault seed");
+        // decide() has no counter side effects.
+        assert_eq!(a.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn window_gates_injection_to_the_heal_scenario_passes() {
+        let cfg = FaultConfig { window: Some((2, 3)), ..inject_cfg(1.0) };
+        let plan = FaultPlan::from_config(&cfg);
+        for block in 0..20 {
+            assert_eq!(plan.decide(block, 1, 0), None, "before the window");
+            assert!(plan.decide(block, 2, 0).is_some(), "inside the window");
+            assert!(plan.decide(block, 3, 0).is_some(), "inside the window");
+            assert_eq!(plan.decide(block, 4, 0), None, "after the window");
+        }
+    }
+
+    #[test]
+    fn all_kinds_appear_at_full_rate() {
+        let plan = FaultPlan::from_config(&inject_cfg(1.0));
+        let mut seen = [false; 4];
+        for block in 0..200 {
+            match plan.decide(block, 1, 0).expect("rate 1.0 must fault") {
+                FaultKind::Panic => seen[0] = true,
+                FaultKind::Transient => seen[1] = true,
+                FaultKind::Timeout => seen[2] = true,
+                FaultKind::Slow => seen[3] = true,
+            }
+        }
+        assert_eq!(seen, [true; 4], "200 blocks must hit every fault kind");
+    }
+
+    #[test]
+    fn clean_call_returns_the_plane_untouched() {
+        let problem = tiny_problem();
+        let w = vec![0.0; problem.dim()];
+        let mut eng = NativeEngine;
+        let mut scratch = OracleScratch::cold();
+        let plan = FaultPlan::from_config(&inject_cfg(0.0));
+        let got = call_with_faults(&plan, &problem, 3, &w, &mut eng, &mut scratch, 1)
+            .expect("rate-0 call must succeed");
+        let want = problem.inner().oracle(3, &w, &mut eng);
+        assert_eq!(got.tag, want.tag);
+        assert_eq!(got.off, want.off);
+        assert_eq!(plan.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn full_rate_exhausts_retries_and_counts_the_failure() {
+        let problem = tiny_problem();
+        let w = vec![0.0; problem.dim()];
+        let mut eng = NativeEngine;
+        let mut scratch = OracleScratch::cold();
+        let plan = FaultPlan::from_config(&FaultConfig {
+            retries: 2,
+            timeout_s: 0.5,
+            ..inject_cfg(1.0)
+        });
+        // A Slow decision still runs (and returns) the real call, so
+        // pick a block whose three scheduled attempts are all hard
+        // faults — the schedule is pure, so this scan is deterministic.
+        let block = (0..500usize)
+            .find(|&b| {
+                (0..3u64).all(|a| {
+                    !matches!(plan.decide(b, 1, a), None | Some(FaultKind::Slow))
+                })
+            })
+            .expect("some block in 0..500 must schedule three hard faults");
+        let err = call_with_faults(&plan, &problem, block, &w, &mut eng, &mut scratch, 1);
+        assert!(err.is_err(), "three hard faults must exhaust the retry budget");
+        let st = plan.stats();
+        assert_eq!(st.injected, 3, "initial attempt + 2 retries, all faulted");
+        assert_eq!(st.retries, 2);
+        assert_eq!(st.failed_calls, 1);
+        // Backoff always charges; timeouts/slowdowns may add more.
+        assert!(plan.take_penalty_secs() > 0.0);
+        // No real oracle work happened: every attempt was a hard fault.
+        assert_eq!(problem.stats().calls, 0);
+    }
+
+    #[test]
+    fn injected_panics_are_caught_and_retries_can_recover() {
+        let problem = tiny_problem();
+        let w = vec![0.0; problem.dim()];
+        let mut eng = NativeEngine;
+        // A seed/rate where block 0 pass 1 attempt 0 faults but a later
+        // attempt within the budget succeeds: scan for one so the test
+        // is robust to RNG details while staying deterministic.
+        let mut recovered = false;
+        for seed in 0..50u64 {
+            let cfg = FaultConfig { seed, retries: 3, ..inject_cfg(0.9) };
+            let plan = FaultPlan::from_config(&cfg);
+            // Want a *hard* first-attempt fault (a Slow one would
+            // succeed immediately, without consuming a retry).
+            if matches!(plan.decide(0, 1, 0), None | Some(FaultKind::Slow)) {
+                continue;
+            }
+            let mut scratch = OracleScratch::cold();
+            if call_with_faults(&plan, &problem, 0, &w, &mut eng, &mut scratch, 1).is_ok() {
+                assert!(plan.stats().injected >= 1);
+                assert!(plan.stats().retries >= 1);
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered, "no seed in 0..50 recovered after a first-attempt fault");
+    }
+}

@@ -141,6 +141,9 @@ fn record(
         stale_rejects: 0,
         mean_snapshot_staleness: 0.0,
         worker_idle_s: 0.0,
+        oracle_retries: 0, // no fault layer
+        oracle_timeouts: 0,
+        degraded_passes: 0,
         train_loss,
     };
     series.points.push(pt.clone());

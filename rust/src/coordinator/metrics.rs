@@ -107,6 +107,15 @@ pub struct EvalPoint {
     /// Cumulative seconds the async pool workers spent waiting for
     /// work (0 under `--async off` and for the virtual test executor).
     pub worker_idle_s: f64,
+    /// Cumulative oracle-call retries made by the fault-recovery layer
+    /// so far (0 under `--faults off` and for optimizers without it).
+    pub oracle_retries: u64,
+    /// Cumulative oracle calls lost to (injected) timeouts so far.
+    pub oracle_timeouts: u64,
+    /// Exact passes skipped so far because the degradation threshold
+    /// tripped — the run coasted on cached planes while the oracle was
+    /// unhealthy (recovers automatically when calls succeed again).
+    pub degraded_passes: u64,
     /// Mean task loss of the predictor on the training set (optional
     /// diagnostic; NaN when not computed).
     pub train_loss: f64,
@@ -145,6 +154,9 @@ impl EvalPoint {
             ("stale_rejects", Json::Num(self.stale_rejects as f64)),
             ("mean_snapshot_staleness", Json::Num(self.mean_snapshot_staleness)),
             ("worker_idle_s", Json::Num(self.worker_idle_s)),
+            ("oracle_retries", Json::Num(self.oracle_retries as f64)),
+            ("oracle_timeouts", Json::Num(self.oracle_timeouts as f64)),
+            ("degraded_passes", Json::Num(self.degraded_passes as f64)),
             ("train_loss", Json::Num(self.train_loss)),
         ])
     }
@@ -182,6 +194,11 @@ pub struct Series {
     /// reduction contract); empty for optimizers that don't route
     /// through the kernel dispatch layer.
     pub kernel_backend: String,
+    /// Fault-injection mode of the run (`off` = bitwise anchor,
+    /// `inject` = deterministic seeded fault schedule at the oracle
+    /// executor boundary); empty for optimizers without the fault
+    /// layer.
+    pub faults: String,
     /// Evaluation snapshots, in order.
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
@@ -248,6 +265,7 @@ impl Series {
             ("oracle_reuse", Json::s(&self.oracle_reuse)),
             ("async_mode", Json::s(&self.async_mode)),
             ("kernel_backend", Json::s(&self.kernel_backend)),
+            ("faults", Json::s(&self.faults)),
             ("wall_secs", Json::Num(self.wall_secs)),
             (
                 "shard_secs",
@@ -354,6 +372,9 @@ mod tests {
             stale_rejects: 0,
             mean_snapshot_staleness: 0.0,
             worker_idle_s: 0.0,
+            oracle_retries: 0,
+            oracle_timeouts: 0,
+            degraded_passes: 0,
             train_loss: f64::NAN,
         };
         let s = Series {
@@ -396,6 +417,9 @@ mod tests {
             stale_rejects: 0,
             mean_snapshot_staleness: 0.0,
             worker_idle_s: 0.0,
+            oracle_retries: 0,
+            oracle_timeouts: 0,
+            degraded_passes: 0,
             train_loss: f64::NAN,
         };
         let empty = Series::default();
@@ -450,6 +474,9 @@ mod tests {
             stale_rejects: 2,
             mean_snapshot_staleness: 0.5,
             worker_idle_s: 1.25,
+            oracle_retries: 4,
+            oracle_timeouts: 1,
+            degraded_passes: 2,
             train_loss: 0.1,
         };
         let j = p.to_json();
@@ -470,5 +497,8 @@ mod tests {
         assert_eq!(j.get("stale_rejects").as_f64(), Some(2.0));
         assert_eq!(j.get("mean_snapshot_staleness").as_f64(), Some(0.5));
         assert_eq!(j.get("worker_idle_s").as_f64(), Some(1.25));
+        assert_eq!(j.get("oracle_retries").as_f64(), Some(4.0));
+        assert_eq!(j.get("oracle_timeouts").as_f64(), Some(1.0));
+        assert_eq!(j.get("degraded_passes").as_f64(), Some(2.0));
     }
 }

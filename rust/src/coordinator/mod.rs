@@ -16,5 +16,6 @@ pub mod metrics;
 pub mod trainer;
 pub mod baselines;
 pub mod checkpoint;
+pub mod faults;
 pub mod kernel;
 pub mod kernel_bcfw;

@@ -26,10 +26,13 @@
 //! free (`DualState::block_step_info`) and drive both the
 //! gap-proportional sampler and the `gap_est` metrics column.
 
+use std::sync::Arc;
+
 use super::async_overlap::{AsyncMode, AsyncStats};
 use super::auto::SlopeRule;
 use super::averaging::{best_interpolation, Averager};
 use super::dual::DualState;
+use super::faults::{FaultConfig, FaultMode, FaultPlan};
 use super::metrics::{EvalCtx, EvalPoint, Series};
 use super::parallel;
 use super::products::{
@@ -75,6 +78,11 @@ use crate::utils::timer::Clock;
 ///
 /// use mpbcfw::utils::math::KernelBackend;
 /// assert_eq!(mp.kernel, KernelBackend::Scalar); // bitwise golden anchor
+///
+/// use mpbcfw::coordinator::faults::FaultMode;
+/// assert_eq!(mp.faults.mode, FaultMode::Off); // no fault injection by default
+/// assert_eq!(mp.faults.retries, 2); // bounded oracle retry budget
+/// assert_eq!(mp.faults.checkpoint_every, 0); // auto-checkpointing off
 ///
 /// let plain = MpBcfwConfig::bcfw(0.01); // N = M = 0
 /// assert_eq!(plain.cap_n, 0);
@@ -206,6 +214,18 @@ pub struct MpBcfwConfig {
     /// Exact-pass line searches, `DualState` internals and the warm
     /// monotone guard stay scalar on both backends. See `utils::math`.
     pub kernel: KernelBackend,
+    /// Deterministic fault injection + recovery policy (CLI
+    /// `--faults {off,inject}`, `--fault-seed`, `--fault-rate`,
+    /// `--oracle-retries`, `--oracle-timeout`) and periodic
+    /// auto-checkpointing (`--checkpoint-every` / `--checkpoint-path`).
+    /// `mode: Off` (the default) takes the exact pre-existing code
+    /// paths — bitwise identical to a build without the fault layer.
+    /// Under `inject`, whether a call faults is a pure function of
+    /// `(fault_seed, block, pass, attempt)`, so twin runs with the same
+    /// fault seed are bitwise identical and kill-and-resume replays the
+    /// uninterrupted schedule. Requires `threads >= 1` (faults are
+    /// injected at the executor boundary). See `coordinator::faults`.
+    pub faults: FaultConfig,
 }
 
 impl Default for MpBcfwConfig {
@@ -237,6 +257,7 @@ impl Default for MpBcfwConfig {
             renorm_every: 64,
             with_train_loss: false,
             kernel: KernelBackend::Scalar,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -308,6 +329,23 @@ pub struct MpBcfwRun {
     pub outers_done: u64,
     /// Async-overlap counters (all zero when `async_mode` is `Off`).
     pub async_stats: AsyncStats,
+    /// Shared fault schedule + recovery counters (an inert off-plan
+    /// under `--faults off`; behind an `Arc` so the async worker pool
+    /// can read the identical schedule).
+    pub faults: Arc<FaultPlan>,
+    /// Blocks whose oracle call failed outright (retry budget
+    /// exhausted) last exact pass, queued to retry at the head of the
+    /// next pass's order — same residue class, so arena pinning holds.
+    /// Checkpointed: a resumed run must replay the same requeue head.
+    pub fault_requeue: Vec<usize>,
+    /// Exact passes skipped by the graceful-degradation policy
+    /// (`degraded_passes` eval column).
+    pub degraded_passes: u64,
+    /// Whether the next exact pass is degraded to cached-only work
+    /// (set when a pass's failure rate trips `DEGRADE_FAIL_FRAC`;
+    /// cleared — and the oracle probed again — one pass later).
+    /// Checkpointed alongside `fault_requeue`.
+    pub degrade_next: bool,
 }
 
 /// Train with MP-BCFW. Returns the convergence series and the final run
@@ -335,6 +373,12 @@ pub fn run(
          engine {}): the oracle worker pool scores on per-worker native kernels",
         cfg.threads,
         eng.name()
+    );
+    assert!(
+        cfg.faults.mode == FaultMode::Off || cfg.threads >= 1,
+        "fault injection requires threads >= 1 (got {}): faults are injected at the \
+         executor boundary, which the sequential freshest-w path never crosses",
+        cfg.threads
     );
     if cfg.async_mode == AsyncMode::On {
         return super::async_overlap::run_async(problem, eng, cfg);
@@ -409,6 +453,10 @@ pub(crate) fn new_run(problem: &CountingOracle, cfg: &MpBcfwConfig) -> MpBcfwRun
         rng: Pcg::new(cfg.seed, 7001),
         outers_done: 0,
         async_stats: AsyncStats::default(),
+        faults: Arc::new(FaultPlan::from_config(&cfg.faults)),
+        fault_requeue: Vec::new(),
+        degraded_passes: 0,
+        degrade_next: false,
     }
 }
 
@@ -425,6 +473,7 @@ pub(crate) fn new_series(problem: &CountingOracle, cfg: &MpBcfwConfig) -> Series
         oracle_reuse: if cfg.oracle_reuse { "on" } else { "off" }.to_string(),
         async_mode: cfg.async_mode.name().to_string(),
         kernel_backend: cfg.kernel.name().to_string(),
+        faults: cfg.faults.mode.name().to_string(),
         ..Default::default()
     }
 }
@@ -455,7 +504,17 @@ fn run_loop(
         // Uniform draws the identical permutation stream as the
         // pre-sampling code, so seeded trajectories are unchanged.
         run.gaps.begin_pass();
-        if cfg.threads > 0 {
+        // Graceful degradation: when the previous exact pass lost at
+        // least `DEGRADE_FAIL_FRAC` of its oracle calls, skip this
+        // iteration's exact pass entirely and live off the cached
+        // working sets — then probe the oracle again next iteration.
+        // The failed blocks stay queued in `fault_requeue` and go first
+        // once the exact pass resumes.
+        let degraded = run.degrade_next;
+        if degraded {
+            run.degrade_next = false;
+            run.degraded_passes += 1;
+        } else if cfg.threads > 0 {
             // Sharded parallel dispatch: all oracles score against the
             // same snapshot of w, then the line-searched steps are applied
             // sequentially in permutation order (minibatch-BCFW
@@ -464,6 +523,16 @@ fn run_loop(
             // the gap state is thread-count-invariant too.
             run.state.refresh_w();
             let mut order = sampler.pass_order(&mut run.rng, &run.gaps);
+            // Blocks whose oracle calls failed in an earlier pass go
+            // first: BCFW converges under arbitrary visit orders, so
+            // retrying them ahead of the sampled order is a pure
+            // scheduling choice (and under `--faults off` the requeue
+            // is always empty, leaving the order untouched).
+            if run.faults.is_inject() && !run.fault_requeue.is_empty() {
+                let mut head = std::mem::take(&mut run.fault_requeue);
+                head.extend(order);
+                order = head;
+            }
             // Respect the oracle budget exactly, like the sequential
             // path's mid-pass break: dispatch only the calls that fit.
             if cfg.max_oracle_calls > 0 {
@@ -484,28 +553,80 @@ fn run_loop(
                     uniq.push(i);
                 }
             }
-            let (planes, report) = parallel::exact_pass_with(
-                problem,
-                &run.state.w,
-                &uniq,
-                cfg.threads,
-                &mut run.oracle_scratches,
-            );
-            // `--dense-planes`: storage-only change, applied once per
-            // distinct plane at the oracle boundary (bitwise-neutral
-            // downstream by the PlaneVec representation contract).
-            let planes: Vec<crate::model::plane::Plane> = if cfg.dense_planes {
-                planes.into_iter().map(crate::model::plane::Plane::into_dense).collect()
+            if run.faults.is_inject() {
+                // Fault-aware dispatch: each slot is `None` when the
+                // block's oracle call failed after all retries. Failed
+                // blocks are skipped this pass (BCFW tolerates that)
+                // and requeued for the next one.
+                let (planes, report) = parallel::exact_pass_faulty(
+                    problem,
+                    &run.state.w,
+                    &uniq,
+                    cfg.threads,
+                    &mut run.oracle_scratches,
+                    &run.faults,
+                    outer,
+                );
+                let planes: Vec<Option<crate::model::plane::Plane>> = if cfg.dense_planes {
+                    planes
+                        .into_iter()
+                        .map(|p| p.map(crate::model::plane::Plane::into_dense))
+                        .collect()
+                } else {
+                    planes
+                };
+                // Virtual latency: the critical path is the largest shard.
+                if problem.delay > 0.0 {
+                    clock.charge(problem.delay * report.max_shard_len as f64);
+                }
+                // Retry backoff, injected timeouts and slowdowns accrue
+                // virtual seconds inside the plan; drain them onto the
+                // pausable clock once per pass.
+                clock.charge(run.faults.take_penalty_secs());
+                series.note_parallel_pass(&report.shard_secs, report.wall_secs);
+                let failed = planes.iter().filter(|p| p.is_none()).count();
+                for &i in order.iter() {
+                    match &planes[plane_slot[i]] {
+                        Some(plane) => {
+                            apply_exact_step(run, i, plane, outer, pairwise, cfg)
+                        }
+                        None => {
+                            if !run.fault_requeue.contains(&i) {
+                                run.fault_requeue.push(i);
+                            }
+                        }
+                    }
+                }
+                // Degradation trip (DEGRADE_FAIL_FRAC = 1/2): losing
+                // half the pass or more means the oracle is unhealthy —
+                // coast on cached planes next iteration, then re-probe.
+                if failed > 0 && 2 * failed >= uniq.len().max(1) {
+                    run.degrade_next = true;
+                }
             } else {
-                planes
-            };
-            // Virtual latency: the critical path is the largest shard.
-            if problem.delay > 0.0 {
-                clock.charge(problem.delay * report.max_shard_len as f64);
-            }
-            series.note_parallel_pass(&report.shard_secs, report.wall_secs);
-            for &i in order.iter() {
-                apply_exact_step(run, i, &planes[plane_slot[i]], outer, pairwise, cfg);
+                let (planes, report) = parallel::exact_pass_with(
+                    problem,
+                    &run.state.w,
+                    &uniq,
+                    cfg.threads,
+                    &mut run.oracle_scratches,
+                );
+                // `--dense-planes`: storage-only change, applied once per
+                // distinct plane at the oracle boundary (bitwise-neutral
+                // downstream by the PlaneVec representation contract).
+                let planes: Vec<crate::model::plane::Plane> = if cfg.dense_planes {
+                    planes.into_iter().map(crate::model::plane::Plane::into_dense).collect()
+                } else {
+                    planes
+                };
+                // Virtual latency: the critical path is the largest shard.
+                if problem.delay > 0.0 {
+                    clock.charge(problem.delay * report.max_shard_len as f64);
+                }
+                series.note_parallel_pass(&report.shard_secs, report.wall_secs);
+                for &i in order.iter() {
+                    apply_exact_step(run, i, &planes[plane_slot[i]], outer, pairwise, cfg);
+                }
             }
             if cfg.max_oracle_calls > 0 && problem.stats().calls >= cfg.max_oracle_calls {
                 record_point(
@@ -568,6 +689,22 @@ fn run_loop(
         // above skip this on purpose: a truncated exact pass is replayed
         // from the top on resume rather than continued mid-pass.
         run.outers_done = outer;
+
+        // ---- Auto-checkpoint ------------------------------------------
+        // Crash insurance for long runs with a costly oracle: snapshot
+        // the full run state every N completed iterations. The write is
+        // atomic (tmp + rename), so a kill mid-write leaves the previous
+        // checkpoint intact, and `load_run` + `resume` reproduce the
+        // uninterrupted trajectory bit for bit.
+        if cfg.faults.checkpoint_every > 0 && outer % cfg.faults.checkpoint_every == 0 {
+            if let Err(e) = super::checkpoint::save_run_atomic(
+                std::path::Path::new(&cfg.faults.checkpoint_path),
+                run,
+                problem,
+            ) {
+                eprintln!("mp-bcfw: auto-checkpoint at iteration {outer} failed: {e}");
+            }
+        }
 
         // ---- Evaluation / stopping ------------------------------------
         if outer % cfg.eval_every == 0 || outer == cfg.max_iters {
@@ -949,6 +1086,9 @@ pub(crate) fn record_point(
         stale_rejects: run.async_stats.stale_rejects,
         mean_snapshot_staleness: run.async_stats.mean_staleness(),
         worker_idle_s: run.async_stats.worker_idle_s,
+        oracle_retries: run.faults.stats().retries,
+        oracle_timeouts: run.faults.stats().timeouts,
+        degraded_passes: run.degraded_passes,
         train_loss,
     };
     series.points.push(pt.clone());
@@ -1268,5 +1408,123 @@ mod tests {
         let d1 = s1.points.last().unwrap().dual;
         let d2 = s2.points.last().unwrap().dual;
         assert!(d2 >= d1 * 0.8 || d2 >= d1 - 1e-6, "cached dual {d2} vs plain {d1}");
+    }
+
+    #[test]
+    fn inject_mode_keeps_dual_monotone_and_twins_match_bitwise() {
+        use super::super::faults::{FaultConfig, FaultMode};
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig {
+            max_iters: 8,
+            threads: 2,
+            auto_approx: false,
+            max_approx_passes: 2,
+            faults: FaultConfig {
+                mode: FaultMode::Inject,
+                seed: 42,
+                rate: 0.3,
+                retries: 1,
+                timeout_s: 0.5,
+                ..FaultConfig::default()
+            },
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        let p1 = tiny_problem(1);
+        let (s1, r1) = run(&p1, &mut eng, &cfg);
+        // Faults were actually scheduled at this rate...
+        assert!(r1.faults.stats().injected > 0, "no faults fired at rate 0.3");
+        // ...and the recovery machinery kept the invariants: monotone
+        // dual (skipped blocks just don't step) and weak duality.
+        for w in s1.points.windows(2) {
+            assert!(w[1].dual >= w[0].dual - 1e-10, "dual decreased under faults: {w:?}");
+        }
+        let last = s1.points.last().unwrap();
+        assert!(last.primal - last.dual >= -1e-9, "weak duality violated under faults");
+        assert_eq!(last.oracle_retries, r1.faults.stats().retries);
+        assert_eq!(last.oracle_timeouts, r1.faults.stats().timeouts);
+        // Twin run, same fault seed: bitwise-identical trajectory.
+        let p2 = tiny_problem(1);
+        let (s2, r2) = run(&p2, &mut eng, &cfg);
+        assert_eq!(s1.points.len(), s2.points.len());
+        for (a, b) in s1.points.iter().zip(&s2.points) {
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits(), "twin duals diverged");
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+            assert_eq!(a.oracle_calls, b.oracle_calls);
+            assert_eq!(a.oracle_retries, b.oracle_retries);
+            assert_eq!(a.degraded_passes, b.degraded_passes);
+        }
+        assert_eq!(r1.faults.stats(), r2.faults.stats());
+        assert_eq!(s1.faults, "inject");
+    }
+
+    #[test]
+    fn heavy_fault_rate_trips_degradation_and_recovers_after_heal() {
+        use super::super::faults::{FaultConfig, FaultMode};
+        let mut eng = NativeEngine;
+        // Faults only during passes 1..=3 (the "sick" window), at a rate
+        // and retry budget that guarantee lost blocks; afterwards the
+        // oracle heals and the exact passes resume.
+        let cfg = MpBcfwConfig {
+            max_iters: 8,
+            threads: 2,
+            auto_approx: false,
+            max_approx_passes: 2,
+            faults: FaultConfig {
+                mode: FaultMode::Inject,
+                seed: 7,
+                rate: 0.95,
+                window: Some((1, 3)),
+                retries: 0,
+                ..FaultConfig::default()
+            },
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        let problem = tiny_problem(1);
+        let (series, run) = run(&problem, &mut eng, &cfg);
+        let last = series.points.last().unwrap();
+        assert!(last.degraded_passes > 0, "rate 0.95 with no retries must trip degradation");
+        for w in series.points.windows(2) {
+            assert!(w[1].dual >= w[0].dual - 1e-10, "dual decreased: {w:?}");
+        }
+        // After the window closes the requeue drains: the healed passes
+        // visit every block again, so the final state converged past the
+        // point where degradation froze it.
+        assert!(run.fault_requeue.is_empty(), "requeue not drained after heal");
+        let mid = &series.points[3.min(series.points.len() - 1)];
+        assert!(last.dual >= mid.dual, "no progress after the oracle healed");
+    }
+
+    #[test]
+    fn faults_off_draws_no_rng_and_matches_the_default_trajectory() {
+        use super::super::faults::FaultConfig;
+        let mut eng = NativeEngine;
+        let base = MpBcfwConfig {
+            max_iters: 5,
+            threads: 2,
+            auto_approx: false,
+            max_approx_passes: 2,
+            ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+        };
+        let p1 = tiny_problem(1);
+        let (s1, r1) = run(&p1, &mut eng, &base);
+        // An explicit off-mode FaultConfig with a nonzero seed is inert:
+        // the off path never calls decide(), so the trajectory is the
+        // default one bit for bit.
+        let p2 = tiny_problem(1);
+        let cfg2 = MpBcfwConfig {
+            faults: FaultConfig { seed: 123, ..FaultConfig::default() },
+            ..base
+        };
+        let (s2, r2) = run(&p2, &mut eng, &cfg2);
+        for (a, b) in s1.points.iter().zip(&s2.points) {
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits());
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+            assert_eq!(a.oracle_calls, b.oracle_calls);
+            assert_eq!(a.oracle_retries, 0);
+            assert_eq!(a.degraded_passes, 0);
+        }
+        assert_eq!(r1.faults.stats(), r2.faults.stats());
+        assert_eq!(r2.faults.stats().injected, 0);
+        assert_eq!(s2.faults, "off");
     }
 }

@@ -174,6 +174,97 @@ pub fn exact_pass_with(
     (planes, report)
 }
 
+/// Fault-tolerant variant of [`exact_pass_with`], taken **only** when
+/// `--faults inject` is active (the off path keeps the exact pre-PR
+/// code above — that is the bitwise-off contract). Identical sharding
+/// and residue-class arena pinning; each oracle call routes through
+/// [`faults::call_with_faults`] (per-call `catch_unwind`, bounded
+/// deterministic retry), so a failed call yields `None` in the
+/// order-aligned result instead of a plane and the worker — and its
+/// arena — survive. If a worker thread nevertheless dies (a panic
+/// escaping the per-call isolation), the join error is absorbed: every
+/// block of that shard reports `None` (the driver requeues them, and
+/// because the block→arena map is `id % m` with a per-run constant
+/// `m`, the retry lands back on the same residue class — reassignment
+/// preserves the pinning invariant) and the dead worker's arena is
+/// replaced with a cold one.
+pub fn exact_pass_faulty(
+    problem: &CountingOracle,
+    w: &[f64],
+    order: &[usize],
+    threads: usize,
+    arenas: &mut [OracleScratch],
+    plan: &crate::coordinator::faults::FaultPlan,
+    pass: u64,
+) -> (Vec<Option<Plane>>, PassReport) {
+    use crate::coordinator::faults::call_with_faults;
+    assert!(!arenas.is_empty(), "exact_pass_faulty needs at least one worker arena");
+    let m = threads.max(1).min(arenas.len());
+    let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut slots: Vec<usize> = Vec::with_capacity(order.len());
+    for &i in order {
+        let k = i % m;
+        slots.push(k);
+        chunks[k].push(i);
+    }
+    let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+
+    let sw_pass = Stopwatch::start();
+    let mut shard_secs = vec![0.0f64; m];
+    let mut shards: Vec<Vec<Option<Plane>>> = (0..m).map(|_| Vec::new()).collect();
+    let mut dead_shards: Vec<usize> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .enumerate()
+            .zip(arenas.iter_mut())
+            .filter(|((_, chunk), _)| !chunk.is_empty())
+            .map(|((k, chunk), arena)| {
+                let handle = s.spawn(move || {
+                    let sw = Stopwatch::start();
+                    let mut eng = NativeEngine;
+                    let planes: Vec<Option<Plane>> = chunk
+                        .iter()
+                        .map(|&i| {
+                            call_with_faults(plan, problem, i, w, &mut eng, arena, pass).ok()
+                        })
+                        .collect();
+                    (planes, sw.secs())
+                });
+                (k, handle)
+            })
+            .collect();
+        for (k, h) in handles {
+            match h.join() {
+                Ok((planes, secs)) => {
+                    shard_secs[k] = secs;
+                    shards[k] = planes;
+                }
+                Err(_) => {
+                    // Worker death: fail the whole shard; the driver
+                    // requeues its blocks into the same residue class.
+                    shards[k] = vec![None; chunks[k].len()];
+                    dead_shards.push(k);
+                }
+            }
+        }
+    });
+    for &k in &dead_shards {
+        // The dead worker's arena may be mid-update; start it cold.
+        arenas[k] = OracleScratch::cold();
+    }
+    let mut iters: Vec<std::vec::IntoIter<Option<Plane>>> =
+        shards.into_iter().map(|v| v.into_iter()).collect();
+    let planes: Vec<Option<Plane>> =
+        slots.iter().map(|&k| iters[k].next().expect("shard underflow")).collect();
+    let report = PassReport {
+        shard_secs,
+        wall_secs: sw_pass.secs(),
+        max_shard_len: sizes.iter().copied().max().unwrap_or(0),
+    };
+    (planes, report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +341,56 @@ mod tests {
     // zero builds on warm and reshuffled passes, warm ≡ cold planes) is
     // covered at the integration level in `tests/oracle_reuse.rs`
     // (`worker_arenas_stay_isolated_under_sharded_dispatch`).
+
+    #[test]
+    fn faulty_pass_with_off_plan_matches_the_plain_pass() {
+        use crate::coordinator::faults::FaultPlan;
+        let problem = tiny_problem(5);
+        let mut rng = Pcg::seeded(13);
+        let w: Vec<f64> = (0..problem.dim()).map(|_| 0.1 * rng.normal()).collect();
+        let order: Vec<usize> = (0..problem.n()).collect();
+        let (want, _) = exact_pass(&problem, &w, &order, 3);
+        let mut arenas: Vec<OracleScratch> = (0..3).map(|_| OracleScratch::cold()).collect();
+        let plan = FaultPlan::off();
+        let (got, report) = exact_pass_faulty(&problem, &w, &order, 3, &mut arenas, &plan, 1);
+        assert_eq!(got.len(), want.len());
+        for (g, p) in got.iter().zip(&want) {
+            let g = g.as_ref().expect("off plan must not fail any call");
+            assert_eq!(g.tag, p.tag);
+            assert_eq!(g.off, p.off);
+        }
+        assert_eq!(report.shard_secs.len(), 3);
+        assert_eq!(plan.stats(), crate::coordinator::faults::FaultStats::default());
+    }
+
+    #[test]
+    fn faulty_pass_fails_exactly_the_scheduled_blocks() {
+        use crate::coordinator::faults::{FaultConfig, FaultKind, FaultMode, FaultPlan};
+        let problem = tiny_problem(6);
+        let w = vec![0.0; problem.dim()];
+        let order: Vec<usize> = (0..problem.n()).collect();
+        let plan = FaultPlan::from_config(&FaultConfig {
+            mode: FaultMode::Inject,
+            seed: 3,
+            rate: 0.6,
+            retries: 1,
+            ..FaultConfig::default()
+        });
+        // Predict per-block outcomes from the pure schedule: a block
+        // fails iff both scheduled attempts are hard faults.
+        let hard = |b: usize, a: u64| {
+            !matches!(plan.decide(b, 2, a), None | Some(FaultKind::Slow))
+        };
+        let expect_fail: Vec<bool> = order.iter().map(|&b| hard(b, 0) && hard(b, 1)).collect();
+        let mut arenas: Vec<OracleScratch> = (0..4).map(|_| OracleScratch::cold()).collect();
+        let (got, _) = exact_pass_faulty(&problem, &w, &order, 4, &mut arenas, &plan, 2);
+        for ((&b, plane), &fail) in order.iter().zip(&got).zip(&expect_fail) {
+            assert_eq!(plane.is_none(), fail, "block {b}: outcome diverged from schedule");
+        }
+        assert!(expect_fail.iter().any(|&f| f), "schedule should fail at least one block");
+        assert!(expect_fail.iter().any(|&f| !f), "schedule should pass at least one block");
+        assert_eq!(plan.stats().failed_calls, expect_fail.iter().filter(|&&f| f).count() as u64);
+    }
 
     #[test]
     fn matches_direct_sequential_calls() {

@@ -5,6 +5,7 @@
 use super::async_overlap::AsyncMode;
 use super::baselines::{cutting_plane, ssg};
 use super::checkpoint::ModelCheckpoint;
+use super::faults::{FaultConfig, FaultMode, DEFAULT_FAULT_RATE};
 use super::fw;
 use super::metrics::Series;
 use super::mp_bcfw::{self, MpBcfwConfig};
@@ -234,6 +235,37 @@ pub struct TrainSpec {
     /// so simd runs are twin-deterministic with a bounded dual drift vs
     /// scalar (A/B'd by `bench --table kernels`).
     pub kernel: KernelBackend,
+    /// Deterministic fault injection at the oracle-executor boundary
+    /// (CLI `--faults {off,inject}`, default off; bcfw/mp-bcfw family
+    /// only, `threads ≥ 1`). `off` is the bitwise anchor — the fault
+    /// layer draws no RNG and every trajectory matches the pre-fault
+    /// binaries bit for bit. `inject` replays a seeded schedule of
+    /// panics / transient errors / timeouts / slowdowns that is pure in
+    /// `(fault_seed, block, pass, attempt)`, so threaded and virtual
+    /// executors — and same-seed twin runs — see identical faults.
+    pub faults: FaultMode,
+    /// Seed of the injected fault schedule (`--fault-seed`; inject only).
+    pub fault_seed: u64,
+    /// Per-decision fault probability (`--fault-rate`; inject only).
+    pub fault_rate: f64,
+    /// Restrict injection to passes `[start, end)` (heal-after-window
+    /// studies; inject only). Not CLI-exposed — bench/test knob.
+    pub fault_window: Option<(u64, u64)>,
+    /// Retry budget per failed oracle call (`--oracle-retries`; inject
+    /// only — under `off` no call ever fails, so there is nothing to
+    /// retry).
+    pub oracle_retries: u64,
+    /// Simulated per-call timeout in virtual seconds
+    /// (`--oracle-timeout`; inject only, 0 = driver default).
+    pub oracle_timeout: f64,
+    /// Auto-checkpoint the run every N outer iterations via atomic
+    /// tmp+rename writes (`--checkpoint-every`, 0 = off; bcfw/mp-bcfw
+    /// family, sync non-averaging drivers only — that is the
+    /// `save_run`/`load_run` resume surface).
+    pub checkpoint_every: u64,
+    /// Where `--checkpoint-every` writes the run checkpoint
+    /// (`--checkpoint-path`).
+    pub checkpoint_path: String,
     /// Scoring engine to run on.
     pub engine: EngineKind,
     /// Also record the mean train task loss at each evaluation (costly).
@@ -272,6 +304,14 @@ impl Default for TrainSpec {
             async_mode: AsyncMode::Off,
             max_stale_epochs: 1,
             kernel: KernelBackend::Scalar,
+            faults: FaultMode::Off,
+            fault_seed: 0,
+            fault_rate: DEFAULT_FAULT_RATE,
+            fault_window: None,
+            oracle_retries: 2,
+            oracle_timeout: 0.0,
+            checkpoint_every: 0,
+            checkpoint_path: "mpbcfw_run.ckpt".into(),
             engine: EngineKind::Native,
             with_train_loss: false,
             eval_every: 1,
@@ -402,6 +442,49 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
         "--kernel simd dispatches the bcfw/mp-bcfw inner kernels; {} never routes through them",
         spec.algo.name()
     );
+    anyhow::ensure!(
+        spec.faults == FaultMode::Off
+            || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--faults inject targets the bcfw/mp-bcfw oracle executors; {} has none",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.faults == FaultMode::Off || spec.threads >= 1,
+        "--faults inject happens at the executor boundary; the sequential freshest-w path \
+         never crosses it — pass --threads >= 1"
+    );
+    anyhow::ensure!(
+        spec.fault_seed == 0 || spec.faults == FaultMode::Inject,
+        "--fault-seed seeds the injected schedule; pass --faults inject"
+    );
+    anyhow::ensure!(
+        spec.fault_rate == DEFAULT_FAULT_RATE || spec.faults == FaultMode::Inject,
+        "--fault-rate tunes the injected schedule; pass --faults inject"
+    );
+    anyhow::ensure!(
+        spec.fault_window.is_none() || spec.faults == FaultMode::Inject,
+        "a fault window restricts the injected schedule; pass --faults inject"
+    );
+    anyhow::ensure!(
+        spec.oracle_retries == 2 || spec.faults == FaultMode::Inject,
+        "--oracle-retries budgets retries of failed oracle calls; under --faults off no \
+         call ever fails — pass --faults inject"
+    );
+    anyhow::ensure!(
+        spec.oracle_timeout == 0.0 || spec.faults == FaultMode::Inject,
+        "--oracle-timeout bounds injected hangs; pass --faults inject"
+    );
+    anyhow::ensure!(
+        spec.checkpoint_every == 0
+            || (matches!(spec.algo, Algo::Bcfw | Algo::MpBcfw)
+                && spec.async_mode == AsyncMode::Off),
+        "--checkpoint-every reuses the save_run/load_run resume surface, which covers the \
+         synchronous non-averaging bcfw/mp-bcfw drivers only"
+    );
+    anyhow::ensure!(
+        spec.checkpoint_path == "mpbcfw_run.ckpt" || spec.checkpoint_every > 0,
+        "--checkpoint-path names the auto-checkpoint file; pass --checkpoint-every N"
+    );
     let problem = build_problem(spec);
     let mut eng = spec.engine.build()?;
     let (series, phi) = train_on_full(spec, &problem, eng.as_mut());
@@ -501,6 +584,16 @@ pub fn train_on_full(
                 async_mode: if multi { spec.async_mode } else { AsyncMode::Off },
                 max_stale_epochs: spec.max_stale_epochs,
                 kernel: spec.kernel,
+                faults: FaultConfig {
+                    mode: spec.faults,
+                    seed: spec.fault_seed,
+                    rate: spec.fault_rate,
+                    window: spec.fault_window,
+                    retries: spec.oracle_retries,
+                    timeout_s: spec.oracle_timeout,
+                    checkpoint_every: spec.checkpoint_every,
+                    checkpoint_path: spec.checkpoint_path.clone(),
+                },
                 max_iters: spec.max_iters,
                 max_oracle_calls: spec.max_oracle_calls,
                 max_time: spec.max_time,
@@ -809,6 +902,90 @@ mod tests {
             ..spec
         };
         assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn faults_train_and_reject_invalid_combinations() {
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 4,
+            threads: 2,
+            auto_approx: false,
+            faults: FaultMode::Inject,
+            fault_seed: 11,
+            fault_rate: 0.4,
+            oracle_retries: 1,
+            oracle_timeout: 0.5,
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        let last = series.points.last().unwrap();
+        assert!(last.primal >= last.dual - 1e-9);
+        assert_eq!(series.faults, "inject");
+        for w in series.points.windows(2) {
+            assert!(w[1].dual >= w[0].dual - 1e-12, "dual decreased under injection");
+        }
+        // Injection happens at the executor boundary; the sequential
+        // freshest-w path never crosses it.
+        let bad = TrainSpec { threads: 0, ..spec.clone() };
+        assert!(train(&bad).is_err());
+        // Baselines have no oracle executors to inject into.
+        let bad = TrainSpec { algo: Algo::Ssg, threads: 0, ..spec.clone() };
+        assert!(train(&bad).is_err());
+        // Every fault knob is meaningless without injection — reject
+        // instead of silently ignoring it.
+        let off = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            threads: 2,
+            ..Default::default()
+        };
+        assert!(train(&TrainSpec { fault_seed: 3, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { fault_rate: 0.9, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { fault_window: Some((1, 2)), ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { oracle_retries: 0, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { oracle_timeout: 1.0, ..off.clone() }).is_err());
+        // Auto-checkpointing rides the sync save_run/load_run surface.
+        let bad = TrainSpec {
+            checkpoint_every: 2,
+            async_mode: AsyncMode::On,
+            ..off.clone()
+        };
+        assert!(train(&bad).is_err());
+        let bad = TrainSpec { checkpoint_every: 2, algo: Algo::MpBcfwAvg, ..off.clone() };
+        assert!(train(&bad).is_err());
+        let bad = TrainSpec { checkpoint_path: "other.ckpt".into(), ..off };
+        assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn auto_checkpoint_writes_a_resumable_run_file() {
+        let dir = std::env::temp_dir().join("mpbcfw_trainer_auto_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("auto.ckpt");
+        let _ = std::fs::remove_file(&path);
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 4,
+            auto_approx: false,
+            checkpoint_every: 2,
+            checkpoint_path: path.to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        let series = train(&spec).unwrap();
+        assert!(series.points.last().unwrap().primal.is_finite());
+        assert!(path.is_file(), "auto-checkpoint file written");
+        let problem = build_problem(&spec);
+        let cfg = MpBcfwConfig {
+            auto_approx: false,
+            max_iters: 4,
+            ..MpBcfwConfig::mp_paper(1.0 / problem.n() as f64)
+        };
+        let resumed = super::super::checkpoint::load_run(&path, &problem, &cfg).unwrap();
+        assert_eq!(resumed.outers_done, 4);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

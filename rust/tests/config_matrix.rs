@@ -1,23 +1,27 @@
 //! Pairwise-covering configuration matrix: a tiny-scale sweep over
 //! threads × sampling × steps × products × gram × oracle-reuse ×
-//! async × kernel. Full factorial is 2·3·2·2·2·2·2·2 = 384 runs; the 8
-//! rows below cover every *pair* of factor levels (verified by
-//! `rows_are_pairwise_covering`), which is where config-interaction
+//! async × kernel × faults. Full factorial is 2·3·2·2·2·2·2·2·2 = 768
+//! runs; the 8 rows below cover every *pair* of factor levels (verified
+//! by `rows_are_pairwise_covering`), which is where config-interaction
 //! bugs live. Every row must train without panic with a monotone dual
-//! and weak duality, and every async-off threads=4 **scalar** row must
-//! bitwise-match its threads=1 twin (snapshot scoring + deterministic
-//! merge order make the trajectory invariant across worker counts ≥ 1;
-//! threads=0 is the freshest-w sequential path with a legitimately
-//! different trajectory, so the twin is 1). Async-on rows overlap the
-//! oracle with the real worker pool: fold timing is OS-scheduled, so
-//! they are checked against the documented bounded-drift contract
-//! (monotone dual + weak duality) rather than a bitwise twin. Simd
-//! rows likewise make no bitwise claim — their reductions reassociate
-//! under the pinned fold order (see `tests/kernel_backends.rs` for the
-//! lane contracts) — so they, too, are held to monotone dual + weak
-//! duality only.
+//! and weak duality, and every async-off threads=4 **scalar faults-off**
+//! row must bitwise-match its threads=1 twin (snapshot scoring +
+//! deterministic merge order make the trajectory invariant across
+//! worker counts ≥ 1; threads=0 is the freshest-w sequential path with
+//! a legitimately different trajectory, so the twin is 1). Async-on
+//! rows overlap the oracle with the real worker pool: fold timing is
+//! OS-scheduled, so they are checked against the documented
+//! bounded-drift contract (monotone dual + weak duality) rather than a
+//! bitwise twin. Simd rows likewise make no bitwise claim — their
+//! reductions reassociate under the pinned fold order (see
+//! `tests/kernel_backends.rs` for the lane contracts). Faults-inject
+//! rows skip and requeue failed blocks, so they too are held to
+//! monotone dual + weak duality here; their own bitwise contracts
+//! (same-seed twins, thread-count invariance under injection) live in
+//! `tests/fault_tolerance.rs`.
 
 use mpbcfw::coordinator::async_overlap::AsyncMode;
+use mpbcfw::coordinator::faults::FaultMode;
 use mpbcfw::coordinator::products::{GramBackend, ProductMode};
 use mpbcfw::coordinator::sampling::{SamplingStrategy, StepRule};
 use mpbcfw::coordinator::trainer::{train, Algo, DatasetKind, TrainSpec};
@@ -33,34 +37,45 @@ struct Row {
     oracle_reuse: bool,
     async_mode: AsyncMode,
     kernel: KernelBackend,
+    faults: FaultMode,
 }
 
 fn rows() -> Vec<Row> {
     use AsyncMode::{Off, On};
+    use FaultMode::Inject;
     use GramBackend::{Hashmap, Triangular};
     use KernelBackend::{Scalar, Simd};
     use ProductMode::{Incremental, Recompute};
     use SamplingStrategy::{Cyclic, GapProportional, Uniform};
     use StepRule::{Fw, Pairwise};
-    let mk = |threads, sampling, steps, products, gram, oracle_reuse, async_mode, kernel| Row {
-        threads,
-        sampling,
-        steps,
-        products,
-        gram,
-        oracle_reuse,
-        async_mode,
-        kernel,
-    };
+    let mk =
+        |threads, sampling, steps, products, gram, oracle_reuse, async_mode, kernel, faults| {
+            Row {
+                threads,
+                sampling,
+                steps,
+                products,
+                gram,
+                oracle_reuse,
+                async_mode,
+                kernel,
+                faults,
+            }
+        };
+    // Faults assignment: inject on rows 1–4, off on rows 0 and 5–7.
+    // Each half spans both thread levels, all three sampling levels and
+    // both levels of every binary factor, so the new pair coverage
+    // holds (re-verified by `rows_are_pairwise_covering`). Every
+    // inject row has threads ≥ 1, as the executor boundary requires.
     vec![
-        mk(1, Uniform, Fw, Recompute, Hashmap, true, Off, Scalar),
-        mk(4, Uniform, Pairwise, Incremental, Triangular, false, Off, Simd),
-        mk(1, GapProportional, Pairwise, Recompute, Triangular, true, On, Simd),
-        mk(4, GapProportional, Fw, Incremental, Hashmap, false, On, Scalar),
-        mk(1, Cyclic, Fw, Incremental, Triangular, true, Off, Scalar),
-        mk(4, Cyclic, Pairwise, Recompute, Hashmap, false, On, Simd),
-        mk(1, Uniform, Fw, Incremental, Hashmap, false, On, Simd),
-        mk(4, GapProportional, Pairwise, Recompute, Triangular, true, Off, Scalar),
+        mk(1, Uniform, Fw, Recompute, Hashmap, true, Off, Scalar, FaultMode::Off),
+        mk(4, Uniform, Pairwise, Incremental, Triangular, false, Off, Simd, Inject),
+        mk(1, GapProportional, Pairwise, Recompute, Triangular, true, On, Simd, Inject),
+        mk(4, GapProportional, Fw, Incremental, Hashmap, false, On, Scalar, Inject),
+        mk(1, Cyclic, Fw, Incremental, Triangular, true, Off, Scalar, Inject),
+        mk(4, Cyclic, Pairwise, Recompute, Hashmap, false, On, Simd, FaultMode::Off),
+        mk(1, Uniform, Fw, Incremental, Hashmap, false, On, Simd, FaultMode::Off),
+        mk(4, GapProportional, Pairwise, Recompute, Triangular, true, Off, Scalar, FaultMode::Off),
     ]
 }
 
@@ -83,12 +98,23 @@ fn spec_for(row: &Row, threads: usize) -> TrainSpec {
         oracle_reuse: row.oracle_reuse,
         async_mode: row.async_mode,
         kernel: row.kernel,
+        faults: row.faults,
+        // Non-default fault knobs are only legal under inject (the
+        // trainer rejects them otherwise). A fixed fault seed keeps
+        // every inject row's schedule deterministic.
+        fault_seed: if row.faults == FaultMode::Inject { 13 } else { 0 },
+        fault_rate: if row.faults == FaultMode::Inject {
+            0.5
+        } else {
+            mpbcfw::coordinator::faults::DEFAULT_FAULT_RATE
+        },
+        oracle_retries: if row.faults == FaultMode::Inject { 1 } else { 2 },
         eval_every: 1,
         ..Default::default()
     }
 }
 
-fn level_indices(r: &Row) -> [usize; 8] {
+fn level_indices(r: &Row) -> [usize; 9] {
     [
         match r.threads {
             1 => 0,
@@ -120,15 +146,19 @@ fn level_indices(r: &Row) -> [usize; 8] {
             KernelBackend::Scalar => 0,
             KernelBackend::Simd => 1,
         },
+        match r.faults {
+            FaultMode::Off => 0,
+            FaultMode::Inject => 1,
+        },
     ]
 }
 
 #[test]
 fn rows_are_pairwise_covering() {
-    let levels = [2usize, 3, 2, 2, 2, 2, 2, 2];
-    let idx: Vec<[usize; 8]> = rows().iter().map(level_indices).collect();
-    for i in 0..8 {
-        for j in (i + 1)..8 {
+    let levels = [2usize, 3, 2, 2, 2, 2, 2, 2, 2];
+    let idx: Vec<[usize; 9]> = rows().iter().map(level_indices).collect();
+    for i in 0..9 {
+        for j in (i + 1)..9 {
             let mut seen = std::collections::HashSet::new();
             for row in &idx {
                 seen.insert((row[i], row[j]));
@@ -160,12 +190,15 @@ fn every_row_trains_and_parallel_rows_match_their_sequential_twin() {
             );
         }
         // The bitwise threads-twin contract holds for the synchronous
-        // scalar driver only; async-on fold timing is OS-scheduled and
-        // simd reductions reassociate (the monotone/weak-duality checks
-        // above are their contract).
+        // scalar faults-off driver only; async-on fold timing is
+        // OS-scheduled, simd reductions reassociate, and faults-inject
+        // rows have their own bitwise contracts in
+        // `tests/fault_tolerance.rs` (the monotone/weak-duality checks
+        // above are their contract here).
         if row.threads > 1
             && row.async_mode == AsyncMode::Off
             && row.kernel == KernelBackend::Scalar
+            && row.faults == FaultMode::Off
         {
             let twin = train(&spec_for(row, 1))
                 .unwrap_or_else(|e| panic!("row {k}: twin failed: {e}"));

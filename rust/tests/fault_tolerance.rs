@@ -1,0 +1,327 @@
+//! Fault-tolerance conformance: the deterministic-injection contract of
+//! `--faults inject` end to end. The fault schedule is a pure function
+//! of `(fault seed, block, pass, attempt)`, so everything here is
+//! driven without wall-clock dependence: the [`VirtualExecutor`] replays
+//! adversarial completion orders under injected faults, twin runs with
+//! the same fault seed must match bitwise, the sharded synchronous
+//! driver must be thread-count-invariant even while workers fail, and a
+//! run killed at an auto-checkpoint must resume onto the uninterrupted
+//! run's eval tail bit for bit.
+//!
+//! The `--faults off` anchor is pinned elsewhere: the golden-trajectory
+//! fixtures replay default (`FaultMode::Off`) specs, so any off-path
+//! perturbation from this PR would trip `tests/golden_trajectory.rs`.
+
+use std::sync::Arc;
+
+use mpbcfw::coordinator::async_overlap::{
+    run_async_with, AsyncMode, CompletionOrder, VirtualExecutor,
+};
+use mpbcfw::coordinator::checkpoint::{load_run, save_run_atomic};
+use mpbcfw::coordinator::faults::{FaultConfig, FaultKind, FaultMode, FaultPlan};
+use mpbcfw::coordinator::metrics::Series;
+use mpbcfw::coordinator::mp_bcfw::{self, MpBcfwConfig};
+use mpbcfw::coordinator::parallel::{exact_pass, exact_pass_faulty};
+use mpbcfw::data::synth::usps_like::{generate, UspsLikeConfig};
+use mpbcfw::data::types::Scale;
+use mpbcfw::model::problem::StructuredProblem as _;
+use mpbcfw::model::scratch::OracleScratch;
+use mpbcfw::oracle::multiclass::MulticlassProblem;
+use mpbcfw::oracle::wrappers::CountingOracle;
+use mpbcfw::runtime::engine::NativeEngine;
+
+fn tiny_problem() -> CountingOracle {
+    CountingOracle::new(Box::new(MulticlassProblem::new(generate(
+        UspsLikeConfig::at_scale(Scale::Tiny),
+        1,
+    ))))
+}
+
+/// Pinned base config: `auto_approx` off (the §3.4 rule is
+/// wall-clock-driven and would fork twin trajectories) and a fixed
+/// approximate-pass budget, as in the async and checkpoint suites.
+fn base_cfg(max_iters: u64) -> MpBcfwConfig {
+    MpBcfwConfig {
+        max_iters,
+        auto_approx: false,
+        max_approx_passes: 2,
+        threads: 2,
+        seed: 7,
+        ..MpBcfwConfig::mp_paper(1.0 / 60.0)
+    }
+}
+
+fn inject_cfg(max_iters: u64, fault_seed: u64, rate: f64, retries: u64) -> MpBcfwConfig {
+    MpBcfwConfig {
+        faults: FaultConfig {
+            mode: FaultMode::Inject,
+            seed: fault_seed,
+            rate,
+            retries,
+            timeout_s: 0.5,
+            ..FaultConfig::default()
+        },
+        ..base_cfg(max_iters)
+    }
+}
+
+/// Trajectory identity: (outer, dual bits, primal bits, exact-oracle
+/// calls) per evaluation point. Timing columns are wall-clock-derived
+/// and excluded.
+fn bits(s: &Series) -> Vec<(u64, u64, u64, u64)> {
+    s.points
+        .iter()
+        .map(|p| (p.outer, p.dual.to_bits(), p.primal.to_bits(), p.oracle_calls))
+        .collect()
+}
+
+fn assert_monotone_and_weakly_dual(s: &Series, label: &str) {
+    for p in &s.points {
+        assert!(p.primal >= p.dual - 1e-8, "{label}: weak duality violated at {p:?}");
+    }
+    for w in s.points.windows(2) {
+        assert!(
+            w[1].dual >= w[0].dual - 1e-10,
+            "{label}: dual decreased {} -> {} under injection",
+            w[0].dual,
+            w[1].dual
+        );
+    }
+}
+
+/// Run the async driver against a fault-injecting [`VirtualExecutor`]
+/// with the given completion order; returns the series and the shared
+/// fault plan (for its counters).
+fn faulty_async_series(
+    cfg: &MpBcfwConfig,
+    order: CompletionOrder,
+) -> (Series, Arc<FaultPlan>) {
+    let problem = tiny_problem();
+    let mut eng = NativeEngine;
+    let c = MpBcfwConfig { async_mode: AsyncMode::On, max_stale_epochs: 1, ..cfg.clone() };
+    let plan = Arc::new(FaultPlan::from_config(&c.faults));
+    let mut exec = VirtualExecutor::with_faults(
+        &problem,
+        c.threads,
+        c.oracle_reuse,
+        order,
+        Arc::clone(&plan),
+    );
+    let (series, _) = run_async_with(&problem, &mut eng, &c, &mut exec);
+    (series, plan)
+}
+
+#[test]
+fn fault_matrix_stays_monotone_and_convergent_under_adversarial_orders() {
+    // Clean reference: the synchronous fault-free driver.
+    let problem = tiny_problem();
+    let mut eng = NativeEngine;
+    let (clean, _) = mp_bcfw::run(&problem, &mut eng, &base_cfg(6));
+    let clean_dual = clean.points.last().unwrap().dual;
+    assert!(clean_dual > 0.0, "clean reference made no progress");
+
+    let cfg = inject_cfg(6, 11, 0.7, 1);
+    // Every fault kind is on the pure schedule for this (seed, rate)
+    // over the swept (block, pass, attempt) grid — so the matrix below
+    // genuinely exercises each kind under each completion order.
+    let plan = FaultPlan::from_config(&cfg.faults);
+    for kind in [FaultKind::Panic, FaultKind::Transient, FaultKind::Timeout, FaultKind::Slow] {
+        let scheduled = (0..60usize).any(|b| {
+            (1..=6u64).any(|pass| (0..=1u64).any(|a| plan.decide(b, pass, a) == Some(kind)))
+        });
+        assert!(scheduled, "{kind:?} never appears on the schedule; pick another seed");
+    }
+
+    let mut totals = mpbcfw::coordinator::faults::FaultStats::default();
+    for order in
+        [CompletionOrder::Fifo, CompletionOrder::Reversed, CompletionOrder::Starve(0)]
+    {
+        let (s, plan) = faulty_async_series(&cfg, order);
+        assert_eq!(s.faults, "inject");
+        assert_monotone_and_weakly_dual(&s, &format!("{order:?}"));
+        // Bounded-extra-passes convergence: injection may cost progress
+        // (skipped blocks, degraded passes) but not collapse the run.
+        let last = s.points.last().unwrap();
+        assert!(
+            last.dual >= 0.25 * clean_dual,
+            "{order:?}: faulty dual {} lost the clean reference {clean_dual}",
+            last.dual
+        );
+        let st = plan.stats();
+        assert!(st.injected > 0, "{order:?}: nothing was injected");
+        assert_eq!(
+            st.panics + st.transients + st.timeouts + st.slowdowns,
+            st.injected,
+            "{order:?}: per-kind counters must partition the injections"
+        );
+        // The EvalPoint columns surface the same counters.
+        assert_eq!(last.oracle_retries, st.retries, "{order:?}: retries column");
+        assert_eq!(last.oracle_timeouts, st.timeouts, "{order:?}: timeouts column");
+        totals.injected += st.injected;
+        totals.panics += st.panics;
+        totals.transients += st.transients;
+        totals.timeouts += st.timeouts;
+        totals.slowdowns += st.slowdowns;
+    }
+    // Across the three orders, every fault kind was actually executed.
+    assert!(totals.panics > 0, "no panic was ever executed");
+    assert!(totals.transients > 0, "no transient error was ever executed");
+    assert!(totals.timeouts > 0, "no timeout was ever executed");
+    assert!(totals.slowdowns > 0, "no slowdown was ever executed");
+}
+
+#[test]
+fn same_fault_seed_twins_are_bitwise_identical() {
+    let cfg = inject_cfg(5, 23, 0.6, 1);
+    for order in
+        [CompletionOrder::Fifo, CompletionOrder::Reversed, CompletionOrder::Starve(1)]
+    {
+        let (a, plan_a) = faulty_async_series(&cfg, order);
+        let (b, plan_b) = faulty_async_series(&cfg, order);
+        assert_eq!(bits(&a), bits(&b), "{order:?}: same-fault-seed twins diverged");
+        assert_eq!(
+            plan_a.stats(),
+            plan_b.stats(),
+            "{order:?}: twins drew different fault schedules"
+        );
+        assert!(plan_a.stats().injected > 0, "{order:?}: twin check never injected");
+    }
+    // A different fault seed must fork the schedule (the seed is live).
+    let (c, plan_c) = faulty_async_series(&inject_cfg(5, 24, 0.6, 1), CompletionOrder::Fifo);
+    let (a, _) = faulty_async_series(&cfg, CompletionOrder::Fifo);
+    assert!(plan_c.stats().injected > 0);
+    assert_ne!(bits(&a), bits(&c), "changing --fault-seed moved nothing");
+}
+
+#[test]
+fn sync_injection_is_thread_count_invariant() {
+    // The fault schedule is pure in (block, pass, attempt) — never in
+    // the worker id — and blocks map to arenas by id % m, so the sharded
+    // synchronous driver must produce one bitwise trajectory for every
+    // thread count, faults and all. This is the reassignment invariant:
+    // a failed block requeues into the same residue class.
+    let mut reference: Option<Vec<(u64, u64, u64, u64)>> = None;
+    for threads in [1usize, 2, 3] {
+        let problem = tiny_problem();
+        let mut eng = NativeEngine;
+        let cfg = MpBcfwConfig { threads, ..inject_cfg(6, 31, 0.5, 1) };
+        let (s, run) = mp_bcfw::run(&problem, &mut eng, &cfg);
+        assert_monotone_and_weakly_dual(&s, &format!("threads={threads}"));
+        assert!(run.faults.stats().injected > 0, "threads={threads}: nothing injected");
+        match &reference {
+            None => reference = Some(bits(&s)),
+            Some(want) => assert_eq!(
+                &bits(&s),
+                want,
+                "threads={threads} diverged: injection broke thread-count invariance"
+            ),
+        }
+    }
+}
+
+#[test]
+fn worker_death_recovery_preserves_arena_pinning() {
+    // Pass 1 injects heavily (retry budget 0), pass 2 is healed (the
+    // fault window closes). Re-running the failed blocks on the *same*
+    // persistent arenas must produce planes bitwise identical to a cold
+    // single-threaded reference: the id % m pinning survives both the
+    // failures and any arena cold-resets.
+    let problem = tiny_problem();
+    let w = vec![0.0; problem.dim()];
+    let order: Vec<usize> = (0..problem.n()).collect();
+    let plan = FaultPlan::from_config(&FaultConfig {
+        mode: FaultMode::Inject,
+        seed: 5,
+        rate: 0.9,
+        retries: 0,
+        window: Some((1, 2)), // pass 1 faulty, pass 2 healed
+        ..FaultConfig::default()
+    });
+    let mut arenas: Vec<OracleScratch> = (0..3).map(|_| OracleScratch::cold()).collect();
+    let (first, _) = exact_pass_faulty(&problem, &w, &order, 3, &mut arenas, &plan, 1);
+    let failed: Vec<usize> = order
+        .iter()
+        .zip(&first)
+        .filter(|(_, p)| p.is_none())
+        .map(|(&b, _)| b)
+        .collect();
+    assert!(!failed.is_empty(), "heavy pass failed no block; raise the rate");
+    assert!(failed.len() < order.len(), "every block failed; Slow should pass some");
+
+    // Healed retry pass over the failed blocks, warm arenas.
+    let (second, _) = exact_pass_faulty(&problem, &w, &failed, 3, &mut arenas, &plan, 2);
+    let (want, _) = exact_pass(&problem, &w, &failed, 1);
+    for ((&b, got), clean) in failed.iter().zip(&second).zip(&want) {
+        let got = got.as_ref().expect("healed pass must not fail");
+        assert_eq!(got.tag, clean.tag, "block {b}: retry plane diverged");
+        assert_eq!(got.off, clean.off, "block {b}: retry offset diverged");
+    }
+}
+
+#[test]
+fn kill_at_checkpoint_then_resume_matches_the_uninterrupted_tail() {
+    let full_cfg = inject_cfg(8, 17, 0.4, 1);
+
+    // Reference: one uninterrupted faulty run.
+    let reference = tiny_problem();
+    let mut eng = NativeEngine;
+    let (full, _) = mp_bcfw::run(&reference, &mut eng, &full_cfg);
+    assert_monotone_and_weakly_dual(&full, "uninterrupted");
+
+    // "Killed" run: same schedule, auto-checkpointing every 2 outers,
+    // stopped at 4 — the last atomic write stands in for the kill point.
+    let path = std::env::temp_dir()
+        .join(format!("mpbcfw_it_fault_resume_{}", std::process::id()));
+    let killed_cfg = MpBcfwConfig {
+        max_iters: 4,
+        faults: FaultConfig {
+            checkpoint_every: 2,
+            checkpoint_path: path.to_string_lossy().into_owned(),
+            ..full_cfg.faults.clone()
+        },
+        ..full_cfg.clone()
+    };
+    let problem = tiny_problem();
+    let (killed, _) = mp_bcfw::run(&problem, &mut eng, &killed_cfg);
+    assert!(path.is_file(), "auto-checkpoint never written");
+    // Auto-checkpointing is trajectory-neutral: the killed run's points
+    // are the uninterrupted run's head, bit for bit.
+    let full_bits = bits(&full);
+    assert_eq!(bits(&killed), full_bits[..bits(&killed).len()].to_vec());
+
+    // Resume from the checkpoint in a fresh problem (fresh caches,
+    // fresh arenas) under the original full config.
+    let fresh = tiny_problem();
+    let mut reloaded = load_run(&path, &fresh, &full_cfg).expect("load_run failed");
+    assert_eq!(reloaded.outers_done, 4);
+    let resumed = mp_bcfw::resume(&fresh, &mut eng, &full_cfg, &mut reloaded);
+    std::fs::remove_file(&path).ok();
+
+    let resumed_bits = bits(&resumed);
+    let full_tail: Vec<_> =
+        full_bits.into_iter().filter(|&(outer, ..)| outer >= 5).collect();
+    assert_eq!(
+        resumed_bits, full_tail,
+        "resumed faulty run diverged from the uninterrupted eval tail"
+    );
+}
+
+#[test]
+fn atomic_checkpoints_never_leave_tmp_residue() {
+    let problem = tiny_problem();
+    let mut eng = NativeEngine;
+    let (_, run) = mp_bcfw::run(&problem, &mut eng, &base_cfg(3));
+    let path = std::env::temp_dir()
+        .join(format!("mpbcfw_it_fault_atomic_{}", std::process::id()));
+    save_run_atomic(&path, &run, &problem).expect("atomic save failed");
+    save_run_atomic(&path, &run, &problem).expect("atomic overwrite failed");
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    assert!(
+        !std::path::Path::new(&tmp).exists(),
+        "tmp file left behind by the atomic rename"
+    );
+    let back = load_run(&path, &problem, &base_cfg(3)).expect("atomic file unreadable");
+    assert_eq!(back.outers_done, run.outers_done);
+    std::fs::remove_file(&path).ok();
+}

@@ -34,6 +34,8 @@ CHECKED_STRUCTS = [
     ("Baseline", "rust/src/bench/regress.rs"),
     ("Measured", "rust/src/bench/regress.rs"),
     ("GoldenFixture", "rust/tests/golden_trajectory.rs"),
+    ("FaultPlan", "rust/src/coordinator/faults.rs"),
+    ("FaultStats", "rust/src/coordinator/faults.rs"),
 ]
 
 OPEN = {"{": "}", "(": ")", "[": "]"}
