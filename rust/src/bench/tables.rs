@@ -965,6 +965,134 @@ pub fn faults_sweep(
     Ok(())
 }
 
+/// DIST — distributed-training contract table: a single-process anchor
+/// row next to a clean loopback-cluster row and a transport-sabotaged
+/// one per dataset. The headline cell is `matches_single` — whether the
+/// cluster run's (dual, primal, oracle-call) trajectory is **bitwise**
+/// the anchor's, which is the determinism contract of snapshot-w rounds
+/// with a deterministic merge order: a plane is pure in `(block,
+/// snapshot-w)`, so retransmissions and reconnects cannot fork the
+/// trajectory. The cell is left empty (not gated) when a worker
+/// actually died — then lost blocks legitimately requeue and the
+/// trajectory forks, monotonically. `tools/check_tables.py` gates the
+/// `matches_single` column in CI. All rows share the pinned pass
+/// schedule, `--threads 2`, and 2 loopback workers.
+pub fn dist_sweep(
+    opts: &FigureOpts,
+    out_dir: &Path,
+    mut log: impl FnMut(String),
+) -> anyhow::Result<()> {
+    use crate::coordinator::distributed::transport::DEFAULT_TRANSPORT_FAULT_RATE;
+    use crate::coordinator::distributed::DistMode;
+    use crate::coordinator::faults::FaultMode;
+    std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvWriter::create(
+        out_dir.join("table_dist.csv"),
+        &[
+            "scenario",
+            "dataset",
+            "dist",
+            "dist_workers",
+            "transport_faults",
+            "wall_s",
+            "final_gap",
+            "oracle_calls",
+            "transport_retries",
+            "worker_deaths",
+            "reassigned_blocks",
+            "matches_single",
+        ],
+    )?;
+    let mut entries: Vec<Json> = Vec::new();
+    log("== DIST: loopback cluster vs single-process anchor (bitwise contract)".into());
+    for ds in DatasetKind::all() {
+        let base = TrainSpec { threads: 2, ..pinned_base(ds, opts) };
+        let anchor = trainer::train(&base)?;
+        let sig = |s: &crate::coordinator::metrics::Series| -> Vec<(u64, u64, u64)> {
+            s.points.iter().map(|p| (p.dual.to_bits(), p.primal.to_bits(), p.oracle_calls)).collect()
+        };
+        let anchor_sig = sig(&anchor);
+        // (scenario, dist, transport mode, seed)
+        let scenarios: [(&str, DistMode, FaultMode, u64); 3] = [
+            ("single", DistMode::Single, FaultMode::Off, 0),
+            ("loopback", DistMode::Loopback, FaultMode::Off, 0),
+            ("loopback-tfaults", DistMode::Loopback, FaultMode::Inject, 42),
+        ];
+        for (name, dist, tmode, tseed) in scenarios {
+            let spec = TrainSpec {
+                dist,
+                transport_faults: tmode,
+                transport_fault_seed: tseed,
+                transport_fault_rate: DEFAULT_TRANSPORT_FAULT_RATE,
+                ..base.clone()
+            };
+            let s = if name == "single" { anchor.clone() } else { trainer::train(&spec)? };
+            let last = s.points.last().unwrap();
+            // A dead worker's lost blocks legitimately fork the
+            // trajectory (requeue) — no bitwise claim then, so the
+            // gated cell stays empty rather than reading "false".
+            let matches_single = if s.worker_deaths > 0 {
+                None
+            } else {
+                Some(sig(&s) == anchor_sig)
+            };
+            log(format!(
+                "   {:14} {:16} tfaults={:6} retries={:>3} deaths={:>2} reassigned={:>3} \
+                 gap={:.2e} matches_single={}",
+                ds.name(),
+                name,
+                tmode.name(),
+                s.transport_retries,
+                s.worker_deaths,
+                s.reassigned_blocks,
+                last.primal - last.dual,
+                matches_single.map(|m| m.to_string()).unwrap_or_else(|| "-".into()),
+            ));
+            csv.row(&[
+                name.into(),
+                ds.name().into(),
+                dist.name().into(),
+                if dist == DistMode::Loopback { s.dist_workers.to_string() } else { "1".into() },
+                tmode.name().into(),
+                format!("{}", s.wall_secs),
+                format!("{}", last.primal - last.dual),
+                last.oracle_calls.to_string(),
+                s.transport_retries.to_string(),
+                s.worker_deaths.to_string(),
+                s.reassigned_blocks.to_string(),
+                matches_single.map(|m| m.to_string()).unwrap_or_default(),
+            ])?;
+            entries.push(Json::obj(vec![
+                ("scenario", Json::s(name)),
+                ("dataset", Json::s(ds.name())),
+                ("dist", Json::s(dist.name())),
+                ("dist_workers", Json::Num(s.dist_workers as f64)),
+                ("transport_faults", Json::s(tmode.name())),
+                ("wall_s", Json::Num(s.wall_secs)),
+                ("final_gap", Json::Num(last.primal - last.dual)),
+                ("oracle_calls", Json::Num(last.oracle_calls as f64)),
+                ("transport_retries", Json::Num(s.transport_retries as f64)),
+                ("worker_deaths", Json::Num(s.worker_deaths as f64)),
+                ("reassigned_blocks", Json::Num(s.reassigned_blocks as f64)),
+                ("matches_single", matches_single.map(Json::Bool).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+    csv.flush()?;
+    let bench = Json::obj(vec![
+        ("bench", Json::s("dist")),
+        ("scale", Json::s(opts.scale.name())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(out_dir.join("bench_dist.json"), bench.to_string())?;
+    log(format!(
+        "   wrote {} and {}",
+        out_dir.join("table_dist.csv").display(),
+        out_dir.join("bench_dist.json").display()
+    ));
+    Ok(())
+}
+
 /// KERNELS — arithmetic-backend A/B (`--kernel scalar` vs `simd`), in
 /// two tiers sharing one table. Micro rows time each hot-path kernel on
 /// odd-length slices (the lane tail is exercised) and check the lane
@@ -1349,6 +1477,7 @@ pub const TABLES: &[&str] = &[
     "async",
     "kernels",
     "faults",
+    "dist",
     "all",
 ];
 
@@ -1372,6 +1501,7 @@ pub fn run_table(
         "async" => async_sweep(opts, out_dir, log),
         "kernels" => kernels_sweep(opts, out_dir, log),
         "faults" => faults_sweep(opts, out_dir, log),
+        "dist" => dist_sweep(opts, out_dir, log),
         "all" => {
             oracle_stats(datasets, opts, out_dir, &mut log)?;
             crossover(opts, &[0.0, 0.001, 0.01, 0.1], out_dir, &mut log)?;
@@ -1383,7 +1513,8 @@ pub fn run_table(
             products_sweep(opts, out_dir, &mut log)?;
             async_sweep(opts, out_dir, &mut log)?;
             kernels_sweep(opts, out_dir, &mut log)?;
-            faults_sweep(opts, out_dir, &mut log)
+            faults_sweep(opts, out_dir, &mut log)?;
+            dist_sweep(opts, out_dir, &mut log)
         }
         other => anyhow::bail!("unknown table {other} (expected one of {TABLES:?})"),
     }
@@ -1561,6 +1692,48 @@ mod tests {
                     assert_eq!(e.get("degraded_passes").as_f64(), Some(0.0));
                 }
                 _ => assert_eq!(*e.get("twin_bitwise"), Json::Null),
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn dist_sweep_writes_csv_with_gated_matches_single_column() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_dist_{}", std::process::id()));
+        let mut lines = Vec::new();
+        dist_sweep(&tiny_opts(), &dir, |m| lines.push(m)).unwrap();
+        let text = std::fs::read_to_string(dir.join("table_dist.csv")).unwrap();
+        assert!(text.starts_with("scenario,dataset,dist,dist_workers"));
+        for ds in ["usps_like", "ocr_like", "horseseg_like"] {
+            for scenario in ["single", "loopback", "loopback-tfaults"] {
+                assert!(
+                    text.contains(&format!("{scenario},{ds}")),
+                    "missing {scenario} row for {ds}:\n{text}"
+                );
+            }
+        }
+        // The CI contract: every bitwise claim true (rows with an actual
+        // worker death make no claim and leave the cell empty).
+        assert!(!text.contains("false"), "a cluster run diverged from the anchor:\n{text}");
+        let json = std::fs::read_to_string(dir.join("bench_dist.json")).unwrap();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("dist"));
+        let entries = parsed.get("entries").as_arr().unwrap();
+        assert_eq!(entries.len(), 9);
+        for e in entries {
+            // Rows claim the bitwise contract unless a worker actually
+            // died (exhausted retry budget under sabotage — possible,
+            // since the seeded schedule is fixed but opaque); a death
+            // blanks the claim instead of reading false.
+            if e.get("worker_deaths").as_f64() == Some(0.0) {
+                assert_eq!(*e.get("matches_single"), Json::Bool(true));
+            } else {
+                assert_eq!(e.get("scenario").as_str(), Some("loopback-tfaults"));
+                assert_eq!(*e.get("matches_single"), Json::Null);
+            }
+            if e.get("scenario").as_str() != Some("loopback-tfaults") {
+                assert_eq!(e.get("transport_retries").as_f64(), Some(0.0));
+                assert_eq!(e.get("worker_deaths").as_f64(), Some(0.0));
             }
         }
         std::fs::remove_dir_all(dir).ok();

@@ -1,0 +1,180 @@
+//! `cluster` — run mpbcfw training as separate coordinator/worker OS
+//! processes over loopback TCP (the multi-process face of
+//! `coordinator::distributed`; `mpbcfw train --dist loopback` runs the
+//! same protocol with in-process worker threads).
+//!
+//! Every process must be started with the *same* training flags — the
+//! dataset, seeds and config are re-derived locally in each process
+//! (only `w` snapshots, block ids and planes cross the wire), so a
+//! flag mismatch would silently train on different data. Start the
+//! coordinator and workers in any order; workers retry the initial
+//! connect.
+//!
+//! ```text
+//! cluster coordinator --addr 127.0.0.1:47311 --dist-workers 2 \
+//!     --dataset horseseg --scale tiny --iters 4 --threads 1 --no-auto-approx &
+//! cluster worker --id 0 --addr 127.0.0.1:47311 --dist-workers 2 \
+//!     --dataset horseseg --scale tiny --iters 4 --threads 1 --no-auto-approx &
+//! cluster worker --id 1 --addr 127.0.0.1:47311 --dist-workers 2 \
+//!     --dataset horseseg --scale tiny --iters 4 --threads 1 --no-auto-approx
+//! ```
+
+use std::net::SocketAddr;
+
+use mpbcfw::cli::args::Args;
+use mpbcfw::cli::commands::parse_train_spec;
+use mpbcfw::coordinator::async_overlap::AsyncMode;
+use mpbcfw::coordinator::distributed::{
+    fill_dist_columns, serve_worker, Cluster, DistMode, WorkerConfig,
+};
+use mpbcfw::coordinator::mp_bcfw;
+use mpbcfw::coordinator::trainer::{self, Algo, EngineKind, TrainSpec};
+use mpbcfw::runtime::engine::NativeEngine;
+
+const USAGE: &str = "cluster — multi-process mpbcfw training over loopback TCP
+
+USAGE:
+  cluster coordinator --addr HOST:PORT [--dist-workers N] [train flags...]
+  cluster worker      --addr HOST:PORT --id K             [train flags...]
+
+Every process takes the same `mpbcfw train` flag set (--dataset,
+--scale, --algo, --iters, --seed, --faults ..., etc.) and must receive
+identical values: each process rebuilds the dataset and config locally,
+and only w snapshots, block ids and cutting planes cross the wire. The
+robustness knobs (--transport-faults*, --straggler-timeout,
+--reconnect-retries) apply on the coordinator. A same-seed cluster run
+is bitwise identical to `mpbcfw train` without --dist (dual, primal,
+oracle-call counts); see README 'Distributed training'.";
+
+/// Flags + gates shared by both roles: the spec drives problem and
+/// config construction in every process.
+fn spec_for(args: &Args) -> anyhow::Result<TrainSpec> {
+    let mut spec = parse_train_spec(args)?;
+    anyhow::ensure!(
+        matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "cluster distributes the exact pass (bcfw/mp-bcfw family only); {} has none",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.engine == EngineKind::Native,
+        "cluster requires --engine native (workers score on native kernels)"
+    );
+    anyhow::ensure!(
+        spec.async_mode == AsyncMode::Off,
+        "cluster rounds are bulk-synchronous; --async on is not composable with them"
+    );
+    // The executor boundary requires the snapshot-w merge path; the
+    // sequential freshest-w path (threads=0) never crosses it.
+    spec.threads = spec.threads.max(1);
+    // This binary *is* the distributed mode; the flag would be
+    // redundant, and the series columns say loopback either way.
+    spec.dist = DistMode::Loopback;
+    Ok(spec)
+}
+
+fn parse_addr(args: &Args) -> anyhow::Result<SocketAddr> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("cluster requires --addr HOST:PORT"))?;
+    addr.parse()
+        .map_err(|e| anyhow::anyhow!("bad --addr {addr}: {e}"))
+}
+
+fn cmd_coordinator(args: &Args) -> anyhow::Result<()> {
+    let spec = spec_for(args)?;
+    let addr = parse_addr(args)?;
+    let dist = spec.dist_config();
+    let problem = trainer::build_problem(&spec);
+    let lambda = spec.lambda.unwrap_or(1.0 / problem.n() as f64);
+    let cfg = trainer::mp_config(&spec, lambda);
+    // Workers own their oracles in separate processes; fold their
+    // cumulative call counts into this ledger so the reported
+    // oracle-call trajectory matches the single-process run.
+    let mut cluster = Cluster::bind(&problem, &dist, &addr.to_string(), true)
+        .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    println!(
+        "coordinator: listening on {addr}, waiting for {} worker(s)...",
+        dist.workers
+    );
+    cluster.accept_workers().map_err(|e| anyhow::anyhow!("accept: {e}"))?;
+    println!("coordinator: cluster formed, training {} on {}", spec.algo.name(), spec.dataset.name());
+    let mut eng = NativeEngine;
+    let (mut series, _run) = mp_bcfw::run_with_exec(&problem, &mut eng, &cfg, &mut cluster);
+    cluster.shutdown();
+    fill_dist_columns(&mut series, &dist, &cluster.stats);
+    println!(
+        "{:>6} {:>9} {:>9} {:>12} {:>12} {:>11}",
+        "outer", "calls", "time[s]", "primal", "dual", "gap"
+    );
+    for p in &series.points {
+        println!(
+            "{:>6} {:>9} {:>9.2} {:>12.6} {:>12.6} {:>11.3e}",
+            p.outer,
+            p.oracle_calls,
+            p.time,
+            p.primal,
+            p.dual,
+            p.primal - p.dual,
+        );
+    }
+    let last = series.points.last().unwrap();
+    println!(
+        "done: {} exact oracle calls, gap {:.3e}; transport: {} retries, {} worker deaths, \
+         {} reassigned blocks",
+        last.oracle_calls,
+        last.primal - last.dual,
+        cluster.stats.retries,
+        cluster.stats.worker_deaths,
+        cluster.stats.reassigned_blocks,
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let spec = spec_for(args)?;
+    let addr = parse_addr(args)?;
+    let id = args
+        .get("id")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --id K (0-based worker id)"))?
+        .parse::<u64>()
+        .map_err(|e| anyhow::anyhow!("bad --id: {e}"))?;
+    let dist = spec.dist_config();
+    let problem = trainer::build_problem(&spec);
+    let lambda = spec.lambda.unwrap_or(1.0 / problem.n() as f64);
+    let cfg = trainer::mp_config(&spec, lambda);
+    let mut wcfg = WorkerConfig::for_dist(id, &dist, &cfg.faults);
+    wcfg.oracle_reuse = cfg.oracle_reuse;
+    println!("worker {id}: connecting to {addr}...");
+    serve_worker(&problem, &wcfg, addr).map_err(|e| anyhow::anyhow!("worker {id}: {e}"))?;
+    println!("worker {id}: shutdown");
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // The same boolean train flags `mpbcfw train` takes, plus --help.
+    let bool_flags = ["no-auto-approx", "train-loss", "help", "dense-planes"];
+    let args = match Args::parse(argv, &bool_flags) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        std::process::exit(if args.has("help") { 0 } else { 2 });
+    }
+    let result = match args.positional[0].as_str() {
+        "coordinator" => cmd_coordinator(&args),
+        "worker" => cmd_worker(&args),
+        other => {
+            eprintln!("unknown role {other} (coordinator|worker)\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -5,6 +5,8 @@ use std::path::Path;
 use super::args::Args;
 use crate::bench::{figures, regress, tables};
 use crate::coordinator::async_overlap::AsyncMode;
+use crate::coordinator::distributed::transport::DEFAULT_TRANSPORT_FAULT_RATE;
+use crate::coordinator::distributed::DistMode;
 use crate::coordinator::faults::{FaultMode, DEFAULT_FAULT_RATE};
 use crate::coordinator::products::{GramBackend, ProductMode};
 use crate::coordinator::sampling::{SamplingStrategy, StepRule};
@@ -31,7 +33,11 @@ USAGE:
                   [--faults off|inject] [--fault-seed S] [--fault-rate F]
                   [--oracle-retries N] [--oracle-timeout SECONDS]
                   [--checkpoint-every N] [--checkpoint-path FILE]
-  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|async|kernels|faults|all
+                  [--dist single|loopback] [--dist-workers N]
+                  [--transport-faults off|inject] [--transport-fault-seed S]
+                  [--transport-fault-rate F] [--straggler-timeout SECONDS]
+                  [--reconnect-retries N]
+  mpbcfw bench    --figure fig3|fig4|fig5|fig6|all | --table oracle-stats|crossover|product-cache|t-sweep|sampling|sparsity|oracle|products|async|kernels|faults|dist|all
                   [--dataset usps|ocr|horseseg|all] [--repeats R] [--iters N]
                   [--scale ...] [--engine ...] [--out DIR] [--smoke]
   mpbcfw bench    --regress [--smoke] | --rebaseline
@@ -145,6 +151,33 @@ resume surface), giving a kill-and-resume path whose resumed eval tail
 matches the uninterrupted run bit for bit. `bench --table faults`
 sweeps the scenarios and gates the recovery contract.
 
+--dist loopback runs the same training as a 1-coordinator + N-worker
+cluster (--dist-workers, default 2) over loopback TCP: each worker owns
+the residue class block-id mod N (data, working-set slabs, oracle
+arenas), solves the exact pass against the per-round snapshot of w the
+coordinator broadcasts, and the coordinator merges the returned planes
+sequentially in the sampled block order — so a same-seed loopback run
+is bitwise identical to the single-process trajectory (dual, primal and
+oracle-call counts; only wall-clock differs). The transport is
+crash-safe: length-prefixed checksummed frames reject corruption with
+byte-offset errors, worker replies are cached and retransmitted
+verbatim on retry, stragglers time out after --straggler-timeout
+seconds, receive failures retry up to --reconnect-retries times under
+deterministic backoff, and a worker that stays dead has its shard
+reassigned to the lowest-id survivor (cold arenas for the absorbed
+class; survivors stay warm). A block no survivor can produce flows into
+the --faults requeue/degrade machinery. --transport-faults inject
+sabotages the coordinator's receive path with a seeded schedule of
+garbled/truncated/dropped/stalled frames and disconnects, pure in
+(--transport-fault-seed, worker, round, attempt) — twin runs replay
+identical failures, and recovery cannot fork the trajectory because
+every retried plane is a pure function of (block, snapshot-w).
+--transport-faults off draws zero RNG: golden fixtures and
+`bench --regress` never see the transport layer. The standalone
+`cluster` binary runs the same protocol as separate OS processes; see
+README 'Distributed training'. `bench --table dist` gates the
+matches-single contract.
+
 `bench --regress` is the perf-regression gate: it replays each
 committed BENCH_<scenario>.json baseline's pinned configuration (the
 file's provenance, not the CLI options) and exits nonzero naming any
@@ -182,13 +215,17 @@ fn err(msg: String) -> anyhow::Error {
     anyhow::anyhow!(msg)
 }
 
-pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
+/// Parse the `train` flag set into a [`TrainSpec`]. Shared by
+/// `cmd_train` and the standalone `cluster` binary, whose coordinator
+/// and worker processes must derive the identical spec from the same
+/// flags.
+pub fn parse_train_spec(args: &Args) -> anyhow::Result<TrainSpec> {
     let oracle_reuse = match args.get_or("oracle-reuse", "on") {
         "on" => true,
         "off" => false,
         other => anyhow::bail!("bad --oracle-reuse {other} (on|off)"),
     };
-    let spec = TrainSpec {
+    Ok(TrainSpec {
         dataset: DatasetKind::parse(args.get_or("dataset", "usps"))
             .ok_or_else(|| anyhow::anyhow!("bad --dataset"))?,
         scale: parse_scale(args)?,
@@ -233,10 +270,26 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         oracle_timeout: args.f64_or("oracle-timeout", 0.0).map_err(err)?,
         checkpoint_every: args.u64_or("checkpoint-every", 0).map_err(err)?,
         checkpoint_path: args.get_or("checkpoint-path", "mpbcfw_run.ckpt").to_string(),
+        dist: DistMode::parse(args.get_or("dist", "single"))
+            .ok_or_else(|| anyhow::anyhow!("bad --dist (single|loopback)"))?,
+        dist_workers: args.usize_or("dist-workers", 2).map_err(err)?,
+        transport_faults: FaultMode::parse(args.get_or("transport-faults", "off"))
+            .ok_or_else(|| anyhow::anyhow!("bad --transport-faults (off|inject)"))?,
+        transport_fault_seed: args.u64_or("transport-fault-seed", 0).map_err(err)?,
+        transport_fault_rate: args
+            .f64_or("transport-fault-rate", DEFAULT_TRANSPORT_FAULT_RATE)
+            .map_err(err)?,
+        transport_fault_window: None, // bench/test knob, not CLI-exposed
+        straggler_timeout: args.f64_or("straggler-timeout", 5.0).map_err(err)?,
+        reconnect_retries: args.u64_or("reconnect-retries", 2).map_err(err)?,
         engine: parse_engine(args)?,
         with_train_loss: args.has("train-loss"),
         eval_every: args.u64_or("eval-every", 1).map_err(err)?,
-    };
+    })
+}
+
+pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let spec = parse_train_spec(args)?;
     println!(
         "training {} on {} (scale={}, λ={}, engine={}{})",
         spec.algo.name(),
@@ -613,6 +666,62 @@ mod tests {
             1,
             "--checkpoint-path without --checkpoint-every must be rejected"
         );
+    }
+
+    #[test]
+    fn train_with_dist_flags() {
+        assert_eq!(
+            dispatch(toks(
+                "train --scale tiny --iters 2 --dataset usps --threads 2 \
+                 --no-auto-approx --dist loopback --dist-workers 2"
+            )),
+            0
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --dist mesh")),
+            1,
+            "unknown --dist value must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --threads 2 --dist loopback --async on")),
+            1,
+            "--dist loopback with --async on must be rejected (bulk-synchronous rounds)"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --dist-workers 3")),
+            1,
+            "--dist-workers without --dist loopback must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --transport-faults inject")),
+            1,
+            "--transport-faults inject without --dist loopback must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --transport-fault-seed 3")),
+            1,
+            "--transport-fault-seed without --transport-faults inject must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --straggler-timeout 1.5")),
+            1,
+            "--straggler-timeout without --dist loopback must be rejected"
+        );
+        assert_eq!(
+            dispatch(toks("train --scale tiny --iters 2 --reconnect-retries 5")),
+            1,
+            "--reconnect-retries without --dist loopback must be rejected"
+        );
+    }
+
+    #[test]
+    fn bench_dist_smoke_runs() {
+        let dir = std::env::temp_dir().join(format!("mpbcfw_cli_dist_{}", std::process::id()));
+        let cmd = format!("bench --table dist --smoke --out {}", dir.display());
+        assert_eq!(dispatch(toks(&cmd)), 0);
+        assert!(dir.join("table_dist.csv").exists());
+        assert!(dir.join("bench_dist.json").exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -1,0 +1,813 @@
+//! Cluster driver: the coordinator side ([`Cluster`], an
+//! [`ExactPassExec`] the outer loop dispatches exact passes through),
+//! the worker side ([`serve_worker`], shared verbatim by the in-process
+//! harness and the `cluster` binary), and the loopback entry points
+//! ([`run_loopback`] / [`resume_loopback`]) that spawn worker threads
+//! against a real `127.0.0.1` listener.
+//!
+//! One round: broadcast `Work {round, w, shard}` to every live worker
+//! (workers compute concurrently), then collect replies in **ascending
+//! worker id** — the deterministic fold order that keeps f64 penalty
+//! accumulation and oracle-ledger deltas reproducible run to run. A
+//! failed receive attempt (checksum mismatch, truncated frame, dropped
+//! reply, stall, severed link) charges deterministic backoff to the
+//! virtual clock and re-requests the round; workers answer resends of a
+//! round they already solved from a cached reply, byte for byte, so
+//! retries are pure retransmissions — no duplicate oracle calls, and
+//! the oracle-call ledger stays bitwise equal to the single-process
+//! run. A worker that exhausts its retry budget is declared dead: its
+//! residue classes are reassigned to the lowest-id survivor (which
+//! cold-builds arenas for the absorbed classes — its own stay warm),
+//! and only blocks *no* survivor could produce come back as `None`,
+//! flowing into the requeue-first/degraded-pass recovery of PR 9.
+
+use std::collections::HashMap;
+use std::io::{self, ErrorKind};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::protocol::{
+    read_frame_raw, recv_msg, send_msg, verify_frame, write_frame, Msg, PROTOCOL_VERSION,
+    TAG_HEARTBEAT,
+};
+use super::transport::{connect_with_retry, TransportFaultKind, TransportFaultPlan, TransportStats};
+use super::DistConfig;
+use crate::coordinator::faults::{call_with_faults, FaultConfig, FaultPlan, FaultStats};
+use crate::coordinator::metrics::Series;
+use crate::coordinator::mp_bcfw::{self, MpBcfwConfig, MpBcfwRun};
+use crate::coordinator::parallel::{ExactPassExec, PassReport};
+use crate::model::plane::Plane;
+use crate::model::problem::StructuredProblem;
+use crate::model::scratch::OracleScratch;
+use crate::oracle::wrappers::CountingOracle;
+use crate::runtime::engine::{NativeEngine, ScoringEngine};
+use crate::utils::timer::Stopwatch;
+
+/// Real-seconds deadline for the initial `accept_workers` handshake.
+const ACCEPT_TIMEOUT_S: f64 = 30.0;
+
+/// Poll interval for non-blocking accept loops.
+const ACCEPT_POLL_MS: u64 = 2;
+
+/// Why one receive attempt failed.
+enum RecvFail {
+    /// The stream is still framed and usable — resend the round.
+    Soft(io::Error),
+    /// The link is gone or desynced — reconnect before resending.
+    Dead(io::Error),
+}
+
+/// A decoded `Planes` reply.
+struct WorkerReply {
+    planes: Vec<(u64, Option<Plane>)>,
+    calls_total: u64,
+    shard_secs: f64,
+    fault_delta: FaultStats,
+    penalty_secs: f64,
+}
+
+/// Coordinator side of the cluster: owns the listener, one framed link
+/// per worker, the residue-class ownership map, and the transport fault
+/// plan + stats. Implements [`ExactPassExec`], so
+/// `mp_bcfw::run_with_exec` drives it exactly where the in-process
+/// executor would run.
+pub struct Cluster<'p> {
+    problem: &'p CountingOracle,
+    listener: TcpListener,
+    cfg: DistConfig,
+    plan: TransportFaultPlan,
+    links: Vec<Option<TcpStream>>,
+    alive: Vec<bool>,
+    /// Residue class -> owning worker id (starts as the identity; a
+    /// death remaps the dead worker's classes to the lowest survivor).
+    owner: Vec<usize>,
+    /// Per-worker cumulative oracle-call counts already folded into the
+    /// coordinator ledger (multi-process mode only).
+    folded_calls: Vec<u64>,
+    /// Fold remote `calls_total` deltas into `problem`'s ledger. True
+    /// for the multi-process binary (workers own their oracles); false
+    /// in-process (workers share the coordinator's atomic ledger).
+    fold_remote_calls: bool,
+    /// Virtual-seconds penalty accrued by transport recovery this pass
+    /// (backoff, stalls); drained into the run's `FaultPlan` per pass.
+    penalty_secs: f64,
+    pub stats: TransportStats,
+}
+
+impl<'p> Cluster<'p> {
+    /// Bind the coordinator listener. `addr` is usually
+    /// `127.0.0.1:0` (in-process harness) or `127.0.0.1:<port>` (the
+    /// `cluster` binary).
+    pub fn bind(
+        problem: &'p CountingOracle,
+        cfg: &DistConfig,
+        addr: &str,
+        fold_remote_calls: bool,
+    ) -> io::Result<Cluster<'p>> {
+        assert!(cfg.workers >= 1, "a cluster needs at least one worker");
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Cluster {
+            problem,
+            listener,
+            cfg: cfg.clone(),
+            plan: TransportFaultPlan::from_config(&cfg.transport),
+            links: (0..cfg.workers).map(|_| None).collect(),
+            alive: vec![true; cfg.workers],
+            owner: (0..cfg.workers).collect(),
+            folded_calls: vec![0; cfg.workers],
+            fold_remote_calls,
+            penalty_secs: 0.0,
+            stats: TransportStats::default(),
+        })
+    }
+
+    /// The bound address workers should connect to.
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept the initial `Hello` from every worker and reply
+    /// `Welcome {worker, n_workers}` (the worker's residue-class
+    /// modulus). Workers may connect in any order.
+    pub fn accept_workers(&mut self) -> io::Result<()> {
+        let deadline = Instant::now() + Duration::from_secs_f64(ACCEPT_TIMEOUT_S);
+        let mut connected = 0usize;
+        while connected < self.cfg.workers {
+            match self.accept_hello(deadline) {
+                Some((worker, stream)) => {
+                    if self.links[worker].is_none() {
+                        connected += 1;
+                    }
+                    self.links[worker] = Some(stream);
+                }
+                None => {
+                    return Err(io::Error::new(
+                        ErrorKind::TimedOut,
+                        format!(
+                            "cluster: only {connected}/{} workers connected within \
+                             {ACCEPT_TIMEOUT_S}s",
+                            self.cfg.workers
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Accept one valid `Hello` (any worker id) before `deadline`,
+    /// completing the handshake. Invalid or foreign connections are
+    /// dropped and the wait continues.
+    fn accept_hello(&mut self, deadline: Instant) -> Option<(usize, TcpStream)> {
+        loop {
+            match self.listener.accept() {
+                Ok((mut stream, _)) => {
+                    stream.set_nodelay(true).ok();
+                    stream
+                        .set_read_timeout(Some(Duration::from_secs_f64(
+                            self.cfg.straggler_timeout_s.max(0.05),
+                        )))
+                        .ok();
+                    if let Ok(Msg::Hello { worker, protocol }) = recv_msg(&mut stream) {
+                        let k = worker as usize;
+                        if protocol == PROTOCOL_VERSION && k < self.cfg.workers {
+                            let welcome =
+                                Msg::Welcome { worker, n_workers: self.cfg.workers as u64 };
+                            if send_msg(&mut stream, &welcome).is_ok() {
+                                return Some((k, stream));
+                            }
+                        }
+                    }
+                    // Bad handshake: drop the connection, keep waiting.
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return None;
+                    }
+                    std::thread::sleep(Duration::from_millis(ACCEPT_POLL_MS));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(ACCEPT_POLL_MS)),
+            }
+        }
+    }
+
+    /// Send `Shutdown` to every live worker (end of training).
+    pub fn shutdown(&mut self) {
+        for link in self.links.iter_mut().flatten() {
+            let _ = send_msg(link, &Msg::Shutdown);
+        }
+    }
+
+    fn lowest_alive(&self) -> Option<usize> {
+        self.alive.iter().position(|&a| a)
+    }
+
+    /// Declare worker `k` permanently dead and remap its residue
+    /// classes to the lowest-id survivor (None left if none remains).
+    fn declare_dead(&mut self, k: usize) {
+        if !self.alive[k] {
+            return;
+        }
+        self.alive[k] = false;
+        self.links[k] = None;
+        self.stats.worker_deaths += 1;
+        if let Some(s) = self.lowest_alive() {
+            for o in self.owner.iter_mut() {
+                if *o == k {
+                    *o = s;
+                }
+            }
+        }
+    }
+
+    fn send_work(&mut self, k: usize, round: u64, w: &[f64], blocks: &[u64]) -> io::Result<()> {
+        let link = self.links[k].as_mut().ok_or_else(|| {
+            io::Error::new(ErrorKind::NotConnected, format!("worker {k} has no link"))
+        })?;
+        let msg = Msg::Work { round, w: w.to_vec(), blocks: blocks.to_vec() };
+        let out = send_msg(link, &msg);
+        if out.is_err() {
+            self.links[k] = None;
+        }
+        out
+    }
+
+    /// Wait (bounded) for worker `k` to reconnect after a severed link:
+    /// accept connections until one presents `Hello {worker: k}`.
+    fn await_reconnect(&mut self, k: usize) -> bool {
+        let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.straggler_timeout_s);
+        while Instant::now() < deadline {
+            if let Some((worker, stream)) = self.accept_hello(deadline) {
+                if worker == k {
+                    self.links[k] = Some(stream);
+                    self.stats.reconnects += 1;
+                    return true;
+                }
+                // A different worker reconnecting out of turn (e.g. a
+                // stale backlog entry from one we declared dead): only
+                // still-live workers get their link restored.
+                if self.alive[worker] {
+                    self.links[worker] = Some(stream);
+                }
+            }
+        }
+        false
+    }
+
+    /// Receive worker `k`'s reply for `round`, tolerating up to
+    /// `heartbeat_limit` heartbeats, with the transport-fault plan
+    /// applied between reading the raw frame and verifying it — the
+    /// boundary where real corruption would land.
+    fn recv_planes(&mut self, k: usize, round: u64, attempt: u64) -> Result<WorkerReply, RecvFail> {
+        let decision = self.plan.decide(k as u64, round, attempt);
+        let mut beats = 0u64;
+        loop {
+            let link = self.links[k].as_mut().ok_or_else(|| {
+                RecvFail::Dead(io::Error::new(ErrorKind::NotConnected, "no link"))
+            })?;
+            link.set_read_timeout(Some(Duration::from_secs_f64(
+                self.cfg.straggler_timeout_s.max(0.05),
+            )))
+            .ok();
+            let (mut payload, hash) = match read_frame_raw(link) {
+                Ok(f) => f,
+                Err(e) => {
+                    // Timeouts desync mid-frame and EOF means the peer
+                    // is gone: either way the link must be rebuilt.
+                    self.links[k] = None;
+                    return Err(RecvFail::Dead(e));
+                }
+            };
+            // Heartbeats pass through the fault boundary untouched (the
+            // plan's decision applies to the round's actual reply).
+            if payload.first() == Some(&TAG_HEARTBEAT) && verify_frame(&payload, hash).is_ok() {
+                if let Ok(Msg::Heartbeat { .. }) = Msg::decode(&payload) {
+                    beats += 1;
+                    if beats > self.cfg.heartbeat_limit {
+                        self.links[k] = None;
+                        return Err(RecvFail::Dead(io::Error::new(
+                            ErrorKind::TimedOut,
+                            format!("worker {k}: {beats} heartbeats without a reply"),
+                        )));
+                    }
+                    continue;
+                }
+            }
+            let decoded = match decision {
+                Some(TransportFaultKind::Drop) => {
+                    self.stats.dropped += 1;
+                    return Err(RecvFail::Soft(io::Error::new(
+                        ErrorKind::Other,
+                        "injected reply drop",
+                    )));
+                }
+                Some(TransportFaultKind::Stall) => {
+                    self.stats.stalled += 1;
+                    self.penalty_secs += self.cfg.straggler_timeout_s;
+                    return Err(RecvFail::Soft(io::Error::new(
+                        ErrorKind::TimedOut,
+                        "injected straggler stall",
+                    )));
+                }
+                Some(TransportFaultKind::Disconnect) => {
+                    self.stats.disconnects += 1;
+                    self.links[k] = None;
+                    return Err(RecvFail::Dead(io::Error::new(
+                        ErrorKind::ConnectionReset,
+                        "injected disconnect",
+                    )));
+                }
+                Some(TransportFaultKind::Garble) => {
+                    self.stats.garbled += 1;
+                    let pos = self.plan.garble_pos(k as u64, round, attempt, payload.len());
+                    payload[pos] ^= 0x01;
+                    // The flip must be caught by the checksum — a
+                    // garbled f64 byte would otherwise decode "fine".
+                    verify_frame(&payload, hash).and_then(|()| Msg::decode(&payload))
+                }
+                Some(TransportFaultKind::Truncate) => {
+                    self.stats.truncated += 1;
+                    // Deliver only half the payload: the decoder must
+                    // die with a byte-offset error, like a short read.
+                    Msg::decode(&payload[..payload.len() / 2])
+                }
+                None => verify_frame(&payload, hash).and_then(|()| Msg::decode(&payload)),
+            };
+            return match decoded {
+                Ok(Msg::Planes {
+                    round: r,
+                    worker,
+                    planes,
+                    calls_total,
+                    shard_secs,
+                    fault_delta,
+                    penalty_secs,
+                }) if r == round && worker == k as u64 => Ok(WorkerReply {
+                    planes,
+                    calls_total,
+                    shard_secs,
+                    fault_delta,
+                    penalty_secs,
+                }),
+                Ok(other) => {
+                    // Wrong round or message kind: the stream is
+                    // confused beyond patching — resync via reconnect.
+                    self.links[k] = None;
+                    Err(RecvFail::Dead(io::Error::new(
+                        ErrorKind::InvalidData,
+                        format!("worker {k}: unexpected reply {other:?} for round {round}"),
+                    )))
+                }
+                // Corrupt frame, but the framing itself held: resend.
+                Err(e) => Err(RecvFail::Soft(e)),
+            };
+        }
+    }
+
+    /// Collect worker `k`'s reply for `round`, retrying (resend +
+    /// reconnect as needed) within the per-(worker, round) budget. Each
+    /// retry charges deterministic exponential backoff to the virtual
+    /// clock. Returns `None` once the budget is exhausted — the caller
+    /// declares the worker dead.
+    fn collect_with_retries(
+        &mut self,
+        k: usize,
+        round: u64,
+        w: &[f64],
+        blocks: &[u64],
+    ) -> Option<WorkerReply> {
+        for attempt in 0..=self.cfg.reconnect_retries {
+            if attempt > 0 {
+                self.stats.retries += 1;
+                self.penalty_secs +=
+                    self.cfg.backoff_base_s * (1u64 << attempt.min(10)) as f64;
+                if self.links[k].is_none() && !self.await_reconnect(k) {
+                    continue;
+                }
+                if self.send_work(k, round, w, blocks).is_err() {
+                    continue;
+                }
+            } else if self.links[k].is_none() {
+                // The broadcast send already failed; rebuild + resend.
+                if !self.await_reconnect(k) || self.send_work(k, round, w, blocks).is_err() {
+                    continue;
+                }
+            }
+            match self.recv_planes(k, round, attempt) {
+                Ok(reply) => return Some(reply),
+                Err(RecvFail::Soft(_)) | Err(RecvFail::Dead(_)) => continue,
+            }
+        }
+        None
+    }
+
+    /// Fold one reply into the pass state — called in deterministic
+    /// (ascending worker id, then reassignment) order, which is what
+    /// keeps the f64 penalty accumulation and call-ledger deltas
+    /// reproducible.
+    fn fold_reply(
+        &mut self,
+        k: usize,
+        reply: WorkerReply,
+        by_block: &mut HashMap<u64, Option<Plane>>,
+        shard_secs: &mut [f64],
+        faults: &FaultPlan,
+    ) {
+        shard_secs[k] += reply.shard_secs;
+        if self.fold_remote_calls {
+            let delta = reply.calls_total.saturating_sub(self.folded_calls[k]);
+            self.problem.charge_calls(delta);
+            self.folded_calls[k] = reply.calls_total;
+        }
+        faults.absorb(&reply.fault_delta, reply.penalty_secs);
+        for (b, p) in reply.planes {
+            by_block.insert(b, p);
+        }
+    }
+}
+
+impl ExactPassExec for Cluster<'_> {
+    fn pass(
+        &mut self,
+        w: &[f64],
+        order: &[usize],
+        pass: u64,
+        faults: &FaultPlan,
+    ) -> (Vec<Option<Plane>>, PassReport) {
+        let sw = Stopwatch::start();
+        let n_workers = self.cfg.workers;
+        // Shard by residue class through the ownership map (identity
+        // until a death reassigns classes to a survivor).
+        let mut batches: Vec<Vec<u64>> = vec![Vec::new(); n_workers];
+        for &i in order {
+            batches[self.owner[i % n_workers]].push(i as u64);
+        }
+        let max_shard_len = batches.iter().map(Vec::len).max().unwrap_or(0);
+        let mut shard_secs = vec![0.0f64; n_workers];
+        let mut by_block: HashMap<u64, Option<Plane>> = HashMap::new();
+
+        // Phase 1 — broadcast, so live workers compute concurrently.
+        let mut pending: Vec<usize> = Vec::new();
+        for k in 0..n_workers {
+            if batches[k].is_empty() || !self.alive[k] {
+                continue;
+            }
+            let _ = self.send_work(k, pass, w, &batches[k]);
+            pending.push(k);
+        }
+
+        // Phase 2 — collect in ascending worker id; exhausted budgets
+        // orphan the batch for reassignment.
+        let mut orphans: Vec<u64> = Vec::new();
+        for k in pending {
+            let batch = std::mem::take(&mut batches[k]);
+            match self.collect_with_retries(k, pass, w, &batch) {
+                Some(reply) => self.fold_reply(k, reply, &mut by_block, &mut shard_secs, faults),
+                None => {
+                    self.declare_dead(k);
+                    orphans.extend(batch);
+                }
+            }
+        }
+        // Blocks whose owner was already dead at broadcast time (no
+        // survivor existed then either) are orphans too.
+        for k in 0..n_workers {
+            orphans.extend(std::mem::take(&mut batches[k]));
+        }
+
+        // Phase 3 — reassign orphans to the lowest-id survivor; cascade
+        // if the survivor dies as well. Terminates: each loop iteration
+        // either succeeds or strictly shrinks the set of live workers.
+        while !orphans.is_empty() {
+            let Some(s) = self.lowest_alive() else { break };
+            self.stats.reassigned_blocks += orphans.len() as u64;
+            let batch = std::mem::take(&mut orphans);
+            if self.send_work(s, pass, w, &batch).is_err()
+                && (!self.await_reconnect(s) || self.send_work(s, pass, w, &batch).is_err())
+            {
+                self.declare_dead(s);
+                orphans = batch;
+                continue;
+            }
+            match self.collect_with_retries(s, pass, w, &batch) {
+                Some(reply) => self.fold_reply(s, reply, &mut by_block, &mut shard_secs, faults),
+                None => {
+                    self.declare_dead(s);
+                    orphans = batch;
+                }
+            }
+        }
+
+        // Deterministic backoff/stall penalties accrued this pass drain
+        // into the run's fault plan, which the outer loop charges to
+        // the virtual clock — the same sink the oracle faults use.
+        if self.penalty_secs > 0.0 {
+            faults.absorb(&FaultStats::default(), self.penalty_secs);
+            self.penalty_secs = 0.0;
+        }
+
+        // Order-aligned merge input. A block present as `None` failed
+        // worker-side (oracle retry budget); a block absent entirely
+        // could not be produced by any worker — count it lost. Both
+        // requeue through the driver's fault machinery.
+        let planes: Vec<Option<Plane>> = order
+            .iter()
+            .map(|&i| match by_block.remove(&(i as u64)) {
+                Some(p) => p,
+                None => {
+                    self.stats.lost_blocks += 1;
+                    None
+                }
+            })
+            .collect();
+        let report = PassReport { shard_secs, wall_secs: sw.secs(), max_shard_len };
+        (planes, report)
+    }
+}
+
+// ---- worker side -------------------------------------------------------
+
+/// Worker-process configuration, shared by the in-process harness and
+/// the `cluster worker` binary.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// This worker's id in `0..n_workers`.
+    pub worker: u64,
+    /// Warm-start the oracle arenas for this worker's own residue class
+    /// (absorbed foreign classes always start cold).
+    pub oracle_reuse: bool,
+    /// Worker-side oracle fault schedule. Must equal the coordinator's
+    /// `--faults*` config: decisions are pure in `(seed, block, pass,
+    /// attempt)`, so equal configs give every executor the identical
+    /// schedule and the distributed trajectory stays bitwise equal to
+    /// the single-process faulty one.
+    pub faults: FaultConfig,
+    /// Real seconds to keep retrying the initial connect (the worker
+    /// may start before the coordinator binds).
+    pub connect_wait_s: f64,
+    /// Reconnect attempts after a severed link before giving up.
+    pub reconnect_retries: u64,
+    /// Real-seconds base of the worker's exponential reconnect backoff.
+    pub backoff_base_s: f64,
+    /// Read deadline while waiting for `Welcome` and `Work` frames.
+    pub read_timeout_s: f64,
+    /// Test knob: send this many `Heartbeat` frames before each reply
+    /// (exercises the coordinator's bounded heartbeat tolerance).
+    pub heartbeats_per_round: u64,
+    /// Test knob: exit (simulating a worker death) after serving this
+    /// many rounds.
+    pub quit_after_rounds: Option<u64>,
+}
+
+impl WorkerConfig {
+    /// Worker defaults consistent with a [`DistConfig`].
+    pub fn for_dist(worker: u64, dist: &DistConfig, faults: &FaultConfig) -> WorkerConfig {
+        WorkerConfig {
+            worker,
+            oracle_reuse: true,
+            faults: faults.clone(),
+            connect_wait_s: ACCEPT_TIMEOUT_S,
+            reconnect_retries: dist.reconnect_retries,
+            backoff_base_s: dist.backoff_base_s,
+            // The coordinator can go quiet between rounds (approx
+            // passes, eval, checkpointing); be patient but bounded, so
+            // an orphaned worker still exits. A timeout that fires
+            // between rounds is self-healing: the worker reconnects,
+            // and the coordinator's next failed send picks the fresh
+            // connection up out of the listener backlog.
+            read_timeout_s: (dist.straggler_timeout_s * 4.0).max(2.0),
+            heartbeats_per_round: 0,
+            quit_after_rounds: None,
+        }
+    }
+}
+
+fn handshake(cfg: &WorkerConfig, addr: SocketAddr) -> io::Result<(TcpStream, usize)> {
+    let mut stream = connect_with_retry(addr, cfg.connect_wait_s)?;
+    stream.set_read_timeout(Some(Duration::from_secs_f64(cfg.read_timeout_s.max(0.05))))?;
+    send_msg(&mut stream, &Msg::Hello { worker: cfg.worker, protocol: PROTOCOL_VERSION })?;
+    match recv_msg(&mut stream)? {
+        Msg::Welcome { worker, n_workers } if worker == cfg.worker => {
+            Ok((stream, n_workers as usize))
+        }
+        other => Err(io::Error::new(
+            ErrorKind::InvalidData,
+            format!("worker {}: expected Welcome, got {other:?}", cfg.worker),
+        )),
+    }
+}
+
+/// Bounded reconnect with deterministic exponential backoff (the real
+/// sleep mirrors the virtual backoff the coordinator charges).
+fn reconnect(cfg: &WorkerConfig, addr: SocketAddr) -> io::Result<(TcpStream, usize)> {
+    let mut last = io::Error::new(ErrorKind::NotConnected, "no reconnect attempt made");
+    for attempt in 0..=cfg.reconnect_retries {
+        std::thread::sleep(Duration::from_secs_f64(
+            cfg.backoff_base_s * (1u64 << attempt.min(10)) as f64,
+        ));
+        match handshake(cfg, addr) {
+            Ok(out) => return Ok(out),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Serve one worker: handshake, then answer `Work` rounds until
+/// `Shutdown`. Owns one scratch arena per residue class it computes
+/// for — its own class warm-started per `oracle_reuse`, absorbed
+/// foreign classes (after another worker's death) built cold, mirroring
+/// `exact_pass_faulty`'s dead-arena rebuild. Resends of an
+/// already-solved round are answered from a cached encoded reply, byte
+/// for byte, so coordinator-side retries never duplicate oracle calls.
+pub fn serve_worker(
+    problem: &CountingOracle,
+    cfg: &WorkerConfig,
+    addr: SocketAddr,
+) -> io::Result<()> {
+    let plan = FaultPlan::from_config(&cfg.faults);
+    let (mut stream, n_workers) = handshake(cfg, addr)?;
+    let mut arenas: Vec<Option<OracleScratch>> = (0..n_workers).map(|_| None).collect();
+    let mut last_reported = FaultStats::default();
+    // (round, blocks, encoded reply): answers resends without recompute.
+    let mut cache: Option<(u64, Vec<u64>, Vec<u8>)> = None;
+    let mut rounds_served = 0u64;
+    loop {
+        let msg = match recv_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => {
+                let (s, _) = reconnect(cfg, addr)?;
+                stream = s;
+                continue;
+            }
+        };
+        match msg {
+            Msg::Work { round, w, blocks } => {
+                let payload = match &cache {
+                    Some((r, b, payload)) if *r == round && *b == blocks => payload.clone(),
+                    _ => {
+                        let sw = Stopwatch::start();
+                        let mut eng = NativeEngine;
+                        let mut planes: Vec<(u64, Option<Plane>)> =
+                            Vec::with_capacity(blocks.len());
+                        for &b in &blocks {
+                            let i = b as usize;
+                            let k = i % n_workers;
+                            let arena = arenas[k].get_or_insert_with(|| {
+                                if k == cfg.worker as usize {
+                                    OracleScratch::new(cfg.oracle_reuse)
+                                } else {
+                                    // Absorbed residue class: cold, like
+                                    // the dead arena it replaces.
+                                    OracleScratch::cold()
+                                }
+                            });
+                            let plane = if plan.is_inject() {
+                                call_with_faults(&plan, problem, i, &w, &mut eng, arena, round)
+                                    .ok()
+                            } else {
+                                Some(problem.oracle_scratch(i, &w, &mut eng, arena))
+                            };
+                            planes.push((b, plane));
+                        }
+                        let now = plan.stats();
+                        let delta = now.since(&last_reported);
+                        last_reported = now;
+                        let reply = Msg::Planes {
+                            round,
+                            worker: cfg.worker,
+                            planes,
+                            calls_total: problem.stats().calls,
+                            shard_secs: sw.secs(),
+                            fault_delta: delta,
+                            penalty_secs: plan.take_penalty_secs(),
+                        };
+                        let payload = reply.encode();
+                        cache = Some((round, blocks, payload.clone()));
+                        payload
+                    }
+                };
+                for _ in 0..cfg.heartbeats_per_round {
+                    if send_msg(&mut stream, &Msg::Heartbeat { round }).is_err() {
+                        break;
+                    }
+                }
+                if write_frame(&mut stream, &payload).is_err() {
+                    // The coordinator will resend the round; the cache
+                    // answers it after the reconnect.
+                    let (s, _) = reconnect(cfg, addr)?;
+                    stream = s;
+                    continue;
+                }
+                rounds_served += 1;
+                if cfg.quit_after_rounds == Some(rounds_served) {
+                    // Simulated worker death (test knob): vanish without
+                    // a goodbye, exactly like a killed process.
+                    return Ok(());
+                }
+            }
+            Msg::Shutdown => return Ok(()),
+            // Anything else mid-stream is a protocol hiccup; ignore.
+            _ => {}
+        }
+    }
+}
+
+// ---- loopback entry points ---------------------------------------------
+
+/// Run a full training session as 1 coordinator + `dist.workers`
+/// in-process worker threads over real loopback TCP, returning the
+/// series (with the `dist` columns filled) and the final run state.
+/// The workers share `problem`'s atomic oracle ledger, so the
+/// oracle-call counts are the single-process ones.
+pub fn run_loopback(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    dist: &DistConfig,
+) -> io::Result<(Series, MpBcfwRun)> {
+    run_loopback_with_quits(problem, eng, cfg, dist, &[])
+}
+
+/// [`run_loopback`] with per-worker `quit_after_rounds` knobs (tests
+/// stage worker deaths with it; an empty slice means nobody quits).
+pub fn run_loopback_with_quits(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    dist: &DistConfig,
+    quits: &[Option<u64>],
+) -> io::Result<(Series, MpBcfwRun)> {
+    let ((mut series, run), stats) =
+        with_cluster(problem, dist, cfg, quits, |cluster, problem| {
+            mp_bcfw::run_with_exec(problem, eng, cfg, cluster)
+        })?;
+    fill_dist_columns(&mut series, dist, &stats);
+    Ok((series, run))
+}
+
+/// Resume a checkpointed run on a fresh loopback cluster (the
+/// distributed analogue of `mp_bcfw::resume`): the trajectory continues
+/// bitwise from the checkpoint, workers rebuild their arenas cold —
+/// value-neutral, like any resume.
+pub fn resume_loopback(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    dist: &DistConfig,
+    run: &mut MpBcfwRun,
+) -> io::Result<Series> {
+    let (mut series, stats) = with_cluster(problem, dist, cfg, &[], |cluster, problem| {
+        mp_bcfw::resume_with_exec(problem, eng, cfg, run, cluster)
+    })?;
+    fill_dist_columns(&mut series, dist, &stats);
+    Ok(series)
+}
+
+/// Stamp the distributed-run columns onto a finished series (shared by
+/// the in-process loopback harness and the `cluster` binary).
+pub fn fill_dist_columns(series: &mut Series, dist: &DistConfig, stats: &TransportStats) {
+    series.dist = "loopback".to_string();
+    series.dist_workers = dist.workers as u64;
+    series.transport_faults = dist.transport.mode.name().to_string();
+    series.transport_retries = stats.retries;
+    series.worker_deaths = stats.worker_deaths;
+    series.reassigned_blocks = stats.reassigned_blocks;
+}
+
+/// Spawn `dist.workers` serve threads against a fresh 127.0.0.1
+/// listener, accept them, run `body` with the connected [`Cluster`],
+/// then shut the workers down. Worker threads that error out (severed
+/// links at run end, staged deaths) are joined and ignored — the
+/// coordinator's own recovery already accounted for them.
+fn with_cluster<R>(
+    problem: &CountingOracle,
+    dist: &DistConfig,
+    cfg: &MpBcfwConfig,
+    quits: &[Option<u64>],
+    body: impl FnOnce(&mut Cluster, &CountingOracle) -> R,
+) -> io::Result<(R, TransportStats)> {
+    let mut cluster = Cluster::bind(problem, dist, "127.0.0.1:0", false)?;
+    let addr = cluster.local_addr()?;
+    let out = std::thread::scope(|s| -> io::Result<R> {
+        let handles: Vec<_> = (0..dist.workers)
+            .map(|k| {
+                let mut wcfg = WorkerConfig::for_dist(k as u64, dist, &cfg.faults);
+                wcfg.oracle_reuse = cfg.oracle_reuse;
+                wcfg.quit_after_rounds = quits.get(k).copied().flatten();
+                s.spawn(move || serve_worker(problem, &wcfg, addr))
+            })
+            .collect();
+        cluster.accept_workers()?;
+        let r = body(&mut cluster, problem);
+        cluster.shutdown();
+        for h in handles {
+            // A worker that died (staged or declared) returns Err or
+            // already exited; the cluster's stats carry the story.
+            let _ = h.join();
+        }
+        Ok(r)
+    })?;
+    Ok((out, cluster.stats))
+}

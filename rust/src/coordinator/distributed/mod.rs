@@ -1,0 +1,130 @@
+//! Fault-tolerant multi-process dBCFW: coordinator/worker training over
+//! a crash-safe loopback transport.
+//!
+//! The paper's premise — the exact max-oracle dominates training time —
+//! makes the exact pass the part worth distributing across processes
+//! (the dBCFW shape of Lee et al., 2015). This module keeps the
+//! single-machine trajectory contract while adding the new failure
+//! domain that comes with processes and sockets:
+//!
+//!  * **Sharding** re-uses the established id-mod-N pinning: worker `k`
+//!    of an `N`-worker cluster owns the residue class `block % N` —
+//!    data access, working-set growth and `OracleScratch` arenas stay
+//!    disjoint per worker, exactly like `parallel::exact_pass_with`'s
+//!    per-thread arenas.
+//!  * **Rounds** are bulk-synchronous: the coordinator broadcasts one
+//!    epoch-stamped snapshot of w per outer pass (`protocol::Msg::Work`),
+//!    workers solve their shards against it, and the coordinator merges
+//!    the returned planes *sequentially in the sampled block order* —
+//!    minibatch-BCFW semantics, so a same-seed 1-coordinator+N-worker
+//!    run is **bitwise identical** to the single-process trajectory
+//!    (the anchor test in `tests/distributed.rs`).
+//!  * **Robustness** is the headline: length-prefixed checksummed
+//!    frames with the checkpoint codec's OOM guards and byte-offset
+//!    corruption errors (`protocol`), heartbeats with deadlines,
+//!    bounded reconnect with deterministic backoff, worker-death
+//!    detection with shard reassignment to the lowest-id survivor
+//!    (cold-arena rebuild for the absorbed residue class, mirroring
+//!    `exact_pass_faulty` — survivors stay warm), straggler timeouts
+//!    folding into the PR-9 requeue-first/degraded-pass machinery, and
+//!    coordinator-side auto-checkpointing via `save_run_atomic` so
+//!    killing the whole cluster mid-round and resuming reproduces the
+//!    uninterrupted eval tail bit for bit.
+//!  * **Replayable failures**: transport faults are injected through a
+//!    seeded plan pure in `(seed, worker, round, attempt)`
+//!    (`transport::TransportFaultPlan`), so every failure scenario runs
+//!    deterministically in-process without real sockets flaking, and
+//!    `--transport-faults off` draws zero RNG — golden fixtures and the
+//!    `bench --regress` gate never see the transport layer.
+//!
+//! Why recovery preserves the trajectory: a plane is a pure function of
+//! `(block, snapshot-w)`, so *which* worker computes it — first owner,
+//! reconnected owner, or the survivor a dead worker's shard was
+//! reassigned to — cannot change its bits. As long as every block's
+//! plane lands within the round, the merged trajectory is the
+//! single-process one. Only a block that no surviving worker could
+//! produce becomes `None`, flows into the requeue/degrade machinery,
+//! and legitimately forks the trajectory (with the dual still
+//! monotone — a lost block is just a block the sampler didn't visit).
+
+pub mod driver;
+pub mod protocol;
+pub mod transport;
+
+pub use driver::{
+    fill_dist_columns, resume_loopback, run_loopback, run_loopback_with_quits, serve_worker,
+    Cluster, WorkerConfig,
+};
+pub use transport::{TransportFaultConfig, TransportFaultPlan, TransportStats};
+
+/// Where the exact pass runs (`--dist {single,loopback}`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DistMode {
+    /// In-process execution (threads / sequential) — the default; the
+    /// distributed layer is never constructed.
+    #[default]
+    Single,
+    /// 1 coordinator + N workers over loopback TCP.
+    Loopback,
+}
+
+impl DistMode {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "single" => Some(DistMode::Single),
+            "loopback" => Some(DistMode::Loopback),
+            _ => None,
+        }
+    }
+
+    /// Stable name for tables/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistMode::Single => "single",
+            DistMode::Loopback => "loopback",
+        }
+    }
+}
+
+/// Cluster shape + robustness knobs (CLI `--dist`, `--dist-workers`,
+/// `--transport-faults`, `--transport-fault-seed`,
+/// `--transport-fault-rate`, `--straggler-timeout`,
+/// `--reconnect-retries`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistConfig {
+    /// `--dist {single,loopback}`.
+    pub mode: DistMode,
+    /// `--dist-workers N` — worker count (and the residue-class modulus
+    /// for shard/arena pinning; a per-run constant even after deaths).
+    pub workers: usize,
+    /// Seeded transport-fault schedule (`--transport-faults*`).
+    pub transport: TransportFaultConfig,
+    /// `--straggler-timeout` — real seconds the coordinator waits on a
+    /// worker's reply (heartbeats reset it) before failing the attempt.
+    pub straggler_timeout_s: f64,
+    /// `--reconnect-retries` — receive attempts beyond the first per
+    /// (worker, round); exhausting them declares the worker dead and
+    /// reassigns its shard.
+    pub reconnect_retries: u64,
+    /// Base of the deterministic exponential retry backoff, charged to
+    /// the virtual clock (attempt `k` charges `base · 2^k`) and used as
+    /// the worker's real reconnect sleep. Not CLI-exposed.
+    pub backoff_base_s: f64,
+    /// Max heartbeat frames tolerated while waiting for one reply.
+    pub heartbeat_limit: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            mode: DistMode::Single,
+            workers: 2,
+            transport: TransportFaultConfig::default(),
+            straggler_timeout_s: 5.0,
+            reconnect_retries: 2,
+            backoff_base_s: 0.01,
+            heartbeat_limit: 64,
+        }
+    }
+}

@@ -1,0 +1,623 @@
+//! Wire protocol of the loopback cluster: length-prefixed, checksummed
+//! frames with the same paranoia as the run-checkpoint codec.
+//!
+//! A frame is `[payload_len: u64 LE][fnv1a64(payload): u64 LE][payload]`.
+//! The length prefix is validated against [`MAX_FRAME_BYTES`] *before*
+//! any allocation — the exact `CountingReader::with_limit` discipline of
+//! `coordinator::checkpoint`: a bit-flipped length can produce an error
+//! but never an OOM. The checksum catches payload corruption that would
+//! otherwise decode into silently wrong planes (a flipped mantissa byte
+//! is still a valid `f64`); structural corruption — truncated frames,
+//! inner element counts that outrun the payload — is caught by
+//! [`FrameReader`], which tracks its byte position and names the offset
+//! at which decoding broke, exactly like `load_run` does for checkpoint
+//! files.
+//!
+//! Messages ([`Msg`]) are deliberately few: a `Hello`/`Welcome`
+//! handshake that pins the protocol version and the worker's identity,
+//! a `Work` broadcast carrying the epoch-stamped weight snapshot plus
+//! the receiver's block shard, the `Planes` reply (order-aligned
+//! `Option<Plane>` results, repr-preserving, plus the worker's oracle
+//! ledger and fault-recovery counters for the coordinator to fold), a
+//! worker-side `Heartbeat` so a long solve is distinguishable from a
+//! dead process, and `Shutdown`. Plane payloads reuse the checkpoint's
+//! repr byte (0 = dense, 1 = sparse) so sparse oracle output crosses
+//! the wire without densification and round-trips bit for bit.
+
+use std::io::{Error, ErrorKind, Read, Result, Write};
+
+use crate::coordinator::faults::FaultStats;
+use crate::model::plane::{Plane, PlaneVec};
+
+/// Protocol version pinned by the `Hello`/`Welcome` handshake; bump on
+/// any wire-format change so mismatched binaries fail loudly instead of
+/// mis-decoding each other.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Hard ceiling on a single frame's payload. Generous for any realistic
+/// snapshot (a dense w at paper scale is a few MB) while keeping a
+/// corrupt 8-byte length prefix from requesting an exabyte allocation.
+pub const MAX_FRAME_BYTES: u64 = 1 << 28;
+
+/// FNV-1a 64-bit: tiny, dependency-free, and plenty to catch the
+/// single-byte garbles and torn writes a transport produces (this is an
+/// integrity check against *accidents*, not an authentication code).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Write one frame (length prefix + checksum + payload).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(&fnv1a64(payload).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's raw payload and its transmitted checksum, without
+/// verifying the checksum (the coordinator's fault-injection boundary
+/// sits between reading and verifying — see
+/// `transport::TransportFaultPlan`). The length prefix is validated
+/// against [`MAX_FRAME_BYTES`] before the payload buffer is allocated.
+pub fn read_frame_raw(r: &mut impl Read) -> Result<(Vec<u8>, u64)> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)
+        .map_err(|e| Error::new(e.kind(), format!("distributed frame: reading length: {e}")))?;
+    let len = u64::from_le_bytes(b);
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!("distributed frame: length {len} exceeds the {MAX_FRAME_BYTES}-byte limit"),
+        ));
+    }
+    r.read_exact(&mut b)
+        .map_err(|e| Error::new(e.kind(), format!("distributed frame: reading checksum: {e}")))?;
+    let hash = u64::from_le_bytes(b);
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| {
+        Error::new(e.kind(), format!("distributed frame: reading {len}-byte payload: {e}"))
+    })?;
+    Ok((payload, hash))
+}
+
+/// Verify a frame's checksum against its (possibly corrupted) payload.
+pub fn verify_frame(payload: &[u8], hash: u64) -> Result<()> {
+    let got = fnv1a64(payload);
+    if got != hash {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!(
+                "distributed frame: checksum mismatch over {} payload byte(s) \
+                 (got {got:#018x}, frame claims {hash:#018x})",
+                payload.len()
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Read + verify + decode one message — the happy-path receive.
+pub fn recv_msg(r: &mut impl Read) -> Result<Msg> {
+    let (payload, hash) = read_frame_raw(r)?;
+    verify_frame(&payload, hash)?;
+    Msg::decode(&payload)
+}
+
+/// Encode + frame + write one message.
+pub fn send_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    write_frame(w, &msg.encode())
+}
+
+// ---- payload reader ----------------------------------------------------
+
+/// Positional reader over one frame's payload, mirroring the
+/// checkpoint codec's `CountingReader`: every failure names the byte
+/// offset, and element counts are guarded against the bytes remaining
+/// in the payload before anything is allocated.
+pub struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    pub fn new(buf: &'a [u8]) -> FrameReader<'a> {
+        FrameReader { buf, pos: 0 }
+    }
+
+    /// Validate a length prefix of `count` elements, each at least
+    /// `elem_bytes` on the wire, against the payload bytes left.
+    pub fn guard_count(&self, count: u64, elem_bytes: u64, what: &str) -> Result<usize> {
+        let remaining = (self.buf.len() - self.pos) as u64;
+        if count.saturating_mul(elem_bytes) > remaining {
+            return Err(self.bad(format!(
+                "{what} count {count} needs more than the {remaining} byte(s) \
+                 left in the frame"
+            )));
+        }
+        Ok(count as usize)
+    }
+
+    fn fill(&mut self, out: &mut [u8]) -> Result<()> {
+        let end = self.pos + out.len();
+        if end > self.buf.len() {
+            return Err(Error::new(
+                ErrorKind::UnexpectedEof,
+                format!(
+                    "distributed frame: needed {} byte(s) at byte offset {} but the \
+                     {}-byte payload ends first",
+                    out.len(),
+                    self.pos,
+                    self.buf.len()
+                ),
+            ));
+        }
+        out.copy_from_slice(&self.buf[self.pos..end]);
+        self.pos = end;
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub fn bad(&self, msg: String) -> Error {
+        Error::new(
+            ErrorKind::InvalidData,
+            format!("distributed frame: {msg} (at byte offset {})", self.pos),
+        )
+    }
+}
+
+// ---- payload writer helpers --------------------------------------------
+
+fn pu8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn pu32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn pu64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn pf64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+// ---- plane codec -------------------------------------------------------
+
+/// Encode one plane, repr-preserving (repr byte 0 = dense, 1 = sparse —
+/// the checkpoint codec's convention). Values travel as raw `f64` bits,
+/// so planes round-trip bitwise.
+fn encode_plane(out: &mut Vec<u8>, p: &Plane) {
+    pf64(out, p.off);
+    pu64(out, p.tag);
+    match &p.star {
+        PlaneVec::Dense(v) => {
+            pu8(out, 0);
+            pu64(out, v.len() as u64);
+            for &x in v {
+                pf64(out, x);
+            }
+        }
+        PlaneVec::Sparse { dim, idx, val } => {
+            pu8(out, 1);
+            pu64(out, *dim as u64);
+            pu64(out, idx.len() as u64);
+            for (&j, &x) in idx.iter().zip(val) {
+                pu32(out, j);
+                pf64(out, x);
+            }
+        }
+    }
+}
+
+fn decode_plane(r: &mut FrameReader) -> Result<Plane> {
+    let off = r.f64()?;
+    let tag = r.u64()?;
+    let star = match r.u8()? {
+        0 => {
+            let claimed = r.u64()?;
+            let len = r.guard_count(claimed, 8, "dense plane payload")?;
+            let mut v = Vec::with_capacity(len);
+            for _ in 0..len {
+                v.push(r.f64()?);
+            }
+            PlaneVec::Dense(v)
+        }
+        1 => {
+            let dim = r.u64()? as usize;
+            let claimed = r.u64()?;
+            let nnz = r.guard_count(claimed, 12, "sparse plane entry")?;
+            let mut idx = Vec::with_capacity(nnz);
+            let mut val = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                let j = r.u32()?;
+                if j as usize >= dim {
+                    return Err(r.bad(format!("sparse index {j} out of {dim}-d plane")));
+                }
+                idx.push(j);
+                val.push(r.f64()?);
+            }
+            PlaneVec::Sparse { dim, idx, val }
+        }
+        other => return Err(r.bad(format!("unknown plane repr byte {other}"))),
+    };
+    Ok(Plane::new(star, off, tag))
+}
+
+fn encode_fault_stats(out: &mut Vec<u8>, s: &FaultStats) {
+    pu64(out, s.injected);
+    pu64(out, s.panics);
+    pu64(out, s.transients);
+    pu64(out, s.timeouts);
+    pu64(out, s.slowdowns);
+    pu64(out, s.retries);
+    pu64(out, s.failed_calls);
+}
+
+fn decode_fault_stats(r: &mut FrameReader) -> Result<FaultStats> {
+    Ok(FaultStats {
+        injected: r.u64()?,
+        panics: r.u64()?,
+        transients: r.u64()?,
+        timeouts: r.u64()?,
+        slowdowns: r.u64()?,
+        retries: r.u64()?,
+        failed_calls: r.u64()?,
+    })
+}
+
+// ---- messages ----------------------------------------------------------
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_WORK: u8 = 3;
+const TAG_PLANES: u8 = 4;
+/// Visible to the driver: heartbeats are recognised by tag *before* the
+/// fault-injection boundary so the plan only ever sabotages real replies.
+pub(super) const TAG_HEARTBEAT: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+/// One protocol message. See the module docs for the round structure.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Worker → coordinator, first frame after (re)connecting.
+    Hello { worker: u64, protocol: u64 },
+    /// Coordinator → worker, handshake acknowledgement. `n_workers` is
+    /// the initial cluster size — the per-run residue-class modulus the
+    /// worker uses for its `block % n_workers` arena pinning.
+    Welcome { worker: u64, n_workers: u64 },
+    /// Coordinator → worker: one shard of an exact pass. `round` is the
+    /// outer pass number stamping the `w` snapshot (resends of the same
+    /// round carry the identical snapshot).
+    Work { round: u64, w: Vec<f64>, blocks: Vec<u64> },
+    /// Worker → coordinator: the shard's order-aligned results. A
+    /// `None` plane is an oracle call that exhausted its retry budget
+    /// worker-side (the coordinator requeues the block). `calls_total`
+    /// is the worker's cumulative oracle-ledger count (folded only in
+    /// multi-process mode); `fault_delta`/`penalty_secs` are the
+    /// worker-side recovery counters accrued since its last reply.
+    Planes {
+        round: u64,
+        worker: u64,
+        planes: Vec<(u64, Option<Plane>)>,
+        calls_total: u64,
+        shard_secs: f64,
+        fault_delta: FaultStats,
+        penalty_secs: f64,
+    },
+    /// Worker → coordinator: still alive, still computing `round`.
+    Heartbeat { round: u64 },
+    /// Coordinator → worker: training is done, exit cleanly.
+    Shutdown,
+}
+
+impl Msg {
+    /// Serialize to a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Msg::Hello { worker, protocol } => {
+                pu8(&mut out, TAG_HELLO);
+                pu64(&mut out, *worker);
+                pu64(&mut out, *protocol);
+            }
+            Msg::Welcome { worker, n_workers } => {
+                pu8(&mut out, TAG_WELCOME);
+                pu64(&mut out, *worker);
+                pu64(&mut out, *n_workers);
+            }
+            Msg::Work { round, w, blocks } => {
+                pu8(&mut out, TAG_WORK);
+                pu64(&mut out, *round);
+                pu64(&mut out, w.len() as u64);
+                for &x in w {
+                    pf64(&mut out, x);
+                }
+                pu64(&mut out, blocks.len() as u64);
+                for &b in blocks {
+                    pu64(&mut out, b);
+                }
+            }
+            Msg::Planes { round, worker, planes, calls_total, shard_secs, fault_delta, penalty_secs } => {
+                pu8(&mut out, TAG_PLANES);
+                pu64(&mut out, *round);
+                pu64(&mut out, *worker);
+                pu64(&mut out, planes.len() as u64);
+                for (block, plane) in planes {
+                    pu64(&mut out, *block);
+                    match plane {
+                        Some(p) => {
+                            pu8(&mut out, 1);
+                            encode_plane(&mut out, p);
+                        }
+                        None => pu8(&mut out, 0),
+                    }
+                }
+                pu64(&mut out, *calls_total);
+                pf64(&mut out, *shard_secs);
+                encode_fault_stats(&mut out, fault_delta);
+                pf64(&mut out, *penalty_secs);
+            }
+            Msg::Heartbeat { round } => {
+                pu8(&mut out, TAG_HEARTBEAT);
+                pu64(&mut out, *round);
+            }
+            Msg::Shutdown => pu8(&mut out, TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Decode a frame payload. Fails with an offset-naming error on
+    /// truncated or structurally corrupt payloads; element counts are
+    /// guarded against the payload size before allocation.
+    pub fn decode(payload: &[u8]) -> Result<Msg> {
+        let mut r = FrameReader::new(payload);
+        let msg = match r.u8()? {
+            TAG_HELLO => Msg::Hello { worker: r.u64()?, protocol: r.u64()? },
+            TAG_WELCOME => Msg::Welcome { worker: r.u64()?, n_workers: r.u64()? },
+            TAG_WORK => {
+                let round = r.u64()?;
+                let claimed = r.u64()?;
+                let wlen = r.guard_count(claimed, 8, "weight snapshot")?;
+                let mut w = Vec::with_capacity(wlen);
+                for _ in 0..wlen {
+                    w.push(r.f64()?);
+                }
+                let claimed = r.u64()?;
+                let blen = r.guard_count(claimed, 8, "block shard")?;
+                let mut blocks = Vec::with_capacity(blen);
+                for _ in 0..blen {
+                    blocks.push(r.u64()?);
+                }
+                Msg::Work { round, w, blocks }
+            }
+            TAG_PLANES => {
+                let round = r.u64()?;
+                let worker = r.u64()?;
+                // Each entry is at least block(8) + present(1) bytes.
+                let claimed = r.u64()?;
+                let plen = r.guard_count(claimed, 9, "plane result")?;
+                let mut planes = Vec::with_capacity(plen);
+                for _ in 0..plen {
+                    let block = r.u64()?;
+                    let plane = match r.u8()? {
+                        0 => None,
+                        1 => Some(decode_plane(&mut r)?),
+                        other => {
+                            return Err(r.bad(format!("unknown plane presence byte {other}")))
+                        }
+                    };
+                    planes.push((block, plane));
+                }
+                Msg::Planes {
+                    round,
+                    worker,
+                    planes,
+                    calls_total: r.u64()?,
+                    shard_secs: r.f64()?,
+                    fault_delta: decode_fault_stats(&mut r)?,
+                    penalty_secs: r.f64()?,
+                }
+            }
+            TAG_HEARTBEAT => Msg::Heartbeat { round: r.u64()? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            other => return Err(r.bad(format!("unknown message tag {other}"))),
+        };
+        if r.pos != payload.len() {
+            return Err(r.bad(format!(
+                "{} trailing byte(s) after a complete message",
+                payload.len() - r.pos
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_planes_msg() -> Msg {
+        Msg::Planes {
+            round: 3,
+            worker: 1,
+            planes: vec![
+                (
+                    7,
+                    Some(Plane::new(
+                        PlaneVec::Sparse {
+                            dim: 10,
+                            idx: vec![1, 4, 9],
+                            val: vec![0.5, -2.25, 1e-3],
+                        },
+                        -1.5,
+                        42,
+                    )),
+                ),
+                (4, None),
+                (1, Some(Plane::new(PlaneVec::Dense(vec![0.0, 1.0, -3.5]), 0.25, 7))),
+            ],
+            calls_total: 120,
+            shard_secs: 0.125,
+            fault_delta: FaultStats { injected: 2, retries: 1, ..FaultStats::default() },
+            penalty_secs: 0.5,
+        }
+    }
+
+    fn assert_planes_eq(a: &Msg, b: &Msg) {
+        let (Msg::Planes { planes: pa, calls_total: ca, fault_delta: fa, .. },
+             Msg::Planes { planes: pb, calls_total: cb, fault_delta: fb, .. }) = (a, b)
+        else {
+            panic!("not Planes messages");
+        };
+        assert_eq!(ca, cb);
+        assert_eq!(fa, fb);
+        assert_eq!(pa.len(), pb.len());
+        for ((ba, qa), (bb, qb)) in pa.iter().zip(pb) {
+            assert_eq!(ba, bb);
+            match (qa, qb) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.off.to_bits(), y.off.to_bits());
+                    assert_eq!(x.tag, y.tag);
+                    assert_eq!(x.star.mem_bytes(), y.star.mem_bytes());
+                }
+                _ => panic!("plane presence diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn messages_roundtrip_through_frames() {
+        let msgs = vec![
+            Msg::Hello { worker: 2, protocol: PROTOCOL_VERSION },
+            Msg::Welcome { worker: 2, n_workers: 4 },
+            Msg::Work { round: 9, w: vec![1.0, -0.5, 3.25], blocks: vec![0, 5, 10] },
+            sample_planes_msg(),
+            Msg::Heartbeat { round: 9 },
+            Msg::Shutdown,
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            send_msg(&mut buf, m).unwrap();
+        }
+        let mut r = &buf[..];
+        for want in &msgs {
+            let got = recv_msg(&mut r).unwrap();
+            match (want, got) {
+                (Msg::Hello { worker, protocol }, Msg::Hello { worker: w2, protocol: p2 }) => {
+                    assert_eq!((*worker, *protocol), (w2, p2));
+                }
+                (Msg::Welcome { worker, n_workers }, Msg::Welcome { worker: w2, n_workers: n2 }) => {
+                    assert_eq!((*worker, *n_workers), (w2, n2));
+                }
+                (Msg::Work { round, w, blocks }, Msg::Work { round: r2, w: w2, blocks: b2 }) => {
+                    assert_eq!(*round, r2);
+                    let bits: Vec<u64> = w.iter().map(|x| x.to_bits()).collect();
+                    let bits2: Vec<u64> = w2.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(bits, bits2, "snapshot must round-trip bitwise");
+                    assert_eq!(*blocks, b2);
+                }
+                (a @ Msg::Planes { .. }, ref b @ Msg::Planes { .. }) => assert_planes_eq(a, b),
+                (Msg::Heartbeat { round }, Msg::Heartbeat { round: r2 }) => {
+                    assert_eq!(*round, r2)
+                }
+                (Msg::Shutdown, Msg::Shutdown) => {}
+                (w, g) => panic!("message kind diverged: want {w:?}, got {g:?}"),
+            }
+        }
+        assert!(r.is_empty(), "no trailing bytes");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        let err = read_frame_raw(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        assert!(err.to_string().contains("exceeds"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn garbled_payload_fails_the_checksum() {
+        let payload = sample_planes_msg().encode();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        // Flip one payload byte (a value byte that would decode fine).
+        let last = buf.len() - 1;
+        buf[last] ^= 0x01;
+        let (payload, hash) = read_frame_raw(&mut &buf[..]).unwrap();
+        let err = verify_frame(&payload, hash).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn truncated_payload_errors_name_the_byte_offset() {
+        let payload = sample_planes_msg().encode();
+        for cut in [1usize, payload.len() / 4, payload.len() / 2, payload.len() - 1] {
+            let err = Msg::decode(&payload[..cut]).unwrap_err();
+            let text = err.to_string();
+            assert!(
+                text.contains("byte offset") || text.contains("left in the frame"),
+                "cut at {cut}: error must name an offset, got: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_inner_count_is_guarded_not_allocated() {
+        // A Work frame whose snapshot length claims far more payload
+        // than the frame carries: the guard must reject it by offset.
+        let mut payload = Vec::new();
+        payload.push(3u8); // TAG_WORK
+        payload.extend_from_slice(&1u64.to_le_bytes()); // round
+        payload.extend_from_slice(&u64::MAX.to_le_bytes()); // poisoned w-len
+        let err = Msg::decode(&payload).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("weight snapshot count"), "unexpected error: {text}");
+        assert!(text.contains("byte offset"), "unexpected error: {text}");
+    }
+
+    #[test]
+    fn unknown_tag_and_trailing_bytes_are_rejected() {
+        let err = Msg::decode(&[99u8]).unwrap_err();
+        assert!(err.to_string().contains("unknown message tag"));
+        let mut payload = Msg::Shutdown.encode();
+        payload.push(0);
+        let err = Msg::decode(&payload).unwrap_err();
+        assert!(err.to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+}

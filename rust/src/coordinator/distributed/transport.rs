@@ -1,0 +1,277 @@
+//! Loopback TCP transport with deterministic, replayable fault
+//! injection.
+//!
+//! The injection design repeats `coordinator::faults`: a stateless
+//! [`TransportFaultPlan`] whose every decision is a pure function of
+//! `(seed, worker, round, attempt)`, derived through a throwaway
+//! [`Pcg`] on a splitmix-mixed stream. Replaying a run replays the
+//! exact fault schedule; resuming from a checkpoint replays the
+//! schedule's tail (decisions are keyed by the absolute outer-pass
+//! number, not by elapsed wall time); and `mode = Off` draws **zero**
+//! RNG, so a faults-off cluster is structurally identical to a plain
+//! run — golden fixtures and the `bench --regress` gate never see it.
+//!
+//! Faults are injected on the **coordinator side of the framing
+//! boundary**, between reading a worker's raw reply frame and verifying
+//! it. That placement is what makes every scenario exercisable without
+//! real sockets flaking: a [`Garble`](TransportFaultKind::Garble) flips
+//! one payload byte and must be caught by the frame checksum; a
+//! [`Truncate`](TransportFaultKind::Truncate) decodes a half-received
+//! payload and must die with a byte-offset error from the
+//! `FrameReader`; a [`Drop`](TransportFaultKind::Drop) discards the
+//! reply; a [`Stall`](TransportFaultKind::Stall) charges the straggler
+//! timeout to the virtual clock and gives up on the attempt; a
+//! [`Disconnect`](TransportFaultKind::Disconnect) closes the socket so
+//! the worker's bounded reconnect path runs for real. All five funnel
+//! into the same bounded-retry recovery in `driver::Cluster`.
+
+use std::io;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::coordinator::faults::FaultMode;
+use crate::utils::rng::Pcg;
+
+/// Default per-attempt transport fault probability under `Inject`.
+pub const DEFAULT_TRANSPORT_FAULT_RATE: f64 = 0.2;
+
+/// What the plan can do to one coordinator-side receive attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportFaultKind {
+    /// Flip one payload byte → frame checksum mismatch.
+    Garble,
+    /// Deliver only half the payload → byte-offset decode error.
+    Truncate,
+    /// Discard the reply frame entirely.
+    Drop,
+    /// Worker "hangs": charge the straggler timeout, fail the attempt.
+    Stall,
+    /// Sever the connection; the worker must reconnect with backoff.
+    Disconnect,
+}
+
+impl TransportFaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportFaultKind::Garble => "garble",
+            TransportFaultKind::Truncate => "truncate",
+            TransportFaultKind::Drop => "drop",
+            TransportFaultKind::Stall => "stall",
+            TransportFaultKind::Disconnect => "disconnect",
+        }
+    }
+}
+
+/// Transport-fault configuration (the `--transport-faults*` knobs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransportFaultConfig {
+    pub mode: FaultMode,
+    pub seed: u64,
+    /// Per-receive-attempt injection probability in [0, 1].
+    pub rate: f64,
+    /// Restrict injection to outer passes in `[lo, hi]` (inclusive);
+    /// `None` = every pass. Bench/test knob for staging scenarios.
+    pub window: Option<(u64, u64)>,
+}
+
+impl Default for TransportFaultConfig {
+    fn default() -> Self {
+        TransportFaultConfig {
+            mode: FaultMode::Off,
+            seed: 0,
+            rate: DEFAULT_TRANSPORT_FAULT_RATE,
+            window: None,
+        }
+    }
+}
+
+/// The seeded schedule. Pure: `decide(worker, round, attempt)` always
+/// returns the same answer for the same plan, independent of call
+/// order, thread interleaving, or how many times it is asked — the
+/// same throwaway-Pcg idiom as `FaultPlan::decide`, with an extra
+/// domain-separation constant so a transport plan and an oracle
+/// `FaultPlan` sharing a seed still draw uncorrelated schedules.
+#[derive(Clone, Copy, Debug)]
+pub struct TransportFaultPlan {
+    mode: FaultMode,
+    seed: u64,
+    rate: f64,
+    window: Option<(u64, u64)>,
+}
+
+impl TransportFaultPlan {
+    pub fn from_config(cfg: &TransportFaultConfig) -> TransportFaultPlan {
+        TransportFaultPlan { mode: cfg.mode, seed: cfg.seed, rate: cfg.rate, window: cfg.window }
+    }
+
+    pub fn off() -> TransportFaultPlan {
+        TransportFaultPlan::from_config(&TransportFaultConfig::default())
+    }
+
+    pub fn is_inject(&self) -> bool {
+        self.mode == FaultMode::Inject
+    }
+
+    fn active(&self, round: u64) -> bool {
+        match self.window {
+            None => true,
+            Some((lo, hi)) => round >= lo && round <= hi,
+        }
+    }
+
+    fn stream(&self, worker: u64, round: u64, attempt: u64) -> u64 {
+        worker
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ round.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ attempt.wrapping_mul(0x94D0_49BB_1331_11EB)
+            ^ 0xA076_1D64_78BD_642F
+    }
+
+    /// Should this receive attempt be sabotaged, and how? `Off` mode
+    /// returns `None` without constructing an RNG.
+    pub fn decide(&self, worker: u64, round: u64, attempt: u64) -> Option<TransportFaultKind> {
+        if !self.is_inject() || !self.active(round) {
+            return None;
+        }
+        let mut rng = Pcg::new(self.seed, self.stream(worker, round, attempt));
+        if rng.f64() >= self.rate {
+            return None;
+        }
+        Some(match rng.below(5) {
+            0 => TransportFaultKind::Garble,
+            1 => TransportFaultKind::Truncate,
+            2 => TransportFaultKind::Drop,
+            3 => TransportFaultKind::Stall,
+            _ => TransportFaultKind::Disconnect,
+        })
+    }
+
+    /// Deterministic byte position for a [`Garble`] of a `len`-byte
+    /// payload (its own stream so it never perturbs `decide`).
+    pub fn garble_pos(&self, worker: u64, round: u64, attempt: u64, len: usize) -> usize {
+        debug_assert!(len > 0);
+        let mut rng =
+            Pcg::new(self.seed, self.stream(worker, round, attempt) ^ 0xD6E8_FEB8_6659_FD93);
+        rng.below(len)
+    }
+}
+
+/// Transport-layer event counters, accrued by the coordinator's driver
+/// and surfaced in `Series` / the `dist` bench table.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    pub garbled: u64,
+    pub truncated: u64,
+    pub dropped: u64,
+    pub stalled: u64,
+    pub disconnects: u64,
+    /// Receive attempts beyond the first, per (worker, round).
+    pub retries: u64,
+    /// Workers declared permanently dead (retry budget exhausted).
+    pub worker_deaths: u64,
+    /// Reconnections accepted after a severed link.
+    pub reconnects: u64,
+    /// Blocks re-dispatched to a survivor after a worker death.
+    pub reassigned_blocks: u64,
+    /// Blocks returned as `None` because no worker could produce them;
+    /// these requeue through the degraded-pass machinery and are the
+    /// only transport outcome that forks the trajectory.
+    pub lost_blocks: u64,
+}
+
+/// Connect to `addr`, retrying on `ConnectionRefused` until the
+/// deadline — workers race the coordinator's `bind` at cluster start.
+pub fn connect_with_retry(addr: SocketAddr, total_wait_s: f64) -> io::Result<TcpStream> {
+    let poll = Duration::from_millis(25);
+    let mut waited = Duration::ZERO;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => {
+                if waited.as_secs_f64() >= total_wait_s {
+                    return Err(io::Error::new(
+                        e.kind(),
+                        format!("connecting to coordinator at {addr}: {e}"),
+                    ));
+                }
+                std::thread::sleep(poll);
+                waited += poll;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inject_plan(rate: f64, window: Option<(u64, u64)>) -> TransportFaultPlan {
+        TransportFaultPlan::from_config(&TransportFaultConfig {
+            mode: FaultMode::Inject,
+            seed: 42,
+            rate,
+            window,
+        })
+    }
+
+    #[test]
+    fn decisions_are_pure_and_key_sensitive() {
+        let plan = inject_plan(0.7, None);
+        for worker in 0..3u64 {
+            for round in 1..6u64 {
+                for attempt in 0..3u64 {
+                    let a = plan.decide(worker, round, attempt);
+                    let b = plan.decide(worker, round, attempt);
+                    assert_eq!(a, b, "decision must be pure in (worker, round, attempt)");
+                }
+            }
+        }
+        // Keys matter: across a grid this large, at least one pair of
+        // adjacent keys must disagree at rate 0.7.
+        let grid: Vec<Option<TransportFaultKind>> = (0..3u64)
+            .flat_map(|w| (1..6u64).map(move |r| plan.decide(w, r, 0)))
+            .collect();
+        assert!(grid.iter().any(|d| d.is_some()), "rate 0.7 must inject somewhere");
+        assert!(grid.iter().any(|d| d.is_none()), "rate 0.7 must also skip somewhere");
+    }
+
+    #[test]
+    fn off_mode_and_window_suppress_injection() {
+        let off = TransportFaultPlan::off();
+        for round in 0..50u64 {
+            assert_eq!(off.decide(0, round, 0), None);
+        }
+        let windowed = inject_plan(1.0, Some((3, 4)));
+        assert_eq!(windowed.decide(0, 2, 0), None, "before window");
+        assert!(windowed.decide(0, 3, 0).is_some(), "inside window");
+        assert!(windowed.decide(0, 4, 0).is_some(), "inside window");
+        assert_eq!(windowed.decide(0, 5, 0), None, "after window");
+    }
+
+    #[test]
+    fn all_five_kinds_are_reachable() {
+        let plan = inject_plan(1.0, None);
+        let mut seen = std::collections::HashSet::new();
+        for worker in 0..4u64 {
+            for round in 1..40u64 {
+                if let Some(k) = plan.decide(worker, round, 0) {
+                    seen.insert(k.name());
+                }
+            }
+        }
+        assert_eq!(seen.len(), 5, "expected all fault kinds in 160 draws, got {seen:?}");
+    }
+
+    #[test]
+    fn garble_positions_are_deterministic_and_in_range() {
+        let plan = inject_plan(1.0, None);
+        for len in [1usize, 9, 1024] {
+            let a = plan.garble_pos(1, 2, 0, len);
+            assert_eq!(a, plan.garble_pos(1, 2, 0, len));
+            assert!(a < len);
+        }
+    }
+}

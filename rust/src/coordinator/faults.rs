@@ -208,6 +208,23 @@ pub struct FaultStats {
     pub failed_calls: u64,
 }
 
+impl FaultStats {
+    /// Field-wise delta `self - earlier` (saturating). Distributed
+    /// workers report increments since their last reply with this, so
+    /// the coordinator can fold them without double counting.
+    pub fn since(&self, earlier: &FaultStats) -> FaultStats {
+        FaultStats {
+            injected: self.injected.saturating_sub(earlier.injected),
+            panics: self.panics.saturating_sub(earlier.panics),
+            transients: self.transients.saturating_sub(earlier.transients),
+            timeouts: self.timeouts.saturating_sub(earlier.timeouts),
+            slowdowns: self.slowdowns.saturating_sub(earlier.slowdowns),
+            retries: self.retries.saturating_sub(earlier.retries),
+            failed_calls: self.failed_calls.saturating_sub(earlier.failed_calls),
+        }
+    }
+}
+
 /// A seeded, deterministic fault schedule plus its recovery counters.
 /// Decisions are pure in `(seed, block, pass, attempt)` — see the
 /// module docs for why that purity is the whole design. Shared across
@@ -343,8 +360,13 @@ impl FaultPlan {
 
     /// Drain the accumulated virtual-seconds penalty (timeout charges,
     /// slowdown charges, retry backoff) — the driver adds it to the
-    /// virtual clock once per pass. Deterministic: the schedule fixes
-    /// the total regardless of thread interleaving.
+    /// virtual clock once per pass. The schedule fixes the *multiset*
+    /// of charges regardless of thread interleaving; the f64 fold
+    /// order across threads is not fixed, so the total's low bits may
+    /// vary between runs. That is fine: penalties feed only the `time`
+    /// column, which no bitwise contract covers, and every inject
+    /// suite pins `auto_approx: false` so virtual time cannot fork the
+    /// pass schedule either.
     pub fn take_penalty_secs(&self) -> f64 {
         f64::from_bits(self.penalty_bits.swap(0, Ordering::Relaxed))
     }
@@ -360,6 +382,22 @@ impl FaultPlan {
             retries: self.retry_count.load(Ordering::Relaxed),
             failed_calls: self.failed_calls.load(Ordering::Relaxed),
         }
+    }
+
+    /// Fold a remote executor's counter delta and accrued penalty into
+    /// this plan — how the distributed coordinator merges the recovery
+    /// bookkeeping its workers report (`Msg::Planes::fault_delta`).
+    /// Callers must fold in a deterministic order (ascending worker id)
+    /// so the f64 penalty accumulation never reassociates run to run.
+    pub fn absorb(&self, delta: &FaultStats, penalty_secs: f64) {
+        self.injected.fetch_add(delta.injected, Ordering::Relaxed);
+        self.panics.fetch_add(delta.panics, Ordering::Relaxed);
+        self.transients.fetch_add(delta.transients, Ordering::Relaxed);
+        self.timeouts.fetch_add(delta.timeouts, Ordering::Relaxed);
+        self.slowdowns.fetch_add(delta.slowdowns, Ordering::Relaxed);
+        self.retry_count.fetch_add(delta.retries, Ordering::Relaxed);
+        self.failed_calls.fetch_add(delta.failed_calls, Ordering::Relaxed);
+        self.charge_penalty(penalty_secs);
     }
 }
 

@@ -199,6 +199,24 @@ pub struct Series {
     /// executor boundary); empty for optimizers without the fault
     /// layer.
     pub faults: String,
+    /// Exact-pass execution locality (`loopback` = 1 coordinator + N
+    /// worker processes over loopback TCP); empty for in-process runs —
+    /// the distributed layer is never constructed for them.
+    pub dist: String,
+    /// Worker count of the cluster (0 for in-process runs). Also the
+    /// residue-class modulus of the shard/arena pinning.
+    pub dist_workers: u64,
+    /// Transport fault-injection mode of the cluster (`off` | `inject`);
+    /// empty for in-process runs.
+    pub transport_faults: String,
+    /// Coordinator-side receive retries beyond the first attempt,
+    /// summed over (worker, round) pairs. 0 for in-process runs.
+    pub transport_retries: u64,
+    /// Workers declared permanently dead during the run (retry budget
+    /// exhausted; their shards were reassigned to survivors).
+    pub worker_deaths: u64,
+    /// Blocks re-dispatched to a surviving worker after a death.
+    pub reassigned_blocks: u64,
     /// Evaluation snapshots, in order.
     pub points: Vec<EvalPoint>,
     /// Total wall time of the run (including evaluation sweeps).
@@ -266,6 +284,12 @@ impl Series {
             ("async_mode", Json::s(&self.async_mode)),
             ("kernel_backend", Json::s(&self.kernel_backend)),
             ("faults", Json::s(&self.faults)),
+            ("dist", Json::s(&self.dist)),
+            ("dist_workers", Json::Num(self.dist_workers as f64)),
+            ("transport_faults", Json::s(&self.transport_faults)),
+            ("transport_retries", Json::Num(self.transport_retries as f64)),
+            ("worker_deaths", Json::Num(self.worker_deaths as f64)),
+            ("reassigned_blocks", Json::Num(self.reassigned_blocks as f64)),
             ("wall_secs", Json::Num(self.wall_secs)),
             (
                 "shard_secs",

@@ -16,6 +16,7 @@ pub mod metrics;
 pub mod trainer;
 pub mod baselines;
 pub mod checkpoint;
+pub mod distributed;
 pub mod faults;
 pub mod kernel;
 pub mod kernel_bcfw;

@@ -389,7 +389,40 @@ pub fn run(
     let mut series = new_series(problem, cfg);
     // Initial evaluation point (w = 0).
     record_point(problem, eng, &mut clock, cfg, &mut run, 0, 0, &mut series);
-    run_loop(problem, eng, cfg, &mut run, &mut series, &mut clock, 1);
+    run_loop(problem, eng, cfg, &mut run, &mut series, &mut clock, 1, None);
+    (series, run)
+}
+
+/// As [`run`], but dispatching every exact pass through a caller-owned
+/// [`ExactPassExec`] — the distributed coordinator's entry point
+/// (`distributed::run_loopback` wires a connected `Cluster` in here).
+/// The executor contract (planes pure in `(block, snapshot-w)`) is what
+/// keeps the trajectory bitwise equal to the in-process run; executor
+/// `None` slots reuse the fault path's requeue/degrade recovery.
+pub fn run_with_exec(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    exec: &mut dyn parallel::ExactPassExec,
+) -> (Series, MpBcfwRun) {
+    assert!(
+        cfg.async_mode == AsyncMode::Off,
+        "an external exact-pass executor is bulk-synchronous by construction; \
+         async overlap is not composable with it"
+    );
+    assert!(
+        cfg.threads >= 1 && eng.name() == "native",
+        "an external exact-pass executor requires threads >= 1 and the native \
+         engine (got threads {}, engine {})",
+        cfg.threads,
+        eng.name()
+    );
+    problem.reset_stats();
+    let mut clock = Clock::new();
+    let mut run = new_run(problem, cfg);
+    let mut series = new_series(problem, cfg);
+    record_point(problem, eng, &mut clock, cfg, &mut run, 0, 0, &mut series);
+    run_loop(problem, eng, cfg, &mut run, &mut series, &mut clock, 1, Some(exec));
     (series, run)
 }
 
@@ -422,7 +455,37 @@ pub fn resume(
     let mut clock = Clock::new();
     let mut series = new_series(problem, cfg);
     let start = run.outers_done + 1;
-    run_loop(problem, eng, cfg, run, &mut series, &mut clock, start);
+    run_loop(problem, eng, cfg, run, &mut series, &mut clock, start, None);
+    series
+}
+
+/// As [`resume`], but through an external [`ExactPassExec`] — so a
+/// checkpointed cluster run can continue on a fresh cluster
+/// (`distributed::resume_loopback`). Same restrictions as [`resume`]
+/// plus [`run_with_exec`]'s executor requirements.
+pub fn resume_with_exec(
+    problem: &CountingOracle,
+    eng: &mut dyn ScoringEngine,
+    cfg: &MpBcfwConfig,
+    run: &mut MpBcfwRun,
+    exec: &mut dyn parallel::ExactPassExec,
+) -> Series {
+    assert!(
+        cfg.async_mode == AsyncMode::Off,
+        "resume is defined for the synchronous mode only"
+    );
+    assert!(!cfg.averaging, "averager state is not checkpointed");
+    assert!(
+        cfg.threads >= 1 && eng.name() == "native",
+        "an external exact-pass executor requires threads >= 1 and the native \
+         engine (got threads {}, engine {})",
+        cfg.threads,
+        eng.name()
+    );
+    let mut clock = Clock::new();
+    let mut series = new_series(problem, cfg);
+    let start = run.outers_done + 1;
+    run_loop(problem, eng, cfg, run, &mut series, &mut clock, start, Some(exec));
     series
 }
 
@@ -489,6 +552,7 @@ fn run_loop(
     series: &mut Series,
     clock: &mut Clock,
     start_outer: u64,
+    mut exec: Option<&mut dyn parallel::ExactPassExec>,
 ) {
     let n = problem.n();
     let pairwise = cfg.steps == StepRule::Pairwise && cfg.cap_n > 0;
@@ -528,7 +592,7 @@ fn run_loop(
             // retrying them ahead of the sampled order is a pure
             // scheduling choice (and under `--faults off` the requeue
             // is always empty, leaving the order untouched).
-            if run.faults.is_inject() && !run.fault_requeue.is_empty() {
+            if (run.faults.is_inject() || exec.is_some()) && !run.fault_requeue.is_empty() {
                 let mut head = std::mem::take(&mut run.fault_requeue);
                 head.extend(order);
                 order = head;
@@ -553,20 +617,24 @@ fn run_loop(
                     uniq.push(i);
                 }
             }
-            if run.faults.is_inject() {
+            if run.faults.is_inject() || exec.is_some() {
                 // Fault-aware dispatch: each slot is `None` when the
-                // block's oracle call failed after all retries. Failed
-                // blocks are skipped this pass (BCFW tolerates that)
-                // and requeued for the next one.
-                let (planes, report) = parallel::exact_pass_faulty(
-                    problem,
-                    &run.state.w,
-                    &uniq,
-                    cfg.threads,
-                    &mut run.oracle_scratches,
-                    &run.faults,
-                    outer,
-                );
+                // block's oracle call failed after all retries (or, for
+                // an external executor, when no surviving worker could
+                // produce it). Failed blocks are skipped this pass
+                // (BCFW tolerates that) and requeued for the next one.
+                let (planes, report) = match exec.as_deref_mut() {
+                    Some(e) => e.pass(&run.state.w, &uniq, outer, &run.faults),
+                    None => parallel::exact_pass_faulty(
+                        problem,
+                        &run.state.w,
+                        &uniq,
+                        cfg.threads,
+                        &mut run.oracle_scratches,
+                        &run.faults,
+                        outer,
+                    ),
+                };
                 let planes: Vec<Option<crate::model::plane::Plane>> = if cfg.dense_planes {
                     planes
                         .into_iter()

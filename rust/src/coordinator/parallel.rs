@@ -67,6 +67,30 @@ pub struct PassReport {
     pub max_shard_len: usize,
 }
 
+/// A pluggable executor for one exact pass: given the weight snapshot
+/// and the (deduplicated) block order, produce the order-aligned planes
+/// plus a timing report. `mp_bcfw::run_with_exec` dispatches the exact
+/// pass through this instead of the in-process thread pool — the
+/// distributed coordinator (`distributed::Cluster`) is the one real
+/// implementor. A `None` plane means the executor could not produce the
+/// block this pass (retry budgets exhausted, no surviving worker); the
+/// driver requeues it through the same degraded-pass machinery as a
+/// faulted in-process call.
+///
+/// Contract: each returned plane must be the pure function of
+/// `(block, w)` the oracle defines — *which* machinery computed it must
+/// be unobservable — so any executor that returns all-`Some` yields the
+/// bitwise single-process trajectory.
+pub trait ExactPassExec {
+    fn pass(
+        &mut self,
+        w: &[f64],
+        order: &[usize],
+        pass: u64,
+        faults: &crate::coordinator::faults::FaultPlan,
+    ) -> (Vec<Option<Plane>>, PassReport);
+}
+
 /// Balanced shard sizes: `n` items over `t` shards, sizes differing by
 /// at most one, larger shards first. For a full pass over blocks
 /// `0..n` these are exactly the per-worker loads of the id-mod-`t`

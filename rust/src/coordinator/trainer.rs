@@ -5,6 +5,8 @@
 use super::async_overlap::AsyncMode;
 use super::baselines::{cutting_plane, ssg};
 use super::checkpoint::ModelCheckpoint;
+use super::distributed::transport::DEFAULT_TRANSPORT_FAULT_RATE;
+use super::distributed::{DistConfig, DistMode, TransportFaultConfig};
 use super::faults::{FaultConfig, FaultMode, DEFAULT_FAULT_RATE};
 use super::fw;
 use super::metrics::Series;
@@ -266,12 +268,71 @@ pub struct TrainSpec {
     /// Where `--checkpoint-every` writes the run checkpoint
     /// (`--checkpoint-path`).
     pub checkpoint_path: String,
+    /// Where the exact pass executes (CLI `--dist {single,loopback}`,
+    /// default single; bcfw/mp-bcfw family only, `threads ≥ 1`, native
+    /// engine, `--async off`). `single` never constructs the
+    /// distributed layer. `loopback` trains as 1 coordinator +
+    /// `dist_workers` worker threads over real loopback TCP; the
+    /// coordinator merges worker planes in sampled block order, so a
+    /// same-seed loopback run reproduces the single-process trajectory
+    /// bitwise (pair with `auto_approx: false`, like any bitwise
+    /// claim — the §3.4 rule is timing-based).
+    pub dist: DistMode,
+    /// Cluster worker count (`--dist-workers`, default 2; loopback
+    /// only). Also the residue-class modulus pinning blocks to worker
+    /// arenas — a per-run constant even after worker deaths.
+    pub dist_workers: usize,
+    /// Deterministic transport-fault injection on the coordinator's
+    /// receive path (CLI `--transport-faults {off,inject}`, default
+    /// off; loopback only). `off` draws zero RNG — golden fixtures and
+    /// `bench --regress` never see the transport layer. `inject`
+    /// replays a seeded schedule of garbles / truncations / drops /
+    /// stalls / disconnects pure in `(seed, worker, round, attempt)`.
+    pub transport_faults: FaultMode,
+    /// Seed of the transport-fault schedule (`--transport-fault-seed`;
+    /// transport inject only).
+    pub transport_fault_seed: u64,
+    /// Per-receive-attempt transport fault probability
+    /// (`--transport-fault-rate`; transport inject only).
+    pub transport_fault_rate: f64,
+    /// Restrict transport injection to passes `[lo, hi]` (inclusive;
+    /// transport inject only). Not CLI-exposed — bench/test knob.
+    pub transport_fault_window: Option<(u64, u64)>,
+    /// Real seconds the coordinator waits on a worker reply before
+    /// failing the receive attempt (`--straggler-timeout`; loopback
+    /// only). Heartbeats reset the wait.
+    pub straggler_timeout: f64,
+    /// Receive attempts beyond the first per (worker, round) before the
+    /// worker is declared dead and its shard reassigned
+    /// (`--reconnect-retries`; loopback only).
+    pub reconnect_retries: u64,
     /// Scoring engine to run on.
     pub engine: EngineKind,
     /// Also record the mean train task loss at each evaluation (costly).
     pub with_train_loss: bool,
     /// Evaluate metrics every this many outer iterations.
     pub eval_every: u64,
+}
+
+impl TrainSpec {
+    /// The cluster shape + robustness knobs of this spec as a
+    /// [`DistConfig`] (what `distributed::run_loopback` and the
+    /// `cluster` binary consume).
+    pub fn dist_config(&self) -> DistConfig {
+        DistConfig {
+            mode: self.dist,
+            workers: self.dist_workers,
+            transport: TransportFaultConfig {
+                mode: self.transport_faults,
+                seed: self.transport_fault_seed,
+                rate: self.transport_fault_rate,
+                window: self.transport_fault_window,
+            },
+            straggler_timeout_s: self.straggler_timeout,
+            reconnect_retries: self.reconnect_retries,
+            ..DistConfig::default()
+        }
+    }
 }
 
 impl Default for TrainSpec {
@@ -312,6 +373,14 @@ impl Default for TrainSpec {
             oracle_timeout: 0.0,
             checkpoint_every: 0,
             checkpoint_path: "mpbcfw_run.ckpt".into(),
+            dist: DistMode::Single,
+            dist_workers: 2,
+            transport_faults: FaultMode::Off,
+            transport_fault_seed: 0,
+            transport_fault_rate: DEFAULT_TRANSPORT_FAULT_RATE,
+            transport_fault_window: None,
+            straggler_timeout: 5.0,
+            reconnect_retries: 2,
             engine: EngineKind::Native,
             with_train_loss: false,
             eval_every: 1,
@@ -485,6 +554,59 @@ pub fn train_with_model(spec: &TrainSpec) -> anyhow::Result<(Series, ModelCheckp
         spec.checkpoint_path == "mpbcfw_run.ckpt" || spec.checkpoint_every > 0,
         "--checkpoint-path names the auto-checkpoint file; pass --checkpoint-every N"
     );
+    anyhow::ensure!(
+        spec.dist == DistMode::Single
+            || matches!(spec.algo, Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg),
+        "--dist loopback distributes the exact pass (bcfw/mp-bcfw family only); {} has none",
+        spec.algo.name()
+    );
+    anyhow::ensure!(
+        spec.dist == DistMode::Single || spec.engine == EngineKind::Native,
+        "--dist loopback requires --engine native (cluster workers score on native kernels)"
+    );
+    anyhow::ensure!(
+        spec.dist == DistMode::Single || spec.threads >= 1,
+        "--dist loopback dispatches through the executor boundary; the sequential \
+         freshest-w path never crosses it — pass --threads >= 1"
+    );
+    anyhow::ensure!(
+        spec.dist == DistMode::Single || spec.async_mode == AsyncMode::Off,
+        "--dist loopback rounds are bulk-synchronous by construction; --async on is \
+         not composable with them"
+    );
+    anyhow::ensure!(
+        spec.dist_workers >= 1,
+        "--dist-workers must be >= 1 (a cluster needs a worker)"
+    );
+    anyhow::ensure!(
+        spec.dist_workers == 2 || spec.dist == DistMode::Loopback,
+        "--dist-workers sizes the loopback cluster; pass --dist loopback"
+    );
+    anyhow::ensure!(
+        spec.transport_faults == FaultMode::Off || spec.dist == DistMode::Loopback,
+        "--transport-faults inject sabotages the cluster transport; pass --dist loopback"
+    );
+    anyhow::ensure!(
+        spec.transport_fault_seed == 0 || spec.transport_faults == FaultMode::Inject,
+        "--transport-fault-seed seeds the transport schedule; pass --transport-faults inject"
+    );
+    anyhow::ensure!(
+        spec.transport_fault_rate == DEFAULT_TRANSPORT_FAULT_RATE
+            || spec.transport_faults == FaultMode::Inject,
+        "--transport-fault-rate tunes the transport schedule; pass --transport-faults inject"
+    );
+    anyhow::ensure!(
+        spec.transport_fault_window.is_none() || spec.transport_faults == FaultMode::Inject,
+        "a transport fault window restricts the schedule; pass --transport-faults inject"
+    );
+    anyhow::ensure!(
+        spec.straggler_timeout == 5.0 || spec.dist == DistMode::Loopback,
+        "--straggler-timeout bounds cluster reply waits; pass --dist loopback"
+    );
+    anyhow::ensure!(
+        spec.reconnect_retries == 2 || spec.dist == DistMode::Loopback,
+        "--reconnect-retries budgets cluster receive retries; pass --dist loopback"
+    );
     let problem = build_problem(spec);
     let mut eng = spec.engine.build()?;
     let (series, phi) = train_on_full(spec, &problem, eng.as_mut());
@@ -514,7 +636,55 @@ pub fn train_on(
 /// algorithms without a dual certificate, φ is reconstructed from the
 /// final weights via φ_* = −λw so that `ModelCheckpoint::weights`
 /// round-trips).
-pub fn train_on_full(
+pub /// Map a validated [`TrainSpec`] to the bcfw/mp-bcfw driver config.
+/// Public because the multi-process `cluster` binary must derive the
+/// *identical* config in the coordinator and every worker process (the
+/// worker's fault schedule and arena warm-start come from it); routing
+/// both through this one function keeps them consistent by
+/// construction.
+pub fn mp_config(spec: &TrainSpec, lambda: f64) -> MpBcfwConfig {
+    let multi = matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg);
+    MpBcfwConfig {
+        lambda,
+        cap_n: if multi { spec.cap_n } else { 0 },
+        max_approx_passes: if multi { spec.max_approx_passes } else { 0 },
+        auto_approx: multi && spec.auto_approx,
+        ttl: spec.ttl,
+        threads: spec.threads,
+        inner_repeats: if multi { spec.inner_repeats } else { 0 },
+        averaging: matches!(spec.algo, Algo::BcfwAvg | Algo::MpBcfwAvg),
+        sampling: spec.sampling,
+        steps: if multi { spec.steps } else { StepRule::Fw },
+        dense_planes: spec.dense_planes,
+        products: spec.products,
+        gram: spec.gram,
+        product_refresh_every: spec.product_refresh_every,
+        oracle_reuse: spec.oracle_reuse,
+        async_mode: if multi { spec.async_mode } else { AsyncMode::Off },
+        max_stale_epochs: spec.max_stale_epochs,
+        kernel: spec.kernel,
+        faults: FaultConfig {
+            mode: spec.faults,
+            seed: spec.fault_seed,
+            rate: spec.fault_rate,
+            window: spec.fault_window,
+            retries: spec.oracle_retries,
+            timeout_s: spec.oracle_timeout,
+            checkpoint_every: spec.checkpoint_every,
+            checkpoint_path: spec.checkpoint_path.clone(),
+        },
+        max_iters: spec.max_iters,
+        max_oracle_calls: spec.max_oracle_calls,
+        max_time: spec.max_time,
+        target_gap: spec.target_gap,
+        seed: spec.seed,
+        eval_every: spec.eval_every,
+        renorm_every: 64,
+        with_train_loss: spec.with_train_loss,
+    }
+}
+
+fn train_on_full(
     spec: &TrainSpec,
     problem: &CountingOracle,
     eng: &mut dyn ScoringEngine,
@@ -564,46 +734,17 @@ pub fn train_on_full(
             (series, phi)
         }
         Algo::Bcfw | Algo::BcfwAvg | Algo::MpBcfw | Algo::MpBcfwAvg => {
-            let multi = matches!(spec.algo, Algo::MpBcfw | Algo::MpBcfwAvg);
-            let cfg = MpBcfwConfig {
-                lambda,
-                cap_n: if multi { spec.cap_n } else { 0 },
-                max_approx_passes: if multi { spec.max_approx_passes } else { 0 },
-                auto_approx: multi && spec.auto_approx,
-                ttl: spec.ttl,
-                threads: spec.threads,
-                inner_repeats: if multi { spec.inner_repeats } else { 0 },
-                averaging: matches!(spec.algo, Algo::BcfwAvg | Algo::MpBcfwAvg),
-                sampling: spec.sampling,
-                steps: if multi { spec.steps } else { StepRule::Fw },
-                dense_planes: spec.dense_planes,
-                products: spec.products,
-                gram: spec.gram,
-                product_refresh_every: spec.product_refresh_every,
-                oracle_reuse: spec.oracle_reuse,
-                async_mode: if multi { spec.async_mode } else { AsyncMode::Off },
-                max_stale_epochs: spec.max_stale_epochs,
-                kernel: spec.kernel,
-                faults: FaultConfig {
-                    mode: spec.faults,
-                    seed: spec.fault_seed,
-                    rate: spec.fault_rate,
-                    window: spec.fault_window,
-                    retries: spec.oracle_retries,
-                    timeout_s: spec.oracle_timeout,
-                    checkpoint_every: spec.checkpoint_every,
-                    checkpoint_path: spec.checkpoint_path.clone(),
-                },
-                max_iters: spec.max_iters,
-                max_oracle_calls: spec.max_oracle_calls,
-                max_time: spec.max_time,
-                target_gap: spec.target_gap,
-                seed: spec.seed,
-                eval_every: spec.eval_every,
-                renorm_every: 64,
-                with_train_loss: spec.with_train_loss,
+            let cfg = mp_config(spec, lambda);
+            let (series, run) = if spec.dist == DistMode::Loopback {
+                // The trainer façade is infallible by signature; a
+                // cluster that cannot even form (bind/handshake
+                // failure) is an environment error, not a training
+                // outcome — fail loudly.
+                super::distributed::run_loopback(problem, eng, &cfg, &spec.dist_config())
+                    .unwrap_or_else(|e| panic!("loopback cluster training failed: {e}"))
+            } else {
+                mp_bcfw::run(problem, eng, &cfg)
             };
-            let (series, run) = mp_bcfw::run(problem, eng, &cfg);
             (series, run.state.phi)
         }
     }
@@ -957,6 +1098,64 @@ mod tests {
         assert!(train(&bad).is_err());
         let bad = TrainSpec { checkpoint_path: "other.ckpt".into(), ..off };
         assert!(train(&bad).is_err());
+    }
+
+    #[test]
+    fn dist_loopback_matches_single_and_rejects_invalid_combinations() {
+        let spec = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            max_iters: 4,
+            threads: 2,
+            auto_approx: false,
+            ..Default::default()
+        };
+        let single = train(&spec).unwrap();
+        let dist = train(&TrainSpec { dist: DistMode::Loopback, ..spec.clone() }).unwrap();
+        assert_eq!(dist.dist, "loopback");
+        assert_eq!(dist.dist_workers, 2);
+        assert_eq!(dist.worker_deaths, 0);
+        assert_eq!(single.points.len(), dist.points.len());
+        for (a, b) in single.points.iter().zip(dist.points.iter()) {
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits(), "dual forked at pass {}", a.pass);
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+            assert_eq!(a.oracle_calls, b.oracle_calls);
+        }
+        // Seeded transport sabotage must not fork the trajectory either:
+        // retried planes are pure in (block, snapshot-w).
+        let faulty = train(&TrainSpec {
+            dist: DistMode::Loopback,
+            transport_faults: FaultMode::Inject,
+            transport_fault_seed: 7,
+            ..spec.clone()
+        })
+        .unwrap();
+        assert_eq!(faulty.transport_faults, "inject");
+        for (a, b) in single.points.iter().zip(faulty.points.iter()) {
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits(), "dual forked under sabotage");
+        }
+        // Cluster rounds exist for the bcfw/mp-bcfw family only, need the
+        // executor boundary, native scoring, and bulk-synchronous passes.
+        let dist = TrainSpec { dist: DistMode::Loopback, ..spec };
+        assert!(train(&TrainSpec { algo: Algo::Ssg, threads: 0, ..dist.clone() }).is_err());
+        assert!(train(&TrainSpec { threads: 0, ..dist.clone() }).is_err());
+        assert!(train(&TrainSpec { async_mode: AsyncMode::On, ..dist.clone() }).is_err());
+        assert!(train(&TrainSpec { dist_workers: 0, ..dist.clone() }).is_err());
+        // Every cluster knob is meaningless without --dist loopback (or,
+        // for the schedule knobs, --transport-faults inject).
+        let off = TrainSpec {
+            scale: Scale::Tiny,
+            algo: Algo::MpBcfw,
+            threads: 2,
+            ..Default::default()
+        };
+        assert!(train(&TrainSpec { dist_workers: 3, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { transport_faults: FaultMode::Inject, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { transport_fault_seed: 3, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { transport_fault_rate: 0.9, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { transport_fault_window: Some((0, 2)), ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { straggler_timeout: 1.0, ..off.clone() }).is_err());
+        assert!(train(&TrainSpec { reconnect_retries: 5, ..off }).is_err());
     }
 
     #[test]

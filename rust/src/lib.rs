@@ -56,8 +56,12 @@
 //!   (§3.5 Gram cache), `averaging` (§3.6), `sampling` (gap-aware
 //!   adaptive block sampling and pairwise-step selection, after Osokin
 //!   et al. 2016), `parallel` (sharded exact pass over
-//!   `std::thread::scope` workers), classic `baselines`, and the
-//!   `trainer` façade.
+//!   `std::thread::scope` workers), `distributed` (fault-tolerant
+//!   coordinator/worker training over a crash-safe length-prefixed
+//!   checksummed loopback transport, bitwise-identical to the
+//!   single-process driver; the `cluster` binary runs the roles as
+//!   separate processes), classic `baselines`, and the `trainer`
+//!   façade.
 //! * [`runtime`] — the `ScoringEngine` abstraction with the native Rust
 //!   backend (the retired XLA backend's selector survives only as a
 //!   validated `--engine xla` error).

@@ -1,26 +1,34 @@
 //! Pairwise-covering configuration matrix: a tiny-scale sweep over
 //! threads × sampling × steps × products × gram × oracle-reuse ×
-//! async × kernel × faults. Full factorial is 2·3·2·2·2·2·2·2·2 = 768
-//! runs; the 8 rows below cover every *pair* of factor levels (verified
-//! by `rows_are_pairwise_covering`), which is where config-interaction
-//! bugs live. Every row must train without panic with a monotone dual
-//! and weak duality, and every async-off threads=4 **scalar faults-off**
-//! row must bitwise-match its threads=1 twin (snapshot scoring +
-//! deterministic merge order make the trajectory invariant across
-//! worker counts ≥ 1; threads=0 is the freshest-w sequential path with
-//! a legitimately different trajectory, so the twin is 1). Async-on
-//! rows overlap the oracle with the real worker pool: fold timing is
-//! OS-scheduled, so they are checked against the documented
-//! bounded-drift contract (monotone dual + weak duality) rather than a
-//! bitwise twin. Simd rows likewise make no bitwise claim — their
-//! reductions reassociate under the pinned fold order (see
-//! `tests/kernel_backends.rs` for the lane contracts). Faults-inject
-//! rows skip and requeue failed blocks, so they too are held to
-//! monotone dual + weak duality here; their own bitwise contracts
-//! (same-seed twins, thread-count invariance under injection) live in
-//! `tests/fault_tolerance.rs`.
+//! async × kernel × faults × dist. Full factorial is
+//! 2·3·2·2·2·2·2·2·2·2 = 1536 runs; the 8 rows below cover every
+//! *feasible* pair of factor levels (verified by
+//! `rows_are_pairwise_covering`), which is where config-interaction
+//! bugs live. One pair is excluded by construction: (dist=loopback,
+//! async=on) — cluster rounds are bulk-synchronous, the trainer rejects
+//! the combination, so the covering requirement for that factor pair is
+//! the three feasible combos. Every row must train without panic with a
+//! monotone dual and weak duality, and every async-off threads=4
+//! **scalar faults-off dist=single** row must bitwise-match its
+//! threads=1 twin (snapshot scoring + deterministic merge order make
+//! the trajectory invariant across worker counts ≥ 1; threads=0 is the
+//! freshest-w sequential path with a legitimately different trajectory,
+//! so the twin is 1). Async-on rows overlap the oracle with the real
+//! worker pool: fold timing is OS-scheduled, so they are checked
+//! against the documented bounded-drift contract (monotone dual + weak
+//! duality) rather than a bitwise twin. Simd rows likewise make no
+//! bitwise claim — their reductions reassociate under the pinned fold
+//! order (see `tests/kernel_backends.rs` for the lane contracts).
+//! Faults-inject rows skip and requeue failed blocks, so they too are
+//! held to monotone dual + weak duality here; their own bitwise
+//! contracts (same-seed twins, thread-count invariance under injection)
+//! live in `tests/fault_tolerance.rs`, and the loopback cluster's own
+//! bitwise anchor (single ≡ 1+N processes) lives in
+//! `tests/distributed.rs` — here loopback rows only prove the mode
+//! *composes* with every other factor level.
 
 use mpbcfw::coordinator::async_overlap::AsyncMode;
+use mpbcfw::coordinator::distributed::DistMode;
 use mpbcfw::coordinator::faults::FaultMode;
 use mpbcfw::coordinator::products::{GramBackend, ProductMode};
 use mpbcfw::coordinator::sampling::{SamplingStrategy, StepRule};
@@ -38,44 +46,58 @@ struct Row {
     async_mode: AsyncMode,
     kernel: KernelBackend,
     faults: FaultMode,
+    dist: DistMode,
 }
 
 fn rows() -> Vec<Row> {
     use AsyncMode::{Off, On};
+    use DistMode::{Loopback, Single};
     use FaultMode::Inject;
     use GramBackend::{Hashmap, Triangular};
     use KernelBackend::{Scalar, Simd};
     use ProductMode::{Incremental, Recompute};
     use SamplingStrategy::{Cyclic, GapProportional, Uniform};
     use StepRule::{Fw, Pairwise};
-    let mk =
-        |threads, sampling, steps, products, gram, oracle_reuse, async_mode, kernel, faults| {
-            Row {
-                threads,
-                sampling,
-                steps,
-                products,
-                gram,
-                oracle_reuse,
-                async_mode,
-                kernel,
-                faults,
-            }
-        };
-    // Faults assignment: inject on rows 1–4, off on rows 0 and 5–7.
-    // Each half spans both thread levels, all three sampling levels and
-    // both levels of every binary factor, so the new pair coverage
-    // holds (re-verified by `rows_are_pairwise_covering`). Every
-    // inject row has threads ≥ 1, as the executor boundary requires.
+    #[allow(clippy::too_many_arguments)]
+    let mk = |threads,
+              sampling,
+              steps,
+              products,
+              gram,
+              oracle_reuse,
+              async_mode,
+              kernel,
+              faults,
+              dist| Row {
+        threads,
+        sampling,
+        steps,
+        products,
+        gram,
+        oracle_reuse,
+        async_mode,
+        kernel,
+        faults,
+        dist,
+    };
+    // Faults assignment: inject on rows 1–4, off on rows 0 and 5–7;
+    // loopback on rows 1, 4 and 7 — necessarily all async-off, as the
+    // trainer rejects (dist=loopback, async=on). Each partition spans
+    // both thread levels, all three sampling levels and both levels of
+    // every binary factor, so pair coverage holds (re-verified by
+    // `rows_are_pairwise_covering`). Every inject and every loopback
+    // row has threads ≥ 1, as the executor boundary requires, and
+    // row 0 is the designated threads-twin row (threads=4, async off,
+    // scalar, faults off, dist single).
     vec![
-        mk(1, Uniform, Fw, Recompute, Hashmap, true, Off, Scalar, FaultMode::Off),
-        mk(4, Uniform, Pairwise, Incremental, Triangular, false, Off, Simd, Inject),
-        mk(1, GapProportional, Pairwise, Recompute, Triangular, true, On, Simd, Inject),
-        mk(4, GapProportional, Fw, Incremental, Hashmap, false, On, Scalar, Inject),
-        mk(1, Cyclic, Fw, Incremental, Triangular, true, Off, Scalar, Inject),
-        mk(4, Cyclic, Pairwise, Recompute, Hashmap, false, On, Simd, FaultMode::Off),
-        mk(1, Uniform, Fw, Incremental, Hashmap, false, On, Simd, FaultMode::Off),
-        mk(4, GapProportional, Pairwise, Recompute, Triangular, true, Off, Scalar, FaultMode::Off),
+        mk(4, Uniform, Fw, Recompute, Hashmap, true, Off, Scalar, FaultMode::Off, Single),
+        mk(4, Uniform, Pairwise, Incremental, Hashmap, false, Off, Simd, Inject, Loopback),
+        mk(1, GapProportional, Pairwise, Recompute, Triangular, true, On, Simd, Inject, Single),
+        mk(1, GapProportional, Fw, Incremental, Hashmap, true, On, Scalar, Inject, Single),
+        mk(1, Cyclic, Fw, Incremental, Triangular, true, Off, Scalar, Inject, Loopback),
+        mk(4, Cyclic, Pairwise, Recompute, Hashmap, false, On, Simd, FaultMode::Off, Single),
+        mk(1, Uniform, Fw, Incremental, Triangular, false, On, Simd, FaultMode::Off, Single),
+        mk(4, GapProportional, Pairwise, Recompute, Triangular, false, Off, Scalar, FaultMode::Off, Loopback),
     ]
 }
 
@@ -110,11 +132,16 @@ fn spec_for(row: &Row, threads: usize) -> TrainSpec {
         },
         oracle_retries: if row.faults == FaultMode::Inject { 1 } else { 2 },
         eval_every: 1,
+        // The remaining dist knobs (workers, transport faults,
+        // straggler/reconnect budgets) keep their defaults: transport
+        // sabotage has its own deterministic suite in
+        // `tests/distributed.rs`; here loopback rows prove composition.
+        dist: row.dist,
         ..Default::default()
     }
 }
 
-fn level_indices(r: &Row) -> [usize; 9] {
+fn level_indices(r: &Row) -> [usize; 10] {
     [
         match r.threads {
             1 => 0,
@@ -150,22 +177,38 @@ fn level_indices(r: &Row) -> [usize; 9] {
             FaultMode::Off => 0,
             FaultMode::Inject => 1,
         },
+        match r.dist {
+            DistMode::Single => 0,
+            DistMode::Loopback => 1,
+        },
     ]
 }
 
 #[test]
 fn rows_are_pairwise_covering() {
-    let levels = [2usize, 3, 2, 2, 2, 2, 2, 2, 2];
-    let idx: Vec<[usize; 9]> = rows().iter().map(level_indices).collect();
-    for i in 0..9 {
-        for j in (i + 1)..9 {
+    let levels = [2usize, 3, 2, 2, 2, 2, 2, 2, 2, 2];
+    // (async=on, dist=loopback) is infeasible — cluster rounds are
+    // bulk-synchronous and the trainer rejects the combination — so the
+    // async×dist pair must cover exactly the three feasible combos.
+    const ASYNC: usize = 6;
+    const DIST: usize = 9;
+    let idx: Vec<[usize; 10]> = rows().iter().map(level_indices).collect();
+    for row in &idx {
+        assert!(
+            (row[ASYNC], row[DIST]) != (1, 1),
+            "matrix contains the infeasible (async=on, dist=loopback) combination"
+        );
+    }
+    for i in 0..10 {
+        for j in (i + 1)..10 {
             let mut seen = std::collections::HashSet::new();
             for row in &idx {
                 seen.insert((row[i], row[j]));
             }
+            let excluded = usize::from((i, j) == (ASYNC, DIST));
             assert_eq!(
                 seen.len(),
-                levels[i] * levels[j],
+                levels[i] * levels[j] - excluded,
                 "factor pair ({i},{j}) not fully covered by the matrix"
             );
         }
@@ -190,15 +233,18 @@ fn every_row_trains_and_parallel_rows_match_their_sequential_twin() {
             );
         }
         // The bitwise threads-twin contract holds for the synchronous
-        // scalar faults-off driver only; async-on fold timing is
-        // OS-scheduled, simd reductions reassociate, and faults-inject
-        // rows have their own bitwise contracts in
-        // `tests/fault_tolerance.rs` (the monotone/weak-duality checks
+        // scalar faults-off in-process driver only; async-on fold
+        // timing is OS-scheduled, simd reductions reassociate,
+        // faults-inject rows have their own bitwise contracts in
+        // `tests/fault_tolerance.rs`, and loopback rows have their own
+        // bitwise anchor (single-process ≡ cluster) in
+        // `tests/distributed.rs` (the monotone/weak-duality checks
         // above are their contract here).
         if row.threads > 1
             && row.async_mode == AsyncMode::Off
             && row.kernel == KernelBackend::Scalar
             && row.faults == FaultMode::Off
+            && row.dist == DistMode::Single
         {
             let twin = train(&spec_for(row, 1))
                 .unwrap_or_else(|e| panic!("row {k}: twin failed: {e}"));

@@ -1,0 +1,399 @@
+//! Distributed-training conformance: the crash-safe loopback cluster
+//! end to end. The anchor is bitwise: a same-seed 1-coordinator +
+//! N-worker run must reproduce the single-process trajectory exactly
+//! (dual, primal, oracle-call counts per eval point) — planes are pure
+//! in `(block, snapshot-w)` and the coordinator merges them in the
+//! sampled block order, so neither the worker count nor any amount of
+//! transport recovery (retransmission, reconnect, shard reassignment)
+//! can fork the bits. The adversarial matrix stages worker death
+//! mid-run, seeded transport sabotage (garbled/truncated/dropped/
+//! stalled frames, disconnects), reconnect-after-backoff, and
+//! kill-and-resume from a coordinator auto-checkpoint.
+//!
+//! Fault schedules are pure in `(seed, worker, round, attempt)`
+//! ([`TransportFaultPlan::decide`]), so tests *pre-scan* seeds for the
+//! schedule shape they need (injections present, no accidental death)
+//! instead of hoping — every run here is deterministic.
+
+use mpbcfw::coordinator::checkpoint::load_run;
+use mpbcfw::coordinator::distributed::protocol::Msg;
+use mpbcfw::coordinator::distributed::transport::{TransportFaultKind, TransportFaultPlan};
+use mpbcfw::coordinator::distributed::{
+    resume_loopback, run_loopback, run_loopback_with_quits, serve_worker, Cluster, DistConfig,
+    DistMode, TransportFaultConfig, WorkerConfig,
+};
+use mpbcfw::coordinator::faults::{FaultConfig, FaultMode, FaultPlan, FaultStats};
+use mpbcfw::coordinator::metrics::Series;
+use mpbcfw::coordinator::mp_bcfw::{self, MpBcfwConfig};
+use mpbcfw::coordinator::parallel::{exact_pass, ExactPassExec};
+use mpbcfw::coordinator::trainer::{self, DatasetKind, TrainSpec};
+use mpbcfw::data::types::Scale;
+use mpbcfw::model::problem::StructuredProblem as _;
+use mpbcfw::oracle::wrappers::CountingOracle;
+use mpbcfw::runtime::engine::NativeEngine;
+
+fn problem(ds: DatasetKind) -> CountingOracle {
+    trainer::build_problem(&TrainSpec { dataset: ds, scale: Scale::Tiny, ..Default::default() })
+}
+
+/// Pinned base config: `auto_approx` off (the §3.4 rule is
+/// wall-clock-driven and would fork twin trajectories), fixed
+/// approximate-pass budget, as in the fault-tolerance suite.
+fn base_cfg(max_iters: u64, n: usize) -> MpBcfwConfig {
+    MpBcfwConfig {
+        max_iters,
+        auto_approx: false,
+        max_approx_passes: 2,
+        threads: 2,
+        seed: 7,
+        ..MpBcfwConfig::mp_paper(1.0 / n as f64)
+    }
+}
+
+/// Test-speed cluster shape: tight real-time timeouts so staged deaths
+/// and reconnects resolve in fractions of a second.
+fn fast_dist(workers: usize) -> DistConfig {
+    DistConfig {
+        mode: DistMode::Loopback,
+        workers,
+        straggler_timeout_s: 0.5,
+        backoff_base_s: 0.005,
+        ..DistConfig::default()
+    }
+}
+
+/// Trajectory identity: (outer, dual bits, primal bits, exact-oracle
+/// calls) per evaluation point. Timing columns are wall-clock-derived
+/// and excluded.
+fn bits(s: &Series) -> Vec<(u64, u64, u64, u64)> {
+    s.points
+        .iter()
+        .map(|p| (p.outer, p.dual.to_bits(), p.primal.to_bits(), p.oracle_calls))
+        .collect()
+}
+
+fn assert_monotone(s: &Series, label: &str) {
+    for p in &s.points {
+        assert!(p.primal >= p.dual - 1e-8, "{label}: weak duality violated at {p:?}");
+    }
+    for w in s.points.windows(2) {
+        assert!(
+            w[1].dual >= w[0].dual - 1e-10,
+            "{label}: dual decreased {} -> {}",
+            w[0].dual,
+            w[1].dual
+        );
+    }
+}
+
+fn inject_transport(seed: u64, rate: f64) -> TransportFaultConfig {
+    TransportFaultConfig { mode: FaultMode::Inject, seed, rate, window: None }
+}
+
+/// Model one run against the pure schedule: a worker dies in `(worker,
+/// round)` iff every attempt `0..=retries` draws an injection (each
+/// failed attempt — Soft or Dead — consumes exactly one attempt and the
+/// worker survives to serve the resend). Returns (any attempt-0
+/// injection, any cell that would kill its worker).
+fn schedule_shape(
+    t: &TransportFaultConfig,
+    workers: u64,
+    rounds: u64,
+    retries: u64,
+) -> (bool, bool) {
+    let plan = TransportFaultPlan::from_config(t);
+    let mut any = false;
+    let mut death = false;
+    for k in 0..workers {
+        for r in 1..=rounds {
+            any |= plan.decide(k, r, 0).is_some();
+            death |= (0..=retries).all(|a| plan.decide(k, r, a).is_some());
+        }
+    }
+    (any, death)
+}
+
+/// Smallest seed whose schedule injects at least once but never
+/// exhausts a retry budget — sabotage with guaranteed survival.
+fn survivable_seed(rate: f64, workers: u64, rounds: u64, retries: u64) -> u64 {
+    (0..10_000)
+        .find(|&seed| {
+            let (any, death) =
+                schedule_shape(&inject_transport(seed, rate), workers, rounds, retries);
+            any && !death
+        })
+        .expect("no survivable transport seed in 0..10000; loosen the shape")
+}
+
+#[test]
+fn loopback_cluster_is_bitwise_identical_to_single_process() {
+    // The anchor on the two costly-oracle datasets (the paper's regime):
+    // Viterbi sequences and graph-cut segmentation.
+    for ds in [DatasetKind::OcrLike, DatasetKind::HorsesegLike] {
+        let single = {
+            let p = problem(ds);
+            let mut eng = NativeEngine;
+            let (s, _) = mp_bcfw::run(&p, &mut eng, &base_cfg(4, p.n()));
+            s
+        };
+        for workers in [2usize, 3] {
+            let p = problem(ds);
+            let mut eng = NativeEngine;
+            let (s, _) = run_loopback(&p, &mut eng, &base_cfg(4, p.n()), &fast_dist(workers))
+                .expect("loopback run failed");
+            assert_eq!(
+                bits(&s),
+                bits(&single),
+                "{}: {workers}-worker cluster forked the single-process trajectory",
+                ds.name()
+            );
+            assert_eq!(s.dist, "loopback");
+            assert_eq!(s.dist_workers, workers as u64);
+            assert_eq!(s.transport_faults, "off");
+            assert_eq!(s.transport_retries, 0, "faults off must never retry");
+            assert_eq!(s.worker_deaths, 0);
+        }
+    }
+}
+
+#[test]
+fn staged_worker_death_reassigns_the_shard_and_preserves_the_trajectory() {
+    let ds = DatasetKind::UspsLike;
+    let single = {
+        let p = problem(ds);
+        let mut eng = NativeEngine;
+        let (s, _) = mp_bcfw::run(&p, &mut eng, &base_cfg(4, p.n()));
+        s
+    };
+    // Worker 1 serves exactly one round, then vanishes like a killed
+    // process. Its residue class must be reassigned to worker 0 — whose
+    // planes are bitwise the ones worker 1 would have produced, so the
+    // run must complete on the anchor trajectory, deaths and all.
+    let p = problem(ds);
+    let mut eng = NativeEngine;
+    let (s, _) = run_loopback_with_quits(
+        &p,
+        &mut eng,
+        &base_cfg(4, p.n()),
+        &fast_dist(2),
+        &[None, Some(1)],
+    )
+    .expect("loopback run with staged death failed");
+    assert_monotone(&s, "staged death");
+    assert_eq!(s.worker_deaths, 1, "the staged quit was never detected");
+    assert!(s.reassigned_blocks > 0, "the dead worker's shard was never reassigned");
+    assert!(s.transport_retries > 0, "death detection must burn receive retries");
+    assert_eq!(
+        bits(&s),
+        bits(&single),
+        "shard reassignment forked the trajectory — planes are pure in (block, w)"
+    );
+}
+
+#[test]
+fn transport_sabotage_twins_are_bitwise_and_match_the_clean_anchor() {
+    let ds = DatasetKind::UspsLike;
+    let retries = fast_dist(2).reconnect_retries;
+    let seed = survivable_seed(0.5, 2, 4, retries);
+    let single = {
+        let p = problem(ds);
+        let mut eng = NativeEngine;
+        let (s, _) = mp_bcfw::run(&p, &mut eng, &base_cfg(4, p.n()));
+        s
+    };
+    let run_sabotaged = || {
+        let p = problem(ds);
+        let mut eng = NativeEngine;
+        let dist = DistConfig { transport: inject_transport(seed, 0.5), ..fast_dist(2) };
+        let (s, _) = run_loopback(&p, &mut eng, &base_cfg(4, p.n()), &dist)
+            .expect("sabotaged loopback run failed");
+        s
+    };
+    let a = run_sabotaged();
+    let b = run_sabotaged();
+    assert_eq!(a.transport_faults, "inject");
+    assert!(a.transport_retries > 0, "scanned seed injected nothing");
+    assert_eq!(a.worker_deaths, 0, "scanned seed promised survival");
+    // Twin determinism: the schedule is pure, so both the trajectory
+    // and the recovery counters replay identically.
+    assert_eq!(bits(&a), bits(&b), "same-seed sabotage twins diverged");
+    assert_eq!(
+        (a.transport_retries, a.worker_deaths, a.reassigned_blocks),
+        (b.transport_retries, b.worker_deaths, b.reassigned_blocks),
+        "twins drew different recovery schedules"
+    );
+    // Trajectory transparency: every retry is a verbatim retransmission
+    // of a plane that is pure in (block, snapshot-w) — sabotage without
+    // death cannot fork the bits, and the shared in-process oracle
+    // ledger proves no call was ever recomputed.
+    assert_eq!(
+        bits(&a),
+        bits(&single),
+        "recovered sabotage forked the trajectory (retransmission recomputed something?)"
+    );
+}
+
+#[test]
+fn every_transport_fault_kind_recovers_at_the_framing_boundary() {
+    // Direct cluster drive with a schedule pre-scanned to contain all
+    // five kinds at attempt 0 and kill nobody: each kind must land in
+    // its stats counter and every round's planes must stay bitwise
+    // equal to the in-process reference.
+    let rounds = 6u64;
+    let retries = 4u64;
+    let seed = (0..20_000)
+        .find(|&seed| {
+            let t = inject_transport(seed, 0.5);
+            let plan = TransportFaultPlan::from_config(&t);
+            let (_, death) = schedule_shape(&t, 2, rounds, retries);
+            let mut kinds = [false; 5];
+            for k in 0..2 {
+                for r in 1..=rounds {
+                    if let Some(kind) = plan.decide(k, r, 0) {
+                        kinds[match kind {
+                            TransportFaultKind::Garble => 0,
+                            TransportFaultKind::Truncate => 1,
+                            TransportFaultKind::Drop => 2,
+                            TransportFaultKind::Stall => 3,
+                            TransportFaultKind::Disconnect => 4,
+                        }] = true;
+                    }
+                }
+            }
+            kinds.iter().all(|&k| k) && !death
+        })
+        .expect("no seed covers all five fault kinds without a death; widen the scan");
+
+    let p = problem(DatasetKind::UspsLike);
+    let dist = DistConfig {
+        transport: inject_transport(seed, 0.5),
+        reconnect_retries: retries,
+        ..fast_dist(2)
+    };
+    let w = vec![0.0f64; p.dim()];
+    let order: Vec<usize> = (0..p.n()).collect();
+    let no_oracle_faults = FaultPlan::from_config(&FaultConfig::default());
+    let (reference, _) = exact_pass(&p, &w, &order, 1);
+
+    let mut cluster =
+        Cluster::bind(&p, &dist, "127.0.0.1:0", false).expect("bind failed");
+    let addr = cluster.local_addr().unwrap();
+    let stats = std::thread::scope(|s| {
+        for k in 0..2u64 {
+            let mut wcfg = WorkerConfig::for_dist(k, &dist, &FaultConfig::default());
+            // The reference pass below uses cold arenas per call; pin
+            // the workers to the same so the comparison is exact.
+            wcfg.oracle_reuse = false;
+            // Exercise the coordinator's bounded heartbeat tolerance on
+            // every reply while we're at it.
+            wcfg.heartbeats_per_round = 2;
+            let p = &p;
+            s.spawn(move || serve_worker(p, &wcfg, addr));
+        }
+        cluster.accept_workers().expect("workers never connected");
+        for round in 1..=rounds {
+            let (planes, report) = cluster.pass(&w, &order, round, &no_oracle_faults);
+            assert_eq!(planes.len(), order.len());
+            for ((&b, got), want) in order.iter().zip(&planes).zip(&reference) {
+                let got = got.as_ref().unwrap_or_else(|| {
+                    panic!("round {round}: block {b} lost despite a survivable schedule")
+                });
+                assert_eq!(got.tag, want.tag, "round {round}: block {b} plane diverged");
+                assert_eq!(got.off, want.off, "round {round}: block {b} offset diverged");
+            }
+            assert_eq!(report.shard_secs.len(), 2);
+        }
+        cluster.shutdown();
+        cluster.stats.clone()
+    });
+    assert!(stats.garbled >= 1, "Garble never exercised the checksum path");
+    assert!(stats.truncated >= 1, "Truncate never exercised the short-read path");
+    assert!(stats.dropped >= 1, "Drop never exercised the resend path");
+    assert!(stats.stalled >= 1, "Stall never exercised the straggler path");
+    assert!(stats.disconnects >= 1, "Disconnect never severed a link");
+    assert!(stats.reconnects >= 1, "a severed link was never rebuilt");
+    assert!(stats.retries >= 5, "five kinds must cost at least five retries");
+    assert_eq!(stats.worker_deaths, 0, "scanned seed promised survival");
+    assert_eq!(stats.lost_blocks, 0, "recovery must not lose blocks");
+}
+
+#[test]
+fn cluster_kill_and_resume_matches_the_uninterrupted_tail() {
+    let ds = DatasetKind::UspsLike;
+    let full_cfg = {
+        let p = problem(ds);
+        base_cfg(8, p.n())
+    };
+    // Reference: one uninterrupted loopback run.
+    let full = {
+        let p = problem(ds);
+        let mut eng = NativeEngine;
+        let (s, _) = run_loopback(&p, &mut eng, &full_cfg, &fast_dist(2)).expect("full run");
+        s
+    };
+    // "Killed" cluster: coordinator auto-checkpoints every 2 outers,
+    // stops at 4 — the last atomic write stands in for killing every
+    // process in the cluster.
+    let path =
+        std::env::temp_dir().join(format!("mpbcfw_it_dist_resume_{}", std::process::id()));
+    let killed_cfg = MpBcfwConfig {
+        max_iters: 4,
+        faults: FaultConfig {
+            checkpoint_every: 2,
+            checkpoint_path: path.to_string_lossy().into_owned(),
+            ..full_cfg.faults.clone()
+        },
+        ..full_cfg.clone()
+    };
+    let p = problem(ds);
+    let mut eng = NativeEngine;
+    let (killed, _) =
+        run_loopback(&p, &mut eng, &killed_cfg, &fast_dist(2)).expect("killed run");
+    assert!(path.is_file(), "coordinator auto-checkpoint never written");
+    let full_bits = bits(&full);
+    assert_eq!(bits(&killed), full_bits[..bits(&killed).len()].to_vec());
+
+    // Resume on a *fresh* cluster: new problem, new workers, cold
+    // arenas — value-neutral, like any resume.
+    let fresh = problem(ds);
+    let mut reloaded = load_run(&path, &fresh, &full_cfg).expect("load_run failed");
+    assert_eq!(reloaded.outers_done, 4);
+    let resumed = resume_loopback(&fresh, &mut eng, &full_cfg, &fast_dist(2), &mut reloaded)
+        .expect("resume_loopback failed");
+    std::fs::remove_file(&path).ok();
+    let resumed_bits = bits(&resumed);
+    let full_tail: Vec<_> = full_bits.into_iter().filter(|&(outer, ..)| outer >= 5).collect();
+    assert_eq!(
+        resumed_bits, full_tail,
+        "resumed cluster diverged from the uninterrupted eval tail"
+    );
+}
+
+#[test]
+fn corrupt_frames_die_with_byte_offset_errors() {
+    // The crash-safety contract of the wire codec, end to end at the
+    // message level: truncation and bit flips must be *diagnosed*, not
+    // decoded — truncation with the read position, flips by checksum.
+    let msg = Msg::Planes {
+        round: 3,
+        worker: 1,
+        planes: vec![(0, None), (7, None)],
+        calls_total: 42,
+        shard_secs: 0.5,
+        fault_delta: FaultStats::default(),
+        penalty_secs: 0.0,
+    };
+    let payload = msg.encode();
+    let back = Msg::decode(&payload).expect("clean payload must decode");
+    assert!(matches!(back, Msg::Planes { round: 3, worker: 1, .. }));
+    for cut in [1, payload.len() / 2, payload.len() - 1] {
+        let err = Msg::decode(&payload[..cut]).expect_err("truncated payload decoded");
+        let text = err.to_string();
+        // Either a short read (named by position) or the element-count
+        // OOM guard (named by what was left) — never a silent decode.
+        assert!(
+            text.contains("byte offset") || text.contains("left in the frame"),
+            "truncation at {cut} was not diagnosed by position: {text}"
+        );
+    }
+}

@@ -36,6 +36,9 @@ CHECKED_STRUCTS = [
     ("GoldenFixture", "rust/tests/golden_trajectory.rs"),
     ("FaultPlan", "rust/src/coordinator/faults.rs"),
     ("FaultStats", "rust/src/coordinator/faults.rs"),
+    ("DistConfig", "rust/src/coordinator/distributed/mod.rs"),
+    ("TransportFaultConfig", "rust/src/coordinator/distributed/transport.rs"),
+    ("TransportStats", "rust/src/coordinator/distributed/transport.rs"),
 ]
 
 OPEN = {"{": "}", "(": ")", "[": "]"}
